@@ -1,0 +1,76 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!   REORDER on/off, indexed dims m, dist-vs-topk device path,
+//!   and the adaptive tile class.
+use hybrid_knn_join::bench::{secs, workloads, Table};
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::runtime::Engine;
+
+fn main() {
+    let engine = Engine::load_default().expect("make artifacts");
+    let ws = workloads();
+
+    let mut t = Table::new(
+        "Ablation - REORDER (variance dim reordering)",
+        &["dataset", "K", "reorder", "time (s)", "|Q_gpu|", "|Q_fail|"],
+    );
+    for w in &ws {
+        for reorder in [true, false] {
+            let mut p = HybridParams::new(w.table_k);
+            p.cpu_ranks = 3;
+            p.reorder = reorder;
+            let rep = HybridKnnJoin::run(&engine, &w.dataset(), &p).unwrap();
+            t.row(vec![
+                w.name.into(),
+                w.table_k.to_string(),
+                reorder.to_string(),
+                secs(rep.response_time),
+                rep.q_gpu.to_string(),
+                rep.q_fail.to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    let mut t = Table::new(
+        "Ablation - indexed dims m (index dimensionality reduction)",
+        &["dataset", "K", "m", "time (s)", "|Q_gpu|", "|Q_fail|"],
+    );
+    for w in &ws {
+        for m in [2usize, 4, 6, 8] {
+            let mut p = HybridParams::new(w.table_k);
+            p.cpu_ranks = 3;
+            p.m = m;
+            let rep = HybridKnnJoin::run(&engine, &w.dataset(), &p).unwrap();
+            t.row(vec![
+                w.name.into(),
+                w.table_k.to_string(),
+                m.to_string(),
+                secs(rep.response_time),
+                rep.q_gpu.to_string(),
+                rep.q_fail.to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    let mut t = Table::new(
+        "Ablation - device path (dist+host filter vs on-device top-k)",
+        &["dataset", "K", "path", "time (s)", "gpu kernel (s)"],
+    );
+    for w in &ws {
+        for topk in [false, true] {
+            let mut p = HybridParams::new(w.table_k);
+            p.cpu_ranks = 3;
+            p.use_topk = topk;
+            let rep = HybridKnnJoin::run(&engine, &w.dataset(), &p).unwrap();
+            t.row(vec![
+                w.name.into(),
+                w.table_k.to_string(),
+                if topk { "topk".into() } else { "dist".to_string() },
+                secs(rep.response_time),
+                secs(rep.gpu_kernel_time),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+}

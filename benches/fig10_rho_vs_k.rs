@@ -1,0 +1,15 @@
+//! Fig. 10: rho^Model vs K for all datasets.
+use hybrid_knn_join::bench::{experiments, workloads};
+use hybrid_knn_join::runtime::Engine;
+
+fn main() {
+    let engine = Engine::load_default().expect("make artifacts");
+    let t = experiments::fig10(
+        &engine,
+        &workloads(),
+        &[1, 2, 4, 8, 16, 25, 32, 48, 64],
+        0.2,
+    )
+    .unwrap();
+    println!("{}", t.render());
+}

@@ -1,0 +1,10 @@
+//! Fig. 11: response time vs K - HYBRIDKNN-JOIN vs REFIMPL vs
+//! GPU-JOINLINEAR (the paper's headline comparison).
+use hybrid_knn_join::bench::{experiments, workloads};
+use hybrid_knn_join::runtime::Engine;
+
+fn main() {
+    let engine = Engine::load_default().expect("make artifacts");
+    let t = experiments::fig11(&engine, &workloads(), &[1, 4, 16, 64]).unwrap();
+    println!("{}", t.render());
+}

@@ -1,0 +1,6 @@
+//! Fig. 2: analytic KNN-failure fraction under a fixed result budget.
+use hybrid_knn_join::bench::experiments;
+
+fn main() {
+    println!("{}", experiments::fig2(5).render());
+}

@@ -1,0 +1,8 @@
+//! Fig. 6: REFIMPL speedup vs rank count (SuSy* and FMA*, K=5).
+use hybrid_knn_join::bench::{experiments, workloads};
+
+fn main() {
+    let ws = workloads();
+    let t = experiments::fig6(&[ws[0].clone(), ws[3].clone()], 5);
+    println!("{}", t.render());
+}

@@ -1,0 +1,10 @@
+//! Fig. 7: GPU-JOINLINEAR response time vs eps (expected flat).
+use hybrid_knn_join::bench::{experiments, workloads};
+use hybrid_knn_join::runtime::Engine;
+
+fn main() {
+    let engine = Engine::load_default().expect("make artifacts");
+    let ws = workloads();
+    let t = experiments::fig7(&engine, &ws[1..]).unwrap();
+    println!("{}", t.render());
+}

@@ -1,0 +1,15 @@
+//! Fig. 8: response time vs beta for a range of gamma (rho=0).
+use hybrid_knn_join::bench::{experiments, workloads};
+use hybrid_knn_join::runtime::Engine;
+
+fn main() {
+    let engine = Engine::load_default().expect("make artifacts");
+    let t = experiments::fig8(
+        &engine,
+        &workloads(),
+        &[0.0, 0.25, 0.5, 0.75, 1.0],
+        &[0.0, 0.6, 0.8, 1.0],
+    )
+    .unwrap();
+    println!("{}", t.render());
+}

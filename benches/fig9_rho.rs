@@ -1,0 +1,17 @@
+//! Fig. 9: response time vs beta for a range of rho (gamma=0.6;
+//! SuSy* and Songs*, the two opposite-trend datasets of the paper).
+use hybrid_knn_join::bench::{experiments, workloads};
+use hybrid_knn_join::runtime::Engine;
+
+fn main() {
+    let engine = Engine::load_default().expect("make artifacts");
+    let ws = workloads();
+    let t = experiments::fig9(
+        &engine,
+        &[ws[0].clone(), ws[2].clone()],
+        &[0.0, 0.5, 1.0],
+        &[0.0, 0.2, 0.4, 0.6, 0.8, 1.0],
+    )
+    .unwrap();
+    println!("{}", t.render());
+}

@@ -1,0 +1,10 @@
+//! Table III: TSTATIC / TDYNAMIC kernel granularity (device model over the
+//! real grid workload; beta=gamma=rho=0).
+use hybrid_knn_join::bench::{experiments, workloads};
+use hybrid_knn_join::runtime::Engine;
+
+fn main() {
+    let engine = Engine::load_default().expect("make artifacts");
+    let t = experiments::table3(&engine, &workloads()).unwrap();
+    println!("{}", t.render());
+}

@@ -1,0 +1,9 @@
+//! Table IV: the beta x gamma parameter grid at rho=0.5.
+use hybrid_knn_join::bench::{experiments, workloads};
+use hybrid_knn_join::runtime::Engine;
+
+fn main() {
+    let engine = Engine::load_default().expect("make artifacts");
+    let t = experiments::table4(&engine, &workloads()).unwrap();
+    println!("{}", t.render());
+}

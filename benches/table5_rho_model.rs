@@ -1,0 +1,9 @@
+//! Table V: rho^Model (Eq. 6) load balancing - speedup over rho=0.5.
+use hybrid_knn_join::bench::{experiments, workloads};
+use hybrid_knn_join::runtime::Engine;
+
+fn main() {
+    let engine = Engine::load_default().expect("make artifacts");
+    let t = experiments::table5(&engine, &workloads()).unwrap();
+    println!("{}", t.render());
+}

@@ -1,0 +1,9 @@
+//! Table VI: parameter recovery from a fraction f of the queries.
+use hybrid_knn_join::bench::{experiments, workloads};
+use hybrid_knn_join::runtime::Engine;
+
+fn main() {
+    let engine = Engine::load_default().expect("make artifacts");
+    let t = experiments::table6(&engine, &workloads(), &[0.05, 0.1, 0.05, 0.1]).unwrap();
+    println!("{}", t.render());
+}

@@ -1,0 +1,76 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): exercises every layer of the
+//! stack on all four surrogate workloads and reports the paper's headline
+//! metric - HYBRIDKNN-JOIN speedup over the parallel CPU reference - plus
+//! exactness validation of every result against the kd-tree oracle.
+//!
+//! Layers proven to compose here:
+//!   L1 pallas dist/hist kernels -> L2 jax graphs -> AOT HLO artifacts ->
+//!   rust PJRT runtime -> grid join engine -> hybrid scheduler (epsilon
+//!   selection, beta/gamma/rho split, Q^Fail reassignment, rho^Model).
+
+use hybrid_knn_join::bench::{workloads, Table};
+use hybrid_knn_join::data::variance::reorder_by_variance;
+use hybrid_knn_join::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load_default()?;
+    let mut table = Table::new(
+        "End-to-end: hybrid vs REFIMPL (K = paper's per-dataset K)",
+        &[
+            "dataset", "|D|", "n", "K", "hybrid (s)", "refimpl (s)",
+            "speedup", "gpu/cpu/fail", "exact?",
+        ],
+    );
+
+    for w in workloads() {
+        let data = w.dataset();
+        let k = w.table_k;
+
+        // probe for rho^Model on a query sample (paper Sec. VI-E2)
+        let mut probe = HybridParams::new(k);
+        probe.rho = 0.5;
+        probe.query_fraction = 0.2;
+        let pr = HybridKnnJoin::run(&engine, &data, &probe)?;
+
+        // tuned full run
+        let mut params = HybridParams::new(k);
+        params.rho = pr.rho_model;
+        let rep = HybridKnnJoin::run(&engine, &data, &params)?;
+
+        // CPU-only reference (one extra rank, Sec. VI-C)
+        let (rdata, _) = reorder_by_variance(&data);
+        let tree = KdTree::build(&rdata);
+        let reference = ref_impl(&rdata, &tree, k, 4);
+
+        // exactness: every sampled query must match the oracle
+        let mut exact = true;
+        for q in (0..data.len()).step_by(199) {
+            let (got, want) = (rep.result.get(q), reference.result.get(q));
+            if got.len() != want.len() {
+                exact = false;
+                break;
+            }
+            for (g, r) in got.iter().zip(want) {
+                if (g.dist2 - r.dist2).abs() > 1e-3 * (1.0 + r.dist2) {
+                    exact = false;
+                }
+            }
+        }
+
+        table.row(vec![
+            w.name.into(),
+            data.len().to_string(),
+            data.dims().to_string(),
+            k.to_string(),
+            format!("{:.3}", rep.response_time),
+            format!("{:.3}", reference.total_time),
+            format!("{:.2}x", reference.total_time / rep.response_time),
+            format!("{}/{}/{}", rep.q_gpu, rep.q_cpu, rep.q_fail),
+            if exact { "yes".into() } else { "NO".to_string() },
+        ]);
+    }
+
+    println!("{}", table.render());
+    println!("(record this table in EXPERIMENTS.md §E2E)");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Parameter search (paper Sec. VI-E2): the low-budget grid search over
+//! (beta, gamma) on a query fraction f, followed by the analytic
+//! rho^Model refinement of Eq. 6 - the exact procedure the paper uses to
+//! configure HYBRIDKNN-JOIN for a new dataset.
+
+use hybrid_knn_join::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load_default()?;
+    let data = chist_like(8_000).generate(3);
+    let k = 10;
+    println!(
+        "parameter search on CHist* surrogate: |D|={} n={} K={k}",
+        data.len(),
+        data.dims()
+    );
+
+    // stage 1: (beta, gamma) grid at rho=0.5 on a 10% query sample
+    let grid = [(0.0, 0.0), (0.0, 0.8), (1.0, 0.0), (1.0, 0.8)];
+    let mut best: Option<(f64, f64, f64, f64)> = None; // beta,gamma,time,rho_model
+    for (beta, gamma) in grid {
+        let mut p = HybridParams::new(k);
+        p.beta = beta;
+        p.gamma = gamma;
+        p.rho = 0.5;
+        p.query_fraction = 0.1;
+        let rep = HybridKnnJoin::run(&engine, &data, &p)?;
+        println!(
+            "  beta={beta:.1} gamma={gamma:.1}: {:.3}s (sampled)  T1={:.2e} T2={:.2e} rho_model={:.3}",
+            rep.response_time, rep.t1, rep.t2, rep.rho_model
+        );
+        if best.map(|b| rep.response_time < b.2).unwrap_or(true) {
+            best = Some((beta, gamma, rep.response_time, rep.rho_model));
+        }
+    }
+    let (beta, gamma, _, rho_model) = best.unwrap();
+    println!("selected beta={beta:.1} gamma={gamma:.1} rho_model={rho_model:.3}");
+
+    // stage 2: full run with the tuned parameters vs the naive default
+    let mut tuned = HybridParams::new(k);
+    tuned.beta = beta;
+    tuned.gamma = gamma;
+    tuned.rho = rho_model;
+    let t_tuned = HybridKnnJoin::run(&engine, &data, &tuned)?;
+
+    let mut naive = HybridParams::new(k);
+    naive.rho = 0.5;
+    let t_naive = HybridKnnJoin::run(&engine, &data, &naive)?;
+
+    println!(
+        "full run: tuned {:.3}s vs naive(rho=0.5) {:.3}s  speedup {:.2}x",
+        t_tuned.response_time,
+        t_naive.response_time,
+        t_naive.response_time / t_tuned.response_time
+    );
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Perf probe for the GPU-side filter-dominated case (Songs* beta=1).
+use hybrid_knn_join::data::variance::reorder_by_variance;
+use hybrid_knn_join::prelude::*;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let e = Engine::load_default()?;
+    let data = songs_like(5_000).generate(0xDA7A ^ 90);
+    let (data, _) = reorder_by_variance(&data);
+    let sel = EpsilonSelector::default().select(&e, &data, 16, 1.0)?;
+    let grid = GridIndex::build(&data, 6, sel.eps);
+    let sp = split_work(&data, &grid, 16, 0.0, 0.2);
+    let mut params = GpuJoinParams::new(16, sel.eps);
+    params.streams = std::env::var("STREAMS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+    let t0 = Instant::now();
+    let out = gpu_join(&e, &data, &grid, &sp.q_gpu, &params)?;
+    println!(
+        "songs-beta1: total={:.3}s kernel={:.3}s pairs={} solved={}",
+        t0.elapsed().as_secs_f64(), out.kernel_time, out.result_pairs, out.solved
+    );
+    Ok(())
+}

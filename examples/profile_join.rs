@@ -1,0 +1,30 @@
+//! Perf-pass probe: where does GPU-JOIN time go?
+use hybrid_knn_join::data::variance::reorder_by_variance;
+use hybrid_knn_join::prelude::*;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let e = Engine::load_default()?;
+    let data = susy_like(20_000).generate(0xDA7A ^ 18);
+    let (data, _) = reorder_by_variance(&data);
+    let sel = EpsilonSelector::default().select(&e, &data, 1, 0.0)?;
+    let grid = GridIndex::build(&data, 6, sel.eps);
+    let sp = split_work(&data, &grid, 1, 0.0, 0.0);
+    println!("|Q_gpu|={} cells(non-empty)={}", sp.q_gpu.len(), grid.non_empty_cells());
+    let work = hybrid_knn_join::gpu::join::workload_vector(&data, &grid, &sp.q_gpu);
+    let total_work: u64 = work.iter().sum();
+    let max_work = work.iter().max().unwrap();
+    println!("total candidate-pairs={} max/query={} avg/query={}",
+        total_work, max_work, total_work / work.len().max(1) as u64);
+    let n0 = e.executions();
+    let t0 = Instant::now();
+    let mut params = GpuJoinParams::new(1, sel.eps);
+    params.streams = std::env::var("STREAMS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+    let out = gpu_join(&e, &data, &grid, &sp.q_gpu, &params)?;
+    println!(
+        "join: total={:.3}s kernel={:.3}s execs={} solved={} failed={} pairs={}",
+        t0.elapsed().as_secs_f64(), out.kernel_time, e.executions() - n0,
+        out.solved, out.failed.len(), out.result_pairs
+    );
+    Ok(())
+}

@@ -1,0 +1,34 @@
+use hybrid_knn_join::prelude::*;
+use std::time::Instant;
+fn main() {
+    let e = Engine::load_default().unwrap();
+    let mut r = hybrid_knn_join::util::rng::Rng::new(1);
+    for (name, qt, ct, d) in [
+        ("dist_q128_c512_d24", 128usize, 512usize, 24usize),
+        ("disttopk_q128_c512_d24_k64", 128, 512, 24),
+        ("dist_q32_c256_d24", 32, 256, 24),
+        ("dist_q128_c512_d96", 128, 512, 96),
+        ("disttopk_q128_c512_d96_k64", 128, 512, 96),
+        ("dist_q128_c512_d520", 128, 512, 520),
+        ("hist_s64_c512_d24_b64", 0, 0, 0),
+    ] {
+        if qt == 0 {
+            let q: Vec<f32> = (0..64*24).map(|_| r.normal(0.,1.) as f32).collect();
+            let c: Vec<f32> = (0..512*24).map(|_| r.normal(0.,1.) as f32).collect();
+            let edges: Vec<f32> = (1..=64).map(|x| x as f32).collect();
+            let args: [(&[f32], &[i64]); 3] = [(&q, &[64,24]), (&c, &[512,24]), (&edges, &[64])];
+            e.exec(name, &args).unwrap();
+            let t0 = Instant::now();
+            for _ in 0..20 { e.exec(name, &args).unwrap(); }
+            println!("{name}: {:.3} ms/exec", t0.elapsed().as_secs_f64()/20.0*1e3);
+            continue;
+        }
+        let q: Vec<f32> = (0..qt*d).map(|_| r.normal(0.,1.) as f32).collect();
+        let c: Vec<f32> = (0..ct*d).map(|_| r.normal(0.,1.) as f32).collect();
+        let args: [(&[f32], &[i64]); 2] = [(&q, &[qt as i64, d as i64]), (&c, &[ct as i64, d as i64])];
+        e.exec(name, &args).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..20 { e.exec(name, &args).unwrap(); }
+        println!("{name}: {:.3} ms/exec", t0.elapsed().as_secs_f64()/20.0*1e3);
+    }
+}

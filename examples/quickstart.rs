@@ -1,0 +1,37 @@
+//! Quickstart: the 20-line path from a dataset to its KNN self-join.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` (the AOT-compiled HLO tiles) once.
+
+use hybrid_knn_join::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // the "device": PJRT CPU client + AOT artifacts
+    let engine = Engine::load_default()?;
+
+    // a 10k-point, 18-D clustered dataset (SuSy surrogate)
+    let data = susy_like(10_000).generate(7);
+
+    // K=5 self-join with default parameters (beta=gamma=rho=0)
+    let mut params = HybridParams::new(5);
+    params.gamma = 0.6; // dense cells to the GPU
+    params.rho = 0.3;   // keep the CPU busy
+    let report = HybridKnnJoin::run(&engine, &data, &params)?;
+
+    println!(
+        "solved {}/{} queries in {:.3}s (GPU {} / CPU {} / failed->CPU {})",
+        report.result.solved_count(5),
+        data.len(),
+        report.response_time,
+        report.q_gpu,
+        report.q_cpu,
+        report.q_fail,
+    );
+    let q = 42;
+    println!("nearest 5 of point {q}:");
+    for n in report.result.get(q) {
+        println!("  id {:>6}  dist {:.4}", n.id, n.dist2.sqrt());
+    }
+    Ok(())
+}

@@ -1,0 +1,123 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts + a manifest.
+
+HLO text (NOT lowered.compiler_ir("hlo") protos / .serialize()) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the rust side's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Artifact families (all f32, shape-static):
+  dist_q{QT}_c{CT}_d{D}            -> (dist2 [QT,CT],)
+  disttopk_q{QT}_c{CT}_d{D}_k{K}   -> (dist2 [QT,K] asc, idx i32 [QT,K])
+  hist_s{S}_c{CT}_d{D}_b{B}        -> (counts [B], dsum [1], npairs [1])
+
+manifest.json records every artifact's name, file, kind, and shapes so the
+rust runtime can pick tiles without hard-coding. `make artifacts` is a no-op
+when inputs are older than the manifest (handled in the Makefile).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Tile configurations. Dims cover the four surrogate datasets after padding
+# to a multiple of 8 (18->24, 32->32, 90->96, 518->520) plus the generic
+# low-dim examples (d<=24 pads into 24).
+DIMS = (24, 32, 96, 520)
+DIST_TILES = ((128, 512), (32, 256))  # (QT, CT)
+TOPK_TILES = ((128, 512),)
+TOPK_K = 64
+HIST_S = 64
+HIST_CT = 512
+HIST_BINS = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe round trip)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_artifacts():
+    """Yield (name, kind, arg_shapes, out_shapes, lowered)."""
+    for d in DIMS:
+        for qt, ct in DIST_TILES:
+            name = f"dist_q{qt}_c{ct}_d{d}"
+            lowered = jax.jit(model.dist_graph).lower(f32(qt, d), f32(ct, d))
+            yield (
+                name,
+                "dist",
+                {"qt": qt, "ct": ct, "d": d},
+                [[qt, ct]],
+                lowered,
+            )
+        for qt, ct in TOPK_TILES:
+            k = TOPK_K
+            name = f"disttopk_q{qt}_c{ct}_d{d}_k{k}"
+            fn = model.make_dist_topk_graph(k)
+            lowered = jax.jit(fn).lower(f32(qt, d), f32(ct, d))
+            yield (
+                name,
+                "disttopk",
+                {"qt": qt, "ct": ct, "d": d, "k": k},
+                [[qt, k], [qt, k]],
+                lowered,
+            )
+        name = f"hist_s{HIST_S}_c{HIST_CT}_d{d}_b{HIST_BINS}"
+        lowered = jax.jit(model.hist_graph).lower(
+            f32(HIST_S, d), f32(HIST_CT, d), f32(HIST_BINS)
+        )
+        yield (
+            name,
+            "hist",
+            {"s": HIST_S, "ct": HIST_CT, "d": d, "bins": HIST_BINS},
+            [[HIST_BINS], [1], [1]],
+            lowered,
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "dtype": "f32", "artifacts": []}
+    for name, kind, params, out_shapes, lowered in build_artifacts():
+        path = f"{name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": path,
+                "kind": kind,
+                "params": params,
+                "out_shapes": out_shapes,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (pytest compares against these).
+
+No pallas, no tiling - the straightforward O(S*CT) formulations used as the
+numerical ground truth for dist_tile / hist_tile and the L2 graphs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_dist(q, c):
+    """(QT, D) x (CT, D) -> (QT, CT) squared Euclidean distances."""
+    q = q.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    diff = q[:, None, :] - c[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def ref_topk(q, c, k):
+    """k smallest squared distances per query: (vals asc, idx), int32 idx."""
+    d2 = ref_dist(q, c)
+    order = jnp.argsort(d2, axis=1)[:, :k]
+    vals = jnp.take_along_axis(d2, order, axis=1)
+    return vals, order.astype(jnp.int32)
+
+
+def ref_hist(q, c, edges2):
+    """Cumulative counts of non-self pairs with dist2 <= edge, plus the sum
+    of in-range true distances and the number of non-self pairs."""
+    d2 = jnp.maximum(ref_dist(q, c), 0.0)
+    valid = d2 > 0.0
+    below = (d2[:, :, None] <= edges2[None, None, :]) & valid[:, :, None]
+    counts = jnp.sum(below.astype(jnp.float32), axis=(0, 1))
+    in_range = valid & (d2 <= edges2[-1])
+    dsum = jnp.sum(jnp.where(in_range, jnp.sqrt(d2), 0.0))
+    npair = jnp.sum(valid.astype(jnp.float32))
+    return counts, dsum[None], npair[None]

@@ -1,0 +1,56 @@
+"""L2: the JAX compute graphs AOT-exported for the rust coordinator.
+
+Each graph composes the L1 Pallas kernels (kernels/) with the surrounding
+jnp glue the paper's GPU component needs:
+
+  dist      - raw (QT, CT) squared-distance tile (GPU-JOIN filter path and
+              GPU-JOINLINEAR brute-force lower bound).
+  dist_topk - distance tile + on-device k-smallest selection (lax.top_k on
+              negated distances). The perf-optimised GPU-JOIN path: the host
+              merges (QT, KMAX) instead of scanning (QT, CT).
+  hist      - cumulative distance histogram + mean-distance accumulators for
+              the empirical epsilon selection of Sec. V-C2.
+
+Everything is shape-static (PJRT AOT requirement); the rust runtime pads
+queries/candidates to the artifact tile shape using dist_tile.PAD_SENTINEL
+coordinates and post-filters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dist_tile import dist_tile
+from .kernels.hist_tile import hist_tile
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see kernels/.
+
+
+def dist_graph(q, c):
+    """(QT, D), (CT, D) -> 1-tuple of (QT, CT) squared distances."""
+    return (dist_tile(q, c, interpret=INTERPRET),)
+
+
+def make_dist_topk_graph(k: int):
+    """Distance tile + k-smallest selection (ascending).
+
+    NOTE: formulated as lax.sort + slice rather than lax.top_k - jax lowers
+    top_k to the `topk(..., largest=true)` HLO instruction, which the rust
+    side's xla_extension 0.5.1 text parser rejects; `sort` round-trips.
+    """
+
+    def dist_topk(q, c):
+        d2 = dist_tile(q, c, interpret=INTERPRET)
+        ct = d2.shape[1]
+        idx = jnp.broadcast_to(jnp.arange(ct, dtype=jnp.int32), d2.shape)
+        sv, si = jax.lax.sort((d2, idx), dimension=1, num_keys=1)
+        return (sv[:, :k], si[:, :k])
+
+    return dist_topk
+
+
+def hist_graph(q, c, edges2):
+    """Cumulative histogram for epsilon selection; see hist_tile."""
+    counts, dsum, npair = hist_tile(q, c, edges2, interpret=INTERPRET)
+    return (counts, dsum, npair)

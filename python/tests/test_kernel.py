@@ -1,0 +1,155 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes/value scales; every property asserts
+allclose against ref.py - the CORE correctness signal for the kernels the
+rust runtime will execute as AOT HLO.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.dist_tile import PAD_SENTINEL, dist_tile
+from compile.kernels.hist_tile import hist_tile
+from compile.kernels.ref import ref_dist, ref_hist, ref_topk
+from compile.model import dist_graph, hist_graph, make_dist_topk_graph
+
+# interpret-mode pallas on CPU: generous-but-tight f32 tolerances for the
+# matmul (vs subtract-square) distance formulation.
+RTOL, ATOL = 3e-4, 5e-4
+
+
+def rnd(rng, *shape, scale=1.0, dtype=np.float32):
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+@st.composite
+def tile_shapes(draw):
+    qt = draw(st.sampled_from([1, 3, 8, 32, 128]))
+    ct = draw(st.sampled_from([1, 2, 16, 64, 256, 512]))
+    d = draw(st.sampled_from([1, 2, 8, 24, 96]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.sampled_from([1e-2, 1.0, 1e2]))
+    return qt, ct, d, seed, scale
+
+
+@settings(max_examples=40, deadline=None)
+@given(tile_shapes())
+def test_dist_tile_matches_ref(shape):
+    qt, ct, d, seed, scale = shape
+    rng = np.random.default_rng(seed)
+    q = rnd(rng, qt, d, scale=scale)
+    c = rnd(rng, ct, d, scale=scale)
+    got = np.asarray(dist_tile(jnp.asarray(q), jnp.asarray(c)))
+    want = np.asarray(ref_dist(jnp.asarray(q), jnp.asarray(c)))
+    # scale-aware tolerance: dist2 ~ scale^2
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL * scale * scale)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([np.float64, np.float32]))
+def test_dist_tile_dtype_coercion(seed, dtype):
+    """Inputs in other dtypes are coerced to the f32 artifact contract."""
+    rng = np.random.default_rng(seed)
+    q = rnd(rng, 4, 8, dtype=dtype)
+    c = rnd(rng, 8, 8, dtype=dtype)
+    got = np.asarray(dist_tile(jnp.asarray(q), jnp.asarray(c)))
+    assert got.dtype == np.float32
+    want = np.asarray(ref_dist(jnp.asarray(q), jnp.asarray(c)))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_dist_tile_zero_distance_diagonal():
+    rng = np.random.default_rng(7)
+    q = rnd(rng, 16, 24)
+    got = np.asarray(dist_tile(jnp.asarray(q), jnp.asarray(q)))
+    # matmul formulation: diagonal is ~0 (not exactly 0); symmetric.
+    assert np.all(np.abs(np.diag(got)) < 1e-3)
+    np.testing.assert_allclose(got, got.T, rtol=1e-5, atol=1e-3)
+
+
+def test_dist_tile_pad_sentinel_dominates():
+    """Padded candidates (sentinel coords) must sort after all real ones."""
+    rng = np.random.default_rng(8)
+    q = rnd(rng, 8, 24, scale=10.0)
+    c = rnd(rng, 12, 24, scale=10.0)
+    pad = np.full((4, 24), PAD_SENTINEL, dtype=np.float32)
+    cp = np.concatenate([c, pad])
+    got = np.asarray(dist_tile(jnp.asarray(q), jnp.asarray(cp)))
+    assert np.all(got[:, 12:] > 1e20)
+    assert np.all(np.isfinite(got[:, :12]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.sampled_from([1, 4, 8]),
+    st.sampled_from([16, 64, 256]),
+    st.sampled_from([2, 24]),
+    st.sampled_from([1, 5, 16]),
+    st.integers(0, 2**31 - 1),
+)
+def test_topk_graph_matches_ref(qt, ct, d, k, seed):
+    rng = np.random.default_rng(seed)
+    q = rnd(rng, qt, d)
+    c = rnd(rng, ct, d)
+    fn = make_dist_topk_graph(k)
+    v, i = fn(jnp.asarray(q), jnp.asarray(c))
+    rv, ri = ref_topk(jnp.asarray(q), jnp.asarray(c), k)
+    v, i, rv = np.asarray(v), np.asarray(i), np.asarray(rv)
+    np.testing.assert_allclose(v, rv, rtol=RTOL, atol=ATOL)
+    assert i.dtype == np.int32
+    # values ascending per row
+    assert np.all(np.diff(v, axis=1) >= -ATOL)
+    # indices consistent with values they claim
+    d2 = np.asarray(ref_dist(jnp.asarray(q), jnp.asarray(c)))
+    np.testing.assert_allclose(
+        np.take_along_axis(d2, i.astype(np.int64), axis=1), v, rtol=RTOL, atol=ATOL
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.sampled_from([2, 8, 32]),
+    st.sampled_from([16, 64, 512]),
+    st.sampled_from([2, 24, 96]),
+    st.sampled_from([4, 16, 64]),
+    st.integers(0, 2**31 - 1),
+)
+def test_hist_tile_matches_ref(s, ct, d, nbins, seed):
+    rng = np.random.default_rng(seed)
+    q = rnd(rng, s, d)
+    c = rnd(rng, ct, d)
+    hi = float(np.quantile(np.asarray(ref_dist(jnp.asarray(q), jnp.asarray(c))), 0.9))
+    edges2 = np.linspace(hi / nbins, hi, nbins).astype(np.float32)
+    got = hist_tile(jnp.asarray(q), jnp.asarray(c), jnp.asarray(edges2))
+    want = ref_hist(jnp.asarray(q), jnp.asarray(c), jnp.asarray(edges2))
+    for g, w in zip(got, want):
+        g, w = np.asarray(g), np.asarray(w)
+        # counts near bin edges may differ by a few pairs due to the matmul
+        # rounding of dist2; allow a sliver of slack, exact otherwise.
+        np.testing.assert_allclose(g, w, rtol=1e-3, atol=max(2.0, 1e-3 * s * ct))
+
+
+def test_hist_counts_monotone_nondecreasing():
+    rng = np.random.default_rng(11)
+    q = rnd(rng, 16, 24)
+    c = rnd(rng, 128, 24)
+    edges2 = np.linspace(0.5, 80.0, 32).astype(np.float32)
+    counts, dsum, npair = hist_tile(jnp.asarray(q), jnp.asarray(c), jnp.asarray(edges2))
+    counts = np.asarray(counts)
+    assert np.all(np.diff(counts) >= 0), "cumulative histogram must be monotone"
+    assert float(np.asarray(npair)[0]) == 16 * 128
+    assert float(np.asarray(dsum)[0]) > 0
+
+
+def test_hist_duplicate_points_tolerated():
+    """Self-pairs (exact duplicates) are excluded only approximately under
+    the matmul formulation - the estimator tolerates O(#dups) slack."""
+    rng = np.random.default_rng(12)
+    q = rnd(rng, 8, 24)
+    c = np.concatenate([q[:4], rnd(rng, 28, 24)])
+    edges2 = np.linspace(0.5, 80.0, 16).astype(np.float32)
+    got = np.asarray(hist_tile(jnp.asarray(q), jnp.asarray(c), jnp.asarray(edges2))[0])
+    want = np.asarray(ref_hist(jnp.asarray(q), jnp.asarray(c), jnp.asarray(edges2))[0])
+    assert np.all(np.abs(got - want) <= 4), "slack bounded by duplicate count"

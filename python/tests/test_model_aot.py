@@ -1,0 +1,88 @@
+"""L2/AOT correctness: graph shapes, HLO-text emission, manifest schema.
+
+Verifies exactly what the rust runtime depends on: every artifact lowers to
+parseable HLO text with the declared entry shapes, f32 everywhere, and the
+manifest enumerates it faithfully.
+"""
+
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_dist_graph_shapes():
+    q = jnp.zeros((32, 24), jnp.float32)
+    c = jnp.zeros((256, 24), jnp.float32)
+    (out,) = model.dist_graph(q, c)
+    assert out.shape == (32, 256) and out.dtype == jnp.float32
+
+
+def test_topk_graph_shapes():
+    fn = model.make_dist_topk_graph(64)
+    q = jnp.zeros((128, 32), jnp.float32)
+    c = jnp.ones((512, 32), jnp.float32)
+    v, i = fn(q, c)
+    assert v.shape == (128, 64) and i.shape == (128, 64)
+    assert v.dtype == jnp.float32 and i.dtype == jnp.int32
+
+
+def test_hist_graph_shapes():
+    q = jnp.zeros((128, 96), jnp.float32)
+    c = jnp.ones((1024, 96), jnp.float32)
+    edges2 = jnp.linspace(1.0, 10.0, 64)
+    counts, dsum, npair = model.hist_graph(q, c, edges2)
+    assert counts.shape == (64,) and dsum.shape == (1,) and npair.shape == (1,)
+
+
+def test_to_hlo_text_structure():
+    """The emitted text must be an HLO module with an ENTRY computation and
+    a tuple root - the exact contract HloModuleProto::from_text expects."""
+    lowered = jax.jit(model.dist_graph).lower(
+        aot.f32(32, 24), aot.f32(256, 24)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True => root is a tuple of one f32[32,256]
+    assert re.search(r"\(f32\[32,256\]", text) or "tuple(" in text
+
+
+def test_build_artifacts_enumeration():
+    arts = list(aot.build_artifacts())
+    names = [a[0] for a in arts]
+    assert len(names) == len(set(names)), "artifact names unique"
+    # every family present for every dim
+    for d in aot.DIMS:
+        assert f"dist_q128_c512_d{d}" in names
+        assert f"dist_q32_c256_d{d}" in names
+        assert f"disttopk_q128_c512_d{d}_k{aot.TOPK_K}" in names
+        assert f"hist_s{aot.HIST_S}_c{aot.HIST_CT}_d{d}_b{aot.HIST_BINS}" in names
+
+
+def test_manifest_matches_tree():
+    """If artifacts/ has been built (make artifacts), the manifest must list
+    exactly the .hlo.txt files present."""
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art_dir, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts not built")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == "hlo-text"
+    listed = {a["file"] for a in manifest["artifacts"]}
+    on_disk = {p for p in os.listdir(art_dir) if p.endswith(".hlo.txt")}
+    assert listed == on_disk
+    for a in manifest["artifacts"]:
+        assert a["kind"] in ("dist", "disttopk", "hist")
+        text = open(os.path.join(art_dir, a["file"])).read(64)
+        assert text.startswith("HloModule")

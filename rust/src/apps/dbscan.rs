@@ -1,0 +1,188 @@
+//! DBSCAN over the GPU-JOIN ε-grid (paper [29]; the grid/batching lineage
+//! of this paper comes from the author's GPU-DBSCAN work [28]).
+//!
+//! Range queries run against the same non-hierarchical grid index the
+//! join uses, so the clustering exercises an independent consumer of the
+//! index substrate. Classic label semantics: core points (>= min_pts
+//! in-ε neighbors incl. self) expand clusters; border points adopt the
+//! first core cluster that reaches them; everything else is NOISE.
+
+use crate::core::{sqdist, Dataset};
+use crate::index::GridIndex;
+
+/// Label for unclustered points.
+pub const NOISE: i32 = -1;
+
+#[derive(Debug, Clone)]
+pub struct DbscanParams {
+    pub eps: f64,
+    pub min_pts: usize,
+    /// indexed dims of the grid (m <= n, as in the join)
+    pub m: usize,
+}
+
+#[derive(Debug)]
+pub struct DbscanResult {
+    /// cluster id per point, or NOISE
+    pub labels: Vec<i32>,
+    pub clusters: usize,
+    pub noise: usize,
+}
+
+/// Run DBSCAN. Builds an ε-grid over the first `m` dims and expands
+/// clusters by BFS over in-ε neighborhoods.
+pub fn dbscan(data: &Dataset, params: &DbscanParams) -> DbscanResult {
+    let n = data.len();
+    let grid = GridIndex::build(data, params.m, params.eps);
+    let eps2 = params.eps * params.eps;
+
+    let neighbors = |i: usize| -> Vec<u32> {
+        let mut out = Vec::new();
+        grid.visit_adjacent(data.point(i), |ids| {
+            for &j in ids {
+                if sqdist(data.point(i), data.point(j as usize)) <= eps2 {
+                    out.push(j);
+                }
+            }
+        });
+        out // includes i itself (dist 0), matching the min_pts convention
+    };
+
+    let mut labels = vec![NOISE; n];
+    let mut visited = vec![false; n];
+    let mut cluster = 0i32;
+    let mut queue: std::collections::VecDeque<u32> = Default::default();
+
+    for p in 0..n {
+        if visited[p] {
+            continue;
+        }
+        visited[p] = true;
+        let ns = neighbors(p);
+        if ns.len() < params.min_pts {
+            continue; // noise (may later become a border point)
+        }
+        // new cluster seeded at core point p
+        labels[p] = cluster;
+        queue.clear();
+        queue.extend(ns);
+        while let Some(q) = queue.pop_front() {
+            let q = q as usize;
+            if labels[q] == NOISE {
+                labels[q] = cluster; // border or core adoption
+            }
+            if visited[q] {
+                continue;
+            }
+            visited[q] = true;
+            let qn = neighbors(q);
+            if qn.len() >= params.min_pts {
+                queue.extend(qn); // q is core: expand through it
+            }
+        }
+        cluster += 1;
+    }
+
+    let noise = labels.iter().filter(|&&l| l == NOISE).count();
+    DbscanResult { labels, clusters: cluster as usize, noise }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn blobs(rng: &mut Rng, centers: &[(f64, f64)], per: usize, sd: f64) -> Dataset {
+        let mut rows = Vec::new();
+        for &(cx, cy) in centers {
+            for _ in 0..per {
+                rows.push(vec![
+                    rng.normal(cx, sd) as f32,
+                    rng.normal(cy, sd) as f32,
+                ]);
+            }
+        }
+        Dataset::from_rows(&rows)
+    }
+
+    #[test]
+    fn two_blobs_two_clusters() {
+        let mut rng = Rng::new(1);
+        let d = blobs(&mut rng, &[(0.0, 0.0), (20.0, 20.0)], 100, 0.5);
+        let r = dbscan(&d, &DbscanParams { eps: 2.0, min_pts: 5, m: 2 });
+        assert_eq!(r.clusters, 2);
+        assert_eq!(r.noise, 0);
+        // all of blob 0 shares a label; different from blob 1
+        assert!(r.labels[..100].iter().all(|&l| l == r.labels[0]));
+        assert!(r.labels[100..].iter().all(|&l| l == r.labels[100]));
+        assert_ne!(r.labels[0], r.labels[100]);
+    }
+
+    #[test]
+    fn isolated_points_are_noise() {
+        let mut rng = Rng::new(2);
+        let mut d = blobs(&mut rng, &[(0.0, 0.0)], 80, 0.4);
+        // append far-away isolated points
+        let mut rows: Vec<Vec<f32>> = (0..d.len()).map(|i| d.point(i).to_vec()).collect();
+        rows.push(vec![100.0, 100.0]);
+        rows.push(vec![-100.0, 50.0]);
+        d = Dataset::from_rows(&rows);
+        let r = dbscan(&d, &DbscanParams { eps: 2.0, min_pts: 5, m: 2 });
+        assert_eq!(r.clusters, 1);
+        assert_eq!(r.noise, 2);
+        assert_eq!(r.labels[80], NOISE);
+        assert_eq!(r.labels[81], NOISE);
+    }
+
+    #[test]
+    fn min_pts_gate() {
+        // 3 points close together but min_pts=5 -> all noise
+        let d = Dataset::from_rows(&[
+            vec![0.0, 0.0],
+            vec![0.1, 0.0],
+            vec![0.0, 0.1],
+        ]);
+        let r = dbscan(&d, &DbscanParams { eps: 1.0, min_pts: 5, m: 2 });
+        assert_eq!(r.clusters, 0);
+        assert_eq!(r.noise, 3);
+    }
+
+    #[test]
+    fn labels_partition_consistently() {
+        // every non-noise label < clusters; every cluster non-empty
+        let mut rng = Rng::new(3);
+        let d = blobs(&mut rng, &[(0.0, 0.0), (8.0, 0.0), (0.0, 8.0)], 60, 0.6);
+        let r = dbscan(&d, &DbscanParams { eps: 1.5, min_pts: 4, m: 2 });
+        assert!(r.clusters >= 2);
+        let mut seen = vec![false; r.clusters];
+        for &l in &r.labels {
+            if l != NOISE {
+                assert!((l as usize) < r.clusters);
+                seen[l as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn projected_grid_still_exact() {
+        // m < n: grid over 2 of 4 dims; correctness must not change
+        let mut rng = Rng::new(4);
+        let rows: Vec<Vec<f32>> = (0..150)
+            .map(|i| {
+                let c = if i < 75 { 0.0 } else { 30.0 };
+                vec![
+                    rng.normal(c, 0.5) as f32,
+                    rng.normal(c, 0.5) as f32,
+                    rng.normal(0.0, 0.1) as f32,
+                    rng.normal(0.0, 0.1) as f32,
+                ]
+            })
+            .collect();
+        let d = Dataset::from_rows(&rows);
+        let full = dbscan(&d, &DbscanParams { eps: 2.0, min_pts: 4, m: 4 });
+        let proj = dbscan(&d, &DbscanParams { eps: 2.0, min_pts: 4, m: 2 });
+        assert_eq!(full.clusters, proj.clusters);
+        assert_eq!(full.noise, proj.noise);
+    }
+}

@@ -1,0 +1,147 @@
+//! kNN graphs from a join result: directed kNN edges, the mutual-kNN
+//! graph (the symmetrised variant graph-clustering algorithms use), and
+//! union-find connected components.
+
+use crate::core::KnnResult;
+
+/// Adjacency-list graph over point ids.
+#[derive(Debug, Clone)]
+pub struct KnnGraph {
+    pub adj: Vec<Vec<u32>>,
+}
+
+impl KnnGraph {
+    pub fn n(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum()
+    }
+}
+
+/// Directed kNN graph: edge q -> n for each of q's (up to k) neighbors.
+pub fn knn_graph(result: &KnnResult, k: usize) -> KnnGraph {
+    let adj = (0..result.len())
+        .map(|q| result.get(q).iter().take(k).map(|n| n.id).collect())
+        .collect();
+    KnnGraph { adj }
+}
+
+/// Mutual-kNN graph: undirected edge {a, b} iff a lists b AND b lists a.
+pub fn mutual_knn_graph(result: &KnnResult, k: usize) -> KnnGraph {
+    let directed = knn_graph(result, k);
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); directed.n()];
+    for (a, ns) in directed.adj.iter().enumerate() {
+        for &b in ns {
+            if directed.adj[b as usize].contains(&(a as u32)) {
+                adj[a].push(b);
+            }
+        }
+    }
+    KnnGraph { adj }
+}
+
+/// Connected components via union-find (path halving + union by size).
+/// Returns (component id per node, number of components).
+pub fn connected_components(g: &KnnGraph) -> (Vec<u32>, usize) {
+    let n = g.n();
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    let mut size = vec![1u32; n];
+
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            parent[x as usize] = parent[parent[x as usize] as usize];
+            x = parent[x as usize];
+        }
+        x
+    }
+
+    for (a, ns) in g.adj.iter().enumerate() {
+        for &b in ns {
+            let (ra, rb) = (find(&mut parent, a as u32), find(&mut parent, b));
+            if ra != rb {
+                let (big, small) = if size[ra as usize] >= size[rb as usize] {
+                    (ra, rb)
+                } else {
+                    (rb, ra)
+                };
+                parent[small as usize] = big;
+                size[big as usize] += size[small as usize];
+            }
+        }
+    }
+    // relabel roots densely
+    let mut label = vec![u32::MAX; n];
+    let mut next = 0u32;
+    let mut out = vec![0u32; n];
+    for i in 0..n {
+        let r = find(&mut parent, i as u32) as usize;
+        if label[r] == u32::MAX {
+            label[r] = next;
+            next += 1;
+        }
+        out[i] = label[r];
+    }
+    (out, next as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{KnnResult, Neighbor};
+
+    fn nb(id: u32) -> Neighbor {
+        Neighbor { id, dist2: 1.0 }
+    }
+
+    fn two_cliques() -> KnnResult {
+        // nodes 0-2 point at each other; 3-5 point at each other
+        let mut r = KnnResult::with_capacity(6);
+        r.set(0, vec![nb(1), nb(2)]);
+        r.set(1, vec![nb(0), nb(2)]);
+        r.set(2, vec![nb(0), nb(1)]);
+        r.set(3, vec![nb(4), nb(5)]);
+        r.set(4, vec![nb(3), nb(5)]);
+        r.set(5, vec![nb(3), nb(4)]);
+        r
+    }
+
+    #[test]
+    fn knn_graph_respects_k() {
+        let r = two_cliques();
+        assert_eq!(knn_graph(&r, 2).edge_count(), 12);
+        assert_eq!(knn_graph(&r, 1).edge_count(), 6);
+    }
+
+    #[test]
+    fn components_of_two_cliques() {
+        let g = knn_graph(&two_cliques(), 2);
+        let (labels, n) = connected_components(&g);
+        assert_eq!(n, 2);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[0], labels[2]);
+        assert_eq!(labels[3], labels[4]);
+        assert_ne!(labels[0], labels[3]);
+    }
+
+    #[test]
+    fn mutual_graph_drops_one_way_edges() {
+        let mut r = KnnResult::with_capacity(3);
+        r.set(0, vec![nb(1)]);
+        r.set(1, vec![nb(2)]); // 1 does NOT list 0
+        r.set(2, vec![nb(1)]);
+        let m = mutual_knn_graph(&r, 1);
+        assert!(m.adj[0].is_empty(), "0->1 is one-way");
+        assert_eq!(m.adj[1], vec![2]);
+        assert_eq!(m.adj[2], vec![1]);
+    }
+
+    #[test]
+    fn singleton_nodes_are_own_components() {
+        let r = KnnResult::with_capacity(4); // no edges at all
+        let g = knn_graph(&r, 3);
+        let (_, n) = connected_components(&g);
+        assert_eq!(n, 4);
+    }
+}

@@ -1,0 +1,86 @@
+//! K-distance diagram (Ester et al. [29], referenced by the paper's
+//! ε-selection): the sorted distance-to-k-th-neighbor curve, whose knee is
+//! the classic choice of DBSCAN's ε.
+
+use crate::core::KnnResult;
+
+/// Sorted (descending, as conventionally plotted) k-th neighbor distance
+/// for every solved query. Queries with < k neighbors are skipped.
+pub fn k_distance_curve(result: &KnnResult, k: usize) -> Vec<f64> {
+    assert!(k >= 1);
+    let mut curve: Vec<f64> = (0..result.len())
+        .filter_map(|q| result.get(q).get(k - 1).map(|n| n.dist2.sqrt()))
+        .collect();
+    curve.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    curve
+}
+
+/// Knee heuristic: the point of maximum discrete curvature (second
+/// difference) on the descending k-distance curve, returned as an ε
+/// suggestion for DBSCAN. Falls back to the median for tiny curves.
+pub fn suggest_dbscan_eps(curve: &[f64]) -> f64 {
+    if curve.len() < 5 {
+        return curve.get(curve.len() / 2).copied().unwrap_or(0.0);
+    }
+    let mut best = (0usize, f64::NEG_INFINITY);
+    for i in 1..curve.len() - 1 {
+        let curvature = curve[i - 1] - 2.0 * curve[i] + curve[i + 1];
+        if curvature > best.1 {
+            best = (i, curvature);
+        }
+    }
+    curve[best.0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{KnnResult, Neighbor};
+
+    fn result_with_kth(dists: &[f64], k: usize) -> KnnResult {
+        let mut r = KnnResult::with_capacity(dists.len());
+        for (q, &d) in dists.iter().enumerate() {
+            let ns = (0..k)
+                .map(|j| Neighbor {
+                    id: j as u32,
+                    dist2: (d * (j + 1) as f64 / k as f64).powi(2),
+                })
+                .collect();
+            r.set(q, ns);
+        }
+        r
+    }
+
+    #[test]
+    fn curve_is_descending_and_complete() {
+        let r = result_with_kth(&[3.0, 1.0, 2.0, 5.0], 2);
+        let c = k_distance_curve(&r, 2);
+        assert_eq!(c.len(), 4);
+        for w in c.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!((c[0] - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn skips_underfilled_queries() {
+        let mut r = result_with_kth(&[3.0, 1.0], 2);
+        r.set(1, vec![Neighbor { id: 0, dist2: 1.0 }]); // only 1 neighbor
+        assert_eq!(k_distance_curve(&r, 2).len(), 1);
+    }
+
+    #[test]
+    fn knee_found_on_elbow_curve() {
+        // flat tail at 1.0 with a sharp elbow from 10.0
+        let mut curve = vec![10.0, 9.0, 8.0, 1.2, 1.1, 1.05, 1.0, 1.0, 1.0];
+        curve.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let eps = suggest_dbscan_eps(&curve);
+        assert!(eps <= 1.5, "knee should sit at the flat tail start: {eps}");
+    }
+
+    #[test]
+    fn tiny_curve_fallback() {
+        assert_eq!(suggest_dbscan_eps(&[2.0, 4.0]), 4.0);
+        assert_eq!(suggest_dbscan_eps(&[]), 0.0);
+    }
+}

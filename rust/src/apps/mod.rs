@@ -1,0 +1,15 @@
+//! Applications built on the KNN join - the workloads the paper's
+//! introduction motivates: kNN-graph construction for graph clustering
+//! (Chameleon [5], k-means seeding [4]), the k-distance diagram used to
+//! pick DBSCAN's ε (the paper's own ε-selection is "similar to the
+//! procedure used to create a K-distance diagram", Sec. V-C2), and a
+//! DBSCAN implementation running its range queries over the same ε-grid
+//! index as GPU-JOIN.
+
+pub mod dbscan;
+pub mod graph;
+pub mod kdist;
+
+pub use dbscan::{dbscan, DbscanParams, DbscanResult, NOISE};
+pub use graph::{connected_components, knn_graph, mutual_knn_graph, KnnGraph};
+pub use kdist::{k_distance_curve, suggest_dbscan_eps};

@@ -1,0 +1,158 @@
+//! Shared bench harness: the workload suite (surrogate datasets at bench
+//! scale), an aligned table printer, and one runner per paper table /
+//! figure (experiments::*). The `benches/` binaries and the CLI
+//! `experiments` subcommand are thin wrappers over this module.
+
+pub mod experiments;
+
+use crate::core::Dataset;
+use crate::data::synthetic::{self, DatasetSpec};
+
+/// Bench-scale workload suite. Sizes are scaled from the paper's datasets
+/// (DESIGN.md §2) so the full suite runs in minutes on one core; the
+/// HKNN_SCALE env var scales them globally (e.g. HKNN_SCALE=5 for a
+/// longer, more faithful run).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: &'static str,
+    pub spec: DatasetSpec,
+    /// the paper's per-dataset K for Tables III/IV/V/VI
+    pub table_k: usize,
+}
+
+/// Global scale factor (default 1.0).
+pub fn scale() -> f64 {
+    std::env::var("HKNN_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+fn scaled(n: usize) -> usize {
+    ((n as f64 * scale()) as usize).max(64)
+}
+
+/// The four surrogate workloads (paper Table I).
+pub fn workloads() -> Vec<Workload> {
+    vec![
+        Workload { name: "SuSy*", spec: synthetic::susy_like(scaled(20_000)), table_k: 1 },
+        Workload { name: "CHist*", spec: synthetic::chist_like(scaled(8_000)), table_k: 10 },
+        Workload { name: "Songs*", spec: synthetic::songs_like(scaled(5_000)), table_k: 1 },
+        Workload { name: "FMA*", spec: synthetic::fma_like(scaled(2_500)), table_k: 10 },
+    ]
+}
+
+/// A smaller suite for smoke tests and quick iterations.
+pub fn workloads_quick() -> Vec<Workload> {
+    vec![
+        Workload { name: "SuSy*", spec: synthetic::susy_like(2_000), table_k: 1 },
+        Workload { name: "CHist*", spec: synthetic::chist_like(1_000), table_k: 10 },
+        Workload { name: "Songs*", spec: synthetic::songs_like(800), table_k: 1 },
+        Workload { name: "FMA*", spec: synthetic::fma_like(400), table_k: 10 },
+    ]
+}
+
+impl Workload {
+    pub fn dataset(&self) -> Dataset {
+        self.spec.generate(0xDA7A ^ self.spec.dims as u64)
+    }
+}
+
+/// Aligned text table accumulating rows; printed by the bench binaries and
+/// pasted into EXPERIMENTS.md.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("## {}\n", self.title);
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format seconds with sensible precision.
+pub fn secs(t: f64) -> String {
+    if t >= 100.0 {
+        format!("{t:.1}")
+    } else if t >= 1.0 {
+        format!("{t:.2}")
+    } else {
+        format!("{t:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_suite_shapes() {
+        let ws = workloads_quick();
+        assert_eq!(ws.len(), 4);
+        let d = ws[0].dataset();
+        assert_eq!(d.dims(), 18);
+        assert_eq!(d.len(), 2000);
+    }
+
+    #[test]
+    fn table_render_aligns() {
+        let mut t = Table::new("T", &["a", "bbb"]);
+        t.row(vec!["xx".into(), "1".into()]);
+        let r = t.render();
+        assert!(r.contains("## T"));
+        assert!(r.contains("a   bbb"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(secs(123.456), "123.5");
+        assert_eq!(secs(1.234), "1.23");
+        assert_eq!(secs(0.01234), "0.0123");
+    }
+}

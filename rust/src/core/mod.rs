@@ -1,0 +1,222 @@
+//! Core types: the point database, distance kernels (incl. SHORTC), and
+//! KNN result containers (paper Sec. III problem statement).
+
+pub mod result;
+
+pub use result::{BoundedHeap, KnnResult, Neighbor};
+
+/// An in-memory database of n-dimensional points, stored row-major f32
+/// (flat, cache-friendly; the same layout the runtime uploads to PJRT).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    data: Vec<f32>,
+    dims: usize,
+}
+
+impl Dataset {
+    pub fn new(data: Vec<f32>, dims: usize) -> Dataset {
+        assert!(dims > 0, "dims must be positive");
+        assert!(
+            data.len() % dims == 0,
+            "data length {} not divisible by dims {dims}",
+            data.len()
+        );
+        Dataset { data, dims }
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Dataset {
+        assert!(!rows.is_empty());
+        let dims = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * dims);
+        for r in rows {
+            assert_eq!(r.len(), dims, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Dataset::new(data, dims)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dims
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dims..(i + 1) * self.dims]
+    }
+
+    #[inline]
+    pub fn raw(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Coordinate j of point i.
+    #[inline]
+    pub fn coord(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.dims + j]
+    }
+
+    /// Apply a dimension permutation (used by REORDER): new dim j comes
+    /// from old dim perm[j].
+    pub fn permute_dims(&self, perm: &[usize]) -> Dataset {
+        assert_eq!(perm.len(), self.dims);
+        let n = self.len();
+        let mut out = vec![0f32; self.data.len()];
+        for i in 0..n {
+            let src = self.point(i);
+            let dst = &mut out[i * self.dims..(i + 1) * self.dims];
+            for (j, &pj) in perm.iter().enumerate() {
+                dst[j] = src[pj];
+            }
+        }
+        Dataset::new(out, self.dims)
+    }
+
+    /// Gather a subset of points (by id) into a new dataset.
+    pub fn gather(&self, ids: &[usize]) -> Dataset {
+        let mut data = Vec::with_capacity(ids.len() * self.dims);
+        for &i in ids {
+            data.extend_from_slice(self.point(i));
+        }
+        Dataset::new(data, self.dims)
+    }
+}
+
+/// Full squared Euclidean distance.
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+/// SHORTC (paper Sec. IV-E): abort the accumulation as soon as the running
+/// total exceeds `cut` (squared distance threshold). Returns None when the
+/// true distance is certainly > cut.
+#[inline]
+pub fn sqdist_short_circuit(a: &[f32], b: &[f32], cut: f64) -> Option<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f64;
+    // check every 8 dims: amortises the branch like the paper's unrolled
+    // CUDA loop while keeping early exit effective in high dimensions.
+    let mut i = 0;
+    let n = a.len();
+    while i + 8 <= n {
+        for k in 0..8 {
+            let d = (a[i + k] - b[i + k]) as f64;
+            acc += d * d;
+        }
+        if acc > cut {
+            return None;
+        }
+        i += 8;
+    }
+    while i < n {
+        let d = (a[i] - b[i]) as f64;
+        acc += d * d;
+        i += 1;
+    }
+    if acc > cut {
+        None
+    } else {
+        Some(acc)
+    }
+}
+
+/// Squared distance over only the first `m` dims (index projection).
+#[inline]
+pub fn sqdist_prefix(a: &[f32], b: &[f32], m: usize) -> f64 {
+    let mut acc = 0f64;
+    for i in 0..m {
+        let d = (a[i] - b[i]) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn dataset_accessors() {
+        let d = Dataset::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.dims(), 2);
+        assert_eq!(d.point(1), &[3.0, 4.0]);
+        assert_eq!(d.coord(2, 1), 6.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn dataset_rejects_ragged() {
+        Dataset::new(vec![1.0, 2.0, 3.0], 2);
+    }
+
+    #[test]
+    fn permute_dims_roundtrip() {
+        let d = Dataset::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let p = d.permute_dims(&[2, 0, 1]);
+        assert_eq!(p.point(0), &[3.0, 1.0, 2.0]);
+        // inverse permutation restores
+        let back = p.permute_dims(&[1, 2, 0]);
+        assert_eq!(back.point(0), d.point(0));
+        assert_eq!(back.point(1), d.point(1));
+    }
+
+    #[test]
+    fn gather_subset() {
+        let d = Dataset::from_rows(&[vec![0.0], vec![1.0], vec![2.0], vec![3.0]]);
+        let g = d.gather(&[3, 1]);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g.point(0), &[3.0]);
+        assert_eq!(g.point(1), &[1.0]);
+    }
+
+    #[test]
+    fn sqdist_known() {
+        assert_eq!(sqdist(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(sqdist(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn short_circuit_agrees_with_full() {
+        prop::cases(200, 0xC0FE, |rng| {
+            let n = 1 + rng.below(40);
+            let a: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+            let full = sqdist(&a, &b);
+            let cut = rng.range(0.0, 4.0 * n as f64);
+            match sqdist_short_circuit(&a, &b, cut) {
+                Some(d) => {
+                    assert!((d - full).abs() < 1e-9);
+                    assert!(full <= cut + 1e-12);
+                }
+                None => assert!(full > cut - 1e-9),
+            }
+        });
+    }
+
+    #[test]
+    fn prefix_distance_partial() {
+        let a = [1.0f32, 2.0, 10.0];
+        let b = [1.0f32, 4.0, -10.0];
+        assert_eq!(sqdist_prefix(&a, &b, 2), 4.0);
+        assert!(sqdist_prefix(&a, &b, 2) <= sqdist(&a, &b));
+    }
+}

@@ -1,0 +1,241 @@
+//! KNN result containers: per-query bounded neighbor heaps and the final
+//! join result (the paper's key/value result set, Sec. V-H, after
+//! `filterKeys`).
+
+use std::cmp::Ordering;
+
+/// One neighbor: point id + squared distance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    pub id: u32,
+    pub dist2: f64,
+}
+
+impl Eq for Neighbor {}
+
+impl PartialOrd for Neighbor {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Neighbor {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // total order: by distance then id (NaN-free by construction)
+        self.dist2
+            .partial_cmp(&other.dist2)
+            .unwrap_or(Ordering::Equal)
+            .then(self.id.cmp(&other.id))
+    }
+}
+
+/// Bounded max-heap of the K best (smallest-distance) neighbors seen so
+/// far. `push` is O(log K); the hot path of every engine in this repo.
+#[derive(Debug, Clone)]
+pub struct BoundedHeap {
+    k: usize,
+    heap: Vec<Neighbor>, // max-heap by dist2
+}
+
+impl BoundedHeap {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        BoundedHeap { k, heap: Vec::with_capacity(k) }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.heap.len() == self.k
+    }
+
+    /// Current worst (largest) distance kept, or +inf if not yet full.
+    /// Search pruning bound: anything farther cannot enter the result.
+    #[inline]
+    pub fn bound(&self) -> f64 {
+        if self.is_full() {
+            self.heap[0].dist2
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Offer a neighbor; keeps only the K nearest.
+    #[inline]
+    pub fn push(&mut self, n: Neighbor) {
+        if self.heap.len() < self.k {
+            self.heap.push(n);
+            // sift up
+            let mut i = self.heap.len() - 1;
+            while i > 0 {
+                let parent = (i - 1) / 2;
+                if self.heap[parent] < self.heap[i] {
+                    self.heap.swap(parent, i);
+                    i = parent;
+                } else {
+                    break;
+                }
+            }
+        } else if n.dist2 < self.heap[0].dist2 {
+            self.heap[0] = n;
+            // sift down
+            let mut i = 0;
+            loop {
+                let l = 2 * i + 1;
+                let r = 2 * i + 2;
+                let mut big = i;
+                if l < self.heap.len() && self.heap[big] < self.heap[l] {
+                    big = l;
+                }
+                if r < self.heap.len() && self.heap[big] < self.heap[r] {
+                    big = r;
+                }
+                if big == i {
+                    break;
+                }
+                self.heap.swap(i, big);
+                i = big;
+            }
+        }
+    }
+
+    /// Extract neighbors sorted ascending by distance.
+    pub fn into_sorted(mut self) -> Vec<Neighbor> {
+        self.heap.sort();
+        self.heap
+    }
+
+    pub fn as_slice(&self) -> &[Neighbor] {
+        &self.heap
+    }
+}
+
+/// The KNN self-join result: for each query id, its (up to) K nearest
+/// neighbors sorted ascending by distance.
+#[derive(Debug, Clone, Default)]
+pub struct KnnResult {
+    /// neighbors[i] are the neighbors of query point i (empty = unsolved).
+    neighbors: Vec<Vec<Neighbor>>,
+}
+
+impl KnnResult {
+    pub fn with_capacity(n: usize) -> Self {
+        KnnResult { neighbors: vec![Vec::new(); n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.neighbors.is_empty()
+    }
+
+    pub fn set(&mut self, query: usize, mut ns: Vec<Neighbor>) {
+        ns.sort();
+        self.neighbors[query] = ns;
+    }
+
+    pub fn get(&self, query: usize) -> &[Neighbor] {
+        &self.neighbors[query]
+    }
+
+    /// Queries that found at least k neighbors.
+    pub fn solved_count(&self, k: usize) -> usize {
+        self.neighbors.iter().filter(|ns| ns.len() >= k).count()
+    }
+
+    /// Merge another result into this one (other wins where it is solved).
+    pub fn merge_from(&mut self, other: KnnResult) {
+        assert_eq!(self.len(), other.len());
+        for (mine, theirs) in self.neighbors.iter_mut().zip(other.neighbors) {
+            if !theirs.is_empty() {
+                *mine = theirs;
+            }
+        }
+    }
+
+    /// Total number of stored neighbor entries (result set size |R|).
+    pub fn total_neighbors(&self) -> usize {
+        self.neighbors.iter().map(|n| n.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn nb(id: u32, d: f64) -> Neighbor {
+        Neighbor { id, dist2: d }
+    }
+
+    #[test]
+    fn heap_keeps_k_smallest() {
+        let mut h = BoundedHeap::new(3);
+        for (id, d) in [(0, 5.0), (1, 1.0), (2, 4.0), (3, 2.0), (4, 3.0)] {
+            h.push(nb(id, d));
+        }
+        let out = h.into_sorted();
+        assert_eq!(
+            out.iter().map(|n| n.id).collect::<Vec<_>>(),
+            vec![1, 3, 4]
+        );
+        assert_eq!(out[0].dist2, 1.0);
+    }
+
+    #[test]
+    fn heap_bound_tracks_worst() {
+        let mut h = BoundedHeap::new(2);
+        assert_eq!(h.bound(), f64::INFINITY);
+        h.push(nb(0, 9.0));
+        assert_eq!(h.bound(), f64::INFINITY);
+        h.push(nb(1, 4.0));
+        assert_eq!(h.bound(), 9.0);
+        h.push(nb(2, 1.0));
+        assert_eq!(h.bound(), 4.0);
+    }
+
+    #[test]
+    fn heap_property_matches_sort() {
+        prop::cases(100, 0xBEEF, |rng| {
+            let n = 1 + rng.below(64);
+            let k = 1 + rng.below(12);
+            let items: Vec<Neighbor> = (0..n)
+                .map(|i| nb(i as u32, rng.range(0.0, 100.0)))
+                .collect();
+            let mut h = BoundedHeap::new(k);
+            for &it in &items {
+                h.push(it);
+            }
+            let got = h.into_sorted();
+            let mut want = items.clone();
+            want.sort();
+            want.truncate(k);
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn result_merge_and_counts() {
+        let mut a = KnnResult::with_capacity(3);
+        a.set(0, vec![nb(1, 1.0)]);
+        let mut b = KnnResult::with_capacity(3);
+        b.set(1, vec![nb(2, 2.0), nb(0, 0.5)]);
+        a.merge_from(b);
+        assert_eq!(a.get(0).len(), 1);
+        assert_eq!(a.get(1)[0].id, 0, "sorted ascending");
+        assert_eq!(a.solved_count(1), 2);
+        assert_eq!(a.solved_count(2), 1);
+        assert_eq!(a.total_neighbors(), 3);
+    }
+}

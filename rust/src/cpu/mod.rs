@@ -1,0 +1,175 @@
+//! EXACT-ANN and REFIMPL (paper Sec. V-B, VI-C): rank-parallel exact KNN
+//! over the kd-tree.
+//!
+//! The paper parallelises the ANN library with shared-nothing MPI ranks,
+//! each holding its own copy of the index and taking queries round-robin.
+//! Here a rank is an OS thread; the kd-tree is shared *read-only* (same
+//! shared-nothing semantics - no rank mutates the index - without paying
+//! |p| duplicate builds). REFIMPL is EXACT-ANN run over all of D with one
+//! extra rank (the paper frees the GPU-master rank).
+
+use std::time::Instant;
+
+use crate::core::{Dataset, KnnResult};
+use crate::index::KdTree;
+use crate::util::pool;
+
+/// Outcome of a CPU-side KNN pass.
+#[derive(Debug)]
+pub struct CpuKnnOutcome {
+    pub result: KnnResult,
+    /// wall time of each rank (seconds)
+    pub per_rank_time: Vec<f64>,
+    /// wall time of the whole pass
+    pub total_time: f64,
+    pub queries: usize,
+}
+
+/// EXACT-ANN: find the KNN of `queries` using `ranks` parallel ranks with
+/// round-robin assignment (query i -> rank i mod |p|). Self-join form.
+pub fn exact_ann(
+    data: &Dataset,
+    tree: &KdTree,
+    queries: &[u32],
+    k: usize,
+    ranks: usize,
+) -> CpuKnnOutcome {
+    exact_ann_rs(data, tree, data, queries, k, ranks, true)
+}
+
+/// Bipartite EXACT-ANN: `queries` index `r_data` (outer relation); the
+/// kd-tree indexes `data` = S. `exclude_self` only makes sense when
+/// r_data and data are the same relation.
+pub fn exact_ann_rs(
+    data: &Dataset,
+    tree: &KdTree,
+    r_data: &Dataset,
+    queries: &[u32],
+    k: usize,
+    ranks: usize,
+    exclude_self: bool,
+) -> CpuKnnOutcome {
+    let t0 = Instant::now();
+    let ranks = ranks.max(1);
+    let rank_results: Vec<(f64, Vec<(u32, Vec<crate::core::Neighbor>)>)> =
+        pool::run_ranks(ranks, |r| {
+            let t = Instant::now();
+            let mut out = Vec::new();
+            let mut i = r;
+            while i < queries.len() {
+                let q = queries[i];
+                let excl = if exclude_self { q } else { u32::MAX };
+                out.push((q, tree.knn(data, r_data.point(q as usize), k, excl)));
+                i += ranks;
+            }
+            (t.elapsed().as_secs_f64(), out)
+        });
+
+    let mut result = KnnResult::with_capacity(r_data.len());
+    let mut per_rank_time = Vec::with_capacity(ranks);
+    for (secs, items) in rank_results {
+        per_rank_time.push(secs);
+        for (q, ns) in items {
+            result.set(q as usize, ns);
+        }
+    }
+    CpuKnnOutcome {
+        result,
+        per_rank_time,
+        total_time: t0.elapsed().as_secs_f64(),
+        queries: queries.len(),
+    }
+}
+
+/// REFIMPL: the CPU-only parallel reference - EXACT-ANN over all of D.
+pub fn ref_impl(data: &Dataset, tree: &KdTree, k: usize, ranks: usize) -> CpuKnnOutcome {
+    let queries: Vec<u32> = (0..data.len() as u32).collect();
+    exact_ann(data, tree, &queries, k, ranks)
+}
+
+/// Per-rank *work* times measured serially (one thread executes each
+/// rank's share in turn). On a single-core testbed this is the honest way
+/// to study the round-robin load balance of Fig. 6: the speedup-vs-ranks
+/// curve is total_work / max_rank_work, i.e. ideal scheduling without
+/// memory-bus contention (see DESIGN.md hardware-adaptation notes).
+pub fn rank_work_times(
+    data: &Dataset,
+    tree: &KdTree,
+    queries: &[u32],
+    k: usize,
+    ranks: usize,
+) -> Vec<f64> {
+    let ranks = ranks.max(1);
+    (0..ranks)
+        .map(|r| {
+            let t = Instant::now();
+            let mut i = r;
+            while i < queries.len() {
+                let q = queries[i];
+                std::hint::black_box(tree.knn(data, data.point(q as usize), k, q));
+                i += ranks;
+            }
+            t.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::susy_like;
+
+    #[test]
+    fn exact_ann_covers_all_queries_exactly() {
+        let data = susy_like(500).generate(41);
+        let tree = KdTree::build(&data);
+        let queries: Vec<u32> = (0..data.len() as u32).collect();
+        let out = exact_ann(&data, &tree, &queries, 5, 4);
+        assert_eq!(out.result.solved_count(5), data.len());
+        assert_eq!(out.per_rank_time.len(), 4);
+        // results equal single-rank run
+        let single = exact_ann(&data, &tree, &queries, 5, 1);
+        for q in (0..data.len()).step_by(43) {
+            let (a, b) = (out.result.get(q), single.result.get(q));
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.dist2, y.dist2);
+            }
+        }
+    }
+
+    #[test]
+    fn subset_and_empty_queries() {
+        let data = susy_like(200).generate(42);
+        let tree = KdTree::build(&data);
+        let out = exact_ann(&data, &tree, &[5, 50, 150], 3, 2);
+        assert_eq!(out.queries, 3);
+        assert_eq!(out.result.solved_count(3), 3);
+        assert!(out.result.get(0).is_empty());
+        let empty = exact_ann(&data, &tree, &[], 3, 2);
+        assert_eq!(empty.result.solved_count(1), 0);
+    }
+
+    #[test]
+    fn ref_impl_is_full_dataset() {
+        let data = susy_like(300).generate(43);
+        let tree = KdTree::build(&data);
+        let out = ref_impl(&data, &tree, 2, 3);
+        assert_eq!(out.queries, data.len());
+        assert_eq!(out.result.solved_count(2), data.len());
+    }
+
+    #[test]
+    fn rank_work_roughly_balanced_by_round_robin() {
+        let data = susy_like(2000).generate(44);
+        let tree = KdTree::build(&data);
+        let queries: Vec<u32> = (0..data.len() as u32).collect();
+        let times = rank_work_times(&data, &tree, &queries, 5, 8);
+        assert_eq!(times.len(), 8);
+        let total: f64 = times.iter().sum();
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        let speedup = total / max;
+        // near-ideal load balancing (paper: round-robin yields near-ideal)
+        assert!(speedup > 5.5, "poor balance: speedup {speedup} of 8");
+    }
+}

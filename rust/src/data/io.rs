@@ -1,0 +1,144 @@
+//! Dataset persistence: CSV (interoperable) and a raw little-endian binary
+//! format (fast reload of generated surrogates between bench runs).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::core::Dataset;
+
+/// Write CSV (no header): one point per row.
+pub fn write_csv(d: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for i in 0..d.len() {
+        let row: Vec<String> = d.point(i).iter().map(|x| format!("{x}")).collect();
+        writeln!(w, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read CSV of floats; all rows must have equal arity.
+pub fn read_csv(path: &Path) -> Result<Dataset> {
+    let r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut data = Vec::new();
+    let mut dims = None;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        let row: Vec<f32> = t
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f32>()
+                    .with_context(|| format!("line {}: bad float {s:?}", lineno + 1))
+            })
+            .collect::<Result<_>>()?;
+        match dims {
+            None => dims = Some(row.len()),
+            Some(d) if d != row.len() => {
+                bail!("line {}: expected {d} columns, got {}", lineno + 1, row.len())
+            }
+            _ => {}
+        }
+        data.extend(row);
+    }
+    let dims = dims.context("empty csv")?;
+    Ok(Dataset::new(data, dims))
+}
+
+const MAGIC: &[u8; 8] = b"HKNNDS01";
+
+/// Write the raw binary format: magic, u64 n, u64 dims, then f32 LE data.
+pub fn write_bin(d: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(d.len() as u64).to_le_bytes())?;
+    w.write_all(&(d.dims() as u64).to_le_bytes())?;
+    for &x in d.raw() {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the raw binary format.
+pub fn read_bin(path: &Path) -> Result<Dataset> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic: not a HKNNDS01 file");
+    }
+    let mut buf8 = [0u8; 8];
+    r.read_exact(&mut buf8)?;
+    let n = u64::from_le_bytes(buf8) as usize;
+    r.read_exact(&mut buf8)?;
+    let dims = u64::from_le_bytes(buf8) as usize;
+    let mut bytes = Vec::new();
+    r.read_to_end(&mut bytes)?;
+    if bytes.len() != n * dims * 4 {
+        bail!("truncated data: want {} bytes, got {}", n * dims * 4, bytes.len());
+    }
+    let data: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Dataset::new(data, dims))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::chist_like;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("hknn_io_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let d = chist_like(50).generate(1);
+        let p = tmp("a.csv");
+        write_csv(&d, &p).unwrap();
+        let back = read_csv(&p).unwrap();
+        assert_eq!(back.len(), d.len());
+        assert_eq!(back.dims(), d.dims());
+        for (a, b) in d.raw().iter().zip(back.raw()) {
+            assert!((a - b).abs() <= f32::EPSILON * a.abs().max(1.0) * 10.0);
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn bin_roundtrip_exact() {
+        let d = chist_like(64).generate(2);
+        let p = tmp("b.bin");
+        write_bin(&d, &p).unwrap();
+        let back = read_bin(&p).unwrap();
+        assert_eq!(back.raw(), d.raw());
+        assert_eq!(back.dims(), d.dims());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let p = tmp("c.csv");
+        std::fs::write(&p, "1,2,3\n4,5\n").unwrap();
+        assert!(read_csv(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn bin_rejects_bad_magic() {
+        let p = tmp("d.bin");
+        std::fs::write(&p, b"NOTMAGIC________").unwrap();
+        assert!(read_bin(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! Datasets: synthetic surrogates for the paper's UCI workloads, CSV/binary
+//! IO, and the REORDER (variance) preprocessing step.
+
+pub mod io;
+pub mod synthetic;
+pub mod variance;
+
+pub use synthetic::{chist_like, fma_like, songs_like, susy_like, DatasetSpec};
+pub use variance::{reorder_by_variance, variance_per_dim};

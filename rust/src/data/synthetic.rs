@@ -1,0 +1,257 @@
+//! Synthetic surrogate datasets (DESIGN.md §2 "Dataset substitution").
+//!
+//! The UCI datasets of Table I are unavailable offline; these generators
+//! are matched on the properties the paper identifies as controlling the
+//! KNN workload - |D|, dimensionality n, and distribution: clustered dense
+//! regions (GPU-friendly) embedded in sparse background (CPU-friendly),
+//! with deliberately imbalanced per-dimension variances so REORDER and the
+//! m < n index projection have the same effect they have on the real data.
+
+use crate::core::Dataset;
+use crate::util::rng::Rng;
+
+/// Shape of a Gaussian-mixture surrogate.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub n_points: usize,
+    pub dims: usize,
+    pub clusters: usize,
+    /// fraction of points drawn from the uniform background (sparse region)
+    pub background: f64,
+    /// cluster stddev range (sampled per cluster, log-uniform-ish)
+    pub sigma: (f64, f64),
+    /// exponent of the per-dimension variance decay: dimension j gets
+    /// global scale (j+1)^-decay, producing the variance imbalance REORDER
+    /// exploits. 0.0 = isotropic.
+    pub variance_decay: f64,
+    /// intrinsic dimensionality: cluster offsets live in a rank-r subspace
+    /// (r = intrinsic.min(dims)); mimics feature datasets (FMA) whose 518
+    /// dims have low intrinsic rank.
+    pub intrinsic: usize,
+}
+
+impl DatasetSpec {
+    /// Generate the dataset (deterministic in `seed`).
+    pub fn generate(&self, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed ^ 0xDA7A_5E_ED);
+        let d = self.dims;
+        let r = self.intrinsic.min(d).max(1);
+
+        // Per-dimension global scale: imbalanced variance profile.
+        let dim_scale: Vec<f64> = (0..d)
+            .map(|j| ((j + 1) as f64).powf(-self.variance_decay))
+            .collect();
+
+        // Random rank-r loading matrix (r x d): cluster centers =
+        // z (r-dim) * loadings, so data concentrates near a subspace.
+        let mut loadings = vec![0f64; r * d];
+        {
+            let mut lr = rng.fork(17);
+            for row in 0..r {
+                for col in 0..d {
+                    loadings[row * d + col] =
+                        lr.normal(0.0, 1.0) * dim_scale[col] / (r as f64).sqrt();
+                }
+            }
+        }
+
+        // Cluster centers + sizes (sizes long-tailed: Zipf-ish weights).
+        let mut centers = Vec::with_capacity(self.clusters);
+        let mut sigmas = Vec::with_capacity(self.clusters);
+        let mut weights = Vec::with_capacity(self.clusters);
+        for cidx in 0..self.clusters {
+            let mut z = vec![0f64; r];
+            for zj in z.iter_mut() {
+                *zj = rng.normal(0.0, 8.0);
+            }
+            let mut c = vec![0f64; d];
+            for (col, cc) in c.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                for row in 0..r {
+                    acc += z[row] * loadings[row * d + col];
+                }
+                *cc = acc;
+            }
+            centers.push(c);
+            let (lo, hi) = self.sigma;
+            sigmas.push(lo * (hi / lo).powf(rng.f64()));
+            weights.push(1.0 / (cidx + 1) as f64);
+        }
+        let wsum: f64 = weights.iter().sum();
+        let cum: Vec<f64> = weights
+            .iter()
+            .scan(0.0, |acc, w| {
+                *acc += w / wsum;
+                Some(*acc)
+            })
+            .collect();
+
+        let mut data = Vec::with_capacity(self.n_points * d);
+        for _ in 0..self.n_points {
+            if rng.f64() < self.background {
+                // sparse uniform background over the bounding region
+                for j in 0..d {
+                    data.push((rng.range(-30.0, 30.0) * dim_scale[j]) as f32);
+                }
+            } else {
+                let u = rng.f64();
+                let c = cum.iter().position(|&x| u <= x).unwrap_or(0);
+                let s = sigmas[c];
+                for j in 0..d {
+                    data.push(
+                        (centers[c][j] + rng.normal(0.0, s) * dim_scale[j]) as f32,
+                    );
+                }
+            }
+        }
+        Dataset::new(data, d)
+    }
+}
+
+/// SuSy surrogate: 18-D, strongly clustered physics-like features.
+/// Paper: 5e6 x 18; default bench size scaled (DESIGN.md §2).
+pub fn susy_like(n_points: usize) -> DatasetSpec {
+    DatasetSpec {
+        name: "susy",
+        n_points,
+        dims: 18,
+        clusters: 40,
+        background: 0.15,
+        sigma: (0.5, 2.0),
+        variance_decay: 0.35,
+        intrinsic: 12,
+    }
+}
+
+/// Color-Histogram surrogate: 32-D image features, heavy variance
+/// imbalance (histogram bins sparsely populated). Paper: 68 040 x 32.
+pub fn chist_like(n_points: usize) -> DatasetSpec {
+    DatasetSpec {
+        name: "chist",
+        n_points,
+        dims: 32,
+        clusters: 60,
+        background: 0.10,
+        sigma: (0.3, 1.5),
+        variance_decay: 0.8,
+        intrinsic: 10,
+    }
+}
+
+/// Million-Song surrogate: 90-D audio features, long-tail cluster scales.
+/// Paper: 515 345 x 90.
+pub fn songs_like(n_points: usize) -> DatasetSpec {
+    DatasetSpec {
+        name: "songs",
+        n_points,
+        dims: 90,
+        clusters: 30,
+        background: 0.25,
+        sigma: (1.0, 6.0),
+        variance_decay: 0.5,
+        intrinsic: 20,
+    }
+}
+
+/// FMA surrogate: 518-D audio features with low intrinsic rank.
+/// Paper: 106 574 x 518.
+pub fn fma_like(n_points: usize) -> DatasetSpec {
+    DatasetSpec {
+        name: "fma",
+        n_points,
+        dims: 518,
+        clusters: 25,
+        background: 0.12,
+        sigma: (0.5, 3.0),
+        variance_decay: 0.6,
+        intrinsic: 40,
+    }
+}
+
+/// Lookup by name (CLI / bench harness).
+pub fn by_name(name: &str, n_points: usize) -> Option<DatasetSpec> {
+    match name {
+        "susy" => Some(susy_like(n_points)),
+        "chist" => Some(chist_like(n_points)),
+        "songs" => Some(songs_like(n_points)),
+        "fma" => Some(fma_like(n_points)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::variance;
+
+    #[test]
+    fn shapes_match_spec() {
+        for spec in [
+            susy_like(500),
+            chist_like(300),
+            songs_like(200),
+            fma_like(100),
+        ] {
+            let d = spec.generate(1);
+            assert_eq!(d.len(), spec.n_points);
+            assert_eq!(d.dims(), spec.dims);
+            assert!(d.raw().iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = susy_like(200).generate(7);
+        let b = susy_like(200).generate(7);
+        let c = susy_like(200).generate(8);
+        assert_eq!(a.raw(), b.raw());
+        assert_ne!(a.raw(), c.raw());
+    }
+
+    #[test]
+    fn variance_imbalance_present() {
+        // chist surrogate has strong decay: first dims much wider than last
+        let d = chist_like(4000).generate(3);
+        let per_dim: Vec<f64> = (0..d.dims())
+            .map(|j| {
+                let col: Vec<f64> = (0..d.len()).map(|i| d.coord(i, j) as f64).collect();
+                variance(&col)
+            })
+            .collect();
+        let head: f64 = per_dim[..4].iter().sum();
+        let tail: f64 = per_dim[d.dims() - 4..].iter().sum();
+        assert!(
+            head > 5.0 * tail,
+            "variance decay missing: head={head} tail={tail}"
+        );
+    }
+
+    #[test]
+    fn clustered_denser_than_uniform() {
+        // nearest-neighbor distances in the mixture should be far smaller
+        // than for a uniform scatter of the same bounding box.
+        let spec = susy_like(800);
+        let d = spec.generate(9);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let sample = rng.sample_indices(d.len(), 60);
+        let mut nn_dists = Vec::new();
+        for &i in &sample {
+            let mut best = f64::INFINITY;
+            for j in 0..d.len() {
+                if j == i {
+                    continue;
+                }
+                let dd = crate::core::sqdist(d.point(i), d.point(j));
+                if dd < best {
+                    best = dd;
+                }
+            }
+            nn_dists.push(best.sqrt());
+        }
+        let mean_nn = crate::util::math::mean(&nn_dists);
+        // bounding scale is ~60 per dim; clustered NN distance must be tiny
+        // relative to it
+        assert!(mean_nn < 10.0, "mean NN distance {mean_nn} too large");
+    }
+}

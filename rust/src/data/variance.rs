@@ -1,0 +1,109 @@
+//! REORDER (paper Sec. IV-D): reorder dimensions by descending variance so
+//! the first m indexed dimensions carry the most discriminatory power.
+
+use crate::core::Dataset;
+
+/// Per-dimension variance (population), computed in one pass per dim.
+pub fn variance_per_dim(d: &Dataset) -> Vec<f64> {
+    let n = d.len();
+    let dims = d.dims();
+    if n == 0 {
+        return vec![0.0; dims];
+    }
+    let mut sums = vec![0f64; dims];
+    let mut sqs = vec![0f64; dims];
+    for i in 0..n {
+        let p = d.point(i);
+        for j in 0..dims {
+            let x = p[j] as f64;
+            sums[j] += x;
+            sqs[j] += x * x;
+        }
+    }
+    (0..dims)
+        .map(|j| {
+            let m = sums[j] / n as f64;
+            (sqs[j] / n as f64 - m * m).max(0.0)
+        })
+        .collect()
+}
+
+/// The REORDER transform: returns the permuted dataset plus the applied
+/// permutation (new dim j = old dim perm[j], variances descending).
+pub fn reorder_by_variance(d: &Dataset) -> (Dataset, Vec<usize>) {
+    let vars = variance_per_dim(d);
+    let mut perm: Vec<usize> = (0..d.dims()).collect();
+    perm.sort_by(|&a, &b| vars[b].partial_cmp(&vars[a]).unwrap());
+    (d.permute_dims(&perm), perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::sqdist;
+    use crate::util::{prop, rng::Rng};
+
+    fn gen(rng: &mut Rng, n: usize, dims: usize) -> Dataset {
+        let mut scale = vec![0.0; dims];
+        for s in scale.iter_mut() {
+            *s = rng.range(0.01, 10.0);
+        }
+        let data: Vec<f32> = (0..n * dims)
+            .map(|i| (rng.normal(0.0, scale[i % dims])) as f32)
+            .collect();
+        Dataset::new(data, dims)
+    }
+
+    #[test]
+    fn variances_descending_after_reorder() {
+        prop::cases(30, 0x11AA, |rng| {
+            let n = 64 + rng.below(128);
+            let dims = 2 + rng.below(12);
+            let d = gen(rng, n, dims);
+            let (r, perm) = reorder_by_variance(&d);
+            let v = variance_per_dim(&r);
+            for w in v.windows(2) {
+                assert!(w[0] >= w[1] - 1e-9, "not descending: {v:?}");
+            }
+            // perm is a permutation
+            let mut sorted = perm.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..d.dims()).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn distances_preserved() {
+        // reordering dims never changes pairwise distances
+        prop::cases(20, 0x22BB, |rng| {
+            let dims = 3 + rng.below(8);
+            let d = gen(rng, 32, dims);
+            let (r, _) = reorder_by_variance(&d);
+            for _ in 0..10 {
+                let i = rng.below(d.len());
+                let j = rng.below(d.len());
+                let orig = sqdist(d.point(i), d.point(j));
+                let new = sqdist(r.point(i), r.point(j));
+                assert!((orig - new).abs() < 1e-6 * (1.0 + orig));
+            }
+        });
+    }
+
+    #[test]
+    fn known_variance_order() {
+        // dims with variances [small, big, medium] -> perm [1, 2, 0]
+        let mut rng = Rng::new(3);
+        let data: Vec<f32> = (0..3000)
+            .flat_map(|_| {
+                [
+                    rng.normal(0.0, 0.1) as f32,
+                    rng.normal(5.0, 10.0) as f32,
+                    rng.normal(-2.0, 1.0) as f32,
+                ]
+            })
+            .collect();
+        let d = Dataset::new(data, 3);
+        let (_, perm) = reorder_by_variance(&d);
+        assert_eq!(perm, vec![1, 2, 0]);
+    }
+}

@@ -1,0 +1,148 @@
+//! GPU-JOINLINEAR (paper Sec. VI-D): the brute-force O(|D|^2) self-join
+//! lower bound. Every query scans every point; no index. Used to show
+//! where index pruning wins (Fig. 7 - flat in ε - and Fig. 11).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::core::{BoundedHeap, Dataset, KnnResult, Neighbor};
+use crate::runtime::{tiles, tiles::TileClass, Engine};
+
+/// Outcome of the brute-force pass.
+#[derive(Debug)]
+pub struct BruteOutcome {
+    /// kernel-only wall time (the paper's lower-bound metric excludes
+    /// host-side filtering and result returns)
+    pub kernel_time: f64,
+    pub total_time: f64,
+    /// tiles executed
+    pub tiles: usize,
+    /// exact KNN result when `collect` was requested
+    pub result: Option<KnnResult>,
+}
+
+/// Run the linear self-join over `queries` (all of D in the paper).
+/// `eps` only gates result collection - kernel work is independent of it,
+/// which is exactly what Fig. 7 demonstrates. With `collect_k = Some(k)`
+/// the host additionally merges exact top-k (ignoring ε like the paper's
+/// in-principle use).
+pub fn brute_join_linear(
+    engine: &Engine,
+    data: &Dataset,
+    queries: &[u32],
+    eps: f64,
+    collect_k: Option<usize>,
+) -> Result<BruteOutcome> {
+    let t_start = Instant::now();
+    let plan = tiles::plan_for(engine, data.dims(), TileClass::Large)?;
+    let (qt, ct, d_pad) = (plan.qt, plan.ct, plan.d);
+    let _ = eps; // kernel work independent of eps (Fig. 7)
+
+    let mut kernel_time = 0f64;
+    let mut n_tiles = 0usize;
+    let mut heaps: Vec<BoundedHeap> = match collect_k {
+        Some(k) => queries.iter().map(|_| BoundedHeap::new(k)).collect(),
+        None => Vec::new(),
+    };
+
+    let all_ids: Vec<u32> = (0..data.len() as u32).collect();
+    let mut q_buf: Vec<f32> = Vec::new();
+    let mut c_buf: Vec<f32> = Vec::new();
+    for (qi, q_chunk) in queries.chunks(qt).enumerate() {
+        tiles::pack(&mut q_buf, data, q_chunk, qt, d_pad, 0.0);
+        for c_chunk in all_ids.chunks(ct) {
+            tiles::pack_candidates(&mut c_buf, data, c_chunk, ct, d_pad);
+            let t0 = Instant::now();
+            let out = engine.exec(
+                &plan.dist_name,
+                &[
+                    (&q_buf, &[qt as i64, d_pad as i64]),
+                    (&c_buf, &[ct as i64, d_pad as i64]),
+                ],
+            )?;
+            kernel_time += t0.elapsed().as_secs_f64();
+            n_tiles += 1;
+            if let Some(k) = collect_k {
+                let d2 = Engine::to_f32(&out[0])?;
+                for (r, &q) in q_chunk.iter().enumerate() {
+                    let heap = &mut heaps[qi * qt + r];
+                    let _ = k;
+                    let row = &d2[r * ct..r * ct + c_chunk.len()];
+                    for (c, &dd) in row.iter().enumerate() {
+                        let id = c_chunk[c];
+                        if id != q {
+                            heap.push(Neighbor { id, dist2: (dd as f64).max(0.0) });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let result = collect_k.map(|_| {
+        let mut res = KnnResult::with_capacity(data.len());
+        for (i, &q) in queries.iter().enumerate() {
+            res.set(q as usize, heaps[i].clone().into_sorted());
+        }
+        res
+    });
+
+    Ok(BruteOutcome {
+        kernel_time,
+        total_time: t_start.elapsed().as_secs_f64(),
+        tiles: n_tiles,
+        result,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::susy_like;
+    use crate::index::KdTree;
+
+    #[test]
+    fn brute_collect_matches_kdtree() {
+        let engine = Engine::load_default().unwrap();
+        let data = susy_like(600).generate(31);
+        let queries: Vec<u32> = (0..100).collect();
+        let out =
+            brute_join_linear(&engine, &data, &queries, 1.0, Some(5)).unwrap();
+        let res = out.result.unwrap();
+        let tree = KdTree::build(&data);
+        for &q in queries.iter().step_by(17) {
+            let got = res.get(q as usize);
+            let want = tree.knn(&data, data.point(q as usize), 5, q);
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g.dist2 - w.dist2).abs() < 1e-3 * (1.0 + w.dist2),
+                    "q={q}: {g:?} vs {w:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_work_independent_of_eps() {
+        // Fig. 7 invariant: tiles executed do not depend on eps
+        let engine = Engine::load_default().unwrap();
+        let data = susy_like(400).generate(32);
+        let queries: Vec<u32> = (0..128).collect();
+        let a = brute_join_linear(&engine, &data, &queries, 0.1, None).unwrap();
+        let b = brute_join_linear(&engine, &data, &queries, 10.0, None).unwrap();
+        assert_eq!(a.tiles, b.tiles);
+        assert!(a.result.is_none());
+    }
+
+    #[test]
+    fn tile_count_is_quadratic_grid() {
+        let engine = Engine::load_default().unwrap();
+        let data = susy_like(1100).generate(33);
+        let queries: Vec<u32> = (0..data.len() as u32).collect();
+        let out = brute_join_linear(&engine, &data, &queries, 1.0, None).unwrap();
+        // ceil(1100/128) * ceil(1100/512) = 9 * 3
+        assert_eq!(out.tiles, 27);
+    }
+}

@@ -1,0 +1,295 @@
+//! Analytic GPU occupancy/divergence model for the kernel task-granularity
+//! study (paper Sec. V-G, Table III).
+//!
+//! This testbed has no CUDA device; the PJRT CPU client executes the same
+//! arithmetic, but warp effects - the subject of Table III - do not exist
+//! on it. This model reproduces them from first principles, driven by the
+//! *real* per-query candidate counts produced by the grid walk:
+//!
+//! * lanes are grouped into 32-wide warps in assignment order;
+//! * a warp's time is its max lane time (SIMT lockstep), inflated by a
+//!   divergence penalty when the warp serves queries whose thread groups
+//!   straddle the warp boundary (the TDYNAMIC failure mode the paper
+//!   describes);
+//! * the device is simultaneously throughput-bound (total warp cycles
+//!   spread over `concurrent_warps` resident slots) and critical-path
+//!   bound (no kernel finishes before its longest warp): time =
+//!   max(sum/width, max) - few long warps mean under-saturation, exactly
+//!   the small-|Q^GPU| regime of Sec. V-G;
+//! * each launched thread pays a fixed scheduling overhead - many threads
+//!   per point stop paying off once lane work shrinks below it.
+//!
+//! Constants approximate the paper's GP100 (56 SMs, 1.48 GHz); they set
+//! the *scale*, while the shape of Table III comes from the workload.
+
+/// Thread-to-point assignment strategies of Sec. V-G.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ThreadAssign {
+    /// TSTATIC: a fixed number of threads per query point.
+    Static(u32),
+    /// TDYNAMIC: a minimum total thread count per kernel invocation,
+    /// divided evenly over the query points.
+    Dynamic(u64),
+}
+
+/// Model constants (GP100-flavoured defaults).
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    pub lanes_per_warp: usize,
+    /// SMs x resident warps each that can hide latency concurrently
+    pub concurrent_warps: usize,
+    /// cycles to schedule/launch one thread
+    pub launch_cycles: f64,
+    /// cycles per candidate distance per lane (includes the filter)
+    pub cycles_per_candidate: f64,
+    /// fractional penalty per extra distinct query sharing a warp *when
+    /// the sharing is misaligned* (group straddles the warp boundary)
+    pub divergence_penalty: f64,
+    /// device clock in Hz (cycles -> seconds)
+    pub clock_hz: f64,
+}
+
+impl Default for DeviceModel {
+    fn default() -> Self {
+        DeviceModel {
+            lanes_per_warp: 32,
+            concurrent_warps: 56 * 8,
+            launch_cycles: 20.0,
+            cycles_per_candidate: 8.0,
+            divergence_penalty: 0.15,
+            clock_hz: 1.48e9,
+        }
+    }
+}
+
+/// Result of a model evaluation.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceEstimate {
+    pub threads: u64,
+    pub warps: u64,
+    pub waves: u64,
+    pub cycles: f64,
+    pub seconds: f64,
+    /// fraction of lane slots doing useful work in the mean warp
+    pub lane_utilisation: f64,
+}
+
+impl DeviceModel {
+    /// Estimate kernel time for per-query candidate workloads `work`
+    /// (candidate count for each query in the batch).
+    pub fn estimate(&self, work: &[u64], assign: ThreadAssign) -> DeviceEstimate {
+        if work.is_empty() {
+            return DeviceEstimate::default();
+        }
+        let nq = work.len() as u64;
+        // threads per query
+        let per_q: Vec<u64> = match assign {
+            ThreadAssign::Static(t) => vec![t.max(1) as u64; work.len()],
+            ThreadAssign::Dynamic(min_total) => {
+                let total = min_total.max(nq);
+                let base = total / nq;
+                let rem = (total % nq) as usize;
+                (0..work.len())
+                    .map(|i| base + if i < rem { 1 } else { 0 })
+                    .collect()
+            }
+        };
+
+        // lane stream: (query index, lane work) in assignment order
+        let lanes_per_warp = self.lanes_per_warp as u64;
+        let total_threads: u64 = per_q.iter().sum();
+        let warps = total_threads.div_ceil(lanes_per_warp);
+
+        let mut warp_times: Vec<f64> = Vec::with_capacity(warps as usize);
+        let mut cur_max = 0f64;
+        let mut cur_lanes = 0u64;
+        let mut cur_first_query: Option<usize> = None;
+        let mut cur_distinct = 0usize;
+        let mut cur_straddle = false;
+        let mut useful_lane_cycles = 0f64;
+
+        let flush =
+            |max: f64, distinct: usize, straddle: bool, times: &mut Vec<f64>| {
+                let div = if straddle && distinct > 1 {
+                    1.0 + self.divergence_penalty * (distinct - 1) as f64
+                } else {
+                    1.0
+                };
+                times.push(max * div);
+            };
+
+        for (qi, (&w, &t)) in work.iter().zip(&per_q).enumerate() {
+            let lane_work =
+                (w as f64 / t as f64).ceil() * self.cycles_per_candidate;
+            useful_lane_cycles += w as f64 * self.cycles_per_candidate;
+            let mut remaining = t;
+            while remaining > 0 {
+                if cur_lanes == lanes_per_warp {
+                    flush(cur_max, cur_distinct, cur_straddle, &mut warp_times);
+                    cur_max = 0.0;
+                    cur_lanes = 0;
+                    cur_first_query = None;
+                    cur_distinct = 0;
+                    cur_straddle = false;
+                }
+                let space = lanes_per_warp - cur_lanes;
+                let take = remaining.min(space);
+                if cur_first_query != Some(qi) {
+                    cur_distinct += 1;
+                    cur_first_query = Some(qi);
+                }
+                // a query group straddles if it doesn't finish in this warp
+                // or didn't start at a warp-aligned group boundary with an
+                // even divisor of the warp width
+                if take < remaining || (cur_lanes % t.min(lanes_per_warp)) != 0 {
+                    cur_straddle = true;
+                }
+                if lane_work > cur_max {
+                    cur_max = lane_work;
+                }
+                cur_lanes += take;
+                remaining -= take;
+            }
+        }
+        if cur_lanes > 0 {
+            flush(cur_max, cur_distinct, cur_straddle, &mut warp_times);
+        }
+
+        // throughput bound vs critical path, plus per-thread launch cost
+        // amortised over the concurrent width
+        let sum_warp: f64 = warp_times.iter().sum();
+        let max_warp: f64 = warp_times.iter().cloned().fold(0.0, f64::max);
+        let cycles = (sum_warp / self.concurrent_warps as f64).max(max_warp)
+            + self.launch_cycles * total_threads as f64
+                / self.concurrent_warps as f64;
+
+        let total_lane_cycles: f64 = warp_times.iter().sum::<f64>()
+            * self.lanes_per_warp as f64;
+        let lane_utilisation = if total_lane_cycles > 0.0 {
+            (useful_lane_cycles / total_lane_cycles).min(1.0)
+        } else {
+            0.0
+        };
+
+        DeviceEstimate {
+            threads: total_threads,
+            warps,
+            waves: warps.div_ceil(self.concurrent_warps as u64),
+            cycles,
+            seconds: cycles / self.clock_hz,
+            lane_utilisation,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// skewed workload resembling clustered data: most queries small,
+    /// a tail of dense ones
+    fn skewed_work(rng: &mut Rng, n: usize) -> Vec<u64> {
+        (0..n)
+            .map(|_| {
+                if rng.f64() < 0.1 {
+                    2000 + rng.below(4000) as u64
+                } else {
+                    50 + rng.below(300) as u64
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn empty_workload() {
+        let m = DeviceModel::default();
+        let e = m.estimate(&[], ThreadAssign::Static(8));
+        assert_eq!(e.threads, 0);
+        assert_eq!(e.cycles, 0.0);
+    }
+
+    #[test]
+    fn thread_counts() {
+        let m = DeviceModel::default();
+        let w = vec![100u64; 10];
+        assert_eq!(m.estimate(&w, ThreadAssign::Static(8)).threads, 80);
+        // dynamic: max(min_total, |Q|) distributed evenly
+        assert_eq!(m.estimate(&w, ThreadAssign::Dynamic(64)).threads, 64);
+        assert_eq!(m.estimate(&w, ThreadAssign::Dynamic(5)).threads, 10);
+    }
+
+    #[test]
+    fn eight_threads_beats_one_on_skewed_large_batch() {
+        // Table III regime: skew within warps hurts 1 thread/pt
+        let mut rng = Rng::new(1);
+        let w = skewed_work(&mut rng, 20_000);
+        let m = DeviceModel::default();
+        let t1 = m.estimate(&w, ThreadAssign::Static(1)).seconds;
+        let t8 = m.estimate(&w, ThreadAssign::Static(8)).seconds;
+        assert!(t8 < t1, "t1={t1} t8={t8}");
+    }
+
+    #[test]
+    fn too_many_threads_pays_launch_overhead() {
+        // tiny per-query work: 32 threads/pt mostly idle + launch cost
+        let w = vec![8u64; 50_000];
+        let m = DeviceModel::default();
+        let t8 = m.estimate(&w, ThreadAssign::Static(8)).seconds;
+        let t32 = m.estimate(&w, ThreadAssign::Static(32)).seconds;
+        assert!(t32 > t8, "t8={t8} t32={t32}");
+    }
+
+    #[test]
+    fn undersaturation_hurts_single_thread_small_batch() {
+        // few queries, heavy work: 1 thread/pt cannot fill the device
+        let w = vec![100_000u64; 64];
+        let m = DeviceModel::default();
+        let t1 = m.estimate(&w, ThreadAssign::Static(1));
+        let t32 = m.estimate(&w, ThreadAssign::Static(32));
+        assert!(t32.seconds < t1.seconds);
+        assert!(t1.warps < m.concurrent_warps as u64);
+    }
+
+    #[test]
+    fn dynamic_straddling_penalised_vs_aligned_static() {
+        // same thread budget; dynamic assignment lands 5 threads/query
+        // (misaligned within 32-lane warps), static 8 is aligned
+        let mut rng = Rng::new(2);
+        let w = skewed_work(&mut rng, 10_000);
+        let m = DeviceModel::default();
+        let stat = m.estimate(&w, ThreadAssign::Static(8)).seconds;
+        let dyn5 = m
+            .estimate(&w, ThreadAssign::Dynamic(5 * w.len() as u64))
+            .seconds;
+        assert!(stat <= dyn5, "static8={stat} dynamic5x={dyn5}");
+    }
+
+    #[test]
+    fn monotone_in_work() {
+        let m = DeviceModel::default();
+        let small = vec![100u64; 1000];
+        let large = vec![1000u64; 1000];
+        // (Dynamic with threads/query >> work is legitimately flat - each
+        // lane does ceil(w/t)=1 candidate either way - so use a budget
+        // below the per-query work.)
+        for a in [ThreadAssign::Static(8), ThreadAssign::Dynamic(10_000)] {
+            assert!(m.estimate(&small, a).seconds < m.estimate(&large, a).seconds);
+        }
+    }
+
+    #[test]
+    fn utilisation_bounded() {
+        let mut rng = Rng::new(3);
+        let w = skewed_work(&mut rng, 5000);
+        let m = DeviceModel::default();
+        for a in [
+            ThreadAssign::Static(1),
+            ThreadAssign::Static(8),
+            ThreadAssign::Dynamic(100_000),
+        ] {
+            let e = m.estimate(&w, a);
+            assert!(e.lane_utilisation > 0.0 && e.lane_utilisation <= 1.0);
+        }
+    }
+}

@@ -1,0 +1,630 @@
+//! GPU-JOIN (paper Sec. V-B/V-E/V-G + Alg. 1 GPUJoinKernel).
+//!
+//! Range-query KNN over the ε-grid, executed on the "device" (PJRT):
+//!
+//! * queries are grouped **by grid cell** - all queries in a cell share
+//!   the same adjacent-cell candidate list, which is the tile analogue of
+//!   the paper's kernel where threads of neighboring queries scan the
+//!   same cells;
+//! * each (cell-queries x candidate-chunk) work unit executes one dist /
+//!   dist-topk artifact tile; host-side filtering (ε test, self-exclusion,
+//!   per-query bounded heap merge) runs on "stream" worker threads that
+//!   overlap with device execution, mirroring the paper's 3 CUDA streams
+//!   overlapping transfers and host filtering (Sec. IV-B);
+//! * queries that end with fewer than K in-ε neighbors are returned as
+//!   Q^Fail for CPU reassignment (Sec. V-E).
+//!
+//! A query with >= K neighbors within ε is *exactly* solved: its true K
+//! nearest all lie within ε, and the grid walk provably visits every point
+//! within ε of the query in the indexed projection (see index::grid).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::device::{DeviceEstimate, DeviceModel, ThreadAssign};
+use crate::core::{BoundedHeap, Dataset, KnnResult, Neighbor};
+use crate::index::GridIndex;
+use crate::runtime::{tiles, tiles::TileClass, Engine};
+
+/// Parameters of the GPU side.
+#[derive(Debug, Clone)]
+pub struct GpuJoinParams {
+    pub k: usize,
+    pub eps: f64,
+    pub tile_class: TileClass,
+    /// prefer the on-device top-k artifact when k allows (perf path)
+    pub use_topk: bool,
+    /// result buffer capacity b_s in (query, neighbor) pairs per batch
+    pub buffer_pairs: u64,
+    /// host-side filter worker threads ("streams"); paper uses 3
+    pub streams: usize,
+    /// thread-granularity strategy fed to the device model (Table III)
+    pub assign: ThreadAssign,
+    /// fraction of cells sampled by the batch estimator (Sec. IV-B)
+    pub estimator_frac: f64,
+    /// self-join semantics: drop candidate id == query id. Off for
+    /// bipartite R JOIN S (Sec. III: "directly applicable to R x S").
+    pub exclude_self: bool,
+}
+
+impl GpuJoinParams {
+    pub fn new(k: usize, eps: f64) -> Self {
+        GpuJoinParams {
+            k,
+            eps,
+            tile_class: TileClass::Large,
+            // On CPU-PJRT the sort-based top-k tile is ~40x slower than the
+            // raw distance tile + host filter (see EXPERIMENTS.md Perf); on
+            // a real accelerator the top-k variant trades that for a 8x
+            // smaller device->host transfer. Off by default here.
+            use_topk: false,
+            buffer_pairs: 10_000_000,
+            streams: 3,
+            assign: ThreadAssign::Static(8),
+            estimator_frac: 0.01,
+            exclude_self: true,
+        }
+    }
+}
+
+/// Outcome of a GPU-JOIN run.
+#[derive(Debug)]
+pub struct GpuJoinOutcome {
+    /// exact results for solved queries (others left empty)
+    pub result: KnnResult,
+    /// Q^Fail - queries with < K neighbors within ε
+    pub failed: Vec<u32>,
+    pub solved: usize,
+    /// wall time inside PJRT execution
+    pub kernel_time: f64,
+    /// wall time of the whole join (incl. packing + filtering)
+    pub total_time: f64,
+    /// modeled GPU kernel time for the configured ThreadAssign
+    pub device_model: DeviceEstimate,
+    /// batches executed (>= 3 whenever there is work, per Sec. IV-B)
+    pub batches: usize,
+    /// estimator's predicted result pairs
+    pub estimated_pairs: u64,
+    /// realised in-ε result pairs
+    pub result_pairs: u64,
+    /// max pairs observed in one batch (must stay <= buffer_pairs)
+    pub max_batch_pairs: u64,
+}
+
+/// A unit of work: one grid cell's queries + the shared candidate list.
+#[derive(Debug, Clone)]
+struct WorkCell {
+    queries: Vec<u32>,
+    candidates: Vec<u32>,
+}
+
+/// Message from the executor to a filter worker.
+enum FilterMsg {
+    /// full distance tile: rows follow `qids`, cols follow `cand_ids`
+    Dist {
+        qids: Vec<u32>,
+        cand_ids: Vec<u32>,
+        d2: Vec<f32>,
+        ct: usize,
+    },
+    /// top-k tile: `vals`/`idx` are qt x k, idx indexes into `cand_ids`
+    TopK {
+        qids: Vec<u32>,
+        cand_ids: Vec<u32>,
+        vals: Vec<f32>,
+        idx: Vec<i32>,
+        k: usize,
+    },
+}
+
+/// Run GPU-JOIN for `queries` (ids into `data`) over the given grid
+/// (self-join form; see `gpu_join_rs` for the bipartite join).
+pub fn gpu_join(
+    engine: &Engine,
+    data: &Dataset,
+    grid: &GridIndex,
+    queries: &[u32],
+    params: &GpuJoinParams,
+) -> Result<GpuJoinOutcome> {
+    gpu_join_rs(engine, data, data, grid, queries, params)
+}
+
+/// Bipartite GPU-JOIN: `queries` are ids into `r_data` (the outer
+/// relation); candidates come from `data` = S via `grid` built over S.
+/// With `r_data` = `data` and exclude_self this is the self-join.
+pub fn gpu_join_rs(
+    engine: &Engine,
+    r_data: &Dataset,
+    data: &Dataset,
+    grid: &GridIndex,
+    queries: &[u32],
+    params: &GpuJoinParams,
+) -> Result<GpuJoinOutcome> {
+    let t_start = Instant::now();
+    // Two tile plans: thin cells (few queries) run on the small tile to
+    // cut padding waste ~4x; dense cells use the large tile. This is the
+    // tile-world analogue of the paper's task-granularity tuning.
+    let plan_large = tiles::plan_for(engine, data.dims(), params.tile_class)?;
+    let plan_small = tiles::plan_for(engine, data.dims(), TileClass::Small)
+        .unwrap_or_else(|_| plan_large.clone());
+    let use_topk = params.use_topk
+        && plan_large.topk_name.is_some()
+        && params.k <= plan_large.topk_k;
+
+    // ---- group queries by cell (shared candidate lists) ----
+    let mut by_cell: HashMap<u64, Vec<u32>> = HashMap::new();
+    for &q in queries {
+        by_cell
+            .entry(grid.cell_id_of(r_data.point(q as usize)))
+            .or_default()
+            .push(q);
+    }
+    let mut cells: Vec<WorkCell> = by_cell
+        .into_values()
+        .map(|qs| {
+            let candidates = grid.candidates_of(r_data.point(qs[0] as usize));
+            WorkCell { queries: qs, candidates }
+        })
+        .collect();
+    // deterministic order (largest first helps batch balance)
+    cells.sort_by_key(|c| std::cmp::Reverse(c.queries.len() * c.candidates.len()));
+
+    // ---- device-model accounting on the real workload ----
+    let work: Vec<u64> = cells
+        .iter()
+        .flat_map(|c| c.queries.iter().map(|_| c.candidates.len() as u64))
+        .collect();
+    let device_model = DeviceModel::default().estimate(&work, params.assign);
+
+    // ---- batch estimator (Sec. IV-B) ----
+    let mut kernel_time = 0f64;
+    let sample_n = ((cells.len() as f64 * params.estimator_frac).ceil() as usize)
+        .clamp(1.min(cells.len()), cells.len());
+    let mut est_state = JoinState::new(params.k, params.eps, params.exclude_self);
+    let sample: Vec<WorkCell> = cells
+        .iter()
+        .step_by((cells.len() / sample_n.max(1)).max(1))
+        .cloned()
+        .collect();
+    let sampled_queries: usize = sample.iter().map(|c| c.queries.len()).sum();
+    run_cells(
+        engine,
+        (r_data, data),
+        (&plan_large, &plan_small),
+        use_topk,
+        &sample,
+        params,
+        &mut est_state,
+        &mut kernel_time,
+    )?;
+    let estimated_pairs = if sampled_queries > 0 {
+        (est_state.pairs as f64 * queries.len() as f64 / sampled_queries as f64)
+            .ceil() as u64
+    } else {
+        0
+    };
+
+    // number of batches: >= 3 (stream overlap), 1.5x estimator slack
+    let n_batches = ((estimated_pairs as f64 * 1.5 / params.buffer_pairs as f64)
+        .ceil() as usize)
+        .max(3)
+        .min(cells.len().max(3));
+
+    // ---- partition cells into batches (round-robin by size rank) ----
+    let mut batches: Vec<Vec<WorkCell>> = vec![Vec::new(); n_batches];
+    for (i, c) in cells.into_iter().enumerate() {
+        batches[i % n_batches].push(c);
+    }
+
+    // ---- execute batches ----
+    let mut state = JoinState::new(params.k, params.eps, params.exclude_self);
+    let mut max_batch_pairs = 0u64;
+    let mut executed_batches = 0usize;
+    for batch in &batches {
+        if batch.is_empty() {
+            continue;
+        }
+        let pairs_before = state.pairs;
+        run_cells(
+            engine,
+            (r_data, data),
+            (&plan_large, &plan_small),
+            use_topk,
+            batch,
+            params,
+            &mut state,
+            &mut kernel_time,
+        )?;
+        let batch_pairs = state.pairs - pairs_before;
+        max_batch_pairs = max_batch_pairs.max(batch_pairs);
+        executed_batches += 1;
+    }
+
+    // ---- resolve solved vs failed ----
+    let mut result = KnnResult::with_capacity(r_data.len());
+    let mut failed = Vec::new();
+    let mut solved = 0usize;
+    for &q in queries {
+        match state.heaps.remove(&q) {
+            Some(h) if h.len() >= params.k => {
+                result.set(q as usize, h.into_sorted());
+                solved += 1;
+            }
+            _ => failed.push(q),
+        }
+    }
+    failed.sort_unstable();
+
+    Ok(GpuJoinOutcome {
+        result,
+        failed,
+        solved,
+        kernel_time,
+        total_time: t_start.elapsed().as_secs_f64(),
+        device_model,
+        batches: executed_batches,
+        estimated_pairs,
+        result_pairs: state.pairs,
+        max_batch_pairs,
+    })
+}
+
+/// Per-query candidate workload (distance calculations per query) under a
+/// given grid - the input to the device model. Used by the Table III
+/// granularity study to evaluate all ThreadAssign variants on one real
+/// workload without re-running the join.
+pub fn workload_vector(data: &Dataset, grid: &GridIndex, queries: &[u32]) -> Vec<u64> {
+    // queries index `data` here (self-join accounting)
+    let mut by_cell: HashMap<u64, (u64, u64)> = HashMap::new(); // cell -> (count, work)
+    for &q in queries {
+        let cell = grid.cell_id_of(data.point(q as usize));
+        let entry = by_cell.entry(cell).or_insert_with(|| {
+            let cands = grid.candidates_of(data.point(q as usize)).len() as u64;
+            (0, cands)
+        });
+        entry.0 += 1;
+    }
+    let mut out = Vec::with_capacity(queries.len());
+    for &q in queries {
+        let cell = grid.cell_id_of(data.point(q as usize));
+        out.push(by_cell[&cell].1);
+    }
+    out
+}
+
+/// Mutable filter state shared across batches.
+struct JoinState {
+    k: usize,
+    eps2: f64,
+    exclude_self: bool,
+    heaps: HashMap<u32, BoundedHeap>,
+    pairs: u64,
+}
+
+impl JoinState {
+    fn new(k: usize, eps: f64, exclude_self: bool) -> Self {
+        JoinState {
+            k,
+            eps2: eps * eps,
+            exclude_self,
+            heaps: HashMap::new(),
+            pairs: 0,
+        }
+    }
+
+    fn apply(&mut self, msg: &FilterMsg) {
+        match msg {
+            FilterMsg::Dist { qids, cand_ids, d2, ct } => {
+                for (r, &q) in qids.iter().enumerate() {
+                    let heap = self
+                        .heaps
+                        .entry(q)
+                        .or_insert_with(|| BoundedHeap::new(self.k));
+                    let row = &d2[r * ct..r * ct + cand_ids.len()];
+                    // Fast path: once the heap is full, only candidates
+                    // below the current k-th best can matter - track that
+                    // bound as an f32 so the hot compare stays branchy-
+                    // cheap and pushes become rare (EXPERIMENTS.md Perf#1).
+                    // next_up: f64->f32 rounding must never exclude a
+                    // candidate exactly at the bound
+                    let mut gate = ((heap.bound().min(self.eps2)) as f32).next_up();
+                    for (c, &dd) in row.iter().enumerate() {
+                        if dd as f64 <= self.eps2 {
+                            self.pairs += 1;
+                        }
+                        if dd <= gate {
+                            let id = cand_ids[c];
+                            if !(self.exclude_self && id == q) {
+                                heap.push(Neighbor {
+                                    id,
+                                    dist2: (dd as f64).max(0.0),
+                                });
+                                gate = ((heap.bound().min(self.eps2)) as f32)
+                                    .next_up();
+                            }
+                        }
+                    }
+                }
+            }
+            FilterMsg::TopK { qids, cand_ids, vals, idx, k } => {
+                for (r, &q) in qids.iter().enumerate() {
+                    let heap = self
+                        .heaps
+                        .entry(q)
+                        .or_insert_with(|| BoundedHeap::new(self.k));
+                    for s in 0..*k {
+                        let dd = vals[r * k + s] as f64;
+                        if dd > self.eps2 {
+                            break; // ascending: rest of the row is farther
+                        }
+                        let ci = idx[r * k + s] as usize;
+                        if ci >= cand_ids.len() {
+                            continue; // padded candidate row
+                        }
+                        let id = cand_ids[ci];
+                        if !(self.exclude_self && id == q) {
+                            self.pairs += 1;
+                            heap.push(Neighbor { id, dist2: dd.max(0.0) });
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Execute the tile program over a set of cells, merging into `state`.
+/// Device execution happens on this thread (the PJRT client is !Send, the
+/// paper's single GPU-master rank); filtering overlaps on stream workers.
+#[allow(clippy::too_many_arguments)]
+fn run_cells(
+    engine: &Engine,
+    (r_data, data): (&Dataset, &Dataset),
+    (plan_large, plan_small): (&tiles::TilePlan, &tiles::TilePlan),
+    use_topk: bool,
+    cells: &[WorkCell],
+    params: &GpuJoinParams,
+    state: &mut JoinState,
+    kernel_time: &mut f64,
+) -> Result<()> {
+    let n_workers = params.streams.max(1);
+
+    // worker-local states merged at the end
+    let results: Vec<JoinState> = std::thread::scope(|scope| -> Result<Vec<JoinState>> {
+        let mut txs = Vec::with_capacity(n_workers);
+        let mut handles = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let (tx, rx) = std::sync::mpsc::sync_channel::<FilterMsg>(4);
+            let (k, eps, ex) = (params.k, params.eps, params.exclude_self);
+            handles.push(scope.spawn(move || {
+                let mut local = JoinState::new(k, eps, ex);
+                while let Ok(msg) = rx.recv() {
+                    local.apply(&msg);
+                }
+                local
+            }));
+            txs.push(tx);
+        }
+
+        let mut q_buf: Vec<f32> = Vec::new();
+        let mut c_buf: Vec<f32> = Vec::new();
+        let mut unit = 0usize;
+        for cell in cells {
+            // One plan per cell: thin cells run on the small tile (less
+            // padding); the small plan has no top-k variant, so it always
+            // takes the dist path.
+            let (plan, cell_topk) = if cell.queries.len() <= plan_small.qt {
+                (plan_small, use_topk && plan_small.topk_name.is_some())
+            } else {
+                (plan_large, use_topk)
+            };
+            let (qt, ct, d_pad) = (plan.qt, plan.ct, plan.d);
+            // Candidate tiles are shared by every query chunk of the cell:
+            // pack + upload once (Perf#2).
+            let c_lits: Vec<(&[u32], xla::Literal)> = cell
+                .candidates
+                .chunks(ct)
+                .map(|c_chunk| {
+                    tiles::pack_candidates(&mut c_buf, data, c_chunk, ct, d_pad);
+                    Ok((
+                        c_chunk,
+                        Engine::literal(&c_buf, &[ct as i64, d_pad as i64])?,
+                    ))
+                })
+                .collect::<Result<_>>()?;
+            for q_chunk in cell.queries.chunks(qt) {
+                tiles::pack(&mut q_buf, r_data, q_chunk, qt, d_pad, 0.0);
+                let q_lit = Engine::literal(&q_buf, &[qt as i64, d_pad as i64])?;
+                for (c_chunk, c_lit) in &c_lits {
+                    let t0 = Instant::now();
+                    let msg = if cell_topk {
+                        let out = engine.exec_lits(
+                            plan.topk_name.as_deref().unwrap(),
+                            &[&q_lit, c_lit],
+                        )?;
+                        *kernel_time += t0.elapsed().as_secs_f64();
+                        FilterMsg::TopK {
+                            qids: q_chunk.to_vec(),
+                            cand_ids: c_chunk.to_vec(),
+                            vals: Engine::to_f32(&out[0])?,
+                            idx: Engine::to_i32(&out[1])?,
+                            k: plan.topk_k,
+                        }
+                    } else {
+                        let out = engine.exec_lits(&plan.dist_name, &[&q_lit, c_lit])?;
+                        *kernel_time += t0.elapsed().as_secs_f64();
+                        FilterMsg::Dist {
+                            qids: q_chunk.to_vec(),
+                            cand_ids: c_chunk.to_vec(),
+                            d2: Engine::to_f32(&out[0])?,
+                            ct,
+                        }
+                    };
+                    // all chunks of one query tile go to one worker (heap
+                    // ownership); rotate workers per query tile
+                    txs[unit % n_workers].send(msg).expect("worker alive");
+                }
+                unit += 1;
+            }
+        }
+        drop(txs);
+        Ok(handles
+            .into_iter()
+            .map(|h| h.join().expect("filter worker panicked"))
+            .collect())
+    })?;
+
+    // merge worker-local heaps into the caller's state
+    for local in results {
+        state.pairs += local.pairs;
+        for (q, heap) in local.heaps {
+            match state.heaps.entry(q) {
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert(heap);
+                }
+                std::collections::hash_map::Entry::Occupied(mut o) => {
+                    for n in heap.into_sorted() {
+                        o.get_mut().push(n);
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::sqdist;
+    use crate::data::synthetic::{chist_like, susy_like};
+    use crate::index::KdTree;
+
+    fn setup(n: usize) -> (Engine, Dataset) {
+        (Engine::load_default().unwrap(), susy_like(n).generate(21))
+    }
+
+    fn exact_ref(data: &Dataset, q: u32, k: usize) -> Vec<Neighbor> {
+        let t = KdTree::build(data);
+        t.knn(data, data.point(q as usize), k, q)
+    }
+
+    #[test]
+    fn solved_queries_are_exact_knn() {
+        let (engine, data) = setup(1200);
+        let grid = GridIndex::build(&data, 6, 3.0);
+        let queries: Vec<u32> = (0..data.len() as u32).collect();
+        let params = GpuJoinParams::new(4, 3.0);
+        let out = gpu_join(&engine, &data, &grid, &queries, &params).unwrap();
+        assert!(out.solved > 0, "nothing solved - eps too small for test");
+        let mut checked = 0;
+        for q in (0..data.len() as u32).step_by(97) {
+            let got = out.result.get(q as usize);
+            if got.len() < params.k {
+                continue; // failed query - CPU's job
+            }
+            let want = exact_ref(&data, q, params.k);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g.dist2 - w.dist2).abs() < 1e-3 * (1.0 + w.dist2),
+                    "q={q} got={g:?} want={w:?}"
+                );
+            }
+            checked += 1;
+        }
+        assert!(checked > 0);
+    }
+
+    #[test]
+    fn failed_queries_have_too_few_in_eps_neighbors() {
+        let (engine, data) = setup(900);
+        let eps = 1.0; // small: guarantees some failures
+        let grid = GridIndex::build(&data, 6, eps);
+        let queries: Vec<u32> = (0..data.len() as u32).collect();
+        let params = GpuJoinParams::new(8, eps);
+        let out = gpu_join(&engine, &data, &grid, &queries, &params).unwrap();
+        assert_eq!(out.solved + out.failed.len(), queries.len());
+        // verify failure ground truth on a sample
+        for &q in out.failed.iter().step_by(53) {
+            let within = (0..data.len())
+                .filter(|&i| i != q as usize)
+                .filter(|&i| sqdist(data.point(q as usize), data.point(i)) <= eps * eps)
+                .count();
+            assert!(
+                within < params.k,
+                "query {q} has {within} >= k in-eps neighbors but was failed"
+            );
+        }
+    }
+
+    #[test]
+    fn dist_and_topk_paths_agree() {
+        let (engine, data) = setup(700);
+        let grid = GridIndex::build(&data, 6, 2.5);
+        let queries: Vec<u32> = (0..data.len() as u32).collect();
+        let mut p_topk = GpuJoinParams::new(5, 2.5);
+        p_topk.use_topk = true;
+        let mut p_dist = p_topk.clone();
+        p_dist.use_topk = false;
+        let a = gpu_join(&engine, &data, &grid, &queries, &p_topk).unwrap();
+        let b = gpu_join(&engine, &data, &grid, &queries, &p_dist).unwrap();
+        assert_eq!(a.solved, b.solved);
+        assert_eq!(a.failed, b.failed);
+        for q in (0..data.len()).step_by(31) {
+            let (ga, gb) = (a.result.get(q), b.result.get(q));
+            assert_eq!(ga.len(), gb.len());
+            for (x, y) in ga.iter().zip(gb) {
+                assert!((x.dist2 - y.dist2).abs() < 1e-4 * (1.0 + y.dist2));
+            }
+        }
+    }
+
+    #[test]
+    fn batching_respects_buffer_and_minimum() {
+        let (engine, data) = setup(1500);
+        let grid = GridIndex::build(&data, 6, 3.0);
+        let queries: Vec<u32> = (0..data.len() as u32).collect();
+        let mut params = GpuJoinParams::new(4, 3.0);
+        params.buffer_pairs = 2_000; // force many batches
+        let out = gpu_join(&engine, &data, &grid, &queries, &params).unwrap();
+        assert!(out.batches >= 3, "minimum 3 batches (stream overlap)");
+        assert!(
+            out.max_batch_pairs <= params.buffer_pairs * 4,
+            "batch result {} wildly exceeds buffer {}",
+            out.max_batch_pairs,
+            params.buffer_pairs
+        );
+        assert!(out.estimated_pairs > 0);
+    }
+
+    #[test]
+    fn subset_queries_only() {
+        let (engine, data) = setup(600);
+        let grid = GridIndex::build(&data, 6, 3.0);
+        let queries: Vec<u32> = (0..200).collect();
+        let params = GpuJoinParams::new(3, 3.0);
+        let out = gpu_join(&engine, &data, &grid, &queries, &params).unwrap();
+        assert_eq!(out.solved + out.failed.len(), 200);
+        // queries outside the set must remain empty
+        for q in 200..data.len() {
+            assert!(out.result.get(q).is_empty());
+        }
+    }
+
+    #[test]
+    fn high_dim_chist_route() {
+        // 32-D surrogate exercises the d=32 artifact family
+        let engine = Engine::load_default().unwrap();
+        let data = chist_like(500).generate(8);
+        let sel = crate::epsilon::EpsilonSelector::default().select_host(&data, 3, 0.2);
+        let grid = GridIndex::build(&data, 6, sel.eps);
+        let queries: Vec<u32> = (0..data.len() as u32).collect();
+        let params = GpuJoinParams::new(3, sel.eps);
+        let out = gpu_join(&engine, &data, &grid, &queries, &params).unwrap();
+        assert!(out.solved + out.failed.len() == queries.len());
+        assert!(out.kernel_time > 0.0);
+        assert!(out.device_model.threads > 0);
+    }
+}

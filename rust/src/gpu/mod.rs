@@ -1,0 +1,11 @@
+//! The GPU component of HYBRIDKNN-JOIN: the grid range-query join
+//! (join), the brute-force lower bound (brute), and the warp-level
+//! device model for the task-granularity study (device).
+
+pub mod brute;
+pub mod device;
+pub mod join;
+
+pub use brute::{brute_join_linear, BruteOutcome};
+pub use device::{DeviceEstimate, DeviceModel, ThreadAssign};
+pub use join::{gpu_join, GpuJoinOutcome, GpuJoinParams};

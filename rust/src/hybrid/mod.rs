@@ -1,0 +1,458 @@
+//! HYBRIDKNN-JOIN - Algorithm 1 of the paper, orchestrated end to end:
+//!
+//! 1. REORDER by variance (Sec. IV-D)                       [timed]
+//! 2. select ε on the device (Sec. V-C)                     [timed]
+//! 3. build the ε-grid over m dims (Sec. IV-A/C)            [excluded*]
+//! 4. build the EXACT-ANN kd-tree                           [excluded*]
+//! 5. split work: γ threshold + ρ floor (Sec. V-D/F)        [timed]
+//! 6. concurrently: GPU-JOIN over Q^GPU (this thread owns the PJRT
+//!    client) and EXACT-ANN ranks over Q^CPU                [timed]
+//! 7. Q^Fail reassigned to EXACT-ANN (Sec. V-E)             [timed]
+//! 8. merge results; record T1/T2 and ρ^Model (Eq. 6)
+//!
+//! *The paper's response-time measurements exclude dataset loading and
+//! index construction (Sec. VI-B); `HybridReport::response_time` follows
+//! the same convention, with the raw phase times kept in `timers`.
+
+use anyhow::Result;
+
+use crate::core::{Dataset, KnnResult};
+use crate::cpu;
+use crate::data::variance::reorder_by_variance;
+use crate::epsilon::{EpsilonSelection, EpsilonSelector};
+use crate::gpu::{self, GpuJoinParams, ThreadAssign};
+use crate::index::{GridIndex, KdTree};
+use crate::runtime::{tiles::TileClass, Engine};
+use crate::split::{self, WorkSplit};
+use crate::util::timer::PhaseTimer;
+
+/// Parameters of the hybrid join (paper Table II).
+#[derive(Debug, Clone)]
+pub struct HybridParams {
+    /// neighbors per query
+    pub k: usize,
+    /// indexed dimensions m <= n (paper uses m = 6 everywhere)
+    pub m: usize,
+    /// ε inflation (Sec. V-C2), in [0,1]
+    pub beta: f64,
+    /// GPU density threshold (Sec. V-D), in [0,1]
+    pub gamma: f64,
+    /// minimum CPU query fraction (Sec. V-F), in [0,1]
+    pub rho: f64,
+    /// EXACT-ANN ranks (paper: 15 + 1 GPU master)
+    pub cpu_ranks: usize,
+    /// REORDER on/off (ablation)
+    pub reorder: bool,
+    /// SHORTC equivalent: on-device top-k path vs full distance tiles
+    pub use_topk: bool,
+    pub tile_class: TileClass,
+    /// kernel granularity strategy (Table III; device-model accounting)
+    pub assign: ThreadAssign,
+    /// batch buffer size b_s in result pairs (Sec. IV-B)
+    pub buffer_pairs: u64,
+    /// stream workers overlapping device exec and host filtering
+    pub streams: usize,
+    pub selector: EpsilonSelector,
+    /// process only a fraction f of the queries (Table VI parameter
+    /// recovery); 1.0 = all
+    pub query_fraction: f64,
+    pub seed: u64,
+}
+
+impl HybridParams {
+    pub fn new(k: usize) -> Self {
+        HybridParams {
+            k,
+            m: 6,
+            beta: 0.0,
+            gamma: 0.0,
+            rho: 0.0,
+            cpu_ranks: 3,
+            reorder: true,
+            // dist-tile + host filter beats the sort-based top-k tile on
+            // CPU-PJRT (see gpu::join); flip for accelerator targets
+            use_topk: false,
+            tile_class: TileClass::Large,
+            assign: ThreadAssign::Static(8),
+            buffer_pairs: 10_000_000,
+            streams: 3,
+            selector: EpsilonSelector::default(),
+            query_fraction: 1.0,
+            seed: 0x4B1D,
+        }
+    }
+}
+
+/// Everything the evaluation section needs from one run.
+#[derive(Debug)]
+pub struct HybridReport {
+    pub result: KnnResult,
+    pub eps: EpsilonSelection,
+    pub q_gpu: usize,
+    pub q_cpu: usize,
+    pub q_fail: usize,
+    pub rho_moved: usize,
+    /// avg per-query seconds of EXACT-ANN (T1) and GPU-JOIN (T2)
+    pub t1: f64,
+    pub t2: f64,
+    /// Eq. 6 load-balanced ρ estimate from this run's T1/T2
+    pub rho_model: f64,
+    /// paper-convention response time (excludes index construction)
+    pub response_time: f64,
+    /// all phases, including excluded ones
+    pub timers: PhaseTimer,
+    /// GPU engine telemetry
+    pub gpu_kernel_time: f64,
+    pub gpu_batches: usize,
+    pub gpu_result_pairs: u64,
+    pub device_model_seconds: f64,
+    pub solved_on_gpu: usize,
+}
+
+/// The hybrid join engine.
+pub struct HybridKnnJoin;
+
+impl HybridKnnJoin {
+    /// Run Algorithm 1 (self-join). The engine stays on this thread (PJRT
+    /// client is not Send - the paper's single GPU-master rank); CPU ranks
+    /// run on scoped threads.
+    pub fn run(
+        engine: &Engine,
+        data: &Dataset,
+        params: &HybridParams,
+    ) -> Result<HybridReport> {
+        Self::run_inner(engine, data, None, params)
+    }
+
+    /// Bipartite join R ⋈_KNN S (paper Sec. III: the self-join machinery
+    /// applies directly): for every point of `r`, find its K nearest
+    /// neighbors in `s`. No self-exclusion.
+    pub fn run_rs(
+        engine: &Engine,
+        r: &Dataset,
+        s: &Dataset,
+        params: &HybridParams,
+    ) -> Result<HybridReport> {
+        anyhow::ensure!(
+            r.dims() == s.dims(),
+            "R and S dimensionality mismatch: {} vs {}",
+            r.dims(),
+            s.dims()
+        );
+        Self::run_inner(engine, r, Some(s), params)
+    }
+
+    fn run_inner(
+        engine: &Engine,
+        r_in: &Dataset,
+        s_in: Option<&Dataset>,
+        params: &HybridParams,
+    ) -> Result<HybridReport> {
+        let self_join = s_in.is_none();
+        let mut timers = PhaseTimer::new();
+
+        // 1. REORDER (timed - part of the response per Sec. VI-E1).
+        // The permutation comes from the corpus S and is applied to both
+        // relations so distances are preserved.
+        let (r_re, s_re): (Dataset, Option<Dataset>) = if params.reorder {
+            timers.time("reorder_variance", || {
+                match s_in {
+                    None => (reorder_by_variance(r_in).0, None),
+                    Some(s) => {
+                        let (s2, perm) = reorder_by_variance(s);
+                        (r_in.permute_dims(&perm), Some(s2))
+                    }
+                }
+            })
+        } else {
+            (r_in.clone(), s_in.cloned())
+        };
+        let r_data = &r_re;
+        let data: &Dataset = s_re.as_ref().unwrap_or(r_data);
+
+        // 2. ε selection on the device
+        let eps_sel = timers.time("select_epsilon", || {
+            params
+                .selector
+                .select_rs(engine, r_data, data, params.k, params.beta)
+        })?;
+
+        // 3. grid construction (excluded from response time)
+        let grid = timers.time("build_grid[excluded]", || {
+            GridIndex::build(data, params.m, eps_sel.eps)
+        });
+
+        // 4. kd-tree construction (excluded from response time)
+        let tree = timers.time("build_kdtree[excluded]", || KdTree::build(data));
+
+        // 5. split work (queries = points of R, density from the S grid)
+        let mut splitres: WorkSplit = timers.time("split_work", || {
+            split::split_work(r_data, &grid, params.k, params.gamma, params.rho)
+        });
+
+        // Table VI: process only a fraction of the queries
+        if params.query_fraction < 1.0 {
+            let keep = |v: &mut Vec<u32>| {
+                let stride = (1.0 / params.query_fraction.max(1e-6)).round() as usize;
+                *v = v.iter().cloned().step_by(stride.max(1)).collect();
+            };
+            keep(&mut splitres.q_gpu);
+            keep(&mut splitres.q_cpu);
+        }
+        let (q_gpu, q_cpu) = (splitres.q_gpu.clone(), splitres.q_cpu.clone());
+
+        // 6.+7. concurrent GPU-JOIN + EXACT-ANN, then Q^Fail
+        let gpu_params = GpuJoinParams {
+            k: params.k,
+            eps: eps_sel.eps,
+            tile_class: params.tile_class,
+            use_topk: params.use_topk,
+            buffer_pairs: params.buffer_pairs,
+            streams: params.streams,
+            assign: params.assign,
+            estimator_frac: 0.01,
+            exclude_self: self_join,
+        };
+
+        // Scheduling: with >1 hardware threads the GPU master and the CPU
+        // ranks run concurrently (Alg. 1); on a single-core host the
+        // "concurrency" would only make the PJRT thread pool and the rank
+        // threads fight over one core (~7x slowdown measured), so the two
+        // components run back to back - same work, same accounting.
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let t_main = std::time::Instant::now();
+        let run_gpu = || {
+            gpu::join::gpu_join_rs(engine, r_data, data, &grid, &q_gpu, &gpu_params)
+        };
+        let run_cpu = || {
+            cpu::exact_ann_rs(
+                data, &tree, r_data, &q_cpu, params.k, params.cpu_ranks, self_join,
+            )
+        };
+        let (gpu_out, cpu_out) = if hw > 1 {
+            std::thread::scope(|scope| {
+                let cpu_handle = scope.spawn(run_cpu);
+                let gpu_out = if q_gpu.is_empty() { None } else { Some(run_gpu()) };
+                (gpu_out, cpu_handle.join().expect("cpu ranks panicked"))
+            })
+        } else {
+            let gpu_out = if q_gpu.is_empty() { None } else { Some(run_gpu()) };
+            (gpu_out, run_cpu())
+        };
+        let gpu_out = gpu_out.transpose()?;
+
+        // Q^Fail -> EXACT-ANN (Sec. V-E)
+        let failed: Vec<u32> = gpu_out
+            .as_ref()
+            .map(|g| g.failed.clone())
+            .unwrap_or_default();
+        let fail_out = if failed.is_empty() {
+            None
+        } else {
+            Some(timers.time("q_fail_exact_ann", || {
+                cpu::exact_ann_rs(
+                    data, &tree, r_data, &failed, params.k, params.cpu_ranks,
+                    self_join,
+                )
+            }))
+        };
+        let main_time = t_main.elapsed().as_secs_f64();
+        timers.add("join_main", main_time);
+
+        // 8. merge + bookkeeping
+        let mut result = KnnResult::with_capacity(r_data.len());
+        result.merge_from(cpu_out.result);
+        let (mut gpu_kernel_time, mut gpu_batches, mut gpu_pairs) = (0.0, 0usize, 0u64);
+        let (mut device_model_seconds, mut solved_on_gpu, mut gpu_total) =
+            (0.0, 0usize, 0.0);
+        if let Some(g) = gpu_out {
+            gpu_kernel_time = g.kernel_time;
+            gpu_batches = g.batches;
+            gpu_pairs = g.result_pairs;
+            device_model_seconds = g.device_model.seconds;
+            solved_on_gpu = g.solved;
+            gpu_total = g.total_time;
+            result.merge_from(g.result);
+        }
+        if let Some(f) = fail_out {
+            result.merge_from(f.result);
+        }
+
+        // T1: mean per-query EXACT-ANN time (Sec. VI-E2). On an
+        // oversubscribed host (ranks > hardware threads) the per-rank wall
+        // times overlap, so busy time is bounded by wall x effective
+        // parallelism - take the tighter of the two estimates.
+        let cpu_busy: f64 = cpu_out.per_rank_time.iter().sum();
+        let eff = params.cpu_ranks.min(hw) as f64;
+        let t1 = if cpu_out.queries > 0 {
+            cpu_busy.min(cpu_out.total_time * eff) / cpu_out.queries as f64
+        } else {
+            0.0
+        };
+        let t2 = if solved_on_gpu > 0 {
+            gpu_total / solved_on_gpu as f64
+        } else {
+            0.0
+        };
+
+        let response_time = timers.total()
+            - timers.get("build_grid[excluded]")
+            - timers.get("build_kdtree[excluded]");
+
+        // ρ^Model (Eq. 6) is undefined when one side measured nothing:
+        // a GPU that solved zero queries is evidence FOR the CPU (ρ→1),
+        // not for ρ=0 as a literal reading of the formula would give.
+        let rho_model = if q_gpu.is_empty() || solved_on_gpu == 0 {
+            // no GPU evidence (empty or all-failed GPU side): the data is
+            // telling us this workload belongs on the CPU
+            1.0
+        } else if q_cpu.is_empty() && solved_on_gpu > 0 {
+            split::rho_model(0.0, t2).min(0.5)
+        } else {
+            split::rho_model(t1, t2)
+        };
+
+        Ok(HybridReport {
+            result,
+            eps: eps_sel,
+            q_gpu: q_gpu.len(),
+            q_cpu: q_cpu.len(),
+            q_fail: failed.len(),
+            rho_moved: splitres.rho_moved,
+            t1,
+            t2,
+            rho_model,
+            response_time,
+            timers,
+            gpu_kernel_time,
+            gpu_batches,
+            gpu_result_pairs: gpu_pairs,
+            device_model_seconds,
+            solved_on_gpu,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{chist_like, susy_like};
+
+    fn engine() -> Engine {
+        Engine::load_default().unwrap()
+    }
+
+    fn params(k: usize) -> HybridParams {
+        let mut p = HybridParams::new(k);
+        p.cpu_ranks = 2;
+        p
+    }
+
+    #[test]
+    fn hybrid_equals_exact_knn() {
+        // The headline correctness invariant: hybrid output == kd-tree
+        // exact KNN for EVERY query, regardless of the split.
+        let e = engine();
+        let data = susy_like(900).generate(51);
+        for (beta, gamma, rho) in [(0.0, 0.0, 0.0), (0.4, 0.6, 0.3), (1.0, 0.8, 0.0)] {
+            let mut p = params(4);
+            p.beta = beta;
+            p.gamma = gamma;
+            p.rho = rho;
+            let rep = HybridKnnJoin::run(&e, &data, &p).unwrap();
+            assert_eq!(
+                rep.result.solved_count(p.k.min(data.len() - 1)),
+                data.len(),
+                "every query solved (β={beta} γ={gamma} ρ={rho})"
+            );
+            // exact check vs kd-tree on the reordered data
+            let (rdata, _) = reorder_by_variance(&data);
+            let tree = KdTree::build(&rdata);
+            for q in (0..data.len()).step_by(101) {
+                let got = rep.result.get(q);
+                let want = tree.knn(&rdata, rdata.point(q), p.k, q as u32);
+                assert_eq!(got.len(), want.len());
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(
+                        (g.dist2 - w.dist2).abs() < 1e-3 * (1.0 + w.dist2),
+                        "q={q}: got {g:?} want {w:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_accounting_consistent() {
+        let e = engine();
+        let data = susy_like(800).generate(52);
+        let mut p = params(5);
+        p.gamma = 0.2;
+        let rep = HybridKnnJoin::run(&e, &data, &p).unwrap();
+        assert_eq!(rep.q_gpu + rep.q_cpu, data.len());
+        assert!(rep.q_fail <= rep.q_gpu);
+        assert_eq!(rep.solved_on_gpu + rep.q_fail, rep.q_gpu);
+        assert!(rep.rho_model >= 0.0 && rep.rho_model <= 1.0);
+        assert!(rep.response_time > 0.0);
+        assert!(rep.response_time <= rep.timers.total());
+    }
+
+    #[test]
+    fn rho_one_is_pure_cpu() {
+        let e = engine();
+        let data = susy_like(400).generate(53);
+        let mut p = params(3);
+        p.rho = 1.0;
+        let rep = HybridKnnJoin::run(&e, &data, &p).unwrap();
+        assert_eq!(rep.q_gpu, 0);
+        assert_eq!(rep.q_fail, 0);
+        assert_eq!(rep.gpu_batches, 0);
+        assert_eq!(rep.result.solved_count(3), data.len());
+    }
+
+    #[test]
+    fn query_fraction_processes_subset() {
+        let e = engine();
+        let data = susy_like(600).generate(54);
+        let mut p = params(3);
+        p.query_fraction = 0.25;
+        let rep = HybridKnnJoin::run(&e, &data, &p).unwrap();
+        let processed = rep.q_gpu + rep.q_cpu;
+        assert!(
+            processed >= data.len() / 5 && processed <= data.len() / 3,
+            "fraction off: {processed} of {}",
+            data.len()
+        );
+        assert!(rep.result.solved_count(3) >= processed.min(rep.result.len()) - rep.q_fail);
+    }
+
+    #[test]
+    fn high_dim_dataset_route() {
+        let e = engine();
+        let data = chist_like(400).generate(55);
+        let mut p = params(3);
+        p.beta = 0.3;
+        let rep = HybridKnnJoin::run(&e, &data, &p).unwrap();
+        assert_eq!(rep.result.solved_count(3), data.len());
+        assert!(rep.eps.eps > 0.0);
+    }
+
+    #[test]
+    fn reorder_ablation_still_exact() {
+        let e = engine();
+        let data = chist_like(300).generate(56);
+        let mut p = params(3);
+        p.reorder = false;
+        let rep = HybridKnnJoin::run(&e, &data, &p).unwrap();
+        assert_eq!(rep.result.solved_count(3), data.len());
+        // without reorder, ids refer to the original data
+        let tree = KdTree::build(&data);
+        let got = rep.result.get(7);
+        let want = tree.knn(&data, data.point(7), 3, 7);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g.dist2 - w.dist2).abs() < 1e-3 * (1.0 + w.dist2));
+        }
+    }
+}

@@ -1,0 +1,327 @@
+//! The GPU-JOIN grid index (paper Sec. IV-A).
+//!
+//! A grid of cell length ε over the first m ≤ n (REORDERed) dimensions.
+//! Only *non-empty* cells are materialised: sorted linearised ids in `B`
+//! (binary-searched during the walk), per-cell [min,max) ranges in `G`
+//! into the point lookup array `A` of point ids. Space O(|D|), matching
+//! the paper's requirement that the index be a small fraction of device
+//! memory.
+//!
+//! A range query walks the 3^m adjacent-cell block of the query's cell
+//! (step (ii)-(vi) of the paper's search procedure) and hands candidate id
+//! ranges to the caller - the caller (gpu::join) does the distance work on
+//! the "device".
+
+use crate::core::Dataset;
+
+/// Non-empty-cell grid over the first `m` dims.
+#[derive(Debug, Clone)]
+pub struct GridIndex {
+    /// cell edge length (= ε of the join)
+    pub eps: f64,
+    /// number of indexed dims m ≤ n
+    pub m: usize,
+    /// minimum coordinate per indexed dim (grid origin)
+    mins: Vec<f64>,
+    /// number of cells along each indexed dim
+    widths: Vec<u64>,
+    /// sorted linearised ids of non-empty cells (the paper's B)
+    cell_ids: Vec<u64>,
+    /// per non-empty cell: [start, end) into `point_ids` (the paper's G)
+    ranges: Vec<(u32, u32)>,
+    /// point ids grouped by cell (the paper's A)
+    point_ids: Vec<u32>,
+}
+
+impl GridIndex {
+    /// Build the index. `m` is clamped to the dataset dimensionality;
+    /// `eps` must be positive and finite.
+    pub fn build(d: &Dataset, m: usize, eps: f64) -> GridIndex {
+        assert!(eps.is_finite() && eps > 0.0, "bad eps {eps}");
+        let m = m.clamp(1, d.dims());
+        let n = d.len();
+
+        let mut mins = vec![f64::INFINITY; m];
+        let mut maxs = vec![f64::NEG_INFINITY; m];
+        for i in 0..n {
+            let p = d.point(i);
+            for j in 0..m {
+                let x = p[j] as f64;
+                if x < mins[j] {
+                    mins[j] = x;
+                }
+                if x > maxs[j] {
+                    maxs[j] = x;
+                }
+            }
+        }
+        if n == 0 {
+            mins.iter_mut().for_each(|x| *x = 0.0);
+            maxs.iter_mut().for_each(|x| *x = 0.0);
+        }
+        let widths: Vec<u64> = (0..m)
+            .map(|j| (((maxs[j] - mins[j]) / eps).floor() as u64 + 1).max(1))
+            .collect();
+
+        // (cell id, point id) pairs, sorted by cell -> B/G/A arrays.
+        let mut pairs: Vec<(u64, u32)> = (0..n)
+            .map(|i| {
+                let cell = Self::linearise_coords(
+                    &Self::cell_coords_of(d.point(i), &mins, eps, m),
+                    &widths,
+                );
+                (cell, i as u32)
+            })
+            .collect();
+        pairs.sort_unstable();
+
+        let mut cell_ids = Vec::new();
+        let mut ranges: Vec<(u32, u32)> = Vec::new();
+        let mut point_ids = Vec::with_capacity(n);
+        for (cell, pid) in pairs {
+            if cell_ids.last() != Some(&cell) {
+                cell_ids.push(cell);
+                let s = point_ids.len() as u32;
+                ranges.push((s, s));
+            }
+            point_ids.push(pid);
+            ranges.last_mut().unwrap().1 += 1;
+        }
+
+        GridIndex { eps, m, mins, widths, cell_ids, ranges, point_ids }
+    }
+
+    #[inline]
+    fn cell_coords_of(p: &[f32], mins: &[f64], eps: f64, m: usize) -> Vec<u64> {
+        (0..m)
+            .map(|j| (((p[j] as f64 - mins[j]) / eps).floor().max(0.0)) as u64)
+            .collect()
+    }
+
+    #[inline]
+    fn linearise_coords(coords: &[u64], widths: &[u64]) -> u64 {
+        // row-major linearisation; widths are small enough in practice
+        // (m <= 6 indexed dims) that this cannot overflow u64 for real data
+        let mut id = 0u64;
+        for (c, w) in coords.iter().zip(widths) {
+            id = id.wrapping_mul(*w).wrapping_add(*c);
+        }
+        id
+    }
+
+    /// Cell coordinates of a point.
+    pub fn cell_of(&self, p: &[f32]) -> Vec<u64> {
+        Self::cell_coords_of(p, &self.mins, self.eps, self.m)
+    }
+
+    /// Number of points in the cell containing `p` (0 if cell is empty).
+    /// This is the |C| of the splitter predicate (paper Sec. V-D).
+    pub fn cell_population(&self, p: &[f32]) -> usize {
+        let id = Self::linearise_coords(&self.cell_of(p), &self.widths);
+        match self.cell_ids.binary_search(&id) {
+            Ok(pos) => {
+                let (s, e) = self.ranges[pos];
+                (e - s) as usize
+            }
+            Err(_) => 0,
+        }
+    }
+
+    /// Number of non-empty cells.
+    pub fn non_empty_cells(&self) -> usize {
+        self.cell_ids.len()
+    }
+
+    /// Population of every non-empty cell alongside its id
+    /// (used by the ρ reassignment which drains the sparsest cells).
+    pub fn cell_sizes(&self) -> impl Iterator<Item = (u64, usize)> + '_ {
+        self.cell_ids
+            .iter()
+            .zip(&self.ranges)
+            .map(|(&id, &(s, e))| (id, (e - s) as usize))
+    }
+
+    /// Point ids in a given (linearised) cell.
+    pub fn cell_points(&self, cell_id: u64) -> &[u32] {
+        match self.cell_ids.binary_search(&cell_id) {
+            Ok(pos) => {
+                let (s, e) = self.ranges[pos];
+                &self.point_ids[s as usize..e as usize]
+            }
+            Err(_) => &[],
+        }
+    }
+
+    /// Linearised cell id of a point.
+    pub fn cell_id_of(&self, p: &[f32]) -> u64 {
+        Self::linearise_coords(&self.cell_of(p), &self.widths)
+    }
+
+    /// Walk the adjacent-cell block of `p` (3^m neighborhood clipped to the
+    /// grid), invoking `visit` with each non-empty cell's point ids. This
+    /// is steps (ii)-(iv) of the paper's range query: the linearised id of
+    /// each adjacent cell is binary-searched in B; non-empty hits yield
+    /// their A-ranges.
+    pub fn visit_adjacent(&self, p: &[f32], mut visit: impl FnMut(&[u32])) {
+        let base = self.cell_of(p);
+        // iterate the mixed-radix neighborhood {-1,0,1}^m
+        let m = self.m;
+        let mut offs = vec![-1i64; m];
+        'outer: loop {
+            // compute candidate cell coords, skip out-of-range
+            let mut coords = Vec::with_capacity(m);
+            let mut ok = true;
+            for j in 0..m {
+                let c = base[j] as i64 + offs[j];
+                if c < 0 || c >= self.widths[j] as i64 {
+                    ok = false;
+                    break;
+                }
+                coords.push(c as u64);
+            }
+            if ok {
+                let id = Self::linearise_coords(&coords, &self.widths);
+                if let Ok(pos) = self.cell_ids.binary_search(&id) {
+                    let (s, e) = self.ranges[pos];
+                    visit(&self.point_ids[s as usize..e as usize]);
+                }
+            }
+            // increment mixed-radix counter over {-1,0,1}
+            for j in (0..m).rev() {
+                if offs[j] < 1 {
+                    offs[j] += 1;
+                    continue 'outer;
+                }
+                offs[j] = -1;
+            }
+            break;
+        }
+    }
+
+    /// All candidate ids within the adjacent block of `p` (allocating
+    /// convenience wrapper over `visit_adjacent`).
+    pub fn candidates_of(&self, p: &[f32]) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.visit_adjacent(p, |ids| out.extend_from_slice(ids));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{sqdist, sqdist_prefix};
+    use crate::data::synthetic::{chist_like, susy_like};
+    use crate::util::{prop, rng::Rng};
+
+    fn random_dataset(rng: &mut Rng, n: usize, dims: usize, scale: f64) -> Dataset {
+        let data: Vec<f32> = (0..n * dims)
+            .map(|_| rng.normal(0.0, scale) as f32)
+            .collect();
+        Dataset::new(data, dims)
+    }
+
+    #[test]
+    fn every_point_indexed_exactly_once() {
+        prop::cases(25, 0x6121D, |rng| {
+            let n = 50 + rng.below(200);
+            let dims = 2 + rng.below(6);
+            let d = random_dataset(rng, n, dims, 5.0);
+            let m = 1 + rng.below(d.dims());
+            let g = GridIndex::build(&d, m, 0.5 + rng.f64() * 3.0);
+            let mut seen = vec![0usize; d.len()];
+            let total: usize = g.cell_sizes().map(|(_, s)| s).sum();
+            assert_eq!(total, d.len());
+            for (id, _) in g.cell_sizes() {
+                for &p in g.cell_points(id) {
+                    seen[p as usize] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1));
+        });
+    }
+
+    #[test]
+    fn adjacent_walk_superset_of_eps_ball_in_indexed_dims() {
+        // Completeness invariant: every point within eps of the query *in
+        // the indexed m-dim projection* must be found by the walk.
+        prop::cases(20, 0xAD7A, |rng| {
+            let n = 100 + rng.below(150);
+            let dims = 2 + rng.below(4);
+            let d = random_dataset(rng, n, dims, 3.0);
+            let m = 1 + rng.below(d.dims());
+            let eps = 0.8 + rng.f64() * 2.0;
+            let g = GridIndex::build(&d, m, eps);
+            for _ in 0..5 {
+                let q = rng.below(d.len());
+                let cands: std::collections::HashSet<u32> =
+                    g.candidates_of(d.point(q)).into_iter().collect();
+                for i in 0..d.len() {
+                    let dm = sqdist_prefix(d.point(q), d.point(i), m);
+                    if dm <= eps * eps {
+                        assert!(
+                            cands.contains(&(i as u32)),
+                            "point {i} within eps of {q} missed by grid walk"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn grid_range_query_equals_bruteforce() {
+        // end-to-end range query: walk + full-dim filter == brute force
+        prop::cases(15, 0x5E1F, |rng| {
+            let dims = 2 + rng.below(3);
+            let d = random_dataset(rng, 120, dims, 2.0);
+            let eps = 0.5 + rng.f64() * 1.5;
+            let g = GridIndex::build(&d, d.dims(), eps);
+            let q = rng.below(d.len());
+            let mut got: Vec<u32> = g
+                .candidates_of(d.point(q))
+                .into_iter()
+                .filter(|&i| sqdist(d.point(q), d.point(i as usize)) <= eps * eps)
+                .collect();
+            got.sort_unstable();
+            let mut want: Vec<u32> = (0..d.len() as u32)
+                .filter(|&i| sqdist(d.point(q), d.point(i as usize)) <= eps * eps)
+                .collect();
+            want.sort_unstable();
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn cell_population_matches_cell_points() {
+        let d = susy_like(500).generate(11);
+        let g = GridIndex::build(&d, 6, 2.0);
+        for i in (0..d.len()).step_by(37) {
+            let pop = g.cell_population(d.point(i));
+            let id = g.cell_id_of(d.point(i));
+            assert_eq!(pop, g.cell_points(id).len());
+            assert!(pop >= 1, "own cell contains the point itself");
+        }
+    }
+
+    #[test]
+    fn space_linear_in_points() {
+        let d = chist_like(2000).generate(4);
+        let g = GridIndex::build(&d, 6, 1.0);
+        assert!(g.non_empty_cells() <= d.len());
+        let total: usize = g.cell_sizes().map(|(_, s)| s).sum();
+        assert_eq!(total, d.len());
+    }
+
+    #[test]
+    fn empty_and_single_point_datasets() {
+        let d1 = Dataset::new(vec![1.0, 2.0], 2);
+        let g = GridIndex::build(&d1, 2, 1.0);
+        assert_eq!(g.non_empty_cells(), 1);
+        assert_eq!(g.candidates_of(d1.point(0)), vec![0]);
+
+        let d0 = Dataset::new(Vec::new(), 2);
+        let g0 = GridIndex::build(&d0, 2, 1.0);
+        assert_eq!(g0.non_empty_cells(), 0);
+    }
+}

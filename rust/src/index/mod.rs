@@ -1,0 +1,8 @@
+//! Spatial indexes: the data-oblivious ε-grid used by GPU-JOIN (paper
+//! Sec. IV-A) and the data-aware kd-tree used by EXACT-ANN (the CPU side).
+
+pub mod grid;
+pub mod kdtree;
+
+pub use grid::GridIndex;
+pub use kdtree::KdTree;

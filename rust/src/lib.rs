@@ -1,0 +1,42 @@
+//! # hybrid-knn-join
+//!
+//! Production-quality reproduction of Gowanlock (2018), "KNN Joins Using a
+//! Hybrid Approach: Exploiting CPU/GPU Workload Characteristics", as a
+//! three-layer rust + JAX/Pallas stack (see DESIGN.md):
+//!
+//! * L3 (this crate): the paper's coordination contribution - empirical
+//!   ε selection, the β/γ/ρ work splitter, the grid-join "GPU" engine with
+//!   batching + streams, the EXACT-ANN kd-tree CPU ranks, Q^Fail
+//!   reassignment and ρ^Model load balancing.
+//! * L2/L1 (python/compile): JAX graphs + Pallas kernels AOT-lowered to
+//!   HLO text artifacts, executed at runtime through PJRT (runtime::Engine).
+
+pub mod apps;
+pub mod bench;
+pub mod core;
+pub mod cpu;
+pub mod data;
+pub mod epsilon;
+pub mod gpu;
+pub mod hybrid;
+pub mod index;
+pub mod runtime;
+pub mod split;
+pub mod util;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::core::{Dataset, KnnResult, Neighbor};
+    pub use crate::cpu::{exact_ann, exact_ann_rs, ref_impl, CpuKnnOutcome};
+    pub use crate::data::synthetic::{
+        by_name, chist_like, fma_like, songs_like, susy_like, DatasetSpec,
+    };
+    pub use crate::epsilon::{EpsilonSelection, EpsilonSelector};
+    pub use crate::gpu::{
+        brute_join_linear, gpu_join, join::gpu_join_rs, GpuJoinParams, ThreadAssign,
+    };
+    pub use crate::hybrid::{HybridKnnJoin, HybridParams, HybridReport};
+    pub use crate::index::{GridIndex, KdTree};
+    pub use crate::runtime::{tiles::TileClass, Engine};
+    pub use crate::split::{rho_model, split_work};
+}

@@ -1,0 +1,245 @@
+//! hybrid-knn-join CLI - the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   run          run HYBRIDKNN-JOIN on a (surrogate or file) dataset
+//!   refimpl      run the CPU-only parallel reference implementation
+//!   linear       run the GPU-JOINLINEAR brute-force lower bound
+//!   gen          generate a surrogate dataset to CSV/bin
+//!   experiments  regenerate a paper table/figure (fig2..fig11, table3..6)
+//!   artifacts    list the loaded AOT artifacts
+//!
+//! Examples:
+//!   hybrid-knn-join run --dataset susy --n 20000 --k 5 --beta 0 --gamma 0.6 --rho 0.5
+//!   hybrid-knn-join experiments fig11
+//!   hybrid-knn-join gen --dataset chist --n 10000 --out /tmp/chist.csv
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use hybrid_knn_join::bench::{self, experiments};
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("run") => cmd_run(args),
+        Some("refimpl") => cmd_refimpl(args),
+        Some("linear") => cmd_linear(args),
+        Some("gen") => cmd_gen(args),
+        Some("experiments") => cmd_experiments(args),
+        Some("artifacts") => cmd_artifacts(),
+        _ => {
+            print!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+hybrid-knn-join - hybrid CPU/GPU KNN self-join (Gowanlock 2018 reproduction)
+
+usage: hybrid-knn-join <run|refimpl|linear|gen|experiments|artifacts> [options]
+
+common options:
+  --dataset <susy|chist|songs|fma>   surrogate workload (default susy)
+  --n <points>                       dataset size (default 10000)
+  --file <path>                      load dataset from .csv/.bin instead
+  --k <K>                            neighbors (default 5)
+options for run:
+  --m <dims>      indexed dims (default 6)      --beta <0..1>   (default 0)
+  --gamma <0..1>  (default 0)                   --rho <0..1>    (default 0)
+  --ranks <p>     EXACT-ANN ranks (default 3)   --no-reorder    disable REORDER
+  --no-topk       disable the on-device top-k path
+options for experiments:
+  positional: fig2 fig6 fig7 fig8 fig9 fig10 fig11 table3 table4 table5 table6 all
+  --quick         use the small smoke-test workloads
+";
+
+fn load_dataset(args: &Args) -> Result<Dataset> {
+    if let Some(file) = args.get("file") {
+        let p = Path::new(file);
+        return match p.extension().and_then(|e| e.to_str()) {
+            Some("csv") => hybrid_knn_join::data::io::read_csv(p),
+            _ => hybrid_knn_join::data::io::read_bin(p),
+        };
+    }
+    let name = args.str_or("dataset", "susy");
+    let n = args.usize_or("n", 10_000);
+    let spec =
+        by_name(&name, n).with_context(|| format!("unknown dataset {name:?}"))?;
+    Ok(spec.generate(args.u64_or("seed", 0xDA7A)))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let engine = Engine::load_default()?;
+    let data = load_dataset(args)?;
+    let mut p = HybridParams::new(args.usize_or("k", 5));
+    p.m = args.usize_or("m", 6);
+    p.beta = args.f64_or("beta", 0.0);
+    p.gamma = args.f64_or("gamma", 0.0);
+    p.rho = args.f64_or("rho", 0.0);
+    p.cpu_ranks = args.usize_or("ranks", 3);
+    p.reorder = !args.flag("no-reorder");
+    p.use_topk = args.flag("topk");
+    println!(
+        "HYBRIDKNN-JOIN |D|={} n={} k={} m={} beta={} gamma={} rho={}",
+        data.len(), data.dims(), p.k, p.m, p.beta, p.gamma, p.rho
+    );
+    let rep = HybridKnnJoin::run(&engine, &data, &p)?;
+    println!(
+        "eps: mean={:.4} default={:.4} beta={:.4} final={:.4}",
+        rep.eps.eps_mean, rep.eps.eps_default, rep.eps.eps_beta, rep.eps.eps
+    );
+    println!(
+        "split: |Q_gpu|={} |Q_cpu|={} (rho moved {})  Q_fail={} solved_on_gpu={}",
+        rep.q_gpu, rep.q_cpu, rep.rho_moved, rep.q_fail, rep.solved_on_gpu
+    );
+    println!(
+        "gpu: kernel={:.4}s batches={} pairs={} modeled_device={:.4}s",
+        rep.gpu_kernel_time, rep.gpu_batches, rep.gpu_result_pairs,
+        rep.device_model_seconds
+    );
+    println!(
+        "T1={:.3e} s/q  T2={:.3e} s/q  rho_model={:.3}",
+        rep.t1, rep.t2, rep.rho_model
+    );
+    println!("phases:\n{}", rep.timers.report());
+    println!(
+        "response time (paper convention): {:.4}s  solved {}/{}",
+        rep.response_time,
+        rep.result.solved_count(p.k.min(data.len().saturating_sub(1))),
+        rep.q_gpu + rep.q_cpu
+    );
+    Ok(())
+}
+
+fn cmd_refimpl(args: &Args) -> Result<()> {
+    let data = load_dataset(args)?;
+    let k = args.usize_or("k", 5);
+    let ranks = args.usize_or("ranks", 4);
+    let (data, _) = hybrid_knn_join::data::variance::reorder_by_variance(&data);
+    let tree = KdTree::build(&data);
+    let out = ref_impl(&data, &tree, k, ranks);
+    println!(
+        "REFIMPL |D|={} n={} k={} ranks={}: {:.4}s ({} solved)",
+        data.len(), data.dims(), k, ranks, out.total_time,
+        out.result.solved_count(k.min(data.len() - 1))
+    );
+    Ok(())
+}
+
+fn cmd_linear(args: &Args) -> Result<()> {
+    let engine = Engine::load_default()?;
+    let data = load_dataset(args)?;
+    let k = args.usize_or("k", 5);
+    let sel = EpsilonSelector::default().select(&engine, &data, k, 0.0)?;
+    let queries: Vec<u32> = (0..data.len() as u32).collect();
+    let out = brute_join_linear(&engine, &data, &queries, sel.eps, None)?;
+    println!(
+        "GPU-JOINLINEAR |D|={} n={}: kernel={:.4}s total={:.4}s tiles={}",
+        data.len(), data.dims(), out.kernel_time, out.total_time, out.tiles
+    );
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let data = load_dataset(args)?;
+    let out = args.get("out").context("--out <path> required")?;
+    let p = Path::new(out);
+    match p.extension().and_then(|e| e.to_str()) {
+        Some("csv") => hybrid_knn_join::data::io::write_csv(&data, p)?,
+        _ => hybrid_knn_join::data::io::write_bin(&data, p)?,
+    }
+    println!("wrote {} points x {} dims to {out}", data.len(), data.dims());
+    Ok(())
+}
+
+fn cmd_experiments(args: &Args) -> Result<()> {
+    let which = args
+        .positional()
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let ws = if args.flag("quick") {
+        bench::workloads_quick()
+    } else {
+        bench::workloads()
+    };
+    let engine = Engine::load_default()?;
+    let mut tables = Vec::new();
+    let betas = [0.0, 0.5, 1.0];
+    match which {
+        "fig2" => tables.push(experiments::fig2(5)),
+        "fig6" => tables.push(experiments::fig6(
+            &[ws[0].clone(), ws[3].clone()],
+            5,
+        )),
+        "fig7" => tables.push(experiments::fig7(&engine, &ws[1..])?),
+        "fig8" => tables.push(experiments::fig8(
+            &engine, &ws, &betas, &[0.0, 0.6, 0.8, 1.0],
+        )?),
+        "fig9" => tables.push(experiments::fig9(
+            &engine,
+            &[ws[0].clone(), ws[2].clone()],
+            &betas,
+            &[0.0, 0.2, 0.4, 0.6, 0.8, 1.0],
+        )?),
+        "fig10" => tables.push(experiments::fig10(
+            &engine, &ws, &[1, 2, 4, 8, 16, 25, 32, 48, 64], 0.2,
+        )?),
+        "fig11" => tables.push(experiments::fig11(&engine, &ws, &[1, 4, 16, 64])?),
+        "table3" => tables.push(experiments::table3(&engine, &ws)?),
+        "table4" => tables.push(experiments::table4(&engine, &ws)?),
+        "table5" => tables.push(experiments::table5(&engine, &ws)?),
+        "table6" => tables.push(experiments::table6(
+            &engine, &ws, &[0.05, 0.1, 0.05, 0.1],
+        )?),
+        "all" => {
+            tables.push(experiments::fig2(5));
+            tables.push(experiments::fig6(&[ws[0].clone(), ws[3].clone()], 5));
+            tables.push(experiments::fig7(&engine, &ws[1..])?);
+            tables.push(experiments::table3(&engine, &ws)?);
+            tables.push(experiments::fig8(
+                &engine, &ws, &betas, &[0.0, 0.6, 0.8, 1.0],
+            )?);
+            tables.push(experiments::fig9(
+                &engine,
+                &[ws[0].clone(), ws[2].clone()],
+                &betas,
+                &[0.0, 0.2, 0.4, 0.6, 0.8, 1.0],
+            )?);
+            tables.push(experiments::table4(&engine, &ws)?);
+            tables.push(experiments::table5(&engine, &ws)?);
+            tables.push(experiments::table6(&engine, &ws, &[0.05, 0.1, 0.05, 0.1])?);
+            tables.push(experiments::fig10(
+                &engine, &ws, &[1, 2, 4, 8, 16, 25, 32, 48, 64], 0.2,
+            )?);
+            tables.push(experiments::fig11(&engine, &ws, &[1, 4, 16, 64])?);
+        }
+        other => bail!("unknown experiment {other:?} (see usage)"),
+    }
+    for t in tables {
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let engine = Engine::load_default()?;
+    let mut names = engine.artifact_names();
+    names.sort();
+    println!("{} artifacts:", names.len());
+    for n in names {
+        println!("  {n}");
+    }
+    Ok(())
+}

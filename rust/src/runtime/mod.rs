@@ -1,0 +1,345 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 hot path.
+//!
+//! One `Engine` per process: a PJRT CPU client (the stand-in "device"),
+//! the artifact manifest, and a cache of compiled executables keyed by
+//! artifact name. Artifacts are compiled lazily on first use and reused
+//! for the life of the process - python never runs at request time.
+
+pub mod tiles;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Sentinel coordinate for padded rows (mirrors kernels/dist_tile.py).
+/// Padded-vs-real pair distances are ~1e30, failing every eps test.
+pub const PAD_SENTINEL: f32 = 1.0e15;
+
+/// Artifact descriptor from manifest.json.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// static params (qt/ct/d/k/s/bins as present)
+    pub params: HashMap<String, usize>,
+}
+
+impl ArtifactInfo {
+    pub fn param(&self, key: &str) -> usize {
+        *self
+            .params
+            .get(key)
+            .unwrap_or_else(|| panic!("artifact {} missing param {key}", self.name))
+    }
+}
+
+/// The PJRT engine: client + manifest + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    artifacts: HashMap<String, ArtifactInfo>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// executions performed (telemetry for benches/EXPERIMENTS)
+    exec_count: std::sync::atomic::AtomicU64,
+}
+
+impl Engine {
+    /// Load the manifest from `dir` (e.g. "artifacts/") and connect the
+    /// PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {manifest_path:?} - run `make artifacts`"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        if json.get("format").and_then(|f| f.as_str()) != Some("hlo-text") {
+            bail!("unexpected manifest format");
+        }
+        let mut artifacts = HashMap::new();
+        for a in json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .context("manifest missing artifacts")?
+        {
+            let name = a
+                .get("name")
+                .and_then(|x| x.as_str())
+                .context("artifact missing name")?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(|x| x.as_str())
+                .context("artifact missing file")?
+                .to_string();
+            let kind = a
+                .get("kind")
+                .and_then(|x| x.as_str())
+                .context("artifact missing kind")?
+                .to_string();
+            let mut params = HashMap::new();
+            if let Some(Json::Obj(m)) = a.get("params") {
+                for (k, v) in m {
+                    if let Some(n) = v.as_usize() {
+                        params.insert(k.clone(), n);
+                    }
+                }
+            }
+            artifacts.insert(name.clone(), ArtifactInfo { name, file, kind, params });
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Engine {
+            client,
+            dir: dir.to_path_buf(),
+            artifacts,
+            cache: Mutex::new(HashMap::new()),
+            exec_count: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Default artifacts directory: $HKNN_ARTIFACTS or ./artifacts.
+    pub fn load_default() -> Result<Engine> {
+        let dir = std::env::var("HKNN_ARTIFACTS").unwrap_or_else(|_| {
+            // walk up from cwd to find artifacts/manifest.json (tests run
+            // from the workspace root already; examples may not)
+            for base in [".", "..", "../.."] {
+                let p = Path::new(base).join("artifacts").join("manifest.json");
+                if p.exists() {
+                    return Path::new(base)
+                        .join("artifacts")
+                        .to_string_lossy()
+                        .into_owned();
+                }
+            }
+            "artifacts".to_string()
+        });
+        Engine::load(Path::new(&dir))
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.get(name)
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.exec_count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name}"))?;
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let exe = Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Build an input literal (host->device upload analogue). Callers on
+    /// the hot path pre-build candidate literals once per cell and reuse
+    /// them across query tiles (EXPERIMENTS.md Perf#2).
+    pub fn literal(data: &[f32], shape: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(shape)
+            .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+    }
+
+    /// Execute an artifact with f32 input buffers of the given shapes.
+    /// Returns the flat f32 contents of each tuple element (i32 outputs
+    /// are converted; see `exec_raw` for typed access).
+    pub fn exec(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<xla::Literal>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| Self::literal(data, shape))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        self.exec_lits(name, &refs)
+    }
+
+    /// Execute with pre-built literals (no input copies on this path).
+    pub fn exec_lits(
+        &self,
+        name: &str,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        self.exec_count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: root is always a tuple
+        root.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+    }
+
+    /// f32 vector from a literal.
+    pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+    }
+
+    /// i32 vector from a literal.
+    pub fn to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+        lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Engine {
+        Engine::load_default().expect("artifacts built? run `make artifacts`")
+    }
+
+    #[test]
+    fn manifest_loads_and_lists_families() {
+        let e = engine();
+        let names = e.artifact_names();
+        assert!(names.iter().any(|n| n.starts_with("dist_q128")));
+        assert!(names.iter().any(|n| n.starts_with("disttopk_")));
+        assert!(names.iter().any(|n| n.starts_with("hist_")));
+        let a = e.artifact("dist_q32_c256_d24").unwrap();
+        assert_eq!(a.param("qt"), 32);
+        assert_eq!(a.param("ct"), 256);
+        assert_eq!(a.param("d"), 24);
+    }
+
+    #[test]
+    fn dist_artifact_executes_and_matches_host() {
+        let e = engine();
+        let (qt, ct, d) = (32usize, 256usize, 24usize);
+        let mut rng = crate::util::rng::Rng::new(42);
+        let q: Vec<f32> = (0..qt * d).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let c: Vec<f32> = (0..ct * d).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let out = e
+            .exec(
+                "dist_q32_c256_d24",
+                &[(&q, &[qt as i64, d as i64]), (&c, &[ct as i64, d as i64])],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let d2 = Engine::to_f32(&out[0]).unwrap();
+        assert_eq!(d2.len(), qt * ct);
+        // spot-check against host distance
+        for &(i, j) in &[(0usize, 0usize), (3, 100), (31, 255)] {
+            let host = crate::core::sqdist(&q[i * d..(i + 1) * d], &c[j * d..(j + 1) * d]);
+            let dev = d2[i * ct + j] as f64;
+            assert!(
+                (host - dev).abs() < 1e-3 * (1.0 + host),
+                "({i},{j}): host={host} dev={dev}"
+            );
+        }
+    }
+
+    #[test]
+    fn topk_artifact_sorted_and_consistent() {
+        let e = engine();
+        let (qt, ct, d, k) = (128usize, 512usize, 24usize, 64usize);
+        let mut rng = crate::util::rng::Rng::new(43);
+        let q: Vec<f32> = (0..qt * d).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let c: Vec<f32> = (0..ct * d).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let out = e
+            .exec(
+                "disttopk_q128_c512_d24_k64",
+                &[(&q, &[qt as i64, d as i64]), (&c, &[ct as i64, d as i64])],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let vals = Engine::to_f32(&out[0]).unwrap();
+        let idx = Engine::to_i32(&out[1]).unwrap();
+        assert_eq!(vals.len(), qt * k);
+        assert_eq!(idx.len(), qt * k);
+        for q_i in [0usize, 64, 127] {
+            let row = &vals[q_i * k..(q_i + 1) * k];
+            for w in row.windows(2) {
+                assert!(w[0] <= w[1] + 1e-4, "row not ascending");
+            }
+            for (slot, &ci) in idx[q_i * k..(q_i + 1) * k].iter().enumerate() {
+                assert!((ci as usize) < ct);
+                let host = crate::core::sqdist(
+                    &q[q_i * d..(q_i + 1) * d],
+                    &c[ci as usize * d..(ci as usize + 1) * d],
+                );
+                let dev = row[slot] as f64;
+                assert!((host - dev).abs() < 1e-3 * (1.0 + host));
+            }
+        }
+    }
+
+    #[test]
+    fn hist_artifact_counts_cumulative() {
+        let e = engine();
+        let (s, ct, d, bins) = (64usize, 512usize, 24usize, 64usize);
+        let mut rng = crate::util::rng::Rng::new(44);
+        let q: Vec<f32> = (0..s * d).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let c: Vec<f32> = (0..ct * d).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let edges2: Vec<f32> = (1..=bins).map(|b| b as f32 * 2.0).collect();
+        let out = e
+            .exec(
+                "hist_s64_c512_d24_b64",
+                &[
+                    (&q, &[s as i64, d as i64]),
+                    (&c, &[ct as i64, d as i64]),
+                    (&edges2, &[bins as i64]),
+                ],
+            )
+            .unwrap();
+        let counts = Engine::to_f32(&out[0]).unwrap();
+        assert_eq!(counts.len(), bins);
+        for w in counts.windows(2) {
+            assert!(w[0] <= w[1], "cumulative counts must be monotone");
+        }
+        let npairs = Engine::to_f32(&out[2]).unwrap()[0];
+        assert_eq!(npairs, (s * ct) as f32);
+        assert!(counts[bins - 1] <= npairs);
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let e = engine();
+        let (qt, ct, d) = (32usize, 256usize, 24usize);
+        let q = vec![0.5f32; qt * d];
+        let c = vec![0.25f32; ct * d];
+        let args: [(&[f32], &[i64]); 2] =
+            [(&q, &[qt as i64, d as i64]), (&c, &[ct as i64, d as i64])];
+        e.exec("dist_q32_c256_d24", &args).unwrap();
+        let n0 = e.executions();
+        e.exec("dist_q32_c256_d24", &args).unwrap();
+        assert_eq!(e.executions(), n0 + 1);
+        assert_eq!(e.cache.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let e = engine();
+        assert!(e.exec("nope", &[]).is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! Tile planning + padding for artifact execution.
+//!
+//! Artifacts are shape-static; real workloads are not. A `TilePlan` picks
+//! the artifact family matching the dataset dimensionality (smallest
+//! padded dim >= n) and the tile size class, and `pack` copies points into
+//! the static tile layout: extra dims are zero (distance-preserving since
+//! both sides pad with zeros), unused candidate rows carry PAD_SENTINEL
+//! coordinates so their distances fail every filter.
+
+use anyhow::{bail, Result};
+
+use super::{Engine, PAD_SENTINEL};
+use crate::core::Dataset;
+
+/// Which artifact tile the caller will drive.
+#[derive(Debug, Clone)]
+pub struct TilePlan {
+    pub qt: usize,
+    pub ct: usize,
+    pub d: usize,
+    pub dist_name: String,
+    /// topk variant (same qt/ct/d), when the manifest has one
+    pub topk_name: Option<String>,
+    pub topk_k: usize,
+}
+
+/// Tile size class. Large saturates the "device"; small keeps padding
+/// waste low for thin workloads (paper Sec. V-G's granularity trade-off).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileClass {
+    Large,
+    Small,
+}
+
+/// Choose the tile plan for a dataset dimensionality.
+pub fn plan_for(engine: &Engine, dims: usize, class: TileClass) -> Result<TilePlan> {
+    let (qt, ct) = match class {
+        TileClass::Large => (128usize, 512usize),
+        TileClass::Small => (32usize, 256usize),
+    };
+    // smallest artifact dim >= dims among dist artifacts with this tile
+    let mut best: Option<usize> = None;
+    for name in engine.artifact_names() {
+        if let Some(info) = engine.artifact(name) {
+            if info.kind == "dist" && info.param("qt") == qt && info.param("ct") == ct {
+                let d = info.param("d");
+                if d >= dims && best.map(|b| d < b).unwrap_or(true) {
+                    best = Some(d);
+                }
+            }
+        }
+    }
+    let Some(d) = best else {
+        bail!("no dist artifact for dims={dims} tile {qt}x{ct}; rebuild artifacts");
+    };
+    let dist_name = format!("dist_q{qt}_c{ct}_d{d}");
+    let topk_name = engine
+        .artifact_names()
+        .into_iter()
+        .find(|n| n.starts_with(&format!("disttopk_q{qt}_c{ct}_d{d}_k")))
+        .map(|s| s.to_string());
+    let topk_k = topk_name
+        .as_deref()
+        .and_then(|n| engine.artifact(n))
+        .map(|i| i.param("k"))
+        .unwrap_or(0);
+    Ok(TilePlan { qt, ct, d, dist_name, topk_name, topk_k })
+}
+
+/// Pack point rows (by id) into a `rows x d_pad` tile. Ids beyond
+/// `ids.len()` are filled with `fill` in every coordinate.
+pub fn pack(
+    out: &mut Vec<f32>,
+    data: &Dataset,
+    ids: &[u32],
+    rows: usize,
+    d_pad: usize,
+    fill: f32,
+) {
+    debug_assert!(ids.len() <= rows);
+    let dims = data.dims().min(d_pad);
+    out.clear();
+    out.resize(rows * d_pad, 0.0);
+    for (r, &id) in ids.iter().enumerate() {
+        let src = data.point(id as usize);
+        let dst = &mut out[r * d_pad..r * d_pad + dims];
+        dst.copy_from_slice(&src[..dims]);
+        // dims..d_pad remain zero (distance-preserving)
+    }
+    if fill != 0.0 {
+        for r in ids.len()..rows {
+            out[r * d_pad..(r + 1) * d_pad].fill(fill);
+        }
+    }
+}
+
+/// Pack candidate rows with the sentinel fill.
+pub fn pack_candidates(
+    out: &mut Vec<f32>,
+    data: &Dataset,
+    ids: &[u32],
+    rows: usize,
+    d_pad: usize,
+) {
+    pack(out, data, ids, rows, d_pad, PAD_SENTINEL);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::susy_like;
+
+    fn engine() -> Engine {
+        Engine::load_default().unwrap()
+    }
+
+    #[test]
+    fn plan_picks_smallest_covering_dim() {
+        let e = engine();
+        assert_eq!(plan_for(&e, 18, TileClass::Large).unwrap().d, 24);
+        assert_eq!(plan_for(&e, 24, TileClass::Large).unwrap().d, 24);
+        assert_eq!(plan_for(&e, 25, TileClass::Small).unwrap().d, 32);
+        assert_eq!(plan_for(&e, 90, TileClass::Large).unwrap().d, 96);
+        assert_eq!(plan_for(&e, 518, TileClass::Large).unwrap().d, 520);
+        assert!(plan_for(&e, 521, TileClass::Large).is_err());
+    }
+
+    #[test]
+    fn plan_finds_topk_for_large_tiles() {
+        let e = engine();
+        let p = plan_for(&e, 18, TileClass::Large).unwrap();
+        assert!(p.topk_name.is_some());
+        assert_eq!(p.topk_k, 64);
+        // small tiles have no topk variant in the default manifest
+        let ps = plan_for(&e, 18, TileClass::Small).unwrap();
+        assert!(ps.topk_name.is_none());
+    }
+
+    #[test]
+    fn pack_pads_dims_and_rows() {
+        let d = susy_like(10).generate(1);
+        let mut buf = Vec::new();
+        pack_candidates(&mut buf, &d, &[0, 5, 9], 5, 24);
+        assert_eq!(buf.len(), 5 * 24);
+        // real row: first 18 coords match, rest zero
+        assert_eq!(&buf[0..18], d.point(0));
+        assert!(buf[18..24].iter().all(|&x| x == 0.0));
+        // padded rows are sentinel
+        assert!(buf[3 * 24..5 * 24].iter().all(|&x| x == PAD_SENTINEL));
+    }
+
+    #[test]
+    fn padded_tile_distance_via_engine_matches_host() {
+        // end-to-end: pack an 18-D dataset into the d=24 artifact; device
+        // distances must equal host distances on real rows.
+        let e = engine();
+        let data = susy_like(40).generate(2);
+        let plan = plan_for(&e, data.dims(), TileClass::Small).unwrap();
+        let qids: Vec<u32> = (0..10).collect();
+        let cids: Vec<u32> = (0..40).collect();
+        let mut q = Vec::new();
+        let mut c = Vec::new();
+        pack(&mut q, &data, &qids, plan.qt, plan.d, 0.0);
+        pack_candidates(&mut c, &data, &cids, plan.ct, plan.d);
+        let out = e
+            .exec(
+                &plan.dist_name,
+                &[
+                    (&q, &[plan.qt as i64, plan.d as i64]),
+                    (&c, &[plan.ct as i64, plan.d as i64]),
+                ],
+            )
+            .unwrap();
+        let d2 = Engine::to_f32(&out[0]).unwrap();
+        for qi in 0..10usize {
+            for ci in 0..40usize {
+                let host = crate::core::sqdist(data.point(qi), data.point(ci));
+                let dev = d2[qi * plan.ct + ci] as f64;
+                assert!(
+                    (host - dev).abs() < 1e-2 + 1e-3 * host,
+                    "({qi},{ci}) host={host} dev={dev}"
+                );
+            }
+            // padded candidates are huge
+            assert!(d2[qi * plan.ct + 40] > 1e20);
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Work division between CPU and GPU (paper Sec. V-D, V-F) and the
+//! ρ^Model load-balancing estimate (Sec. VI-E2, Eq. 6).
+
+use crate::core::Dataset;
+use crate::index::GridIndex;
+use crate::util::math::unit_ball_volume;
+
+/// Eq. 1: lower bound on the cell population needed so that a point at the
+/// cell centre probabilistically finds >= K neighbors within ε^β.
+/// n^min = ((2ε^β)^m · K) / (V_ball(m, ε^β)); the ε^β factors cancel,
+/// leaving K · 2^m / V_unit_ball(m). `m` is the *indexed* dimensionality
+/// (the paper substitutes m for n when m < n dims are indexed).
+pub fn n_min(k: usize, m: usize) -> f64 {
+    let m = m.max(1);
+    k as f64 * 2f64.powi(m as i32) / unit_ball_volume(m)
+}
+
+/// n^thresh = n^min + (10·n^min − n^min)·γ = n^min (1 + 9γ).
+pub fn n_thresh(k: usize, m: usize, gamma: f64) -> f64 {
+    n_min(k, m) * (1.0 + 9.0 * gamma)
+}
+
+/// The split of query points between architectures.
+#[derive(Debug, Clone, Default)]
+pub struct WorkSplit {
+    pub q_gpu: Vec<u32>,
+    pub q_cpu: Vec<u32>,
+    /// the threshold used (diagnostics)
+    pub threshold: f64,
+    /// queries moved GPU->CPU by the ρ floor (diagnostics)
+    pub rho_moved: usize,
+}
+
+/// Assign every point to GPU iff its grid cell holds >= n^thresh points
+/// (Sec. V-D), then enforce the ρ floor |Q^CPU| >= ρ|D| by draining the
+/// *sparsest* GPU cells first (Sec. V-F).
+pub fn split_work(
+    d: &Dataset,
+    grid: &GridIndex,
+    k: usize,
+    gamma: f64,
+    rho: f64,
+) -> WorkSplit {
+    let thresh = n_thresh(k, grid.m, gamma);
+    let mut q_gpu = Vec::new();
+    let mut q_cpu = Vec::new();
+    // cell population per point via the grid (already built for the join)
+    for i in 0..d.len() {
+        let pop = grid.cell_population(d.point(i)) as f64;
+        if pop >= thresh {
+            q_gpu.push(i as u32);
+        } else {
+            q_cpu.push(i as u32);
+        }
+    }
+
+    // ρ floor: move whole cells, sparsest first (their queries have the
+    // least GPU-side work, so they are the cheapest to reassign).
+    let floor = (rho * d.len() as f64).ceil() as usize;
+    let mut moved = 0usize;
+    if q_cpu.len() < floor && !q_gpu.is_empty() {
+        // group GPU queries by cell
+        let mut by_cell: std::collections::HashMap<u64, Vec<u32>> =
+            std::collections::HashMap::new();
+        for &q in &q_gpu {
+            by_cell
+                .entry(grid.cell_id_of(d.point(q as usize)))
+                .or_default()
+                .push(q);
+        }
+        let mut cells: Vec<(usize, u64)> = by_cell
+            .iter()
+            .map(|(&id, v)| (v.len(), id))
+            .collect();
+        cells.sort_unstable();
+        // drain per query, sparsest cells first, stopping exactly at the
+        // floor (a dense cell may be drained partially - the paper moves
+        // "those found within cells with the least number of points", not
+        // whole cells)
+        let mut need = floor - q_cpu.len();
+        let mut demote: std::collections::HashSet<u32> =
+            std::collections::HashSet::new();
+        'outer: for (_, id) in cells {
+            for &q in by_cell[&id].iter() {
+                if need == 0 {
+                    break 'outer;
+                }
+                demote.insert(q);
+                need -= 1;
+            }
+        }
+        if !demote.is_empty() {
+            let (stay, go): (Vec<u32>, Vec<u32>) =
+                q_gpu.into_iter().partition(|q| !demote.contains(q));
+            moved = go.len();
+            q_cpu.extend(go);
+            q_cpu.sort_unstable();
+            q_gpu = stay;
+        }
+    }
+
+    WorkSplit { q_gpu, q_cpu, threshold: thresh, rho_moved: moved }
+}
+
+/// Eq. 6: ρ^Model = T2 / (T1 + T2), where T1/T2 are the measured average
+/// per-query times of EXACT-ANN and GPU-JOIN under an arbitrary split.
+pub fn rho_model(t1: f64, t2: f64) -> f64 {
+    if t1 + t2 <= 0.0 {
+        return 0.5;
+    }
+    t2 / (t1 + t2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::susy_like;
+    use crate::util::prop;
+
+    #[test]
+    fn n_min_known_values() {
+        // m=2: K * 4 / π
+        assert!((n_min(1, 2) - 4.0 / std::f64::consts::PI).abs() < 1e-12);
+        // m=3: K * 8 / (4π/3) = 6K/π
+        assert!((n_min(5, 3) - 5.0 * 6.0 / std::f64::consts::PI).abs() < 1e-9);
+        // cube/sphere ratio grows rapidly with m
+        assert!(n_min(1, 6) > n_min(1, 3));
+        assert!(n_min(1, 10) > 100.0);
+    }
+
+    #[test]
+    fn n_thresh_interpolates_to_10x() {
+        let k = 4;
+        let m = 3;
+        assert!((n_thresh(k, m, 0.0) - n_min(k, m)).abs() < 1e-12);
+        assert!((n_thresh(k, m, 1.0) - 10.0 * n_min(k, m)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_partitions_dataset() {
+        let d = susy_like(2000).generate(1);
+        let grid = GridIndex::build(&d, 6, 2.0);
+        let s = split_work(&d, &grid, 5, 0.0, 0.0);
+        assert_eq!(s.q_gpu.len() + s.q_cpu.len(), d.len());
+        let mut all: Vec<u32> = s.q_gpu.iter().chain(&s.q_cpu).cloned().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..d.len() as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn gamma_monotone_shrinks_gpu_side() {
+        let d = susy_like(3000).generate(2);
+        let grid = GridIndex::build(&d, 6, 2.5);
+        let mut last = usize::MAX;
+        for gamma in [0.0, 0.4, 0.8, 1.0] {
+            let s = split_work(&d, &grid, 5, gamma, 0.0);
+            assert!(s.q_gpu.len() <= last, "gamma must shrink |Q_gpu|");
+            last = s.q_gpu.len();
+        }
+    }
+
+    #[test]
+    fn gpu_cells_denser_than_cpu_cells() {
+        let d = susy_like(3000).generate(3);
+        let grid = GridIndex::build(&d, 6, 2.5);
+        let s = split_work(&d, &grid, 5, 0.2, 0.0);
+        if s.q_gpu.is_empty() || s.q_cpu.is_empty() {
+            return; // degenerate split - nothing to compare
+        }
+        let mean_pop = |qs: &[u32]| -> f64 {
+            qs.iter()
+                .map(|&q| grid.cell_population(d.point(q as usize)) as f64)
+                .sum::<f64>()
+                / qs.len() as f64
+        };
+        assert!(mean_pop(&s.q_gpu) > mean_pop(&s.q_cpu));
+        // threshold is respected exactly
+        for &q in &s.q_gpu {
+            assert!(grid.cell_population(d.point(q as usize)) as f64 >= s.threshold);
+        }
+    }
+
+    #[test]
+    fn rho_floor_enforced_with_sparsest_cells_first() {
+        prop::cases(10, 0x5137, |rng| {
+            let n = 1000 + rng.below(2000);
+            let d = susy_like(n).generate(rng.next_u64());
+            let grid = GridIndex::build(&d, 6, 2.0 + rng.f64() * 2.0);
+            let rho = rng.f64();
+            let s = split_work(&d, &grid, 5, 0.0, rho);
+            let floor = (rho * d.len() as f64).ceil() as usize;
+            // floor met unless the GPU side was exhausted entirely
+            assert!(
+                s.q_cpu.len() >= floor || s.q_gpu.is_empty(),
+                "cpu={} floor={floor} gpu={}",
+                s.q_cpu.len(),
+                s.q_gpu.len()
+            );
+            // remaining GPU cells are at least as dense as any demoted cell
+            if s.rho_moved > 0 && !s.q_gpu.is_empty() {
+                let min_gpu_pop = s
+                    .q_gpu
+                    .iter()
+                    .map(|&q| grid.cell_population(d.point(q as usize)))
+                    .min()
+                    .unwrap();
+                // every remaining GPU query sits in a cell >= threshold
+                assert!(min_gpu_pop as f64 >= s.threshold);
+            }
+        });
+    }
+
+    #[test]
+    fn rho_one_forces_pure_cpu() {
+        let d = susy_like(800).generate(5);
+        let grid = GridIndex::build(&d, 6, 2.0);
+        let s = split_work(&d, &grid, 5, 0.0, 1.0);
+        assert!(s.q_gpu.is_empty());
+        assert_eq!(s.q_cpu.len(), d.len());
+    }
+
+    #[test]
+    fn rho_model_eq6() {
+        assert!((rho_model(1.0, 1.0) - 0.5).abs() < 1e-12);
+        assert!((rho_model(1.0, 3.0) - 0.75).abs() < 1e-12);
+        // slower GPU per query -> larger CPU share
+        assert!(rho_model(1e-5, 5e-5) > rho_model(1e-5, 1e-5));
+        assert_eq!(rho_model(0.0, 0.0), 0.5);
+    }
+}

@@ -1,0 +1,133 @@
+//! Minimal CLI argument parser (the vendor set has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Typed getters parse on demand and report friendly errors.
+
+use std::collections::HashMap;
+
+/// Parsed command line: flags/options by name plus positionals in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.parse_or(name, default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.parse_or(name, default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.parse_or(name, default)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                panic!("--{name}: cannot parse {s:?}");
+            }),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional (subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse("run --k 5 --beta=0.5 --dataset susy");
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.usize_or("k", 0), 5);
+        assert_eq!(a.f64_or("beta", 0.0), 0.5);
+        assert_eq!(a.str_or("dataset", ""), "susy");
+    }
+
+    #[test]
+    fn flags_and_defaults() {
+        let a = parse("--verbose --k 3");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_option() {
+        let a = parse("--verbose --k 3");
+        assert_eq!(a.usize_or("k", 0), 3);
+    }
+
+    #[test]
+    fn positionals_preserved() {
+        let a = parse("bench fig11 --trials 3");
+        assert_eq!(a.positional(), &["bench".to_string(), "fig11".to_string()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn bad_parse_panics() {
+        let a = parse("--k notanumber");
+        a.usize_or("k", 0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Infrastructure substrates built in-repo (the offline vendor set lacks
+//! rand/clap/serde_json/rayon/proptest/criterion): PRNG + distributions,
+//! numeric helpers, CLI parsing, JSON, rank-parallel helpers, a property
+//! test harness, and phase/bench timers.
+
+pub mod cli;
+pub mod json;
+pub mod math;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,90 @@
+//! Rank-parallel execution helpers (no rayon/tokio in the vendor set).
+//!
+//! The paper's host-side parallelism is MPI shared-nothing ranks with
+//! round-robin query assignment; here a "rank" is an OS thread. `run_ranks`
+//! spawns |p| scoped threads and returns each rank's result, which is all
+//! EXACT-ANN / REFIMPL need.
+
+/// Run `ranks` workers; worker `k` receives its rank id. Results are
+/// returned in rank order. Panics propagate.
+pub fn run_ranks<T, F>(ranks: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(ranks > 0);
+    if ranks == 1 {
+        return vec![f(0)];
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..ranks)
+            .map(|k| {
+                let f = &f;
+                scope.spawn(move || f(k))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank panicked"))
+            .collect()
+    })
+}
+
+/// Chunked parallel map over indices [0, n): each worker pulls the next
+/// chunk from a shared atomic cursor (simple work stealing).
+pub fn parallel_chunks<F>(n: usize, workers: usize, chunk: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let cursor = AtomicUsize::new(0);
+    let workers = workers.max(1);
+    let chunk = chunk.max(1);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let cursor = &cursor;
+            let f = &f;
+            scope.spawn(move || loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                f(start..(start + chunk).min(n));
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn ranks_return_in_order() {
+        let out = run_ranks(8, |k| k * 10);
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+    }
+
+    #[test]
+    fn single_rank_shortcut() {
+        assert_eq!(run_ranks(1, |k| k + 1), vec![1]);
+    }
+
+    #[test]
+    fn chunks_cover_everything_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_chunks(n, 4, 97, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn chunks_empty_input() {
+        parallel_chunks(0, 4, 8, |_| panic!("must not be called"));
+    }
+}

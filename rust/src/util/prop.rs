@@ -1,0 +1,65 @@
+//! Miniature property-testing harness (the vendor set has no `proptest`).
+//!
+//! `cases(n, seed, |rng| ...)` runs a closure over `n` independently seeded
+//! RNG streams; on failure it reports the failing case seed so the case can
+//! be replayed deterministically with `replay(seed, ...)`. No shrinking -
+//! generators in this repo draw small sizes so raw failures stay readable.
+
+use super::rng::Rng;
+
+/// Run `n` property cases. The closure receives a fresh RNG per case and
+/// should panic (assert) on violation. Prints the case seed on panic.
+pub fn cases<F: Fn(&mut Rng)>(n: usize, seed: u64, f: F) {
+    for case in 0..n {
+        let case_seed = seed
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at case {case} (replay seed {case_seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay one failing case by its reported seed.
+pub fn replay<F: Fn(&mut Rng)>(case_seed: u64, f: F) {
+    let mut rng = Rng::new(case_seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_runs_all_cases() {
+        let mut count = 0;
+        // deliberately use interior mutability via Cell - closure is Fn
+        let counter = std::cell::Cell::new(0);
+        cases(25, 42, |_rng| {
+            counter.set(counter.get() + 1);
+        });
+        count += counter.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failure_propagates() {
+        cases(10, 7, |rng| {
+            assert!(rng.f64() < 0.9, "eventually draws above 0.9");
+        });
+    }
+
+    #[test]
+    fn case_rngs_differ() {
+        let seen = std::cell::RefCell::new(std::collections::HashSet::new());
+        cases(10, 9, |rng| {
+            assert!(seen.borrow_mut().insert(rng.next_u64()));
+        });
+    }
+}

@@ -1,0 +1,110 @@
+//! Phase timing + the micro-bench loop used by `benches/` (no criterion
+//! offline). Reports min/median/mean over trials after warmup.
+
+use std::time::Instant;
+
+/// Accumulates named phase durations (seconds).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    phases: Vec<(String, f64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and record it under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.phases.push((name.to_string(), t0.elapsed().as_secs_f64()));
+        out
+    }
+
+    pub fn add(&mut self, name: &str, secs: f64) {
+        self.phases.push((name.to_string(), secs));
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.phases
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, s)| s)
+            .sum()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.phases.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn phases(&self) -> &[(String, f64)] {
+        &self.phases
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (n, secs) in &self.phases {
+            s.push_str(&format!("  {n:<28} {secs:>10.4}s\n"));
+        }
+        s.push_str(&format!("  {:<28} {:>10.4}s\n", "TOTAL", self.total()));
+        s
+    }
+}
+
+/// Result of a micro-bench run.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub trials: Vec<f64>,
+}
+
+impl BenchStats {
+    pub fn min(&self) -> f64 {
+        self.trials.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+    pub fn mean(&self) -> f64 {
+        crate::util::math::mean(&self.trials)
+    }
+    pub fn median(&self) -> f64 {
+        crate::util::math::median(&self.trials)
+    }
+}
+
+/// Run `f` `warmup + trials` times, timing the trials.
+pub fn bench<T>(warmup: usize, trials: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut out = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    BenchStats { trials: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        let x = t.time("a", || 41 + 1);
+        assert_eq!(x, 42);
+        t.add("a", 1.0);
+        t.add("b", 0.5);
+        assert!(t.get("a") >= 1.0);
+        assert!((t.total() - t.get("a") - t.get("b")).abs() < 1e-9);
+        assert!(t.report().contains("TOTAL"));
+    }
+
+    #[test]
+    fn bench_counts_trials() {
+        let stats = bench(1, 5, || 1 + 1);
+        assert_eq!(stats.trials.len(), 5);
+        assert!(stats.min() <= stats.median());
+        assert!(stats.mean() >= 0.0);
+    }
+}

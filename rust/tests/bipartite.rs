@@ -1,0 +1,116 @@
+//! R ⋈_KNN S bipartite join: correctness against a brute-force oracle and
+//! semantic differences from the self-join (no self-exclusion).
+
+use hybrid_knn_join::core::sqdist;
+use hybrid_knn_join::prelude::*;
+
+fn brute_rs(r: &Dataset, s: &Dataset, q: usize, k: usize) -> Vec<f64> {
+    let mut d: Vec<f64> = (0..s.len()).map(|j| sqdist(r.point(q), s.point(j))).collect();
+    d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    d.truncate(k);
+    d
+}
+
+#[test]
+fn hybrid_rs_matches_bruteforce() {
+    let engine = Engine::load_default().unwrap();
+    let r = susy_like(400).generate(201);
+    let s = susy_like(900).generate(202);
+    let mut p = HybridParams::new(4);
+    p.cpu_ranks = 2;
+    p.gamma = 0.3;
+    let rep = HybridKnnJoin::run_rs(&engine, &r, &s, &p).unwrap();
+    assert_eq!(rep.q_gpu + rep.q_cpu, r.len());
+    assert_eq!(rep.result.solved_count(4), r.len());
+    for q in (0..r.len()).step_by(41) {
+        let got = rep.result.get(q);
+        let want = brute_rs(&r, &s, q, 4);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g.dist2 - w).abs() < 1e-3 * (1.0 + w),
+                "q={q}: {} vs {w}",
+                g.dist2
+            );
+        }
+        // neighbor ids must index S
+        for n in got {
+            assert!((n.id as usize) < s.len());
+        }
+    }
+}
+
+#[test]
+fn rs_join_keeps_identical_points() {
+    // a point of R that exists in S must match itself at distance 0
+    // (no self-exclusion in the bipartite join)
+    let engine = Engine::load_default().unwrap();
+    let s = susy_like(500).generate(203);
+    let r = s.gather(&[7, 13, 99]);
+    let mut p = HybridParams::new(1);
+    p.cpu_ranks = 1;
+    let rep = HybridKnnJoin::run_rs(&engine, &r, &s, &p).unwrap();
+    for q in 0..r.len() {
+        let n = &rep.result.get(q)[0];
+        // device-path distances use the matmul formulation: self-distance
+        // carries O(|x|^2 * eps_f32) cancellation noise, not exact zero
+        assert!(n.dist2 < 0.05, "query {q} should find its twin: {n:?}");
+    }
+}
+
+#[test]
+fn self_join_excludes_self_but_rs_does_not() {
+    let engine = Engine::load_default().unwrap();
+    let d = susy_like(300).generate(204);
+    let mut p = HybridParams::new(1);
+    p.cpu_ranks = 1;
+    let selfj = HybridKnnJoin::run(&engine, &d, &p).unwrap();
+    let rs = HybridKnnJoin::run_rs(&engine, &d, &d, &p).unwrap();
+    let mut self_hits = 0;
+    for q in 0..d.len() {
+        // matmul-formulation noise on the device path (see above)
+        assert!(rs.result.get(q)[0].dist2 < 0.05);
+        if selfj.result.get(q)[0].id == q as u32 {
+            self_hits += 1;
+        }
+    }
+    assert_eq!(self_hits, 0, "self-join must never return the query itself");
+}
+
+#[test]
+fn rs_dimension_mismatch_is_error() {
+    let engine = Engine::load_default().unwrap();
+    let r = susy_like(50).generate(205);
+    let s = chist_like(50).generate(206);
+    let p = HybridParams::new(2);
+    assert!(HybridKnnJoin::run_rs(&engine, &r, &s, &p).is_err());
+}
+
+#[test]
+fn gpu_rs_agrees_with_cpu_rs() {
+    let engine = Engine::load_default().unwrap();
+    let r = susy_like(200).generate(207);
+    let s = susy_like(600).generate(208);
+    let sel = EpsilonSelector::default()
+        .select_rs(&engine, &r, &s, 3, 0.3)
+        .unwrap();
+    let grid = GridIndex::build(&s, 6, sel.eps);
+    let queries: Vec<u32> = (0..r.len() as u32).collect();
+    let mut params = GpuJoinParams::new(3, sel.eps);
+    params.exclude_self = false;
+    let g = gpu_join_rs(&engine, &r, &s, &grid, &queries, &params).unwrap();
+    let tree = KdTree::build(&s);
+    let c = exact_ann_rs(&s, &tree, &r, &queries, 3, 2, false);
+    let mut compared = 0;
+    for q in 0..r.len() {
+        let gq = g.result.get(q);
+        if gq.len() < 3 {
+            continue;
+        }
+        for (a, b) in gq.iter().zip(c.result.get(q)) {
+            assert!((a.dist2 - b.dist2).abs() < 1e-3 * (1.0 + b.dist2), "q={q}");
+        }
+        compared += 1;
+    }
+    assert!(compared > 0);
+}

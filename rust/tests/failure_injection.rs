@@ -1,0 +1,124 @@
+//! Failure injection: the runtime must fail loudly and cleanly on broken
+//! artifact trees, and the engines must behave on degenerate inputs.
+
+use std::fs;
+use std::path::PathBuf;
+
+use hybrid_knn_join::prelude::*;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("hknn_fi_{}_{name}", std::process::id()));
+    fs::create_dir_all(&p).unwrap();
+    p
+}
+
+#[test]
+fn missing_manifest_is_clean_error() {
+    let dir = tmp_dir("missing");
+    let err = match Engine::load(&dir) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("load must fail"),
+    };
+    assert!(err.contains("manifest"), "unhelpful error: {err}");
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn malformed_manifest_is_clean_error() {
+    let dir = tmp_dir("malformed");
+    fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(Engine::load(&dir).is_err());
+    fs::write(dir.join("manifest.json"), r#"{"format":"other","artifacts":[]}"#)
+        .unwrap();
+    let err = match Engine::load(&dir) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("load must fail"),
+    };
+    assert!(err.contains("format"), "{err}");
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_compile_not_at_load() {
+    let dir = tmp_dir("corrupt");
+    fs::write(
+        dir.join("manifest.json"),
+        r#"{"format":"hlo-text","artifacts":[
+            {"name":"dist_q32_c256_d24","file":"bad.hlo.txt","kind":"dist",
+             "params":{"qt":32,"ct":256,"d":24},"out_shapes":[[32,256]]}]}"#,
+    )
+    .unwrap();
+    fs::write(dir.join("bad.hlo.txt"), "HloModule garbage\nnot an hlo body").unwrap();
+    // manifest loads fine (lazy compilation)...
+    let engine = Engine::load(&dir).unwrap();
+    // ...execution of the corrupt artifact errors instead of aborting
+    let q = vec![0f32; 32 * 24];
+    let c = vec![0f32; 256 * 24];
+    let args: [(&[f32], &[i64]); 2] = [(&q, &[32, 24]), (&c, &[256, 24])];
+    assert!(engine.exec("dist_q32_c256_d24", &args).is_err());
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn missing_artifact_file_is_clean_error() {
+    let dir = tmp_dir("missingfile");
+    fs::write(
+        dir.join("manifest.json"),
+        r#"{"format":"hlo-text","artifacts":[
+            {"name":"dist_q32_c256_d24","file":"nope.hlo.txt","kind":"dist",
+             "params":{"qt":32,"ct":256,"d":24},"out_shapes":[[32,256]]}]}"#,
+    )
+    .unwrap();
+    let engine = Engine::load(&dir).unwrap();
+    let q = vec![0f32; 32 * 24];
+    let c = vec![0f32; 256 * 24];
+    let args: [(&[f32], &[i64]); 2] = [(&q, &[32, 24]), (&c, &[256, 24])];
+    assert!(engine.exec("dist_q32_c256_d24", &args).is_err());
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn dims_beyond_artifacts_is_clean_error() {
+    // 600 dims > the largest artifact (520): hybrid must error, not panic
+    let engine = Engine::load_default().unwrap();
+    let data = Dataset::new(vec![0.5f32; 40 * 600], 600);
+    let mut p = HybridParams::new(2);
+    p.cpu_ranks = 1;
+    assert!(HybridKnnJoin::run(&engine, &data, &p).is_err());
+}
+
+#[test]
+fn degenerate_datasets_do_not_crash() {
+    let engine = Engine::load_default().unwrap();
+    // all-identical points: every distance zero
+    let data = Dataset::new(vec![1.0f32; 128 * 8], 8);
+    let mut p = HybridParams::new(3);
+    p.cpu_ranks = 2;
+    let rep = HybridKnnJoin::run(&engine, &data, &p).unwrap();
+    assert_eq!(rep.result.solved_count(3), data.len());
+    for n in rep.result.get(0) {
+        assert_eq!(n.dist2, 0.0);
+    }
+
+    // K >= |D|: every query can only find |D|-1 neighbors
+    let small = susy_like(20).generate(1);
+    let mut p = HybridParams::new(64);
+    p.cpu_ranks = 1;
+    let rep = HybridKnnJoin::run(&engine, &small, &p).unwrap();
+    for q in 0..small.len() {
+        assert_eq!(rep.result.get(q).len(), small.len() - 1);
+    }
+}
+
+#[test]
+fn estimator_on_tiny_gpu_sets() {
+    // a query set that maps to a single cell must still batch correctly
+    let engine = Engine::load_default().unwrap();
+    let data = susy_like(300).generate(7);
+    let sel = EpsilonSelector::default().select(&engine, &data, 2, 1.0).unwrap();
+    let grid = GridIndex::build(&data, 6, sel.eps.max(1e3)); // giant cells
+    let queries: Vec<u32> = (0..data.len() as u32).collect();
+    let params = GpuJoinParams::new(2, sel.eps.max(1e3));
+    let out = gpu_join(&engine, &data, &grid, &queries, &params).unwrap();
+    assert_eq!(out.solved + out.failed.len(), queries.len());
+}

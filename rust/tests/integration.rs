@@ -1,0 +1,174 @@
+//! Cross-module integration tests: the full stack (artifacts -> runtime ->
+//! epsilon -> grid -> split -> gpu join -> cpu ranks -> hybrid merge)
+//! against ground truth, on all four surrogate families.
+
+use hybrid_knn_join::bench::workloads_quick;
+use hybrid_knn_join::data::variance::reorder_by_variance;
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::util::prop;
+
+fn engine() -> Engine {
+    Engine::load_default().expect("run `make artifacts` first")
+}
+
+/// Hybrid output must equal the kd-tree oracle on every workload family.
+#[test]
+fn hybrid_exact_on_all_workload_families() {
+    let e = engine();
+    for w in workloads_quick() {
+        let data = w.dataset();
+        let k = w.table_k.min(5);
+        let mut p = HybridParams::new(k);
+        p.cpu_ranks = 2;
+        p.gamma = 0.4;
+        p.rho = 0.2;
+        let rep = HybridKnnJoin::run(&e, &data, &p).expect(w.name);
+        assert_eq!(
+            rep.result.solved_count(k),
+            data.len(),
+            "{}: all queries solved",
+            w.name
+        );
+        let (rdata, _) = reorder_by_variance(&data);
+        let tree = KdTree::build(&rdata);
+        for q in (0..data.len()).step_by(71) {
+            let got = rep.result.get(q);
+            let want = tree.knn(&rdata, rdata.point(q), k, q as u32);
+            assert_eq!(got.len(), want.len(), "{} q={q}", w.name);
+            for (g, r) in got.iter().zip(&want) {
+                assert!(
+                    (g.dist2 - r.dist2).abs() < 1e-3 * (1.0 + r.dist2),
+                    "{} q={q}: {g:?} vs {r:?}",
+                    w.name
+                );
+            }
+        }
+    }
+}
+
+/// The result is invariant to how the work is split: sweeping beta/gamma/
+/// rho (including pure-CPU and pure-GPU-leaning splits) changes only the
+/// schedule, never the neighbors.
+#[test]
+fn split_invariance_property() {
+    let e = engine();
+    let data = susy_like(700).generate(99);
+    let k = 3;
+    let (rdata, _) = reorder_by_variance(&data);
+    let tree = KdTree::build(&rdata);
+    let oracle: Vec<Vec<f64>> = (0..data.len())
+        .map(|q| {
+            tree.knn(&rdata, rdata.point(q), k, q as u32)
+                .iter()
+                .map(|n| n.dist2)
+                .collect()
+        })
+        .collect();
+
+    prop::cases(6, 0x1B7, |rng| {
+        let mut p = HybridParams::new(k);
+        p.cpu_ranks = 2;
+        p.beta = rng.f64();
+        p.gamma = rng.f64();
+        p.rho = rng.f64();
+        let rep = HybridKnnJoin::run(&e, &data, &p).unwrap();
+        for q in (0..data.len()).step_by(59) {
+            let got = rep.result.get(q);
+            assert_eq!(got.len(), oracle[q].len());
+            for (g, w) in got.iter().zip(&oracle[q]) {
+                assert!(
+                    (g.dist2 - w).abs() < 1e-3 * (1.0 + w),
+                    "beta={} gamma={} rho={} q={q}",
+                    p.beta,
+                    p.gamma,
+                    p.rho
+                );
+            }
+        }
+    });
+}
+
+/// GPU-JOIN (device path) and EXACT-ANN (host path) agree on the queries
+/// the GPU solves - the two engines implement the same semantics.
+#[test]
+fn gpu_and_cpu_engines_agree() {
+    let e = engine();
+    let data = susy_like(800).generate(100);
+    let (data, _) = reorder_by_variance(&data);
+    let sel = EpsilonSelector::default().select(&e, &data, 4, 0.2).unwrap();
+    let grid = GridIndex::build(&data, 6, sel.eps);
+    let queries: Vec<u32> = (0..data.len() as u32).collect();
+    let params = GpuJoinParams::new(4, sel.eps);
+    let gout = gpu_join(&e, &data, &grid, &queries, &params).unwrap();
+    let tree = KdTree::build(&data);
+    let cout = exact_ann(&data, &tree, &queries, 4, 2);
+    let mut compared = 0;
+    for q in 0..data.len() {
+        let g = gout.result.get(q);
+        if g.len() < 4 {
+            continue; // failed on GPU; CPU handles it in the hybrid
+        }
+        let c = cout.result.get(q);
+        for (a, b) in g.iter().zip(c) {
+            assert!((a.dist2 - b.dist2).abs() < 1e-3 * (1.0 + b.dist2), "q={q}");
+        }
+        compared += 1;
+    }
+    assert!(compared > 0, "GPU solved nothing at eps={}", sel.eps);
+}
+
+/// REFIMPL equals brute-force collection through the device path.
+#[test]
+fn refimpl_vs_device_brute() {
+    let e = engine();
+    let data = chist_like(400).generate(101);
+    let k = 4;
+    let tree = KdTree::build(&data);
+    let r = ref_impl(&data, &tree, k, 2);
+    let queries: Vec<u32> = (0..data.len() as u32).collect();
+    let b = brute_join_linear(&e, &data, &queries, 1.0, Some(k)).unwrap();
+    let bres = b.result.unwrap();
+    for q in (0..data.len()).step_by(29) {
+        for (x, y) in r.result.get(q).iter().zip(bres.get(q)) {
+            assert!((x.dist2 - y.dist2).abs() < 1e-3 * (1.0 + y.dist2), "q={q}");
+        }
+    }
+}
+
+/// K larger than any cell population: everything fails on the GPU and the
+/// CPU still completes the join exactly.
+#[test]
+fn failure_flood_reassignment() {
+    let e = engine();
+    let data = songs_like(400).generate(102);
+    let mut p = HybridParams::new(16);
+    p.cpu_ranks = 2;
+    // tiny eps via beta=0 on a high-dim set -> most GPU queries fail
+    let rep = HybridKnnJoin::run(&e, &data, &p).unwrap();
+    assert_eq!(rep.result.solved_count(16), data.len());
+    // accounting stays consistent even under mass failure
+    assert_eq!(rep.solved_on_gpu + rep.q_fail, rep.q_gpu);
+}
+
+/// Dataset IO round-trips feed the pipeline unchanged.
+#[test]
+fn io_roundtrip_through_hybrid() {
+    let e = engine();
+    let data = susy_like(300).generate(103);
+    let path = std::env::temp_dir().join(format!("hknn_it_{}.bin", std::process::id()));
+    hybrid_knn_join::data::io::write_bin(&data, &path).unwrap();
+    let loaded = hybrid_knn_join::data::io::read_bin(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.raw(), data.raw());
+    let mut p = HybridParams::new(3);
+    p.cpu_ranks = 2;
+    let a = HybridKnnJoin::run(&e, &data, &p).unwrap();
+    let b = HybridKnnJoin::run(&e, &loaded, &p).unwrap();
+    for q in (0..data.len()).step_by(37) {
+        let (x, y) = (a.result.get(q), b.result.get(q));
+        assert_eq!(x.len(), y.len());
+        for (m, n) in x.iter().zip(y) {
+            assert_eq!(m.id, n.id);
+        }
+    }
+}
