@@ -1,0 +1,124 @@
+//! CPU query-engine throughput: REFIMPL queries/sec for the refactored
+//! zero-allocation engine (SoA result + scratch reuse + dynamic chunked
+//! scheduling) vs an in-tree reimplementation of the pre-refactor
+//! baseline (static round-robin, per-query heap/Vec allocation, per-rank
+//! result buffers copied into the final container).
+//!
+//! Emits `BENCH_cpu_engine.json` (queries/sec per n, k on susy_like) so
+//! later PRs can track the perf trajectory of the hot path.
+//!
+//!   cargo bench --bench cpu_engine            # full sweep (n up to 50k)
+//!   HKNN_RANKS=8 cargo bench --bench cpu_engine
+
+use std::time::Instant;
+
+use hybrid_knn_join::core::Neighbor;
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::util::{json::Json, pool};
+
+/// The seed engine, reconstructed: static round-robin rank assignment and
+/// the allocating per-query path (`KdTree::knn`: fresh scratch + sorted
+/// `Vec<Neighbor>` per call), with per-rank `(query, neighbors)` buffers
+/// copied into the result container afterwards. Kept here (not in the
+/// library) purely as the measurement baseline.
+fn legacy_ref_impl(data: &Dataset, tree: &KdTree, k: usize, ranks: usize) -> KnnResult {
+    let queries: Vec<u32> = (0..data.len() as u32).collect();
+    let rank_results: Vec<Vec<(u32, Vec<Neighbor>)>> = pool::run_ranks(ranks, |r| {
+        let mut out = Vec::new();
+        let mut i = r;
+        while i < queries.len() {
+            let q = queries[i];
+            out.push((q, tree.knn(data, data.point(q as usize), k, q)));
+            i += ranks;
+        }
+        out
+    });
+    let mut result = KnnResult::new(data.len(), k);
+    for items in rank_results {
+        for (q, ns) in items {
+            result.set(q as usize, &ns);
+        }
+    }
+    result
+}
+
+fn qps(queries: usize, secs: f64) -> f64 {
+    queries as f64 / secs.max(1e-12)
+}
+
+fn main() {
+    let ranks: usize = std::env::var("HKNN_RANKS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let cases: &[(usize, usize)] = &[(10_000, 4), (25_000, 16), (50_000, 16)];
+
+    let mut rows = Vec::new();
+    println!("CPU engine throughput, susy_like, ranks={ranks}");
+    println!(
+        "{:>8} {:>4} {:>14} {:>14} {:>8}",
+        "n", "k", "refimpl q/s", "baseline q/s", "speedup"
+    );
+    for &(n, k) in cases {
+        let data = susy_like(n).generate(0xBE_5C);
+        let tree = KdTree::build(&data);
+
+        // warm-up touch so first-measurement page faults do not skew n=10k
+        let _ = ref_impl(&data, &tree, k, ranks);
+
+        let t0 = Instant::now();
+        let new_out = ref_impl(&data, &tree, k, ranks);
+        let t_new = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let old_res = legacy_ref_impl(&data, &tree, k, ranks);
+        let t_old = t1.elapsed().as_secs_f64();
+
+        // both engines must produce identical distance sets
+        for q in (0..data.len()).step_by(997) {
+            let (a, b) = (new_out.result.get(q), old_res.get(q));
+            assert_eq!(a.len(), b.len(), "q={q}");
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.dist2, y.dist2, "q={q}");
+            }
+        }
+
+        let (new_qps, old_qps) = (qps(n, t_new), qps(n, t_old));
+        println!(
+            "{:>8} {:>4} {:>14.0} {:>14.0} {:>7.2}x",
+            n,
+            k,
+            new_qps,
+            old_qps,
+            new_qps / old_qps.max(1e-12)
+        );
+        rows.push(Json::obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("k", Json::Num(k as f64)),
+            ("refimpl_qps", Json::Num(new_qps)),
+            ("baseline_qps", Json::Num(old_qps)),
+            ("refimpl_secs", Json::Num(t_new)),
+            ("baseline_secs", Json::Num(t_old)),
+            ("speedup", Json::Num(new_qps / old_qps.max(1e-12))),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("cpu_engine".into())),
+        ("dataset", Json::Str("susy_like".into())),
+        ("engine", Json::Str("REFIMPL (EXACT-ANN over all of D)".into())),
+        ("ranks", Json::Num(ranks as f64)),
+        (
+            "baseline",
+            Json::Str(
+                "pre-refactor: round-robin ranks, per-query heap/Vec alloc, \
+                 copy-merge result"
+                    .into(),
+            ),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_cpu_engine.json", doc.to_string() + "\n")
+        .expect("write BENCH_cpu_engine.json");
+    println!("wrote BENCH_cpu_engine.json");
+}

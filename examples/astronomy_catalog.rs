@@ -77,7 +77,7 @@ fn main() -> anyhow::Result<()> {
     // nearest-neighbor distance distribution (crowding measure)
     let mut nn: Vec<f64> = (0..catalog.len())
         .filter(|&q| !report.result.get(q).is_empty())
-        .map(|q| report.result.get(q)[0].dist2.sqrt())
+        .map(|q| report.result.get(q).at(0).dist2.sqrt())
         .collect();
     nn.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| nn[((nn.len() - 1) as f64 * p) as usize];

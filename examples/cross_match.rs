@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     );
     let mut match_d: Vec<f64> = (0..r.len())
         .filter(|&q| !rep.result.get(q).is_empty())
-        .map(|q| rep.result.get(q)[0].dist2.sqrt())
+        .map(|q| rep.result.get(q).at(0).dist2.sqrt())
         .collect();
     match_d.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| match_d[((match_d.len() - 1) as f64 * p) as usize];

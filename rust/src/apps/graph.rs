@@ -97,13 +97,13 @@ mod tests {
 
     fn two_cliques() -> KnnResult {
         // nodes 0-2 point at each other; 3-5 point at each other
-        let mut r = KnnResult::with_capacity(6);
-        r.set(0, vec![nb(1), nb(2)]);
-        r.set(1, vec![nb(0), nb(2)]);
-        r.set(2, vec![nb(0), nb(1)]);
-        r.set(3, vec![nb(4), nb(5)]);
-        r.set(4, vec![nb(3), nb(5)]);
-        r.set(5, vec![nb(3), nb(4)]);
+        let mut r = KnnResult::new(6, 2);
+        r.set(0, &[nb(1), nb(2)]);
+        r.set(1, &[nb(0), nb(2)]);
+        r.set(2, &[nb(0), nb(1)]);
+        r.set(3, &[nb(4), nb(5)]);
+        r.set(4, &[nb(3), nb(5)]);
+        r.set(5, &[nb(3), nb(4)]);
         r
     }
 
@@ -127,10 +127,10 @@ mod tests {
 
     #[test]
     fn mutual_graph_drops_one_way_edges() {
-        let mut r = KnnResult::with_capacity(3);
-        r.set(0, vec![nb(1)]);
-        r.set(1, vec![nb(2)]); // 1 does NOT list 0
-        r.set(2, vec![nb(1)]);
+        let mut r = KnnResult::new(3, 1);
+        r.set(0, &[nb(1)]);
+        r.set(1, &[nb(2)]); // 1 does NOT list 0
+        r.set(2, &[nb(1)]);
         let m = mutual_knn_graph(&r, 1);
         assert!(m.adj[0].is_empty(), "0->1 is one-way");
         assert_eq!(m.adj[1], vec![2]);
@@ -139,7 +139,7 @@ mod tests {
 
     #[test]
     fn singleton_nodes_are_own_components() {
-        let r = KnnResult::with_capacity(4); // no edges at all
+        let r = KnnResult::new(4, 3); // no edges at all
         let g = knn_graph(&r, 3);
         let (_, n) = connected_components(&g);
         assert_eq!(n, 4);

@@ -38,15 +38,15 @@ mod tests {
     use crate::core::{KnnResult, Neighbor};
 
     fn result_with_kth(dists: &[f64], k: usize) -> KnnResult {
-        let mut r = KnnResult::with_capacity(dists.len());
+        let mut r = KnnResult::new(dists.len(), k);
         for (q, &d) in dists.iter().enumerate() {
-            let ns = (0..k)
+            let ns: Vec<Neighbor> = (0..k)
                 .map(|j| Neighbor {
                     id: j as u32,
                     dist2: (d * (j + 1) as f64 / k as f64).powi(2),
                 })
                 .collect();
-            r.set(q, ns);
+            r.set(q, &ns);
         }
         r
     }
@@ -65,7 +65,7 @@ mod tests {
     #[test]
     fn skips_underfilled_queries() {
         let mut r = result_with_kth(&[3.0, 1.0], 2);
-        r.set(1, vec![Neighbor { id: 0, dist2: 1.0 }]); // only 1 neighbor
+        r.set(1, &[Neighbor { id: 0, dist2: 1.0 }]); // only 1 neighbor
         assert_eq!(k_distance_curve(&r, 2).len(), 1);
     }
 

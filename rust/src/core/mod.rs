@@ -3,7 +3,9 @@
 
 pub mod result;
 
-pub use result::{BoundedHeap, KnnResult, Neighbor};
+pub use result::{
+    BoundedHeap, KnnResult, Neighbor, Neighbors, NeighborsIter, SlotMut, SoaSlots,
+};
 
 /// An in-memory database of n-dimensional points, stored row-major f32
 /// (flat, cache-friendly; the same layout the runtime uploads to PJRT).
@@ -92,43 +94,61 @@ impl Dataset {
     }
 }
 
-/// Full squared Euclidean distance.
+/// Full squared Euclidean distance. The `chunks_exact(8)` body keeps one
+/// partial sum per lane, so the compiler may widen/multiply/accumulate all
+/// 8 lanes as vectors without reassociating a single serial accumulator
+/// (strict FP semantics forbid that rewrite on the naive loop).
 #[inline]
 pub fn sqdist(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    let mut lanes = [0f64; 8];
+    for (xa, xb) in ca.zip(cb) {
+        for j in 0..8 {
+            let d = (xa[j] - xb[j]) as f64;
+            lanes[j] += d * d;
+        }
+    }
     let mut acc = 0f64;
-    for i in 0..a.len() {
-        let d = (a[i] - b[i]) as f64;
+    for (&x, &y) in ra.iter().zip(rb) {
+        let d = (x - y) as f64;
         acc += d * d;
     }
-    acc
+    acc + lanes.iter().sum::<f64>()
 }
 
 /// SHORTC (paper Sec. IV-E): abort the accumulation as soon as the running
 /// total exceeds `cut` (squared distance threshold). Returns None when the
 /// true distance is certainly > cut.
+///
+/// The cut check runs once per 8-dim block: it amortises the branch like
+/// the paper's unrolled CUDA loop while keeping early exit effective in
+/// high dimensions, and the fixed-width `chunks_exact` block (bounds-check
+/// free, pairwise-reduced) autovectorizes.
 #[inline]
 pub fn sqdist_short_circuit(a: &[f32], b: &[f32], cut: f64) -> Option<f64> {
     debug_assert_eq!(a.len(), b.len());
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
     let mut acc = 0f64;
-    // check every 8 dims: amortises the branch like the paper's unrolled
-    // CUDA loop while keeping early exit effective in high dimensions.
-    let mut i = 0;
-    let n = a.len();
-    while i + 8 <= n {
-        for k in 0..8 {
-            let d = (a[i + k] - b[i + k]) as f64;
-            acc += d * d;
+    for (xa, xb) in ca.zip(cb) {
+        let mut lanes = [0f64; 8];
+        for j in 0..8 {
+            let d = (xa[j] - xb[j]) as f64;
+            lanes[j] = d * d;
         }
+        acc += ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
         if acc > cut {
             return None;
         }
-        i += 8;
     }
-    while i < n {
-        let d = (a[i] - b[i]) as f64;
+    for (&x, &y) in ra.iter().zip(rb) {
+        let d = (x - y) as f64;
         acc += d * d;
-        i += 1;
     }
     if acc > cut {
         None
@@ -194,20 +214,48 @@ mod tests {
         assert_eq!(sqdist(&[1.0], &[1.0]), 0.0);
     }
 
+    fn check_short_circuit_case(a: &[f32], b: &[f32], cut: f64) {
+        let full = sqdist(a, b);
+        match sqdist_short_circuit(a, b, cut) {
+            Some(d) => {
+                assert!((d - full).abs() < 1e-9);
+                assert!(full <= cut + 1e-12);
+            }
+            None => assert!(full > cut - 1e-9),
+        }
+    }
+
     #[test]
     fn short_circuit_agrees_with_full() {
         prop::cases(200, 0xC0FE, |rng| {
             let n = 1 + rng.below(40);
             let a: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
             let b: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
-            let full = sqdist(&a, &b);
             let cut = rng.range(0.0, 4.0 * n as f64);
-            match sqdist_short_circuit(&a, &b, cut) {
-                Some(d) => {
-                    assert!((d - full).abs() < 1e-9);
-                    assert!(full <= cut + 1e-12);
+            check_short_circuit_case(&a, &b, cut);
+        });
+    }
+
+    #[test]
+    fn short_circuit_remainder_lanes() {
+        // lengths 1..=9 cover every remainder width plus the first full
+        // 8-wide block with a 1-long tail
+        prop::cases(100, 0xC0DE, |rng| {
+            for n in 1..=9usize {
+                let a: Vec<f32> =
+                    (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+                let b: Vec<f32> =
+                    (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+                let full = sqdist(&a, &b);
+                // a generous cut must return the full distance...
+                check_short_circuit_case(&a, &b, full + 1.0);
+                assert!(sqdist_short_circuit(&a, &b, full + 1.0).is_some());
+                // ...a cut strictly below it must reject (remainder path
+                // must enforce the cut, not just the 8-wide blocks)
+                if full > 1e-9 {
+                    assert!(sqdist_short_circuit(&a, &b, full * 0.5 - 1e-12).is_none());
                 }
-                None => assert!(full > cut - 1e-9),
+                check_short_circuit_case(&a, &b, rng.range(0.0, 4.0 * n as f64));
             }
         });
     }

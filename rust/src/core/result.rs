@@ -1,8 +1,16 @@
 //! KNN result containers: per-query bounded neighbor heaps and the final
 //! join result (the paper's key/value result set, Sec. V-H, after
 //! `filterKeys`).
+//!
+//! `KnnResult` is a flat fixed-stride structure-of-arrays: one `u32` id
+//! lane and one `f64` dist² lane, `k` entries per query, plus a per-query
+//! count. Every engine (CPU ranks, the GPU merge path, the Q^Fail pass)
+//! writes its queries *in place* through disjoint `SoaSlots` writers, so
+//! the hybrid join performs no post-pass merge copies and the steady-state
+//! CPU query loop performs zero heap allocations (see DESIGN.md §3).
 
 use std::cmp::Ordering;
+use std::marker::PhantomData;
 
 /// One neighbor: point id + squared distance.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -31,6 +39,8 @@ impl Ord for Neighbor {
 
 /// Bounded max-heap of the K best (smallest-distance) neighbors seen so
 /// far. `push` is O(log K); the hot path of every engine in this repo.
+/// Reusable: `reset` rebounds K without dropping the allocation, and
+/// `drain_sorted_into` empties the heap in place, keeping its capacity.
 #[derive(Debug, Clone)]
 pub struct BoundedHeap {
     k: usize,
@@ -41,6 +51,16 @@ impl BoundedHeap {
     pub fn new(k: usize) -> Self {
         assert!(k > 0);
         BoundedHeap { k, heap: Vec::with_capacity(k) }
+    }
+
+    /// Re-arm for a new query with bound `k`, reusing the allocation.
+    /// Zero-alloc once the largest `k` seen has been reserved.
+    #[inline]
+    pub fn reset(&mut self, k: usize) {
+        assert!(k > 0);
+        self.k = k;
+        self.heap.clear();
+        self.heap.reserve(k);
     }
 
     #[inline]
@@ -110,8 +130,34 @@ impl BoundedHeap {
 
     /// Extract neighbors sorted ascending by distance.
     pub fn into_sorted(mut self) -> Vec<Neighbor> {
-        self.heap.sort();
+        self.heap.sort_unstable();
         self.heap
+    }
+
+    /// Drain sorted ascending into a fresh `Vec` (the heap's buffer moves
+    /// out, so the next `reset` re-allocates - convenience path only; the
+    /// zero-alloc emit path is `drain_sorted_into`).
+    pub fn drain_sorted(&mut self) -> Vec<Neighbor> {
+        self.heap.sort_unstable();
+        std::mem::take(&mut self.heap)
+    }
+
+    /// Drain sorted ascending into parallel SoA lanes; returns the number
+    /// of entries written. The allocation-free emit path of the engines.
+    pub fn drain_sorted_into(&mut self, ids: &mut [u32], dist2: &mut [f64]) -> usize {
+        self.heap.sort_unstable();
+        let n = self.heap.len();
+        assert!(
+            n <= ids.len() && n <= dist2.len(),
+            "result slot narrower than heap: {n} > {}",
+            ids.len().min(dist2.len())
+        );
+        for (i, nb) in self.heap.iter().enumerate() {
+            ids[i] = nb.id;
+            dist2[i] = nb.dist2;
+        }
+        self.heap.clear();
+        n
     }
 
     pub fn as_slice(&self) -> &[Neighbor] {
@@ -119,61 +165,280 @@ impl BoundedHeap {
     }
 }
 
-/// The KNN self-join result: for each query id, its (up to) K nearest
-/// neighbors sorted ascending by distance.
-#[derive(Debug, Clone, Default)]
+/// The KNN join result in flat SoA form: for each query id, up to K
+/// nearest neighbors sorted ascending by distance, stored at stride K in
+/// `ids`/`dist2` with the valid prefix length in `counts` (0 = unsolved).
+#[derive(Debug, Clone)]
 pub struct KnnResult {
-    /// neighbors[i] are the neighbors of query point i (empty = unsolved).
-    neighbors: Vec<Vec<Neighbor>>,
+    k: usize,
+    counts: Vec<u32>,
+    ids: Vec<u32>,
+    dist2: Vec<f64>,
 }
 
 impl KnnResult {
-    pub fn with_capacity(n: usize) -> Self {
-        KnnResult { neighbors: vec![Vec::new(); n] }
+    /// Result table for `n` queries, `k` neighbor slots per query.
+    pub fn new(n: usize, k: usize) -> Self {
+        assert!(k > 0, "k must be positive");
+        KnnResult {
+            k,
+            counts: vec![0; n],
+            ids: vec![0; n * k],
+            dist2: vec![0.0; n * k],
+        }
     }
 
+    /// Number of query slots.
     pub fn len(&self) -> usize {
-        self.neighbors.len()
+        self.counts.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.neighbors.is_empty()
+        self.counts.is_empty()
     }
 
-    pub fn set(&mut self, query: usize, mut ns: Vec<Neighbor>) {
-        ns.sort();
-        self.neighbors[query] = ns;
+    /// The per-query stride (neighbor capacity).
+    pub fn k(&self) -> usize {
+        self.k
     }
 
-    pub fn get(&self, query: usize) -> &[Neighbor] {
-        &self.neighbors[query]
+    /// Number of neighbors stored for `query`.
+    #[inline]
+    pub fn count(&self, query: usize) -> usize {
+        self.counts[query] as usize
+    }
+
+    /// The neighbors of `query`, ascending by distance.
+    #[inline]
+    pub fn get(&self, query: usize) -> Neighbors<'_> {
+        let c = self.counts[query] as usize;
+        let base = query * self.k;
+        Neighbors {
+            ids: &self.ids[base..base + c],
+            dist2: &self.dist2[base..base + c],
+        }
+    }
+
+    /// Drain `heap` (sorted) into the slot of `query`. Allocation-free.
+    pub fn write_heap(&mut self, query: usize, heap: &mut BoundedHeap) {
+        let base = query * self.k;
+        let n = heap.drain_sorted_into(
+            &mut self.ids[base..base + self.k],
+            &mut self.dist2[base..base + self.k],
+        );
+        self.counts[query] = n as u32;
+    }
+
+    /// Store up to k neighbors for `query` (sorted on the way in).
+    /// Convenience for tests and small consumers - allocates a scratch
+    /// copy for the sort; engines use `write_heap`/`SoaSlots` instead.
+    pub fn set(&mut self, query: usize, ns: &[Neighbor]) {
+        assert!(ns.len() <= self.k, "{} neighbors > stride {}", ns.len(), self.k);
+        let mut sorted = ns.to_vec();
+        sorted.sort_unstable();
+        let base = query * self.k;
+        for (i, nb) in sorted.iter().enumerate() {
+            self.ids[base + i] = nb.id;
+            self.dist2[base + i] = nb.dist2;
+        }
+        self.counts[query] = sorted.len() as u32;
     }
 
     /// Queries that found at least k neighbors.
     pub fn solved_count(&self, k: usize) -> usize {
-        self.neighbors.iter().filter(|ns| ns.len() >= k).count()
-    }
-
-    /// Merge another result into this one (other wins where it is solved).
-    pub fn merge_from(&mut self, other: KnnResult) {
-        assert_eq!(self.len(), other.len());
-        for (mine, theirs) in self.neighbors.iter_mut().zip(other.neighbors) {
-            if !theirs.is_empty() {
-                *mine = theirs;
-            }
-        }
+        self.counts.iter().filter(|&&c| c as usize >= k).count()
     }
 
     /// Total number of stored neighbor entries (result set size |R|).
     pub fn total_neighbors(&self) -> usize {
-        self.neighbors.iter().map(|n| n.len()).sum()
+        self.counts.iter().map(|&c| c as usize).sum()
+    }
+
+    /// Disjoint-slot writer factory for concurrent in-place result
+    /// emission. Holds the table mutably borrowed until dropped.
+    pub fn slots(&mut self) -> SoaSlots<'_> {
+        SoaSlots {
+            counts: self.counts.as_mut_ptr(),
+            ids: self.ids.as_mut_ptr(),
+            dist2: self.dist2.as_mut_ptr(),
+            n: self.counts.len(),
+            k: self.k,
+            _borrow: PhantomData,
+        }
+    }
+}
+
+/// Borrowed view of one query's neighbors (SoA lanes zipped on demand).
+#[derive(Debug, Clone, Copy)]
+pub struct Neighbors<'a> {
+    ids: &'a [u32],
+    dist2: &'a [f64],
+}
+
+impl<'a> Neighbors<'a> {
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// The i-th nearest neighbor, if present.
+    pub fn get(&self, i: usize) -> Option<Neighbor> {
+        if i < self.ids.len() {
+            Some(Neighbor { id: self.ids[i], dist2: self.dist2[i] })
+        } else {
+            None
+        }
+    }
+
+    /// The i-th nearest neighbor; panics when out of range.
+    pub fn at(&self, i: usize) -> Neighbor {
+        self.get(i).expect("neighbor index out of range")
+    }
+
+    pub fn first(&self) -> Option<Neighbor> {
+        self.get(0)
+    }
+
+    pub fn iter(&self) -> NeighborsIter<'a> {
+        NeighborsIter { ids: self.ids.iter(), dist2: self.dist2.iter() }
+    }
+
+    /// The raw id lane.
+    pub fn ids(&self) -> &'a [u32] {
+        self.ids
+    }
+
+    /// The raw dist² lane.
+    pub fn dist2s(&self) -> &'a [f64] {
+        self.dist2
+    }
+
+    pub fn to_vec(&self) -> Vec<Neighbor> {
+        self.iter().collect()
+    }
+}
+
+impl<'a> IntoIterator for Neighbors<'a> {
+    type Item = Neighbor;
+    type IntoIter = NeighborsIter<'a>;
+
+    fn into_iter(self) -> NeighborsIter<'a> {
+        NeighborsIter { ids: self.ids.iter(), dist2: self.dist2.iter() }
+    }
+}
+
+/// Iterator over a `Neighbors` view, yielding `Neighbor` by value.
+#[derive(Debug, Clone)]
+pub struct NeighborsIter<'a> {
+    ids: std::slice::Iter<'a, u32>,
+    dist2: std::slice::Iter<'a, f64>,
+}
+
+impl<'a> Iterator for NeighborsIter<'a> {
+    type Item = Neighbor;
+
+    fn next(&mut self) -> Option<Neighbor> {
+        match (self.ids.next(), self.dist2.next()) {
+            (Some(&id), Some(&d)) => Some(Neighbor { id, dist2: d }),
+            _ => None,
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        self.ids.size_hint()
+    }
+}
+
+impl ExactSizeIterator for NeighborsIter<'_> {}
+
+/// Hands out mutable SoA slot views for *disjoint* query ids so multiple
+/// engines / ranks write one result table concurrently with no locks and
+/// no merge pass. The only unsafe surface of the result layer; the
+/// soundness contract is concentrated in [`SoaSlots::slot`].
+pub struct SoaSlots<'a> {
+    counts: *mut u32,
+    ids: *mut u32,
+    dist2: *mut f64,
+    n: usize,
+    k: usize,
+    _borrow: PhantomData<&'a mut KnnResult>,
+}
+
+// SAFETY: the pointers stay valid for 'a (the table is mutably borrowed
+// for that long), and disjointness of concurrent `slot` calls is the
+// caller contract documented on `slot`.
+unsafe impl Send for SoaSlots<'_> {}
+unsafe impl Sync for SoaSlots<'_> {}
+
+impl SoaSlots<'_> {
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// The per-query stride (neighbor capacity).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Mutable view of one query's slot.
+    ///
+    /// # Safety
+    /// No two threads may hold a slot for the same `query` at the same
+    /// time. Callers satisfy this by construction: query lists are
+    /// duplicate-free and each query id is claimed by exactly one worker
+    /// (e.g. `util::pool::parallel_chunks*` hands each index range to one
+    /// thread), and sequential passes (GPU resolve, Q^Fail) only touch
+    /// queries no concurrent writer owns.
+    pub unsafe fn slot(&self, query: usize) -> SlotMut<'_> {
+        assert!(query < self.n, "slot {query} out of range {}", self.n);
+        let base = query * self.k;
+        SlotMut {
+            count: &mut *self.counts.add(query),
+            ids: std::slice::from_raw_parts_mut(self.ids.add(base), self.k),
+            dist2: std::slice::from_raw_parts_mut(self.dist2.add(base), self.k),
+        }
+    }
+}
+
+/// Exclusive writer for one query's SoA slot.
+pub struct SlotMut<'a> {
+    count: &'a mut u32,
+    ids: &'a mut [u32],
+    dist2: &'a mut [f64],
+}
+
+impl SlotMut<'_> {
+    /// Drain `heap` (sorted ascending) into this slot. Allocation-free.
+    pub fn write_heap(&mut self, heap: &mut BoundedHeap) {
+        *self.count = heap.drain_sorted_into(self.ids, self.dist2) as u32;
+    }
+
+    /// Store pre-sorted neighbors verbatim.
+    pub fn write_sorted(&mut self, ns: &[Neighbor]) {
+        assert!(ns.len() <= self.ids.len());
+        for (i, nb) in ns.iter().enumerate() {
+            self.ids[i] = nb.id;
+            self.dist2[i] = nb.dist2;
+        }
+        *self.count = ns.len() as u32;
+    }
+
+    pub fn clear(&mut self) {
+        *self.count = 0;
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::prop;
+    use crate::util::{pool, prop};
 
     fn nb(id: u32, d: f64) -> Neighbor {
         Neighbor { id, dist2: d }
@@ -226,16 +491,138 @@ mod tests {
     }
 
     #[test]
-    fn result_merge_and_counts() {
-        let mut a = KnnResult::with_capacity(3);
-        a.set(0, vec![nb(1, 1.0)]);
-        let mut b = KnnResult::with_capacity(3);
-        b.set(1, vec![nb(2, 2.0), nb(0, 0.5)]);
-        a.merge_from(b);
-        assert_eq!(a.get(0).len(), 1);
-        assert_eq!(a.get(1)[0].id, 0, "sorted ascending");
-        assert_eq!(a.solved_count(1), 2);
-        assert_eq!(a.solved_count(2), 1);
-        assert_eq!(a.total_neighbors(), 3);
+    fn heap_reset_reuses_and_rebounds() {
+        let mut h = BoundedHeap::new(2);
+        h.push(nb(0, 1.0));
+        h.push(nb(1, 2.0));
+        h.reset(4);
+        assert!(h.is_empty());
+        assert_eq!(h.bound(), f64::INFINITY);
+        for i in 0..6 {
+            h.push(nb(i, i as f64));
+        }
+        assert_eq!(h.len(), 4);
+        assert_eq!(h.bound(), 3.0);
+    }
+
+    #[test]
+    fn heap_drain_into_lanes_sorted() {
+        let mut h = BoundedHeap::new(3);
+        for (id, d) in [(5, 3.0), (6, 1.0), (7, 2.0)] {
+            h.push(nb(id, d));
+        }
+        let mut ids = [0u32; 3];
+        let mut d2 = [0f64; 3];
+        let n = h.drain_sorted_into(&mut ids, &mut d2);
+        assert_eq!(n, 3);
+        assert_eq!(ids, [6, 7, 5]);
+        assert_eq!(d2, [1.0, 2.0, 3.0]);
+        assert!(h.is_empty(), "drained heap is reusable");
+    }
+
+    #[test]
+    fn result_soa_set_get_counts() {
+        let mut r = KnnResult::new(3, 2);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.k(), 2);
+        r.set(0, &[nb(1, 1.0)]);
+        r.set(1, &[nb(2, 2.0), nb(0, 0.5)]); // unsorted in, sorted out
+        assert_eq!(r.get(0).len(), 1);
+        assert_eq!(r.get(1).at(0).id, 0, "sorted ascending");
+        assert_eq!(r.get(1).at(1).id, 2);
+        assert!(r.get(2).is_empty());
+        assert_eq!(r.count(1), 2);
+        assert_eq!(r.solved_count(1), 2);
+        assert_eq!(r.solved_count(2), 1);
+        assert_eq!(r.total_neighbors(), 3);
+        // overwrite in place (the Q^Fail reassignment pattern)
+        r.set(0, &[nb(9, 0.25), nb(8, 0.75)]);
+        assert_eq!(r.get(0).ids(), &[9, 8]);
+        assert_eq!(r.get(0).dist2s(), &[0.25, 0.75]);
+    }
+
+    #[test]
+    fn result_view_iteration() {
+        let mut r = KnnResult::new(1, 3);
+        r.set(0, &[nb(3, 3.0), nb(1, 1.0), nb(2, 2.0)]);
+        let v = r.get(0);
+        let ids: Vec<u32> = v.iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+        assert_eq!(v.first().unwrap().dist2, 1.0);
+        assert_eq!(v.get(5), None);
+        let mut by_for = Vec::new();
+        for n in v {
+            by_for.push(n.dist2);
+        }
+        assert_eq!(by_for, vec![1.0, 2.0, 3.0]);
+        assert_eq!(v.to_vec().len(), 3);
+    }
+
+    #[test]
+    fn result_write_heap_in_place() {
+        let mut r = KnnResult::new(2, 4);
+        let mut h = BoundedHeap::new(4);
+        for (id, d) in [(3, 0.3), (1, 0.1), (2, 0.2)] {
+            h.push(nb(id, d));
+        }
+        r.write_heap(1, &mut h);
+        assert_eq!(r.get(1).ids(), &[1, 2, 3]);
+        assert!(r.get(0).is_empty());
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn slots_parallel_disjoint_writes() {
+        // the concurrency pattern of the hybrid join: many workers pull
+        // disjoint query chunks off an atomic cursor and write in place
+        let (n, k) = (1000, 4);
+        let mut r = KnnResult::new(n, k);
+        let slots = r.slots();
+        pool::parallel_chunks(n, 4, 37, |range| {
+            let mut h = BoundedHeap::new(k);
+            for q in range {
+                for j in 0..k {
+                    h.push(nb((q * 10 + j) as u32, j as f64));
+                }
+                // SAFETY: the cursor hands each q to exactly one worker
+                unsafe { slots.slot(q) }.write_heap(&mut h);
+            }
+        });
+        drop(slots);
+        for q in 0..n {
+            let v = r.get(q);
+            assert_eq!(v.len(), k);
+            assert_eq!(v.at(0).id, (q * 10) as u32);
+            for w in v.dist2s().windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+        assert_eq!(r.total_neighbors(), n * k);
+    }
+
+    #[test]
+    fn slot_write_sorted_and_clear() {
+        let mut r = KnnResult::new(2, 2);
+        {
+            let slots = r.slots();
+            // SAFETY: single-threaded use
+            let mut s = unsafe { slots.slot(0) };
+            s.write_sorted(&[nb(4, 0.5)]);
+        }
+        assert_eq!(r.get(0).at(0).id, 4);
+        {
+            let slots = r.slots();
+            let mut s = unsafe { slots.slot(0) };
+            s.clear();
+        }
+        assert!(r.get(0).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn slot_index_checked() {
+        let mut r = KnnResult::new(2, 2);
+        let slots = r.slots();
+        let _ = unsafe { slots.slot(2) };
     }
 }

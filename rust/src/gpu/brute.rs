@@ -63,11 +63,10 @@ pub fn brute_join_linear(
             )?;
             kernel_time += t0.elapsed().as_secs_f64();
             n_tiles += 1;
-            if let Some(k) = collect_k {
+            if collect_k.is_some() {
                 let d2 = Engine::to_f32(&out[0])?;
                 for (r, &q) in q_chunk.iter().enumerate() {
                     let heap = &mut heaps[qi * qt + r];
-                    let _ = k;
                     let row = &d2[r * ct..r * ct + c_chunk.len()];
                     for (c, &dd) in row.iter().enumerate() {
                         let id = c_chunk[c];
@@ -80,10 +79,10 @@ pub fn brute_join_linear(
         }
     }
 
-    let result = collect_k.map(|_| {
-        let mut res = KnnResult::with_capacity(data.len());
+    let result = collect_k.map(|k| {
+        let mut res = KnnResult::new(data.len(), k);
         for (i, &q) in queries.iter().enumerate() {
-            res.set(q as usize, heaps[i].clone().into_sorted());
+            res.write_heap(q as usize, &mut heaps[i]);
         }
         res
     });

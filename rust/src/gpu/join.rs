@@ -24,7 +24,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::device::{DeviceEstimate, DeviceModel, ThreadAssign};
-use crate::core::{BoundedHeap, Dataset, KnnResult, Neighbor};
+use crate::core::{BoundedHeap, Dataset, KnnResult, Neighbor, SoaSlots};
 use crate::index::GridIndex;
 use crate::runtime::{tiles, tiles::TileClass, Engine};
 
@@ -69,7 +69,7 @@ impl GpuJoinParams {
     }
 }
 
-/// Outcome of a GPU-JOIN run.
+/// Outcome of a GPU-JOIN run that owns its result table.
 #[derive(Debug)]
 pub struct GpuJoinOutcome {
     /// exact results for solved queries (others left empty)
@@ -90,6 +90,22 @@ pub struct GpuJoinOutcome {
     /// realised in-ε result pairs
     pub result_pairs: u64,
     /// max pairs observed in one batch (must stay <= buffer_pairs)
+    pub max_batch_pairs: u64,
+}
+
+/// Accounting of an in-place GPU-JOIN (`gpu_join_rs_into`); solved-query
+/// results live in the caller's `KnnResult` slots.
+#[derive(Debug)]
+pub struct GpuJoinStats {
+    /// Q^Fail - queries with < K neighbors within ε (slots untouched)
+    pub failed: Vec<u32>,
+    pub solved: usize,
+    pub kernel_time: f64,
+    pub total_time: f64,
+    pub device_model: DeviceEstimate,
+    pub batches: usize,
+    pub estimated_pairs: u64,
+    pub result_pairs: u64,
     pub max_batch_pairs: u64,
 }
 
@@ -142,7 +158,40 @@ pub fn gpu_join_rs(
     queries: &[u32],
     params: &GpuJoinParams,
 ) -> Result<GpuJoinOutcome> {
+    let mut result = KnnResult::new(r_data.len(), params.k);
+    let slots = result.slots();
+    let s = gpu_join_rs_into(engine, r_data, data, grid, queries, params, &slots)?;
+    drop(slots);
+    Ok(GpuJoinOutcome {
+        result,
+        failed: s.failed,
+        solved: s.solved,
+        kernel_time: s.kernel_time,
+        total_time: s.total_time,
+        device_model: s.device_model,
+        batches: s.batches,
+        estimated_pairs: s.estimated_pairs,
+        result_pairs: s.result_pairs,
+        max_batch_pairs: s.max_batch_pairs,
+    })
+}
+
+/// GPU-JOIN writing solved queries *in place* through `slots` (the hybrid
+/// join's no-merge path). Failed queries' slots are left untouched for the
+/// Q^Fail CPU pass. The caller must not concurrently write the slots of
+/// `queries` elsewhere (see `SoaSlots::slot`); this function itself
+/// resolves results on the calling thread only.
+pub fn gpu_join_rs_into(
+    engine: &Engine,
+    r_data: &Dataset,
+    data: &Dataset,
+    grid: &GridIndex,
+    queries: &[u32],
+    params: &GpuJoinParams,
+    slots: &SoaSlots<'_>,
+) -> Result<GpuJoinStats> {
     let t_start = Instant::now();
+    assert!(params.k <= slots.k(), "result stride {} < k {}", slots.k(), params.k);
     // Two tile plans: thin cells (few queries) run on the small tile to
     // cut padding waste ~4x; dense cells use the large tile. This is the
     // tile-world analogue of the paper's task-granularity tuning.
@@ -243,13 +292,15 @@ pub fn gpu_join_rs(
     }
 
     // ---- resolve solved vs failed ----
-    let mut result = KnnResult::with_capacity(r_data.len());
     let mut failed = Vec::new();
     let mut solved = 0usize;
     for &q in queries {
-        match state.heaps.remove(&q) {
+        match state.heaps.get_mut(&q) {
             Some(h) if h.len() >= params.k => {
-                result.set(q as usize, h.into_sorted());
+                // SAFETY: `queries` is duplicate-free and only this thread
+                // writes GPU-side slots (caller keeps concurrent writers
+                // off these ids).
+                unsafe { slots.slot(q as usize) }.write_heap(h);
                 solved += 1;
             }
             _ => failed.push(q),
@@ -257,8 +308,7 @@ pub fn gpu_join_rs(
     }
     failed.sort_unstable();
 
-    Ok(GpuJoinOutcome {
-        result,
+    Ok(GpuJoinStats {
         failed,
         solved,
         kernel_time,

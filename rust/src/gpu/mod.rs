@@ -8,4 +8,7 @@ pub mod join;
 
 pub use brute::{brute_join_linear, BruteOutcome};
 pub use device::{DeviceEstimate, DeviceModel, ThreadAssign};
-pub use join::{gpu_join, GpuJoinOutcome, GpuJoinParams};
+pub use join::{
+    gpu_join, gpu_join_rs, gpu_join_rs_into, GpuJoinOutcome, GpuJoinParams,
+    GpuJoinStats,
+};

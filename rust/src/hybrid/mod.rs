@@ -8,7 +8,9 @@
 //! 6. concurrently: GPU-JOIN over Q^GPU (this thread owns the PJRT
 //!    client) and EXACT-ANN ranks over Q^CPU                [timed]
 //! 7. Q^Fail reassigned to EXACT-ANN (Sec. V-E)             [timed]
-//! 8. merge results; record T1/T2 and ρ^Model (Eq. 6)
+//! 8. record T1/T2 and ρ^Model (Eq. 6). There is no merge step: every
+//!    pass writes its disjoint query slots of one SoA `KnnResult` in
+//!    place (see core::result::SoaSlots and DESIGN.md §3).
 //!
 //! *The paper's response-time measurements exclude dataset loading and
 //! index construction (Sec. VI-B); `HybridReport::response_time` follows
@@ -201,7 +203,11 @@ impl HybridKnnJoin {
         }
         let (q_gpu, q_cpu) = (splitres.q_gpu.clone(), splitres.q_cpu.clone());
 
-        // 6.+7. concurrent GPU-JOIN + EXACT-ANN, then Q^Fail
+        // 6.+7. concurrent GPU-JOIN + EXACT-ANN, then Q^Fail. All three
+        // passes write disjoint query ids of ONE SoA result table through
+        // `slots` - no per-engine result containers and no merge pass
+        // (Q^GPU and Q^CPU partition the queries; Q^Fail slots were left
+        // untouched by the GPU and are rewritten by the CPU afterwards).
         let gpu_params = GpuJoinParams {
             k: params.k,
             eps: eps_sel.eps,
@@ -213,6 +219,8 @@ impl HybridKnnJoin {
             estimator_frac: 0.01,
             exclude_self: self_join,
         };
+        let mut result = KnnResult::new(r_data.len(), params.k);
+        let slots = result.slots();
 
         // Scheduling: with >1 hardware threads the GPU master and the CPU
         // ranks run concurrently (Alg. 1); on a single-core host the
@@ -224,11 +232,14 @@ impl HybridKnnJoin {
             .unwrap_or(1);
         let t_main = std::time::Instant::now();
         let run_gpu = || {
-            gpu::join::gpu_join_rs(engine, r_data, data, &grid, &q_gpu, &gpu_params)
+            gpu::join::gpu_join_rs_into(
+                engine, r_data, data, &grid, &q_gpu, &gpu_params, &slots,
+            )
         };
         let run_cpu = || {
-            cpu::exact_ann_rs(
-                data, &tree, r_data, &q_cpu, params.k, params.cpu_ranks, self_join,
+            cpu::exact_ann_rs_into(
+                data, &tree, r_data, &q_cpu, params.k, params.cpu_ranks,
+                self_join, &slots,
             )
         };
         let (gpu_out, cpu_out) = if hw > 1 {
@@ -248,22 +259,19 @@ impl HybridKnnJoin {
             .as_ref()
             .map(|g| g.failed.clone())
             .unwrap_or_default();
-        let fail_out = if failed.is_empty() {
-            None
-        } else {
-            Some(timers.time("q_fail_exact_ann", || {
-                cpu::exact_ann_rs(
+        if !failed.is_empty() {
+            timers.time("q_fail_exact_ann", || {
+                cpu::exact_ann_rs_into(
                     data, &tree, r_data, &failed, params.k, params.cpu_ranks,
-                    self_join,
+                    self_join, &slots,
                 )
-            }))
-        };
+            });
+        }
+        drop(slots); // all writers done; `result` is complete in place
         let main_time = t_main.elapsed().as_secs_f64();
         timers.add("join_main", main_time);
 
-        // 8. merge + bookkeeping
-        let mut result = KnnResult::with_capacity(r_data.len());
-        result.merge_from(cpu_out.result);
+        // 8. bookkeeping (no merge - see above)
         let (mut gpu_kernel_time, mut gpu_batches, mut gpu_pairs) = (0.0, 0usize, 0u64);
         let (mut device_model_seconds, mut solved_on_gpu, mut gpu_total) =
             (0.0, 0usize, 0.0);
@@ -274,10 +282,6 @@ impl HybridKnnJoin {
             device_model_seconds = g.device_model.seconds;
             solved_on_gpu = g.solved;
             gpu_total = g.total_time;
-            result.merge_from(g.result);
-        }
-        if let Some(f) = fail_out {
-            result.merge_from(f.result);
         }
 
         // T1: mean per-query EXACT-ANN time (Sec. VI-E2). On an

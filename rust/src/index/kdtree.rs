@@ -5,6 +5,13 @@
 //! kd-tree construction) and a branch-and-bound descent with a bounded
 //! max-heap, pruning subtrees whose bounding box is farther than the
 //! current K-th best distance. Exact for any K.
+//!
+//! The query hot path is `knn_into`: an *iterative* traversal over a
+//! reusable [`KnnScratch`] (bounded heap + explicit far-subtree stack)
+//! that performs zero heap allocations in steady state. Construction is
+//! allocation-lean: one bounding-box scan at the root, with shrunk cell
+//! boxes passed down (and restored) in place of per-node rescans -
+//! sliding-midpoint over cell boxes, exactly as ANN does it.
 
 use crate::core::{sqdist, sqdist_short_circuit, BoundedHeap, Dataset, Neighbor};
 
@@ -25,6 +32,39 @@ enum Node {
     },
 }
 
+/// Reusable per-rank search state: the bounded result heap plus the
+/// explicit stack of deferred far subtrees. After the first few queries
+/// have sized both buffers, `knn_into` allocates nothing.
+#[derive(Debug)]
+pub struct KnnScratch {
+    heap: BoundedHeap,
+    /// (node index, min possible dist² of its box to the query)
+    stack: Vec<(u32, f64)>,
+}
+
+impl KnnScratch {
+    pub fn new() -> Self {
+        KnnScratch { heap: BoundedHeap::new(1), stack: Vec::with_capacity(64) }
+    }
+
+    /// The result heap of the last `knn_into` call (unsorted).
+    pub fn heap_mut(&mut self) -> &mut BoundedHeap {
+        &mut self.heap
+    }
+
+    /// Drain the last result sorted ascending (allocates the output Vec;
+    /// the zero-alloc path drains the heap into a SoA slot instead).
+    pub fn take_sorted(&mut self) -> Vec<Neighbor> {
+        self.heap.drain_sorted()
+    }
+}
+
+impl Default for KnnScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Bucket kd-tree over a dataset (borrows nothing; stores point ids).
 #[derive(Debug)]
 pub struct KdTree {
@@ -32,6 +72,9 @@ pub struct KdTree {
     ids: Vec<u32>,
     root: u32,
     dims: usize,
+    /// position of each point id in `ids` - the leaf-major spatial order
+    /// used to block self-join queries for cache locality.
+    leaf_rank: Vec<u32>,
 }
 
 impl KdTree {
@@ -44,10 +87,46 @@ impl KdTree {
             nodes.push(Node::Leaf { start: 0, end: 0 });
             0
         } else {
-            let n = ids.len();
-            Self::build_rec(d, &mut nodes, &mut ids, 0, n)
+            // the only full bounding-box scan; children receive shrunk
+            // copies of this cell box via in-place mutation + restore
+            let mut mins = vec![f32::INFINITY; dims];
+            let mut maxs = vec![f32::NEG_INFINITY; dims];
+            for i in 0..d.len() {
+                let p = d.point(i);
+                for j in 0..dims {
+                    if p[j] < mins[j] {
+                        mins[j] = p[j];
+                    }
+                    if p[j] > maxs[j] {
+                        maxs[j] = p[j];
+                    }
+                }
+            }
+            Self::build_rec(d, &mut nodes, &mut ids, 0, &mut mins, &mut maxs)
         };
-        KdTree { nodes, ids, root, dims }
+        let mut leaf_rank = vec![0u32; d.len()];
+        for (pos, &id) in ids.iter().enumerate() {
+            leaf_rank[id as usize] = pos as u32;
+        }
+        KdTree { nodes, ids, root, dims, leaf_rank }
+    }
+
+    /// Count of ids with coordinate satisfying `pred`, partitioned to the
+    /// front of `ids`.
+    fn partition_ids<F: Fn(f32) -> bool>(
+        d: &Dataset,
+        ids: &mut [u32],
+        dim: usize,
+        pred: F,
+    ) -> usize {
+        let mut lt = 0usize;
+        for i in 0..ids.len() {
+            if pred(d.coord(ids[i] as usize, dim)) {
+                ids.swap(lt, i);
+                lt += 1;
+            }
+        }
+        lt
     }
 
     fn build_rec(
@@ -55,7 +134,8 @@ impl KdTree {
         nodes: &mut Vec<Node>,
         ids: &mut [u32],
         offset: usize,
-        _len_hint: usize,
+        mins: &mut [f32],
+        maxs: &mut [f32],
     ) -> u32 {
         let len = ids.len();
         if len <= LEAF_SIZE {
@@ -66,21 +146,9 @@ impl KdTree {
             return (nodes.len() - 1) as u32;
         }
 
-        // sliding-midpoint: split the widest dimension at the box midpoint,
-        // sliding to the nearest point if one side would be empty.
-        let mut mins = vec![f32::INFINITY; d.dims()];
-        let mut maxs = vec![f32::NEG_INFINITY; d.dims()];
-        for &i in ids.iter() {
-            let p = d.point(i as usize);
-            for j in 0..d.dims() {
-                if p[j] < mins[j] {
-                    mins[j] = p[j];
-                }
-                if p[j] > maxs[j] {
-                    maxs[j] = p[j];
-                }
-            }
-        }
+        // sliding midpoint over the cell box: split the widest cell side
+        // at its midpoint, sliding to the nearest point coordinate if one
+        // side would come up empty (ANN's default rule).
         let dim = (0..d.dims())
             .max_by(|&a, &b| {
                 (maxs[a] - mins[a])
@@ -88,9 +156,9 @@ impl KdTree {
                     .unwrap()
             })
             .unwrap();
-        if maxs[dim] <= mins[dim] {
-            // all points identical in every dim: make a (possibly oversized)
-            // leaf to guarantee progress
+        if !(maxs[dim] - mins[dim] > 0.0) {
+            // degenerate cell box (all remaining spread is zero): make a
+            // (possibly oversized) leaf to guarantee progress
             nodes.push(Node::Leaf {
                 start: offset as u32,
                 end: (offset + len) as u32,
@@ -99,17 +167,12 @@ impl KdTree {
         }
         let mut split = 0.5 * (mins[dim] + maxs[dim]);
 
-        // partition around `split`
-        let mut lt = 0usize;
-        for i in 0..len {
-            if d.coord(ids[i] as usize, dim) < split {
-                ids.swap(lt, i);
-                lt += 1;
-            }
-        }
-        // slide if empty side
+        let mut lt = Self::partition_ids(d, ids, dim, |x| x < split);
+        // Weak separation invariant (what exact search relies on): every
+        // left point has coord <= split, every right point coord >= split.
         if lt == 0 {
-            // slide split up to the minimum coordinate > split
+            // left side empty: slide down to the minimum point coordinate;
+            // points equal to it go left
             let mut best = f32::INFINITY;
             for &i in ids.iter() {
                 let x = d.coord(i as usize, dim);
@@ -117,18 +180,16 @@ impl KdTree {
                     best = x;
                 }
             }
-            split = best + (maxs[dim] - mins[dim]) * 1e-6 + f32::EPSILON;
-            lt = 0;
-            for i in 0..len {
-                if d.coord(ids[i] as usize, dim) < split {
-                    ids.swap(lt, i);
-                    lt += 1;
-                }
-            }
-            if lt == 0 {
-                lt = 1; // degenerate duplicates; force progress
+            split = best;
+            lt = Self::partition_ids(d, ids, dim, |x| x <= split);
+            if lt == len {
+                // every point identical in this dim: any cut keeps weak
+                // separation because both sides sit exactly on the plane
+                lt = len / 2;
             }
         } else if lt == len {
+            // right side empty: slide up to the maximum point coordinate;
+            // points equal to it go right
             let mut best = f32::NEG_INFINITY;
             for &i in ids.iter() {
                 let x = d.coord(i as usize, dim);
@@ -137,23 +198,25 @@ impl KdTree {
                 }
             }
             split = best;
-            lt = 0;
-            for i in 0..len {
-                if d.coord(ids[i] as usize, dim) < split {
-                    ids.swap(lt, i);
-                    lt += 1;
-                }
-            }
-            if lt == len {
-                lt = len - 1;
+            lt = Self::partition_ids(d, ids, dim, |x| x < split);
+            if lt == 0 {
+                lt = len / 2; // all identical in this dim (see above)
             }
         }
+        debug_assert!(lt > 0 && lt < len, "split must make progress");
 
         let (left_ids, right_ids) = ids.split_at_mut(lt);
         let placeholder = nodes.len();
         nodes.push(Node::Leaf { start: 0, end: 0 }); // reserve slot
-        let left = Self::build_rec(d, nodes, left_ids, offset, lt);
-        let right = Self::build_rec(d, nodes, right_ids, offset + lt, len - lt);
+        let saved_max = maxs[dim];
+        maxs[dim] = split;
+        let left = Self::build_rec(d, nodes, left_ids, offset, mins, maxs);
+        maxs[dim] = saved_max;
+        let saved_min = mins[dim];
+        mins[dim] = split;
+        let right =
+            Self::build_rec(d, nodes, right_ids, offset + lt, mins, maxs);
+        mins[dim] = saved_min;
         nodes[placeholder] = Node::Split {
             dim: dim as u16,
             value: split,
@@ -165,6 +228,8 @@ impl KdTree {
 
     /// Exact K nearest neighbors of `query`, excluding `exclude_id`
     /// (pass u32::MAX to keep all). Returns ascending by distance.
+    /// Convenience wrapper over `knn_into` (allocates a fresh scratch);
+    /// batch callers reuse a [`KnnScratch`] instead.
     pub fn knn(
         &self,
         d: &Dataset,
@@ -172,66 +237,109 @@ impl KdTree {
         k: usize,
         exclude_id: u32,
     ) -> Vec<Neighbor> {
-        assert_eq!(query.len(), self.dims);
-        if self.ids.is_empty() {
-            return Vec::new();
-        }
-        let mut heap = BoundedHeap::new(k);
-        self.search(d, self.root, query, exclude_id, &mut heap, 0.0);
-        heap.into_sorted()
+        let mut scratch = KnnScratch::new();
+        self.knn_into(d, query, k, exclude_id, &mut scratch);
+        scratch.take_sorted()
     }
 
-    fn search(
+    /// Exact K nearest neighbors into `scratch.heap_mut()` (unsorted;
+    /// drain via `BoundedHeap::drain_sorted_into` or a SoA slot). The
+    /// steady-state zero-allocation query path: iterative branch-and-bound
+    /// over the reusable explicit stack, identical pruning (and results)
+    /// to the recursive formulation.
+    pub fn knn_into(
         &self,
         d: &Dataset,
-        node: u32,
+        query: &[f32],
+        k: usize,
+        exclude_id: u32,
+        scratch: &mut KnnScratch,
+    ) {
+        assert_eq!(query.len(), self.dims);
+        scratch.heap.reset(k);
+        scratch.stack.clear();
+        if self.ids.is_empty() {
+            return;
+        }
+        let mut node = self.root;
+        let mut min_d2 = 0.0f64;
+        loop {
+            // a deferred subtree may have been beaten by a bound that
+            // tightened after it was pushed
+            if min_d2 <= scratch.heap.bound() {
+                match &self.nodes[node as usize] {
+                    Node::Leaf { start, end } => {
+                        self.scan_leaf(
+                            d, *start, *end, query, exclude_id, &mut scratch.heap,
+                        );
+                    }
+                    Node::Split { dim, value, left, right } => {
+                        let diff = (query[*dim as usize] - value) as f64;
+                        let (near, far) = if diff < 0.0 {
+                            (*left, *right)
+                        } else {
+                            (*right, *left)
+                        };
+                        // crossing the split plane costs at least diff^2
+                        let cross = min_d2.max(diff * diff);
+                        if cross <= scratch.heap.bound() {
+                            scratch.stack.push((far, cross));
+                        }
+                        node = near;
+                        continue; // descend the near side first
+                    }
+                }
+            }
+            match scratch.stack.pop() {
+                Some((n, d2)) => {
+                    node = n;
+                    min_d2 = d2;
+                }
+                None => break,
+            }
+        }
+    }
+
+    #[inline]
+    fn scan_leaf(
+        &self,
+        d: &Dataset,
+        start: u32,
+        end: u32,
         q: &[f32],
         exclude: u32,
         heap: &mut BoundedHeap,
-        min_dist2: f64,
     ) {
-        if min_dist2 > heap.bound() {
-            return;
-        }
-        match &self.nodes[node as usize] {
-            Node::Leaf { start, end } => {
-                for &i in &self.ids[*start as usize..*end as usize] {
-                    if i == exclude {
-                        continue;
-                    }
-                    // SHORTC (paper Sec. IV-E) applied to the CPU side:
-                    // abandon the accumulation once it exceeds the current
-                    // k-th best - the dominant win in high dimensions.
-                    let bound = heap.bound();
-                    if bound.is_finite() {
-                        if let Some(dd) =
-                            sqdist_short_circuit(q, d.point(i as usize), bound)
-                        {
-                            if dd < bound {
-                                heap.push(Neighbor { id: i, dist2: dd });
-                            }
-                        }
-                    } else {
-                        let dd = sqdist(q, d.point(i as usize));
+        for &i in &self.ids[start as usize..end as usize] {
+            if i == exclude {
+                continue;
+            }
+            // SHORTC (paper Sec. IV-E) applied to the CPU side: abandon
+            // the accumulation once it exceeds the current k-th best -
+            // the dominant win in high dimensions.
+            let bound = heap.bound();
+            if bound.is_finite() {
+                if let Some(dd) =
+                    sqdist_short_circuit(q, d.point(i as usize), bound)
+                {
+                    if dd < bound {
                         heap.push(Neighbor { id: i, dist2: dd });
                     }
                 }
-            }
-            Node::Split { dim, value, left, right } => {
-                let diff = (q[*dim as usize] - value) as f64;
-                let (near, far) = if diff < 0.0 {
-                    (*left, *right)
-                } else {
-                    (*right, *left)
-                };
-                self.search(d, near, q, exclude, heap, min_dist2);
-                // crossing the split plane costs at least diff^2 more
-                let cross = min_dist2.max(diff * diff);
-                if cross <= heap.bound() {
-                    self.search(d, far, q, exclude, heap, cross);
-                }
+            } else {
+                let dd = sqdist(q, d.point(i as usize));
+                heap.push(Neighbor { id: i, dist2: dd });
             }
         }
+    }
+
+    /// Position of point `id` in the tree's leaf-major id order. Sorting a
+    /// self-join query list by this key visits queries leaf block by leaf
+    /// block, so consecutive queries traverse near-identical node paths
+    /// and touch the same candidate cache lines.
+    #[inline]
+    pub fn leaf_order_key(&self, id: u32) -> u32 {
+        self.leaf_rank[id as usize]
     }
 
     pub fn len(&self) -> usize {
@@ -246,6 +354,7 @@ impl KdTree {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::KnnResult;
     use crate::data::synthetic::{chist_like, susy_like};
     use crate::util::{prop, rng::Rng};
 
@@ -288,6 +397,83 @@ mod tests {
         });
     }
 
+    /// The tentpole invariant: the zero-allocation path (`knn_into` over a
+    /// reused scratch, drained into a SoA `KnnResult`) is result-identical
+    /// to brute force across self-join vs bipartite, k > n, duplicate
+    /// datasets, sort order, and self-exclusion.
+    #[test]
+    fn knn_into_soa_matches_bruteforce_property() {
+        prop::cases(30, 0x50A0, |rng| {
+            let dims = 1 + rng.below(10);
+            let n = 1 + rng.below(200);
+            let duplicates = rng.below(4) == 0;
+            let d = if duplicates {
+                // few distinct locations, heavy duplication
+                let spots = random_dataset(rng, 1 + rng.below(4), dims);
+                let rows: Vec<Vec<f32>> = (0..n)
+                    .map(|_| spots.point(rng.below(spots.len())).to_vec())
+                    .collect();
+                Dataset::from_rows(&rows)
+            } else {
+                random_dataset(rng, n, dims)
+            };
+            let bipartite = rng.below(2) == 1;
+            let r_data = if bipartite {
+                random_dataset(rng, 1 + rng.below(50), dims)
+            } else {
+                d.clone()
+            };
+            let k = 1 + rng.below(2 * n.min(12)); // sometimes k > n
+            let t = KdTree::build(&d);
+
+            let mut res = KnnResult::new(r_data.len(), k);
+            let mut scratch = KnnScratch::new();
+            for q in 0..r_data.len() {
+                let excl = if bipartite { u32::MAX } else { q as u32 };
+                t.knn_into(&d, r_data.point(q), k, excl, &mut scratch);
+                res.write_heap(q, scratch.heap_mut());
+            }
+
+            for q in 0..r_data.len() {
+                let excl = if bipartite { u32::MAX } else { q as u32 };
+                let want = brute_knn(&d, r_data.point(q), k, excl);
+                let got = res.get(q);
+                assert_eq!(got.len(), want.len(), "count (k > n included)");
+                let mut prev = f64::NEG_INFINITY;
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(
+                        (g.dist2 - w.dist2).abs() < 1e-9 * (1.0 + w.dist2),
+                        "q={q}: {g:?} vs {w:?}"
+                    );
+                    assert!(g.dist2 >= prev, "ascending order");
+                    prev = g.dist2;
+                    if !bipartite {
+                        assert_ne!(g.id, q as u32, "self-exclusion");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn knn_into_scratch_reuse_is_stateless() {
+        // interleave queries of wildly different k: the scratch must not
+        // leak state between calls
+        let mut rng = Rng::new(77);
+        let d = random_dataset(&mut rng, 120, 4);
+        let t = KdTree::build(&d);
+        let mut scratch = KnnScratch::new();
+        for (q, k) in [(3usize, 9usize), (11, 1), (3, 9), (40, 120), (11, 1)] {
+            t.knn_into(&d, d.point(q), k, q as u32, &mut scratch);
+            let got = scratch.take_sorted();
+            let want = brute_knn(&d, d.point(q), k, q as u32);
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g.dist2 - w.dist2).abs() < 1e-9 * (1.0 + w.dist2));
+            }
+        }
+    }
+
     #[test]
     fn knn_exact_on_clustered_data() {
         let d = susy_like(800).generate(5);
@@ -326,6 +512,25 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_heavy_axis_slides() {
+        // one dim spread, the rest constant, with duplicate clumps: forces
+        // the sliding branches of the cell-box build
+        let mut rows = Vec::new();
+        for i in 0..60 {
+            let x = if i < 40 { 0.0f32 } else { 10.0 };
+            rows.push(vec![x, 5.0, 5.0]);
+        }
+        let d = Dataset::from_rows(&rows);
+        let t = KdTree::build(&d);
+        let got = t.knn(&d, d.point(0), 45, 0);
+        let want = brute_knn(&d, d.point(0), 45, 0);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.dist2, w.dist2);
+        }
+    }
+
+    #[test]
     fn k_larger_than_dataset() {
         let mut rng = Rng::new(2);
         let d = random_dataset(&mut rng, 8, 3);
@@ -351,5 +556,19 @@ mod tests {
         let d = Dataset::new(Vec::new(), 4);
         let t = KdTree::build(&d);
         assert!(t.knn(&d, &[0.0; 4], 3, u32::MAX).is_empty());
+    }
+
+    #[test]
+    fn leaf_order_key_is_a_permutation() {
+        let mut rng = Rng::new(4);
+        let d = random_dataset(&mut rng, 500, 5);
+        let t = KdTree::build(&d);
+        let mut seen = vec![false; d.len()];
+        for id in 0..d.len() as u32 {
+            let r = t.leaf_order_key(id) as usize;
+            assert!(!seen[r], "rank {r} assigned twice");
+            seen[r] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
     }
 }

@@ -5,4 +5,4 @@ pub mod grid;
 pub mod kdtree;
 
 pub use grid::GridIndex;
-pub use kdtree::KdTree;
+pub use kdtree::{KdTree, KnnScratch};

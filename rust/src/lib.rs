@@ -26,8 +26,11 @@ pub mod util;
 
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
-    pub use crate::core::{Dataset, KnnResult, Neighbor};
-    pub use crate::cpu::{exact_ann, exact_ann_rs, ref_impl, CpuKnnOutcome};
+    pub use crate::core::{Dataset, KnnResult, Neighbor, Neighbors, SoaSlots};
+    pub use crate::cpu::{
+        exact_ann, exact_ann_rs, exact_ann_rs_into, ref_impl, CpuKnnOutcome,
+        CpuKnnStats,
+    };
     pub use crate::data::synthetic::{
         by_name, chist_like, fma_like, songs_like, susy_like, DatasetSpec,
     };
@@ -36,7 +39,7 @@ pub mod prelude {
         brute_join_linear, gpu_join, join::gpu_join_rs, GpuJoinParams, ThreadAssign,
     };
     pub use crate::hybrid::{HybridKnnJoin, HybridParams, HybridReport};
-    pub use crate::index::{GridIndex, KdTree};
+    pub use crate::index::{GridIndex, KdTree, KnnScratch};
     pub use crate::runtime::{tiles::TileClass, Engine};
     pub use crate::split::{rho_model, split_work};
 }

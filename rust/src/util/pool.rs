@@ -1,9 +1,15 @@
 //! Rank-parallel execution helpers (no rayon/tokio in the vendor set).
 //!
-//! The paper's host-side parallelism is MPI shared-nothing ranks with
-//! round-robin query assignment; here a "rank" is an OS thread. `run_ranks`
-//! spawns |p| scoped threads and returns each rank's result, which is all
-//! EXACT-ANN / REFIMPL need.
+//! The paper's host-side parallelism is MPI shared-nothing ranks; here a
+//! "rank" is an OS thread. `run_ranks` spawns |p| scoped threads and
+//! returns each rank's result. `parallel_chunks_stateful` is the dynamic
+//! scheduler of the CPU query engine: workers pull fixed-size index
+//! chunks off a shared atomic cursor (self-balancing under density skew,
+//! unlike static round-robin) while carrying a per-worker state - the
+//! reusable `KnnScratch` of EXACT-ANN lives there.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Run `ranks` workers; worker `k` receives its rank id. Results are
 /// returned in rank order. Panics propagate.
@@ -30,35 +36,80 @@ where
     })
 }
 
-/// Chunked parallel map over indices [0, n): each worker pulls the next
-/// chunk from a shared atomic cursor (simple work stealing).
-pub fn parallel_chunks<F>(n: usize, workers: usize, chunk: usize, f: F)
+/// Dynamically scheduled chunked map over indices [0, n) with per-worker
+/// state: worker `w` builds its state with `init(w)`, then repeatedly
+/// claims the next `chunk`-sized index range from a shared atomic cursor
+/// and runs `f(&mut state, range)` until the range space is exhausted;
+/// `fini(state)` converts the state into the worker's result (e.g. its
+/// busy time). Results are returned in worker-id order, one per worker,
+/// even for workers that claimed no chunk.
+///
+/// State stays on its worker thread (no `Send` bound), which is what lets
+/// scratch buffers be reused across chunks without synchronisation.
+pub fn parallel_chunks_stateful<S, T, I, F, G>(
+    n: usize,
+    workers: usize,
+    chunk: usize,
+    init: I,
+    f: F,
+    fini: G,
+) -> Vec<T>
 where
-    F: Fn(std::ops::Range<usize>) + Sync,
+    T: Send,
+    I: Fn(usize) -> S + Sync,
+    F: Fn(&mut S, Range<usize>) + Sync,
+    G: Fn(S) -> T + Sync,
 {
-    use std::sync::atomic::{AtomicUsize, Ordering};
-    let cursor = AtomicUsize::new(0);
     let workers = workers.max(1);
     let chunk = chunk.max(1);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let cursor = &cursor;
-            let f = &f;
-            scope.spawn(move || loop {
-                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                f(start..(start + chunk).min(n));
-            });
+    if workers == 1 {
+        let mut state = init(0);
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + chunk).min(n);
+            f(&mut state, start..end);
+            start = end;
         }
-    });
+        return vec![fini(state)];
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let (cursor, init, f, fini) = (&cursor, &init, &f, &fini);
+                scope.spawn(move || {
+                    let mut state = init(w);
+                    loop {
+                        let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                        if start >= n {
+                            break;
+                        }
+                        f(&mut state, start..(start + chunk).min(n));
+                    }
+                    fini(state)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
+    })
+}
+
+/// Chunked parallel map over indices [0, n): each worker pulls the next
+/// chunk from a shared atomic cursor (simple work stealing). Stateless
+/// form of `parallel_chunks_stateful`.
+pub fn parallel_chunks<F>(n: usize, workers: usize, chunk: usize, f: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    parallel_chunks_stateful(n, workers, chunk, |_| (), |(), r| f(r), |()| ());
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn ranks_return_in_order() {
@@ -86,5 +137,45 @@ mod tests {
     #[test]
     fn chunks_empty_input() {
         parallel_chunks(0, 4, 8, |_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn stateful_states_partition_the_range() {
+        let n = 5_000;
+        let per_worker = parallel_chunks_stateful(
+            n,
+            4,
+            64,
+            |w| (w, 0usize),
+            |state, range| state.1 += range.len(),
+            |state| state,
+        );
+        assert_eq!(per_worker.len(), 4);
+        assert_eq!(per_worker.iter().map(|s| s.0).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(per_worker.iter().map(|s| s.1).sum::<usize>(), n);
+    }
+
+    #[test]
+    fn stateful_single_worker_and_tiny_inputs() {
+        let out = parallel_chunks_stateful(
+            3,
+            1,
+            100,
+            |_| Vec::new(),
+            |acc: &mut Vec<usize>, r| acc.extend(r),
+            |acc| acc,
+        );
+        assert_eq!(out, vec![vec![0, 1, 2]]);
+        // more workers than items: idle workers still report
+        let out = parallel_chunks_stateful(
+            2,
+            6,
+            1,
+            |_| 0usize,
+            |acc, r| *acc += r.len(),
+            |acc| acc,
+        );
+        assert_eq!(out.len(), 6);
+        assert_eq!(out.iter().sum::<usize>(), 2);
     }
 }

@@ -51,7 +51,7 @@ fn rs_join_keeps_identical_points() {
     p.cpu_ranks = 1;
     let rep = HybridKnnJoin::run_rs(&engine, &r, &s, &p).unwrap();
     for q in 0..r.len() {
-        let n = &rep.result.get(q)[0];
+        let n = rep.result.get(q).at(0);
         // device-path distances use the matmul formulation: self-distance
         // carries O(|x|^2 * eps_f32) cancellation noise, not exact zero
         assert!(n.dist2 < 0.05, "query {q} should find its twin: {n:?}");
@@ -69,8 +69,8 @@ fn self_join_excludes_self_but_rs_does_not() {
     let mut self_hits = 0;
     for q in 0..d.len() {
         // matmul-formulation noise on the device path (see above)
-        assert!(rs.result.get(q)[0].dist2 < 0.05);
-        if selfj.result.get(q)[0].id == q as u32 {
+        assert!(rs.result.get(q).at(0).dist2 < 0.05);
+        if selfj.result.get(q).at(0).id == q as u32 {
             self_hits += 1;
         }
     }
