@@ -1,0 +1,172 @@
+//! Work-division shootout: the density-ordered dynamic work queue vs the
+//! paper's one-shot static split, end to end through the hybrid join.
+//!
+//! Covers self-join and bipartite workloads at several skew levels, with
+//! a deliberately mispredicted γ in the sweep - the regime where the
+//! static split strands one architecture while the other finishes its
+//! fixed share. Emits `BENCH_scheduler.json` (uploaded as a CI artifact
+//! alongside `BENCH_cpu_engine.json`) so later PRs can track the
+//! scheduling trajectory.
+//!
+//!   cargo bench --bench scheduler
+//!   HKNN_RANKS=8 cargo bench --bench scheduler
+
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::util::json::Json;
+
+struct Case {
+    name: &'static str,
+    /// (R, S): S = None means self-join
+    r: Dataset,
+    s: Option<Dataset>,
+    k: usize,
+    gamma: f64,
+    rho: f64,
+}
+
+fn run_one(
+    engine: &Engine,
+    case: &Case,
+    scheduler: Scheduler,
+    ranks: usize,
+) -> HybridReport {
+    let mut p = HybridParams::new(case.k);
+    p.cpu_ranks = ranks;
+    p.gamma = case.gamma;
+    p.rho = case.rho;
+    p.scheduler = scheduler;
+    match &case.s {
+        None => HybridKnnJoin::run(engine, &case.r, &p).expect(case.name),
+        Some(s) => HybridKnnJoin::run_rs(engine, &case.r, s, &p).expect(case.name),
+    }
+}
+
+fn main() {
+    let ranks: usize = std::env::var("HKNN_RANKS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let engine = Engine::load_default().expect("run `make artifacts` first");
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    // warm the executable cache so neither contender pays compilation
+    {
+        let warm = susy_like(400).generate(1);
+        let mut p = HybridParams::new(3);
+        p.cpu_ranks = ranks;
+        let _ = HybridKnnJoin::run(&engine, &warm, &p).expect("warmup");
+    }
+
+    let cases = vec![
+        Case {
+            name: "susy_selfjoin_gamma_low",
+            r: susy_like(3000).generate(0xA1),
+            s: None,
+            k: 8,
+            gamma: 0.1,
+            rho: 0.0,
+        },
+        Case {
+            name: "chist_skewed_gamma_mid",
+            r: chist_like(2000).generate(0xA2),
+            s: None,
+            k: 5,
+            gamma: 0.4,
+            rho: 0.1,
+        },
+        Case {
+            // the misprediction regime: a high γ starves the static GPU
+            // side on clustered data; the queue discovers the real split
+            name: "chist_skewed_gamma_mispredicted",
+            r: chist_like(2000).generate(0xA2),
+            s: None,
+            k: 5,
+            gamma: 0.9,
+            rho: 0.0,
+        },
+        Case {
+            name: "susy_bipartite",
+            r: susy_like(1200).generate(0xA3),
+            s: Some(susy_like(2400).generate(0xA4)),
+            k: 4,
+            gamma: 0.2,
+            rho: 0.1,
+        },
+    ];
+
+    let mut rows = Vec::new();
+    println!("scheduler shootout: static split vs dynamic queue (ranks={ranks}, hw={hw})");
+    println!(
+        "{:>34} {:>12} {:>12} {:>8} {:>14} {:>10}",
+        "case", "static s", "dynamic s", "speedup", "claims g/c", "q_fail"
+    );
+    for case in &cases {
+        let stat = run_one(&engine, case, Scheduler::StaticSplit, ranks);
+        let dyn_ = run_one(&engine, case, Scheduler::DynamicQueue, ranks);
+        let gpu_claims = dyn_
+            .claims
+            .iter()
+            .filter(|c| matches!(c.arch, Arch::Gpu))
+            .count();
+        let cpu_claims = dyn_.claims.len() - gpu_claims;
+        let speedup = stat.response_time / dyn_.response_time.max(1e-12);
+        println!(
+            "{:>34} {:>12.4} {:>12.4} {:>7.2}x {:>8}/{:<5} {:>10}",
+            case.name,
+            stat.response_time,
+            dyn_.response_time,
+            speedup,
+            gpu_claims,
+            cpu_claims,
+            dyn_.q_fail
+        );
+        // both runs must have produced complete, identical-cardinality
+        // results - a scheduler can move work, never drop it
+        let solved_k = case.k.min(case.r.len().saturating_sub(1));
+        assert_eq!(stat.result.solved_count(solved_k), case.r.len(), "{}", case.name);
+        assert_eq!(dyn_.result.solved_count(solved_k), case.r.len(), "{}", case.name);
+        rows.push(Json::obj(vec![
+            ("case", Json::Str(case.name.into())),
+            ("n", Json::Num(case.r.len() as f64)),
+            ("bipartite", Json::Bool(case.s.is_some())),
+            ("k", Json::Num(case.k as f64)),
+            ("gamma", Json::Num(case.gamma)),
+            ("rho", Json::Num(case.rho)),
+            ("static_secs", Json::Num(stat.response_time)),
+            ("dynamic_secs", Json::Num(dyn_.response_time)),
+            ("speedup", Json::Num(speedup)),
+            ("static_q_gpu", Json::Num(stat.q_gpu as f64)),
+            ("static_q_cpu", Json::Num(stat.q_cpu as f64)),
+            ("dynamic_q_gpu", Json::Num(dyn_.q_gpu as f64)),
+            ("dynamic_q_cpu", Json::Num(dyn_.q_cpu as f64)),
+            ("gpu_claims", Json::Num(gpu_claims as f64)),
+            ("cpu_claims", Json::Num(cpu_claims as f64)),
+            ("q_fail_recirculated", Json::Num(dyn_.q_fail as f64)),
+            ("rho_model_dynamic", Json::Num(dyn_.rho_model)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("scheduler".into())),
+        (
+            "baseline",
+            Json::Str("one-shot static split (γ threshold + ρ floor) + serial Q^Fail".into()),
+        ),
+        (
+            "contender",
+            Json::Str(
+                "density-ordered shared work queue, two-ended dynamic claims, \
+                 live Q^Fail recirculation"
+                    .into(),
+            ),
+        ),
+        ("ranks", Json::Num(ranks as f64)),
+        ("hw_threads", Json::Num(hw as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_scheduler.json", doc.to_string() + "\n")
+        .expect("write BENCH_scheduler.json");
+    println!("wrote BENCH_scheduler.json");
+}

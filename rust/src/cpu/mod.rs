@@ -19,6 +19,7 @@ use std::time::Instant;
 
 use crate::core::{Dataset, KnnResult, SoaSlots};
 use crate::index::{KdTree, KnnScratch};
+use crate::sched::{Arch, ClaimRecord, WorkQueue};
 use crate::util::pool;
 
 /// Outcome of a CPU-side KNN pass that owns its result table.
@@ -156,6 +157,138 @@ pub fn exact_ann_rs_into(
     }
 }
 
+/// Accounting of a queue-draining CPU pass (`exact_ann_drain`).
+#[derive(Debug)]
+pub struct CpuDrainStats {
+    /// wall time of each rank, including idle waits on the GPU (seconds)
+    pub per_rank_time: Vec<f64>,
+    /// wall time of the whole pass
+    pub total_time: f64,
+    /// queries claimed off the queue tail
+    pub queries: usize,
+    /// recirculated Q^Fail queries absorbed while the join ran
+    pub recirc_queries: usize,
+    /// per-claim telemetry, all ranks merged
+    pub claims: Vec<ClaimRecord>,
+    /// dynamic-scheduling grain used (diagnostics)
+    pub chunk: usize,
+}
+
+/// EXACT-ANN as a *queue consumer*: `ranks` workers claim small chunks
+/// off the sparse tail of the shared work queue and absorb recirculated
+/// Q^Fail queries, until the queue is drained and the GPU master has
+/// signalled completion. Results land in `slots` exactly as in
+/// `exact_ann_rs_into`; every claim is logged for the running ρ^Model.
+///
+/// Slot safety: the two-ended cursor hands each tail position to exactly
+/// one rank, the GPU master never writes the slots of queries it failed,
+/// and each recirculated id is claimed by exactly one rank - so every
+/// query id still has a single writer.
+#[allow(clippy::too_many_arguments)]
+pub fn exact_ann_drain(
+    data: &Dataset,
+    tree: &KdTree,
+    r_data: &Dataset,
+    queue: &WorkQueue,
+    k: usize,
+    ranks: usize,
+    exclude_self: bool,
+    slots: &SoaSlots<'_>,
+) -> CpuDrainStats {
+    let t0 = Instant::now();
+    let ranks = ranks.max(1);
+    assert!(k <= slots.k(), "result stride {} < k {}", slots.k(), k);
+    let chunk = chunk_for(queue.len(), ranks);
+
+    let solve_one = |scratch: &mut KnnScratch, q: u32| {
+        let excl = if exclude_self { q } else { u32::MAX };
+        tree.knn_into(data, r_data.point(q as usize), k, excl, scratch);
+        // SAFETY: single writer per query id (see function docs).
+        unsafe { slots.slot(q as usize) }.write_heap(scratch.heap_mut());
+    };
+
+    let rank_outs: Vec<(f64, Vec<ClaimRecord>, usize, usize)> =
+        pool::run_ranks(ranks, |_rank| {
+            let mut scratch = KnnScratch::new();
+            let mut records: Vec<ClaimRecord> = Vec::new();
+            let (mut tail_q, mut rec_q) = (0usize, 0usize);
+            let t_rank = Instant::now();
+            loop {
+                // Read the done flag BEFORE the claim attempts: any failure
+                // the GPU published before setting the flag (Release) is
+                // visible to the Acquire claim below, so a true reading
+                // plus two empty claims means nothing more can arrive.
+                let done = queue.gpu_done();
+                // sparse tail first: that is this architecture's territory
+                if let Some(r) = queue.claim_tail(chunk) {
+                    let t = Instant::now();
+                    let work = queue.range_work(r.clone());
+                    let qs = queue.query_slice(r);
+                    for &q in qs {
+                        solve_one(&mut scratch, q);
+                    }
+                    let secs = t.elapsed().as_secs_f64();
+                    queue.note_cpu(qs.len(), work, secs);
+                    records.push(ClaimRecord {
+                        arch: Arch::Cpu,
+                        queries: qs.len(),
+                        est_work: work,
+                        secs,
+                        from_recirc: false,
+                    });
+                    tail_q += qs.len();
+                    continue;
+                }
+                // then failures the GPU recirculated, credited at the mean
+                // per-query price (their true tail position is gone) so the
+                // live CPU rate feeding the GPU's batch sizing stays honest
+                if let Some(ids) = queue.claim_recirc(chunk) {
+                    let t = Instant::now();
+                    for &q in &ids {
+                        solve_one(&mut scratch, q);
+                    }
+                    let secs = t.elapsed().as_secs_f64();
+                    let work = queue.mean_query_work() * ids.len() as u64;
+                    queue.note_cpu(ids.len(), work, secs);
+                    records.push(ClaimRecord {
+                        arch: Arch::Cpu,
+                        queries: ids.len(),
+                        est_work: work,
+                        secs,
+                        from_recirc: true,
+                    });
+                    rec_q += ids.len();
+                    continue;
+                }
+                if done {
+                    break;
+                }
+                // queue momentarily dry while the GPU computes: back off
+                // briefly instead of spinning hot
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+            (t_rank.elapsed().as_secs_f64(), records, tail_q, rec_q)
+        });
+
+    let mut per_rank_time = Vec::with_capacity(rank_outs.len());
+    let mut claims = Vec::new();
+    let (mut queries, mut recirc_queries) = (0usize, 0usize);
+    for (secs, records, tq, rq) in rank_outs {
+        per_rank_time.push(secs);
+        claims.extend(records);
+        queries += tq;
+        recirc_queries += rq;
+    }
+    CpuDrainStats {
+        per_rank_time,
+        total_time: t0.elapsed().as_secs_f64(),
+        queries,
+        recirc_queries,
+        claims,
+        chunk,
+    }
+}
+
 /// REFIMPL: the CPU-only parallel reference - EXACT-ANN over all of D.
 pub fn ref_impl(data: &Dataset, tree: &KdTree, k: usize, ranks: usize) -> CpuKnnOutcome {
     let queries: Vec<u32> = (0..data.len() as u32).collect();
@@ -278,6 +411,51 @@ mod tests {
             let want = tree.knn(&s, r.point(q), 3, u32::MAX);
             for (g, w) in out.result.get(q).iter().zip(&want) {
                 assert_eq!(g.dist2, w.dist2);
+            }
+        }
+    }
+
+    #[test]
+    fn drain_consumes_tail_and_recirc_exactly() {
+        use crate::index::GridIndex;
+        use crate::sched::build_queue;
+
+        let data = susy_like(600).generate(48);
+        let tree = KdTree::build(&data);
+        let k = 4;
+        let grid = GridIndex::build(&data, 6, 2.0);
+        let queries: Vec<u32> = (0..data.len() as u32).collect();
+        let queue = build_queue(&data, &grid, &queries, k, 0.0, 0.0);
+
+        // play the GPU master: claim a dense head batch, "solve" half of
+        // it, recirculate the other half as Q^Fail
+        let head = queue
+            .claim_head_work(queue.total_work() / 4, queue.len())
+            .unwrap();
+        let head_ids: Vec<u32> = queue.query_slice(head.clone()).to_vec();
+        let mid = head_ids.len() / 2;
+        let (gpu_solved, failed) = head_ids.split_at(mid);
+        queue.push_failed(failed);
+        queue.set_gpu_done();
+
+        let mut result = KnnResult::new(data.len(), k);
+        let slots = result.slots();
+        let stats = exact_ann_drain(&data, &tree, &data, &queue, k, 3, true, &slots);
+        // complete the table for the queries our fake GPU kept
+        let _ = exact_ann_rs_into(&data, &tree, &data, gpu_solved, k, 2, true, &slots);
+        drop(slots);
+
+        assert_eq!(stats.queries, data.len() - head_ids.len());
+        assert_eq!(stats.recirc_queries, failed.len());
+        assert_eq!(stats.per_rank_time.len(), 3);
+        assert!(stats.claims.iter().all(|c| matches!(c.arch, crate::sched::Arch::Cpu)));
+        assert!(stats.claims.iter().any(|c| c.from_recirc));
+        assert_eq!(result.solved_count(k), data.len());
+        // drained results are exact
+        for q in (0..data.len()).step_by(53) {
+            let want = tree.knn(&data, data.point(q), k, q as u32);
+            for (g, w) in result.get(q).iter().zip(&want) {
+                assert_eq!(g.dist2, w.dist2, "q={q}");
             }
         }
     }

@@ -8,16 +8,28 @@
 //!   same cells;
 //! * each (cell-queries x candidate-chunk) work unit executes one dist /
 //!   dist-topk artifact tile; host-side filtering (ε test, self-exclusion,
-//!   per-query bounded heap merge) runs on "stream" worker threads that
-//!   overlap with device execution, mirroring the paper's 3 CUDA streams
-//!   overlapping transfers and host filtering (Sec. IV-B);
+//!   per-query bounded heap merge) runs on `streams` filter workers driven
+//!   by `pool::parallel_chunks_stateful` over a **dense heap arena**
+//!   indexed by the query's position in the batch - no per-query hash map
+//!   and no worker-local heap merge: each query tile (and therefore each
+//!   arena slot) is claimed by exactly one worker off the atomic cursor;
 //! * queries that end with fewer than K in-ε neighbors are returned as
 //!   Q^Fail for CPU reassignment (Sec. V-E).
+//!
+//! Two entry shapes exist. The list-driven form (`gpu_join_rs_into`)
+//! processes a fixed query set in estimator-sized batches - the paper's
+//! Sec. IV-B batching. The queue-driven form (`gpu_join_drain`) is the
+//! hybrid join's GPU master: it claims batches of aggregate estimated
+//! work off the dense head of the shared work queue (`sched`), sizes each
+//! next claim from the live CPU/GPU work rates (Eq. 6 as feedback), and
+//! *recirculates* failed queries into the queue for CPU ranks to absorb
+//! while the join is still running.
 //!
 //! A query with >= K neighbors within ε is *exactly* solved: its true K
 //! nearest all lie within ε, and the grid walk provably visits every point
 //! within ε of the query in the indexed projection (see index::grid).
 
+use std::cell::UnsafeCell;
 use std::collections::HashMap;
 use std::time::Instant;
 
@@ -27,6 +39,8 @@ use super::device::{DeviceEstimate, DeviceModel, ThreadAssign};
 use crate::core::{BoundedHeap, Dataset, KnnResult, Neighbor, SoaSlots};
 use crate::index::GridIndex;
 use crate::runtime::{tiles, tiles::TileClass, Engine};
+use crate::sched::{self, Arch, ClaimRecord, WorkQueue};
+use crate::util::pool;
 
 /// Parameters of the GPU side.
 #[derive(Debug, Clone)]
@@ -93,8 +107,9 @@ pub struct GpuJoinOutcome {
     pub max_batch_pairs: u64,
 }
 
-/// Accounting of an in-place GPU-JOIN (`gpu_join_rs_into`); solved-query
-/// results live in the caller's `KnnResult` slots.
+/// Accounting of an in-place GPU-JOIN (`gpu_join_rs_into` /
+/// `gpu_join_drain`); solved-query results live in the caller's
+/// `KnnResult` slots.
 #[derive(Debug)]
 pub struct GpuJoinStats {
     /// Q^Fail - queries with < K neighbors within ε (slots untouched)
@@ -104,9 +119,14 @@ pub struct GpuJoinStats {
     pub total_time: f64,
     pub device_model: DeviceEstimate,
     pub batches: usize,
+    /// list form: estimator-predicted result pairs; queue form: estimated
+    /// work actually claimed
     pub estimated_pairs: u64,
     pub result_pairs: u64,
     pub max_batch_pairs: u64,
+    /// per-claim telemetry (queue-driven form only; empty for the list
+    /// form)
+    pub claims: Vec<ClaimRecord>,
 }
 
 /// A unit of work: one grid cell's queries + the shared candidate list.
@@ -114,25 +134,6 @@ pub struct GpuJoinStats {
 struct WorkCell {
     queries: Vec<u32>,
     candidates: Vec<u32>,
-}
-
-/// Message from the executor to a filter worker.
-enum FilterMsg {
-    /// full distance tile: rows follow `qids`, cols follow `cand_ids`
-    Dist {
-        qids: Vec<u32>,
-        cand_ids: Vec<u32>,
-        d2: Vec<f32>,
-        ct: usize,
-    },
-    /// top-k tile: `vals`/`idx` are qt x k, idx indexes into `cand_ids`
-    TopK {
-        qids: Vec<u32>,
-        cand_ids: Vec<u32>,
-        vals: Vec<f32>,
-        idx: Vec<i32>,
-        k: usize,
-    },
 }
 
 /// Run GPU-JOIN for `queries` (ids into `data`) over the given grid
@@ -176,8 +177,8 @@ pub fn gpu_join_rs(
     })
 }
 
-/// GPU-JOIN writing solved queries *in place* through `slots` (the hybrid
-/// join's no-merge path). Failed queries' slots are left untouched for the
+/// GPU-JOIN writing solved queries *in place* through `slots` (the
+/// no-merge path). Failed queries' slots are left untouched for the
 /// Q^Fail CPU pass. The caller must not concurrently write the slots of
 /// `queries` elsewhere (see `SoaSlots::slot`); this function itself
 /// resolves results on the calling thread only.
@@ -231,25 +232,23 @@ pub fn gpu_join_rs_into(
     let mut kernel_time = 0f64;
     let sample_n = ((cells.len() as f64 * params.estimator_frac).ceil() as usize)
         .clamp(1.min(cells.len()), cells.len());
-    let mut est_state = JoinState::new(params.k, params.eps, params.exclude_self);
     let sample: Vec<WorkCell> = cells
         .iter()
         .step_by((cells.len() / sample_n.max(1)).max(1))
         .cloned()
         .collect();
     let sampled_queries: usize = sample.iter().map(|c| c.queries.len()).sum();
-    run_cells(
+    let (_, _, sample_pairs) = exec_filter_cells(
         engine,
         (r_data, data),
         (&plan_large, &plan_small),
         use_topk,
         &sample,
         params,
-        &mut est_state,
         &mut kernel_time,
     )?;
     let estimated_pairs = if sampled_queries > 0 {
-        (est_state.pairs as f64 * queries.len() as f64 / sampled_queries as f64)
+        (sample_pairs as f64 * queries.len() as f64 / sampled_queries as f64)
             .ceil() as u64
     } else {
         0
@@ -267,44 +266,40 @@ pub fn gpu_join_rs_into(
         batches[i % n_batches].push(c);
     }
 
-    // ---- execute batches ----
-    let mut state = JoinState::new(params.k, params.eps, params.exclude_self);
+    // ---- execute batches, resolving each into slots / Q^Fail ----
+    let mut failed = Vec::new();
+    let mut solved = 0usize;
+    let mut result_pairs = 0u64;
     let mut max_batch_pairs = 0u64;
     let mut executed_batches = 0usize;
     for batch in &batches {
         if batch.is_empty() {
             continue;
         }
-        let pairs_before = state.pairs;
-        run_cells(
+        let (batch_queries, mut heaps, batch_pairs) = exec_filter_cells(
             engine,
             (r_data, data),
             (&plan_large, &plan_small),
             use_topk,
             batch,
             params,
-            &mut state,
             &mut kernel_time,
         )?;
-        let batch_pairs = state.pairs - pairs_before;
-        max_batch_pairs = max_batch_pairs.max(batch_pairs);
-        executed_batches += 1;
-    }
-
-    // ---- resolve solved vs failed ----
-    let mut failed = Vec::new();
-    let mut solved = 0usize;
-    for &q in queries {
-        match state.heaps.get_mut(&q) {
-            Some(h) if h.len() >= params.k => {
+        for (pos, &q) in batch_queries.iter().enumerate() {
+            let h = &mut heaps[pos];
+            if h.len() >= params.k {
                 // SAFETY: `queries` is duplicate-free and only this thread
                 // writes GPU-side slots (caller keeps concurrent writers
                 // off these ids).
                 unsafe { slots.slot(q as usize) }.write_heap(h);
                 solved += 1;
+            } else {
+                failed.push(q);
             }
-            _ => failed.push(q),
         }
+        result_pairs += batch_pairs;
+        max_batch_pairs = max_batch_pairs.max(batch_pairs);
+        executed_batches += 1;
     }
     failed.sort_unstable();
 
@@ -316,8 +311,166 @@ pub fn gpu_join_rs_into(
         device_model,
         batches: executed_batches,
         estimated_pairs,
-        result_pairs: state.pairs,
+        result_pairs,
         max_batch_pairs,
+        claims: Vec::new(),
+    })
+}
+
+/// The hybrid join's GPU master: drain the dense head of the shared work
+/// queue in work-sized claims until the head meets the CPU's tail front.
+///
+/// * the *seed* claim is sized from the γ dense prefix
+///   (`sched::first_batch_work`) and taken **before** tile-plan setup, so
+///   the GPU is guaranteed a share whenever the head is open;
+/// * every subsequent claim is sized by `sched::next_batch_work` from the
+///   live GPU/CPU work rates - Eq. 6 driving the schedule instead of
+///   diagnosing it - and capped at `buffer_pairs` estimated work (a
+///   candidate scan bounds its result pairs, so the batch buffer bound of
+///   Sec. IV-B is conserved);
+/// * failed queries are pushed back into the queue's recirculation buffer
+///   for CPU ranks to absorb concurrently; their slots stay untouched;
+/// * `pos_cap` bounds how deep into the queue the head may reach - the
+///   single-core fallback passes the γ dense prefix so the sequential
+///   schedule degenerates to exactly the static split.
+///
+/// Slot safety: identical to `gpu_join_rs_into` - head claims are
+/// disjoint from tail claims by the two-ended cursor, and failed ids are
+/// written by whichever CPU rank claims them from recirculation, never
+/// here.
+#[allow(clippy::too_many_arguments)]
+pub fn gpu_join_drain(
+    engine: &Engine,
+    r_data: &Dataset,
+    data: &Dataset,
+    grid: &GridIndex,
+    queue: &WorkQueue,
+    params: &GpuJoinParams,
+    slots: &SoaSlots<'_>,
+    pos_cap: usize,
+) -> Result<GpuJoinStats> {
+    let t_start = Instant::now();
+    assert!(params.k <= slots.k(), "result stride {} < k {}", slots.k(), params.k);
+    let buffer_cap = params.buffer_pairs.max(1);
+
+    // seed claim first: a fast CPU must not drain the queue while we
+    // compile tile plans
+    let mut target = sched::first_batch_work(
+        queue.head_work_remaining(pos_cap),
+        queue.dense_work(),
+    )
+    .min(buffer_cap);
+    let mut pending = queue.claim_head_work(target, pos_cap);
+    if pending.is_none() {
+        return Ok(GpuJoinStats {
+            failed: Vec::new(),
+            solved: 0,
+            kernel_time: 0.0,
+            total_time: t_start.elapsed().as_secs_f64(),
+            device_model: DeviceEstimate::default(),
+            batches: 0,
+            estimated_pairs: 0,
+            result_pairs: 0,
+            max_batch_pairs: 0,
+            claims: Vec::new(),
+        });
+    }
+
+    let plan_large = tiles::plan_for(engine, data.dims(), params.tile_class)?;
+    let plan_small = tiles::plan_for(engine, data.dims(), TileClass::Small)
+        .unwrap_or_else(|_| plan_large.clone());
+    let use_topk = params.use_topk
+        && plan_large.topk_name.is_some()
+        && params.k <= plan_large.topk_k;
+
+    let mut kernel_time = 0f64;
+    let mut claims: Vec<ClaimRecord> = Vec::new();
+    let mut failed_all: Vec<u32> = Vec::new();
+    let mut work_log: Vec<u64> = Vec::new();
+    let mut solved = 0usize;
+    let mut result_pairs = 0u64;
+    let mut max_batch_pairs = 0u64;
+    let mut batches = 0usize;
+    let mut gpu_busy = 0f64;
+    let mut work_done = 0u64;
+
+    while let Some(range) = pending.take() {
+        let t_claim = Instant::now();
+        // materialise the claim as per-cell work units (a claim may start
+        // or end mid-cell when clipped by the advancing tail; the partial
+        // remainder still shares its cell's candidate list)
+        let mut cells: Vec<WorkCell> = Vec::new();
+        for r in queue.cell_ranges(range.clone()) {
+            let qs = queue.query_slice(r).to_vec();
+            let candidates = grid.candidates_of(r_data.point(qs[0] as usize));
+            for _ in &qs {
+                work_log.push(candidates.len() as u64);
+            }
+            cells.push(WorkCell { queries: qs, candidates });
+        }
+        let (batch_queries, mut heaps, batch_pairs) = exec_filter_cells(
+            engine,
+            (r_data, data),
+            (&plan_large, &plan_small),
+            use_topk,
+            &cells,
+            params,
+            &mut kernel_time,
+        )?;
+        let mut failed_batch = Vec::new();
+        for (pos, &q) in batch_queries.iter().enumerate() {
+            let h = &mut heaps[pos];
+            if h.len() >= params.k {
+                // SAFETY: head claims are disjoint from all other writers.
+                unsafe { slots.slot(q as usize) }.write_heap(h);
+                solved += 1;
+            } else {
+                failed_batch.push(q);
+            }
+        }
+        // recirculate Q^Fail into the live queue (step 7 of Alg. 1 gone)
+        queue.push_failed(&failed_batch);
+        failed_all.extend_from_slice(&failed_batch);
+
+        result_pairs += batch_pairs;
+        max_batch_pairs = max_batch_pairs.max(batch_pairs);
+        batches += 1;
+        let secs = t_claim.elapsed().as_secs_f64();
+        gpu_busy += secs;
+        let est = queue.range_work(range.clone());
+        work_done += est;
+        claims.push(ClaimRecord {
+            arch: Arch::Gpu,
+            queries: range.len(),
+            est_work: est,
+            secs,
+            from_recirc: false,
+        });
+
+        // Eq. 6 as feedback: size the next claim from live rates
+        let gpu_rate = if gpu_busy > 0.0 { work_done as f64 / gpu_busy } else { 0.0 };
+        target = sched::next_batch_work(
+            queue.head_work_remaining(pos_cap),
+            gpu_rate,
+            queue.cpu_work_rate(),
+        )
+        .min(buffer_cap);
+        pending = queue.claim_head_work(target, pos_cap);
+    }
+
+    let device_model = DeviceModel::default().estimate(&work_log, params.assign);
+    failed_all.sort_unstable();
+    Ok(GpuJoinStats {
+        failed: failed_all,
+        solved,
+        kernel_time,
+        total_time: t_start.elapsed().as_secs_f64(),
+        device_model,
+        batches,
+        estimated_pairs: work_done,
+        result_pairs,
+        max_batch_pairs,
+        claims,
     })
 }
 
@@ -344,78 +497,155 @@ pub fn workload_vector(data: &Dataset, grid: &GridIndex, queries: &[u32]) -> Vec
     out
 }
 
-/// Mutable filter state shared across batches.
-struct JoinState {
-    k: usize,
-    eps2: f64,
-    exclude_self: bool,
-    heaps: HashMap<u32, BoundedHeap>,
-    pairs: u64,
+/// Dense per-batch heap arena: one bounded heap per query *position* in
+/// the batch's flat query list (the queue-position indexing of the SoA
+/// result layer, applied to the filter stage). Replaces the former
+/// `HashMap<u32, BoundedHeap>` + worker-local merge: positions are dense,
+/// so the arena is a flat `Vec`, and claim disjointness makes the merge
+/// pass unnecessary.
+struct HeapArena {
+    heaps: Vec<UnsafeCell<BoundedHeap>>,
 }
 
-impl JoinState {
-    fn new(k: usize, eps: f64, exclude_self: bool) -> Self {
-        JoinState {
-            k,
-            eps2: eps * eps,
-            exclude_self,
-            heaps: HashMap::new(),
-            pairs: 0,
+// SAFETY: access is partitioned by query-tile position ranges; each tile
+// is claimed by exactly one filter worker (see `filter_tiles`), so no two
+// threads ever touch the same slot.
+unsafe impl Sync for HeapArena {}
+
+impl HeapArena {
+    fn new(n: usize, k: usize) -> Self {
+        HeapArena {
+            heaps: (0..n).map(|_| UnsafeCell::new(BoundedHeap::new(k))).collect(),
         }
     }
 
-    fn apply(&mut self, msg: &FilterMsg) {
-        match msg {
-            FilterMsg::Dist { qids, cand_ids, d2, ct } => {
-                for (r, &q) in qids.iter().enumerate() {
-                    let heap = self
-                        .heaps
-                        .entry(q)
-                        .or_insert_with(|| BoundedHeap::new(self.k));
-                    let row = &d2[r * ct..r * ct + cand_ids.len()];
+    /// Mutable access to one position's heap.
+    ///
+    /// # Safety
+    /// No two threads may hold the same position at the same time. The
+    /// filter stage guarantees this structurally: tiles carry disjoint
+    /// position ranges and the chunk cursor hands each tile to one worker.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn heap(&self, i: usize) -> &mut BoundedHeap {
+        &mut *self.heaps[i].get()
+    }
+
+    fn into_heaps(self) -> Vec<BoundedHeap> {
+        self.heaps.into_iter().map(UnsafeCell::into_inner).collect()
+    }
+}
+
+/// Device output of one candidate chunk of one query tile.
+enum Payload {
+    /// full distance tile: rows follow the tile's positions, cols follow
+    /// `cand_ids`, stride `ct`
+    Dist { d2: Vec<f32>, ct: usize },
+    /// top-k tile: `vals`/`idx` are qt x k, idx indexes into `cand_ids`
+    TopK { vals: Vec<f32>, idx: Vec<i32>, k: usize },
+}
+
+struct ChunkOut {
+    cand_ids: Vec<u32>,
+    payload: Payload,
+}
+
+/// All candidate-chunk outputs of one query tile: the filter work unit.
+/// `pos` indexes the batch's flat query list; tiles partition it, which
+/// is what makes arena access race-free.
+struct TileOut {
+    pos: std::ops::Range<usize>,
+    chunks: Vec<ChunkOut>,
+}
+
+/// Filter a buffered set of tiles into the arena on `workers` threads via
+/// the dynamic chunk scheduler (one tile per claim). Returns the in-ε
+/// pair count.
+fn filter_tiles(
+    tiles_out: &[TileOut],
+    batch_queries: &[u32],
+    arena: &HeapArena,
+    eps2: f64,
+    exclude_self: bool,
+    workers: usize,
+) -> u64 {
+    if tiles_out.is_empty() {
+        return 0;
+    }
+    let per_worker = pool::parallel_chunks_stateful(
+        tiles_out.len(),
+        workers.max(1),
+        1,
+        |_w| 0u64,
+        |pairs, range| {
+            for ti in range {
+                apply_tile(&tiles_out[ti], batch_queries, arena, eps2, exclude_self, pairs);
+            }
+        },
+        |pairs| pairs,
+    );
+    per_worker.iter().sum()
+}
+
+/// Merge one tile's device output into the arena heaps (the paper's
+/// host-side stream filter).
+fn apply_tile(
+    t: &TileOut,
+    batch_queries: &[u32],
+    arena: &HeapArena,
+    eps2: f64,
+    exclude_self: bool,
+    pairs: &mut u64,
+) {
+    for chunk in &t.chunks {
+        match &chunk.payload {
+            Payload::Dist { d2, ct } => {
+                for (r, pos) in t.pos.clone().enumerate() {
+                    let q = batch_queries[pos];
+                    // SAFETY: this tile is the sole owner of `pos` and is
+                    // processed by exactly one worker (see HeapArena).
+                    let heap = unsafe { arena.heap(pos) };
+                    let row = &d2[r * ct..r * ct + chunk.cand_ids.len()];
                     // Fast path: once the heap is full, only candidates
                     // below the current k-th best can matter - track that
                     // bound as an f32 so the hot compare stays branchy-
                     // cheap and pushes become rare (EXPERIMENTS.md Perf#1).
                     // next_up: f64->f32 rounding must never exclude a
                     // candidate exactly at the bound
-                    let mut gate = ((heap.bound().min(self.eps2)) as f32).next_up();
+                    let mut gate = ((heap.bound().min(eps2)) as f32).next_up();
                     for (c, &dd) in row.iter().enumerate() {
-                        if dd as f64 <= self.eps2 {
-                            self.pairs += 1;
+                        if dd as f64 <= eps2 {
+                            *pairs += 1;
                         }
                         if dd <= gate {
-                            let id = cand_ids[c];
-                            if !(self.exclude_self && id == q) {
+                            let id = chunk.cand_ids[c];
+                            if !(exclude_self && id == q) {
                                 heap.push(Neighbor {
                                     id,
                                     dist2: (dd as f64).max(0.0),
                                 });
-                                gate = ((heap.bound().min(self.eps2)) as f32)
-                                    .next_up();
+                                gate = ((heap.bound().min(eps2)) as f32).next_up();
                             }
                         }
                     }
                 }
             }
-            FilterMsg::TopK { qids, cand_ids, vals, idx, k } => {
-                for (r, &q) in qids.iter().enumerate() {
-                    let heap = self
-                        .heaps
-                        .entry(q)
-                        .or_insert_with(|| BoundedHeap::new(self.k));
+            Payload::TopK { vals, idx, k } => {
+                for (r, pos) in t.pos.clone().enumerate() {
+                    let q = batch_queries[pos];
+                    // SAFETY: as above.
+                    let heap = unsafe { arena.heap(pos) };
                     for s in 0..*k {
                         let dd = vals[r * k + s] as f64;
-                        if dd > self.eps2 {
+                        if dd > eps2 {
                             break; // ascending: rest of the row is farther
                         }
                         let ci = idx[r * k + s] as usize;
-                        if ci >= cand_ids.len() {
+                        if ci >= chunk.cand_ids.len() {
                             continue; // padded candidate row
                         }
-                        let id = cand_ids[ci];
-                        if !(self.exclude_self && id == q) {
-                            self.pairs += 1;
+                        let id = chunk.cand_ids[ci];
+                        if !(exclude_self && id == q) {
+                            *pairs += 1;
                             heap.push(Neighbor { id, dist2: dd.max(0.0) });
                         }
                     }
@@ -425,124 +655,131 @@ impl JoinState {
     }
 }
 
-/// Execute the tile program over a set of cells, merging into `state`.
-/// Device execution happens on this thread (the PJRT client is !Send, the
-/// paper's single GPU-master rank); filtering overlaps on stream workers.
-#[allow(clippy::too_many_arguments)]
-fn run_cells(
+/// Execute the tile program over a set of cells and filter the outputs
+/// into a fresh dense heap arena. Device execution happens on this thread
+/// (the PJRT client is !Send, the paper's single GPU-master rank); device
+/// output is buffered up to a fixed number of *chunks* — the same unit
+/// the former stream channels bounded — then flushed to the `streams`
+/// filter workers. A query tile whose candidate list spans more chunks
+/// than the cap is split across flush rounds: rounds run sequentially, so
+/// the within-round position-disjointness that makes the arena race-free
+/// is preserved even when two rounds touch the same tile. The flush is
+/// synchronous — exec and filtering alternate within a batch rather than
+/// overlapping; overlapping them again via double-buffered queue claims
+/// is ROADMAP follow-up (e). Returns the batch's flat query list (cell by
+/// cell), one heap per position, and the in-ε pair count.
+fn exec_filter_cells(
     engine: &Engine,
     (r_data, data): (&Dataset, &Dataset),
     (plan_large, plan_small): (&tiles::TilePlan, &tiles::TilePlan),
     use_topk: bool,
     cells: &[WorkCell],
     params: &GpuJoinParams,
-    state: &mut JoinState,
     kernel_time: &mut f64,
-) -> Result<()> {
+) -> Result<(Vec<u32>, Vec<BoundedHeap>, u64)> {
+    let n_queries: usize = cells.iter().map(|c| c.queries.len()).sum();
+    let batch_queries: Vec<u32> = cells
+        .iter()
+        .flat_map(|c| c.queries.iter().copied())
+        .collect();
+    let arena = HeapArena::new(n_queries, params.k.max(1));
+    let eps2 = params.eps * params.eps;
     let n_workers = params.streams.max(1);
+    // flush threshold in buffered device chunks (each <= qt x ct x 4B):
+    // enough to keep every filter worker busy, small enough that host
+    // memory stays bounded regardless of any one cell's candidate count -
+    // the same unit the former sync_channel depth (4/worker) bounded.
+    let chunk_cap = n_workers * 8;
 
-    // worker-local states merged at the end
-    let results: Vec<JoinState> = std::thread::scope(|scope| -> Result<Vec<JoinState>> {
-        let mut txs = Vec::with_capacity(n_workers);
-        let mut handles = Vec::with_capacity(n_workers);
-        for _ in 0..n_workers {
-            let (tx, rx) = std::sync::mpsc::sync_channel::<FilterMsg>(4);
-            let (k, eps, ex) = (params.k, params.eps, params.exclude_self);
-            handles.push(scope.spawn(move || {
-                let mut local = JoinState::new(k, eps, ex);
-                while let Ok(msg) = rx.recv() {
-                    local.apply(&msg);
-                }
-                local
-            }));
-            txs.push(tx);
-        }
-
-        let mut q_buf: Vec<f32> = Vec::new();
-        let mut c_buf: Vec<f32> = Vec::new();
-        let mut unit = 0usize;
-        for cell in cells {
-            // One plan per cell: thin cells run on the small tile (less
-            // padding); the small plan has no top-k variant, so it always
-            // takes the dist path.
-            let (plan, cell_topk) = if cell.queries.len() <= plan_small.qt {
-                (plan_small, use_topk && plan_small.topk_name.is_some())
-            } else {
-                (plan_large, use_topk)
-            };
-            let (qt, ct, d_pad) = (plan.qt, plan.ct, plan.d);
-            // Candidate tiles are shared by every query chunk of the cell:
-            // pack + upload once (Perf#2).
-            let c_lits: Vec<(&[u32], xla::Literal)> = cell
-                .candidates
-                .chunks(ct)
-                .map(|c_chunk| {
-                    tiles::pack_candidates(&mut c_buf, data, c_chunk, ct, d_pad);
-                    Ok((
-                        c_chunk,
-                        Engine::literal(&c_buf, &[ct as i64, d_pad as i64])?,
-                    ))
-                })
-                .collect::<Result<_>>()?;
-            for q_chunk in cell.queries.chunks(qt) {
-                tiles::pack(&mut q_buf, r_data, q_chunk, qt, d_pad, 0.0);
-                let q_lit = Engine::literal(&q_buf, &[qt as i64, d_pad as i64])?;
-                for (c_chunk, c_lit) in &c_lits {
-                    let t0 = Instant::now();
-                    let msg = if cell_topk {
-                        let out = engine.exec_lits(
-                            plan.topk_name.as_deref().unwrap(),
-                            &[&q_lit, c_lit],
-                        )?;
-                        *kernel_time += t0.elapsed().as_secs_f64();
-                        FilterMsg::TopK {
-                            qids: q_chunk.to_vec(),
-                            cand_ids: c_chunk.to_vec(),
-                            vals: Engine::to_f32(&out[0])?,
-                            idx: Engine::to_i32(&out[1])?,
-                            k: plan.topk_k,
-                        }
-                    } else {
-                        let out = engine.exec_lits(&plan.dist_name, &[&q_lit, c_lit])?;
-                        *kernel_time += t0.elapsed().as_secs_f64();
-                        FilterMsg::Dist {
-                            qids: q_chunk.to_vec(),
-                            cand_ids: c_chunk.to_vec(),
-                            d2: Engine::to_f32(&out[0])?,
-                            ct,
-                        }
-                    };
-                    // all chunks of one query tile go to one worker (heap
-                    // ownership); rotate workers per query tile
-                    txs[unit % n_workers].send(msg).expect("worker alive");
-                }
-                unit += 1;
-            }
-        }
-        drop(txs);
-        Ok(handles
-            .into_iter()
-            .map(|h| h.join().expect("filter worker panicked"))
-            .collect())
-    })?;
-
-    // merge worker-local heaps into the caller's state
-    for local in results {
-        state.pairs += local.pairs;
-        for (q, heap) in local.heaps {
-            match state.heaps.entry(q) {
-                std::collections::hash_map::Entry::Vacant(v) => {
-                    v.insert(heap);
-                }
-                std::collections::hash_map::Entry::Occupied(mut o) => {
-                    for n in heap.into_sorted() {
-                        o.get_mut().push(n);
+    let mut pairs_total = 0u64;
+    let mut tiles_buf: Vec<TileOut> = Vec::new();
+    let mut chunks_buffered = 0usize;
+    let mut q_buf: Vec<f32> = Vec::new();
+    let mut c_buf: Vec<f32> = Vec::new();
+    let mut base = 0usize;
+    for cell in cells {
+        // One plan per cell: thin cells run on the small tile (less
+        // padding); the small plan has no top-k variant, so it always
+        // takes the dist path.
+        let (plan, cell_topk) = if cell.queries.len() <= plan_small.qt {
+            (plan_small, use_topk && plan_small.topk_name.is_some())
+        } else {
+            (plan_large, use_topk)
+        };
+        let (qt, ct, d_pad) = (plan.qt, plan.ct, plan.d);
+        // Candidate tiles are shared by every query chunk of the cell:
+        // pack + upload once (Perf#2).
+        let c_lits: Vec<(&[u32], xla::Literal)> = cell
+            .candidates
+            .chunks(ct)
+            .map(|c_chunk| {
+                tiles::pack_candidates(&mut c_buf, data, c_chunk, ct, d_pad);
+                Ok((
+                    c_chunk,
+                    Engine::literal(&c_buf, &[ct as i64, d_pad as i64])?,
+                ))
+            })
+            .collect::<Result<_>>()?;
+        for q_chunk in cell.queries.chunks(qt) {
+            tiles::pack(&mut q_buf, r_data, q_chunk, qt, d_pad, 0.0);
+            let q_lit = Engine::literal(&q_buf, &[qt as i64, d_pad as i64])?;
+            let mut chunks: Vec<ChunkOut> = Vec::new();
+            for (c_chunk, c_lit) in &c_lits {
+                let t0 = Instant::now();
+                let payload = if cell_topk {
+                    let out = engine.exec_lits(
+                        plan.topk_name.as_deref().unwrap(),
+                        &[&q_lit, c_lit],
+                    )?;
+                    *kernel_time += t0.elapsed().as_secs_f64();
+                    Payload::TopK {
+                        vals: Engine::to_f32(&out[0])?,
+                        idx: Engine::to_i32(&out[1])?,
+                        k: plan.topk_k,
                     }
+                } else {
+                    let out = engine.exec_lits(&plan.dist_name, &[&q_lit, c_lit])?;
+                    *kernel_time += t0.elapsed().as_secs_f64();
+                    Payload::Dist { d2: Engine::to_f32(&out[0])?, ct }
+                };
+                chunks.push(ChunkOut { cand_ids: c_chunk.to_vec(), payload });
+                chunks_buffered += 1;
+                if chunks_buffered >= chunk_cap {
+                    // emit the tile's chunks so far and flush; the next
+                    // round may revisit this tile's positions - rounds run
+                    // sequentially, so within-round disjointness holds
+                    tiles_buf.push(TileOut {
+                        pos: base..base + q_chunk.len(),
+                        chunks: std::mem::take(&mut chunks),
+                    });
+                    pairs_total += filter_tiles(
+                        &tiles_buf,
+                        &batch_queries,
+                        &arena,
+                        eps2,
+                        params.exclude_self,
+                        n_workers,
+                    );
+                    tiles_buf.clear();
+                    chunks_buffered = 0;
                 }
             }
+            if !chunks.is_empty() {
+                tiles_buf.push(TileOut { pos: base..base + q_chunk.len(), chunks });
+            }
+            base += q_chunk.len();
         }
     }
-    Ok(())
+    pairs_total += filter_tiles(
+        &tiles_buf,
+        &batch_queries,
+        &arena,
+        eps2,
+        params.exclude_self,
+        n_workers,
+    );
+
+    Ok((batch_queries, arena.into_heaps(), pairs_total))
 }
 
 #[cfg(test)]
@@ -676,5 +913,48 @@ mod tests {
         assert!(out.solved + out.failed.len() == queries.len());
         assert!(out.kernel_time > 0.0);
         assert!(out.device_model.threads > 0);
+    }
+
+    #[test]
+    fn drain_equals_list_form_and_recirculates_failures() {
+        // the queue-driven GPU master must solve exactly the queries the
+        // list form solves (same cells, same candidates) and push every
+        // failure into the recirculation buffer
+        use crate::sched::build_queue;
+
+        let (engine, data) = setup(800);
+        let eps = 2.0;
+        let grid = GridIndex::build(&data, 6, eps);
+        let queries: Vec<u32> = (0..data.len() as u32).collect();
+        let params = GpuJoinParams::new(6, eps);
+
+        let list = gpu_join(&engine, &data, &grid, &queries, &params).unwrap();
+
+        let queue = build_queue(&data, &grid, &queries, params.k, 0.0, 0.0);
+        let mut result = KnnResult::new(data.len(), params.k);
+        let slots = result.slots();
+        let out = gpu_join_drain(
+            &engine, &data, &data, &grid, &queue, &params, &slots,
+            queue.len(),
+        )
+        .unwrap();
+        drop(slots);
+
+        assert_eq!(out.solved + out.failed.len(), queries.len());
+        assert_eq!(out.solved, list.solved);
+        assert_eq!(out.failed, list.failed);
+        assert_eq!(queue.claimed_head(), queries.len());
+        assert_eq!(queue.recirc_pushed(), out.failed.len());
+        assert!(!out.claims.is_empty());
+        assert!(out.claims.iter().all(|c| matches!(c.arch, Arch::Gpu)));
+        let claimed: usize = out.claims.iter().map(|c| c.queries).sum();
+        assert_eq!(claimed, queries.len());
+        for q in (0..data.len()).step_by(61) {
+            let (a, b) = (result.get(q), list.result.get(q));
+            assert_eq!(a.len(), b.len(), "q={q}");
+            for (x, y) in a.iter().zip(b) {
+                assert!((x.dist2 - y.dist2).abs() < 1e-4 * (1.0 + y.dist2));
+            }
+        }
     }
 }

@@ -9,6 +9,6 @@ pub mod join;
 pub use brute::{brute_join_linear, BruteOutcome};
 pub use device::{DeviceEstimate, DeviceModel, ThreadAssign};
 pub use join::{
-    gpu_join, gpu_join_rs, gpu_join_rs_into, GpuJoinOutcome, GpuJoinParams,
-    GpuJoinStats,
+    gpu_join, gpu_join_drain, gpu_join_rs, gpu_join_rs_into, GpuJoinOutcome,
+    GpuJoinParams, GpuJoinStats,
 };

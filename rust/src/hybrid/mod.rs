@@ -1,16 +1,32 @@
-//! HYBRIDKNN-JOIN - Algorithm 1 of the paper, orchestrated end to end:
+//! HYBRIDKNN-JOIN - Algorithm 1 of the paper, orchestrated end to end
+//! around a *density-ordered shared work queue* (see `sched`):
 //!
 //! 1. REORDER by variance (Sec. IV-D)                       [timed]
 //! 2. select ε on the device (Sec. V-C)                     [timed]
 //! 3. build the ε-grid over m dims (Sec. IV-A/C)            [excluded*]
 //! 4. build the EXACT-ANN kd-tree                           [excluded*]
-//! 5. split work: γ threshold + ρ floor (Sec. V-D/F)        [timed]
-//! 6. concurrently: GPU-JOIN over Q^GPU (this thread owns the PJRT
-//!    client) and EXACT-ANN ranks over Q^CPU                [timed]
-//! 7. Q^Fail reassigned to EXACT-ANN (Sec. V-E)             [timed]
-//! 8. record T1/T2 and ρ^Model (Eq. 6). There is no merge step: every
-//!    pass writes its disjoint query slots of one SoA `KnnResult` in
-//!    place (see core::result::SoaSlots and DESIGN.md §3).
+//! 5. build the work queue: cells priced by the Sec. V-B
+//!    work estimator, sorted densest first; γ seeds the
+//!    GPU's first batch, ρ reserves the sparse tail         [timed]
+//! 6. drain the queue concurrently: the GPU master (this
+//!    thread owns the PJRT client) claims work-sized batches
+//!    off the dense head, CPU ranks chunk through the sparse
+//!    tail, and the two fronts meet in the middle; Q^Fail
+//!    recirculates into the live queue and is absorbed by
+//!    the CPU ranks while the join runs - the serial Q^Fail
+//!    post-pass of Algorithm 1 no longer exists             [timed]
+//! 7. record per-claim telemetry, T1/T2 and ρ^Model (Eq. 6 -
+//!    which also ran *live* inside step 6, sizing each GPU
+//!    batch from the measured work rates). There is no merge
+//!    step: every writer owns disjoint query slots of one SoA
+//!    `KnnResult` (see core::result::SoaSlots and DESIGN.md §3/§4).
+//!
+//! The paper's one-shot static split (γ threshold + ρ floor, Sec. V-D/F)
+//! survives as [`Scheduler::StaticSplit`] - the ablation baseline that
+//! `benches/scheduler.rs` measures the queue against. On single-core
+//! hosts the dynamic path runs the GPU master first, capped at the γ
+//! dense prefix, then the CPU ranks - the sequential schedule degenerates
+//! to exactly the static split (same work, same accounting).
 //!
 //! *The paper's response-time measurements exclude dataset loading and
 //! index construction (Sec. VI-B); `HybridReport::response_time` follows
@@ -22,11 +38,25 @@ use crate::core::{Dataset, KnnResult};
 use crate::cpu;
 use crate::data::variance::reorder_by_variance;
 use crate::epsilon::{EpsilonSelection, EpsilonSelector};
-use crate::gpu::{self, GpuJoinParams, ThreadAssign};
+use crate::gpu::{self, GpuJoinParams, GpuJoinStats, ThreadAssign};
 use crate::index::{GridIndex, KdTree};
 use crate::runtime::{tiles::TileClass, Engine};
+use crate::sched::{self, ClaimRecord};
 use crate::split::{self, WorkSplit};
 use crate::util::timer::PhaseTimer;
+
+/// How the work is divided between the architectures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheduler {
+    /// Density-ordered shared work queue with two-ended dynamic claims
+    /// (the default): the split is discovered at run time, γ only seeds
+    /// the GPU's first batch and ρ only reserves the sparse tail.
+    DynamicQueue,
+    /// The paper's one-shot static partition (γ threshold + ρ floor,
+    /// Sec. V-D/F) with the serial Q^Fail post-pass - kept as the
+    /// ablation baseline.
+    StaticSplit,
+}
 
 /// Parameters of the hybrid join (paper Table II).
 #[derive(Debug, Clone)]
@@ -37,9 +67,11 @@ pub struct HybridParams {
     pub m: usize,
     /// ε inflation (Sec. V-C2), in [0,1]
     pub beta: f64,
-    /// GPU density threshold (Sec. V-D), in [0,1]
+    /// GPU density threshold (Sec. V-D), in [0,1]. Under the dynamic
+    /// queue this seeds the GPU's first batch instead of fixing the split.
     pub gamma: f64,
-    /// minimum CPU query fraction (Sec. V-F), in [0,1]
+    /// minimum CPU query fraction (Sec. V-F), in [0,1]. Under the dynamic
+    /// queue this reserves the sparse tail for CPU ranks.
     pub rho: f64,
     /// EXACT-ANN ranks (paper: 15 + 1 GPU master)
     pub cpu_ranks: usize,
@@ -58,6 +90,8 @@ pub struct HybridParams {
     /// process only a fraction f of the queries (Table VI parameter
     /// recovery); 1.0 = all
     pub query_fraction: f64,
+    /// work-division strategy (dynamic queue vs static split ablation)
+    pub scheduler: Scheduler,
     pub seed: u64,
 }
 
@@ -80,6 +114,7 @@ impl HybridParams {
             streams: 3,
             selector: EpsilonSelector::default(),
             query_fraction: 1.0,
+            scheduler: Scheduler::DynamicQueue,
             seed: 0x4B1D,
         }
     }
@@ -90,9 +125,15 @@ impl HybridParams {
 pub struct HybridReport {
     pub result: KnnResult,
     pub eps: EpsilonSelection,
+    /// queries computed on the GPU side (dynamic: head claims; static:
+    /// |Q^GPU|). Q^Fail queries count here, as in the paper.
     pub q_gpu: usize,
+    /// queries computed on the CPU side (dynamic: tail claims; static:
+    /// |Q^CPU|), excluding recirculated Q^Fail
     pub q_cpu: usize,
     pub q_fail: usize,
+    /// dynamic: the ρ tail reservation; static: queries moved GPU->CPU by
+    /// the ρ floor
     pub rho_moved: usize,
     /// avg per-query seconds of EXACT-ANN (T1) and GPU-JOIN (T2)
     pub t1: f64,
@@ -109,6 +150,9 @@ pub struct HybridReport {
     pub gpu_result_pairs: u64,
     pub device_model_seconds: f64,
     pub solved_on_gpu: usize,
+    /// per-claim scheduling telemetry (dynamic queue only; empty under
+    /// the static split)
+    pub claims: Vec<ClaimRecord>,
 }
 
 /// The hybrid join engine.
@@ -187,9 +231,208 @@ impl HybridKnnJoin {
         // 4. kd-tree construction (excluded from response time)
         let tree = timers.time("build_kdtree[excluded]", || KdTree::build(data));
 
+        match params.scheduler {
+            Scheduler::DynamicQueue => Self::dynamic_join(
+                engine, r_data, data, self_join, params, eps_sel, &grid, &tree,
+                timers,
+            ),
+            Scheduler::StaticSplit => Self::static_join(
+                engine, r_data, data, self_join, params, eps_sel, &grid, &tree,
+                timers,
+            ),
+        }
+    }
+
+    /// Steps 5-7 under the density-ordered work queue: construction, then
+    /// concurrent two-ended draining with live Q^Fail recirculation.
+    #[allow(clippy::too_many_arguments)]
+    fn dynamic_join(
+        engine: &Engine,
+        r_data: &Dataset,
+        data: &Dataset,
+        self_join: bool,
+        params: &HybridParams,
+        eps_sel: EpsilonSelection,
+        grid: &GridIndex,
+        tree: &KdTree,
+        mut timers: PhaseTimer,
+    ) -> Result<HybridReport> {
+        // 5. queue construction (replaces the one-shot split)
+        let mut query_ids: Vec<u32> = (0..r_data.len() as u32).collect();
+        if params.query_fraction < 1.0 {
+            // Table VI: process only a fraction of the queries
+            let stride = (1.0 / params.query_fraction.max(1e-6)).round() as usize;
+            query_ids = query_ids.into_iter().step_by(stride.max(1)).collect();
+        }
+        let queue = timers.time("build_queue", || {
+            sched::build_queue(
+                r_data, grid, &query_ids, params.k, params.gamma, params.rho,
+            )
+        });
+
+        let gpu_params = GpuJoinParams {
+            k: params.k,
+            eps: eps_sel.eps,
+            tile_class: params.tile_class,
+            use_topk: params.use_topk,
+            buffer_pairs: params.buffer_pairs,
+            streams: params.streams,
+            assign: params.assign,
+            estimator_frac: 0.01,
+            exclude_self: self_join,
+        };
+        let mut result = KnnResult::new(r_data.len(), params.k);
+        let slots = result.slots();
+
+        // Scheduling: with >1 hardware threads the GPU master and the CPU
+        // ranks drain the queue concurrently; on a single-core host the
+        // "concurrency" would only make the PJRT thread pool and the rank
+        // threads fight over one core (~7x slowdown measured), so the GPU
+        // master runs first - capped at the γ dense prefix, so the
+        // sequential schedule equals the static split - and the CPU ranks
+        // drain the rest plus the recirculated failures afterwards.
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let pos_cap = if hw > 1 { queue.len() } else { queue.dense_prefix() };
+        let t_main = std::time::Instant::now();
+        // The CPU ranks only exit after observing gpu_done; release them on
+        // every GPU exit path - normal completion, device error, or panic -
+        // so an unwinding GPU master cannot leave the scope join hanging.
+        struct GpuDoneGuard<'a>(&'a sched::WorkQueue);
+        impl Drop for GpuDoneGuard<'_> {
+            fn drop(&mut self) {
+                self.0.set_gpu_done();
+            }
+        }
+        let run_gpu = || -> Option<Result<GpuJoinStats>> {
+            let _done = GpuDoneGuard(&queue);
+            if queue.head_open(pos_cap) {
+                Some(gpu::join::gpu_join_drain(
+                    engine, r_data, data, grid, &queue, &gpu_params, &slots,
+                    pos_cap,
+                ))
+            } else {
+                None
+            }
+        };
+        let run_cpu = || {
+            cpu::exact_ann_drain(
+                data, tree, r_data, &queue, params.k, params.cpu_ranks,
+                self_join, &slots,
+            )
+        };
+        let (gpu_out, cpu_out) = if hw > 1 {
+            std::thread::scope(|scope| {
+                let cpu_handle = scope.spawn(run_cpu);
+                let gpu_out = run_gpu();
+                (gpu_out, cpu_handle.join().expect("cpu ranks panicked"))
+            })
+        } else {
+            let gpu_out = run_gpu();
+            (gpu_out, run_cpu())
+        };
+        let gpu_stats = gpu_out.transpose()?;
+        drop(slots); // all writers done; `result` is complete in place
+        let main_time = t_main.elapsed().as_secs_f64();
+        timers.add("join_main", main_time);
+
+        // 7. bookkeeping from the claim telemetry
+        let (mut gpu_kernel_time, mut gpu_batches, mut gpu_pairs) =
+            (0.0, 0usize, 0u64);
+        let (mut device_model_seconds, mut solved_on_gpu, mut gpu_total) =
+            (0.0, 0usize, 0.0);
+        let mut claims: Vec<ClaimRecord> = Vec::new();
+        let mut q_fail = 0usize;
+        if let Some(g) = gpu_stats {
+            gpu_kernel_time = g.kernel_time;
+            gpu_batches = g.batches;
+            gpu_pairs = g.result_pairs;
+            device_model_seconds = g.device_model.seconds;
+            solved_on_gpu = g.solved;
+            gpu_total = g.total_time;
+            q_fail = g.failed.len();
+            claims.extend(g.claims);
+        }
+        let cpu_busy: f64 = cpu_out.claims.iter().map(|c| c.secs).sum();
+        let cpu_queries = cpu_out.queries + cpu_out.recirc_queries;
+        let cpu_total_time = cpu_out.total_time;
+        claims.extend(cpu_out.claims);
+
+        let q_gpu = queue.claimed_head();
+        let q_cpu = queue.claimed_tail();
+
+        // T1: mean per-query EXACT-ANN time over *busy* claim seconds
+        // (rank wall time includes idle waits on the GPU, so it is not
+        // used). On an oversubscribed host busy time is still bounded by
+        // wall x effective parallelism - take the tighter estimate.
+        let eff = params.cpu_ranks.min(hw) as f64;
+        let t1 = if cpu_queries > 0 {
+            cpu_busy.min(cpu_total_time * eff) / cpu_queries as f64
+        } else {
+            0.0
+        };
+        let t2 = if solved_on_gpu > 0 {
+            gpu_total / solved_on_gpu as f64
+        } else {
+            0.0
+        };
+
+        let response_time = timers.total()
+            - timers.get("build_grid[excluded]")
+            - timers.get("build_kdtree[excluded]");
+
+        // ρ^Model (Eq. 6) is undefined when one side measured nothing:
+        // a GPU that solved zero queries is evidence FOR the CPU (ρ→1),
+        // not for ρ=0 as a literal reading of the formula would give.
+        let rho_model = if q_gpu == 0 || solved_on_gpu == 0 {
+            // no GPU evidence (empty or all-failed GPU side): the data is
+            // telling us this workload belongs on the CPU
+            1.0
+        } else if cpu_queries == 0 {
+            split::rho_model(0.0, t2).min(0.5)
+        } else {
+            split::rho_model(t1, t2)
+        };
+
+        Ok(HybridReport {
+            result,
+            eps: eps_sel,
+            q_gpu,
+            q_cpu,
+            q_fail,
+            rho_moved: queue.reserve(),
+            t1,
+            t2,
+            rho_model,
+            response_time,
+            timers,
+            gpu_kernel_time,
+            gpu_batches,
+            gpu_result_pairs: gpu_pairs,
+            device_model_seconds,
+            solved_on_gpu,
+            claims,
+        })
+    }
+
+    /// Steps 5-8 of the original Algorithm 1: one-shot γ/ρ split, fixed
+    /// concurrent passes, serial Q^Fail post-pass. The ablation baseline.
+    #[allow(clippy::too_many_arguments)]
+    fn static_join(
+        engine: &Engine,
+        r_data: &Dataset,
+        data: &Dataset,
+        self_join: bool,
+        params: &HybridParams,
+        eps_sel: EpsilonSelection,
+        grid: &GridIndex,
+        tree: &KdTree,
+        mut timers: PhaseTimer,
+    ) -> Result<HybridReport> {
         // 5. split work (queries = points of R, density from the S grid)
         let mut splitres: WorkSplit = timers.time("split_work", || {
-            split::split_work(r_data, &grid, params.k, params.gamma, params.rho)
+            split::split_work(r_data, grid, params.k, params.gamma, params.rho)
         });
 
         // Table VI: process only a fraction of the queries
@@ -223,9 +466,7 @@ impl HybridKnnJoin {
         let slots = result.slots();
 
         // Scheduling: with >1 hardware threads the GPU master and the CPU
-        // ranks run concurrently (Alg. 1); on a single-core host the
-        // "concurrency" would only make the PJRT thread pool and the rank
-        // threads fight over one core (~7x slowdown measured), so the two
+        // ranks run concurrently (Alg. 1); on a single-core host the two
         // components run back to back - same work, same accounting.
         let hw = std::thread::available_parallelism()
             .map(|n| n.get())
@@ -233,12 +474,12 @@ impl HybridKnnJoin {
         let t_main = std::time::Instant::now();
         let run_gpu = || {
             gpu::join::gpu_join_rs_into(
-                engine, r_data, data, &grid, &q_gpu, &gpu_params, &slots,
+                engine, r_data, data, grid, &q_gpu, &gpu_params, &slots,
             )
         };
         let run_cpu = || {
             cpu::exact_ann_rs_into(
-                data, &tree, r_data, &q_cpu, params.k, params.cpu_ranks,
+                data, tree, r_data, &q_cpu, params.k, params.cpu_ranks,
                 self_join, &slots,
             )
         };
@@ -262,7 +503,7 @@ impl HybridKnnJoin {
         if !failed.is_empty() {
             timers.time("q_fail_exact_ann", || {
                 cpu::exact_ann_rs_into(
-                    data, &tree, r_data, &failed, params.k, params.cpu_ranks,
+                    data, tree, r_data, &failed, params.k, params.cpu_ranks,
                     self_join, &slots,
                 )
             });
@@ -335,6 +576,7 @@ impl HybridKnnJoin {
             gpu_result_pairs: gpu_pairs,
             device_model_seconds,
             solved_on_gpu,
+            claims: Vec::new(),
         })
     }
 }
@@ -343,6 +585,7 @@ impl HybridKnnJoin {
 mod tests {
     use super::*;
     use crate::data::synthetic::{chist_like, susy_like};
+    use crate::sched::Arch;
 
     fn engine() -> Engine {
         Engine::load_default().unwrap()
@@ -357,7 +600,9 @@ mod tests {
     #[test]
     fn hybrid_equals_exact_knn() {
         // The headline correctness invariant: hybrid output == kd-tree
-        // exact KNN for EVERY query, regardless of the split.
+        // exact KNN for EVERY query, regardless of the (β, γ, ρ) seeding -
+        // dynamic scheduling changes *who* computes each query, never the
+        // result.
         let e = engine();
         let data = susy_like(900).generate(51);
         for (beta, gamma, rho) in [(0.0, 0.0, 0.0), (0.4, 0.6, 0.3), (1.0, 0.8, 0.0)] {
@@ -389,6 +634,33 @@ mod tests {
     }
 
     #[test]
+    fn static_and_dynamic_schedulers_agree() {
+        // The work division must be invisible in the output: the paper's
+        // static split and the dynamic queue produce identical neighbor
+        // distances.
+        let e = engine();
+        let data = susy_like(700).generate(57);
+        let mut p_dyn = params(4);
+        p_dyn.gamma = 0.3;
+        p_dyn.rho = 0.1;
+        let mut p_stat = p_dyn.clone();
+        p_stat.scheduler = Scheduler::StaticSplit;
+        let a = HybridKnnJoin::run(&e, &data, &p_dyn).unwrap();
+        let b = HybridKnnJoin::run(&e, &data, &p_stat).unwrap();
+        assert_eq!(a.result.solved_count(4), data.len());
+        assert_eq!(b.result.solved_count(4), data.len());
+        for q in (0..data.len()).step_by(43) {
+            let (x, y) = (a.result.get(q), b.result.get(q));
+            assert_eq!(x.len(), y.len(), "q={q}");
+            for (m, n) in x.iter().zip(y) {
+                assert!((m.dist2 - n.dist2).abs() < 1e-4 * (1.0 + n.dist2), "q={q}");
+            }
+        }
+        // static path reports no claim telemetry
+        assert!(b.claims.is_empty());
+    }
+
+    #[test]
     fn split_accounting_consistent() {
         let e = engine();
         let data = susy_like(800).generate(52);
@@ -401,6 +673,9 @@ mod tests {
         assert!(rep.rho_model >= 0.0 && rep.rho_model <= 1.0);
         assert!(rep.response_time > 0.0);
         assert!(rep.response_time <= rep.timers.total());
+        // claim telemetry covers exactly the computed queries
+        let claimed: usize = rep.claims.iter().map(|c| c.queries).sum();
+        assert_eq!(claimed, data.len() + rep.q_fail, "claims + recirculated");
     }
 
     #[test]
@@ -414,6 +689,7 @@ mod tests {
         assert_eq!(rep.q_fail, 0);
         assert_eq!(rep.gpu_batches, 0);
         assert_eq!(rep.result.solved_count(3), data.len());
+        assert!(rep.claims.iter().all(|c| matches!(c.arch, Arch::Cpu)));
     }
 
     #[test]

@@ -205,6 +205,16 @@ impl GridIndex {
         self.visit_adjacent(p, |ids| out.extend_from_slice(ids));
         out
     }
+
+    /// Number of candidates the adjacent-block walk of `p` would scan -
+    /// the per-query work estimate of the Sec. V-B batch estimator,
+    /// computed without materialising the candidate list. This is what
+    /// the density-ordered work queue (`sched`) uses to price each cell.
+    pub fn adjacent_population(&self, p: &[f32]) -> usize {
+        let mut n = 0usize;
+        self.visit_adjacent(p, |ids| n += ids.len());
+        n
+    }
 }
 
 #[cfg(test)]
@@ -290,6 +300,18 @@ mod tests {
             want.sort_unstable();
             assert_eq!(got, want);
         });
+    }
+
+    #[test]
+    fn adjacent_population_matches_candidate_list() {
+        let d = susy_like(600).generate(12);
+        let g = GridIndex::build(&d, 6, 2.0);
+        for i in (0..d.len()).step_by(41) {
+            assert_eq!(
+                g.adjacent_population(d.point(i)),
+                g.candidates_of(d.point(i)).len()
+            );
+        }
     }
 
     #[test]

@@ -21,6 +21,7 @@ pub mod gpu;
 pub mod hybrid;
 pub mod index;
 pub mod runtime;
+pub mod sched;
 pub mod split;
 pub mod util;
 
@@ -38,8 +39,9 @@ pub mod prelude {
     pub use crate::gpu::{
         brute_join_linear, gpu_join, join::gpu_join_rs, GpuJoinParams, ThreadAssign,
     };
-    pub use crate::hybrid::{HybridKnnJoin, HybridParams, HybridReport};
+    pub use crate::hybrid::{HybridKnnJoin, HybridParams, HybridReport, Scheduler};
     pub use crate::index::{GridIndex, KdTree, KnnScratch};
     pub use crate::runtime::{tiles::TileClass, Engine};
+    pub use crate::sched::{build_queue, Arch, ClaimRecord, WorkQueue};
     pub use crate::split::{rho_model, split_work};
 }

@@ -112,6 +112,21 @@ fn cmd_run(args: &Args) -> Result<()> {
         "T1={:.3e} s/q  T2={:.3e} s/q  rho_model={:.3}",
         rep.t1, rep.t2, rep.rho_model
     );
+    if !rep.claims.is_empty() {
+        let gpu_claims = rep
+            .claims
+            .iter()
+            .filter(|c| matches!(c.arch, hybrid_knn_join::sched::Arch::Gpu))
+            .count();
+        let recirc = rep.claims.iter().filter(|c| c.from_recirc).count();
+        println!(
+            "queue: {} claims (gpu {} / cpu {}, {} recirc drains)",
+            rep.claims.len(),
+            gpu_claims,
+            rep.claims.len() - gpu_claims,
+            recirc
+        );
+    }
     println!("phases:\n{}", rep.timers.report());
     println!(
         "response time (paper convention): {:.4}s  solved {}/{}",

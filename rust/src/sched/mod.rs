@@ -1,0 +1,193 @@
+//! Dynamic CPU/GPU work scheduling: the density-ordered shared work
+//! queue that replaces the one-shot static split of paper Sec. V-D/F.
+//!
+//! `build_queue` re-expresses the splitter as *queue construction*: grid
+//! cells are priced with the Sec. V-B work estimator (adjacent-block
+//! population × queries) and sorted densest-first into a flat SoA arena.
+//! The γ threshold no longer partitions the work - it *seeds* the GPU's
+//! first batch size (`first_batch_work`) and, on single-core hosts, caps
+//! the GPU's total share at what the static split would have given it.
+//! The ρ floor degenerates to a reservation on the sparse tail that only
+//! CPU ranks may claim. From then on the split is discovered by the
+//! two-ended draining in [`queue::WorkQueue`], with `next_batch_work`
+//! turning Eq. 6's ρ^Model into run-time feedback: each GPU batch is
+//! sized from the live CPU/GPU work rates so the two fronts meet in the
+//! middle with neither architecture idling on a misprediction.
+
+pub mod queue;
+
+use std::collections::HashMap;
+
+use crate::core::Dataset;
+use crate::index::GridIndex;
+use crate::split;
+
+pub use queue::{Arch, ClaimRecord, QueueCell, WorkQueue};
+
+/// Build the density-ordered work queue for `queries` (ids into
+/// `r_data`), with densities and candidate work taken from the S-side
+/// `grid`. γ seeds the dense prefix via n^thresh (Sec. V-D); ρ reserves
+/// the sparse tail for the CPU (Sec. V-F).
+pub fn build_queue(
+    r_data: &Dataset,
+    grid: &GridIndex,
+    queries: &[u32],
+    k: usize,
+    gamma: f64,
+    rho: f64,
+) -> WorkQueue {
+    // group queries by their grid cell
+    let mut by_cell: HashMap<u64, Vec<u32>> = HashMap::new();
+    for &q in queries {
+        by_cell
+            .entry(grid.cell_id_of(r_data.point(q as usize)))
+            .or_default()
+            .push(q);
+    }
+
+    // price each cell: population decides the order (densest first), the
+    // adjacent-block population is the per-query work estimate
+    struct CellRec {
+        pop: usize,
+        cell: QueueCell,
+    }
+    let mut cells: Vec<CellRec> = by_cell
+        .into_iter()
+        .map(|(id, qs)| {
+            let p0 = r_data.point(qs[0] as usize);
+            let pop = grid.cell_population(p0);
+            let per_q = grid.adjacent_population(p0).max(1) as u64;
+            CellRec {
+                pop,
+                cell: QueueCell { cell_id: id, per_query_work: per_q, queries: qs },
+            }
+        })
+        .collect();
+    // densest first; ties broken by cell id so the order is deterministic
+    cells.sort_unstable_by(|a, b| {
+        b.pop.cmp(&a.pop).then(a.cell.cell_id.cmp(&b.cell.cell_id))
+    });
+
+    // γ seed: the leading queries the static split would call Q^GPU
+    let thresh = split::n_thresh(k, grid.m, gamma);
+    let dense_prefix: usize = cells
+        .iter()
+        .take_while(|c| c.pop as f64 >= thresh)
+        .map(|c| c.cell.queries.len())
+        .sum();
+
+    // ρ floor: tail reservation
+    let reserve = (rho * queries.len() as f64).ceil() as usize;
+
+    WorkQueue::from_cells(
+        cells.into_iter().map(|c| c.cell).collect(),
+        dense_prefix,
+        reserve,
+        thresh,
+    )
+}
+
+/// Size of the GPU's *first* head claim, in estimated work: a third of
+/// the γ-seeded dense prefix (so the feedback loop gets at least a few
+/// batches over the region the static split would have committed in one
+/// shot), floored at a 1/64 slice of the total so a γ that predicts an
+/// empty GPU side still yields a probe batch.
+pub fn first_batch_work(total_work: u64, dense_work: u64) -> u64 {
+    (dense_work / 3).max(total_work / 64).max(1)
+}
+
+/// Size of each subsequent head claim: Eq. 6 as feedback. `gpu_rate` and
+/// `cpu_rate` are live throughputs in estimated-work units per second;
+/// the GPU's fair share of the remaining head work is halved so the two
+/// fronts converge geometrically (late batches shrink, bounding the
+/// worst-case idle tail by one small claim), floored at a 1/64 slice so
+/// progress never stalls on noisy rates.
+pub fn next_batch_work(remaining_work: u64, gpu_rate: f64, cpu_rate: f64) -> u64 {
+    let share = if gpu_rate > 0.0 && cpu_rate > 0.0 {
+        gpu_rate / (gpu_rate + cpu_rate)
+    } else {
+        // one side unmeasured: split the difference until evidence lands
+        0.5
+    };
+    (((remaining_work as f64) * share / 2.0) as u64)
+        .max(remaining_work / 64)
+        .max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{chist_like, susy_like};
+
+    #[test]
+    fn queue_covers_all_queries_densest_first() {
+        let d = susy_like(2000).generate(7);
+        let grid = GridIndex::build(&d, 6, 2.0);
+        let queries: Vec<u32> = (0..d.len() as u32).collect();
+        let q = build_queue(&d, &grid, &queries, 5, 0.3, 0.0);
+        assert_eq!(q.len(), d.len());
+        let mut all: Vec<u32> = q.query_slice(0..q.len()).to_vec();
+        all.sort_unstable();
+        assert_eq!(all, queries);
+        // populations are non-increasing along the queue
+        let mut last = usize::MAX;
+        for r in q.cell_ranges(0..q.len()) {
+            let pop = grid.cell_population(d.point(q.query_slice(r)[0] as usize));
+            assert!(pop <= last, "queue must be densest-first");
+            last = pop;
+        }
+    }
+
+    #[test]
+    fn dense_prefix_matches_static_split() {
+        let d = susy_like(1500).generate(8);
+        let grid = GridIndex::build(&d, 6, 2.5);
+        let queries: Vec<u32> = (0..d.len() as u32).collect();
+        for gamma in [0.0, 0.4, 0.9] {
+            let q = build_queue(&d, &grid, &queries, 5, gamma, 0.0);
+            let s = split::split_work(&d, &grid, 5, gamma, 0.0);
+            assert_eq!(
+                q.dense_prefix(),
+                s.q_gpu.len(),
+                "γ seed equals the static Q^GPU (γ={gamma})"
+            );
+            // and the prefix really is the dense head of the queue
+            let head: std::collections::HashSet<u32> =
+                q.query_slice(0..q.dense_prefix()).iter().copied().collect();
+            let want: std::collections::HashSet<u32> =
+                s.q_gpu.iter().copied().collect();
+            assert_eq!(head, want);
+        }
+    }
+
+    #[test]
+    fn queue_respects_query_subset_and_rho() {
+        let d = chist_like(900).generate(9);
+        let grid = GridIndex::build(&d, 6, 1.5);
+        let queries: Vec<u32> = (0..d.len() as u32).step_by(3).collect();
+        let q = build_queue(&d, &grid, &queries, 4, 0.2, 0.5);
+        assert_eq!(q.len(), queries.len());
+        assert_eq!(q.reserve(), (queries.len() + 1) / 2);
+        let mut all: Vec<u32> = q.query_slice(0..q.len()).to_vec();
+        all.sort_unstable();
+        assert_eq!(all, queries);
+    }
+
+    #[test]
+    fn batch_policy_seeds_and_converges() {
+        // γ seed: a third of the dense prefix, probe floor otherwise
+        assert_eq!(first_batch_work(6400, 3000), 1000);
+        assert_eq!(first_batch_work(6400, 0), 100);
+        assert_eq!(first_batch_work(0, 0), 1);
+        // feedback: faster GPU -> bigger share
+        let fast = next_batch_work(10_000, 900.0, 100.0);
+        let slow = next_batch_work(10_000, 100.0, 900.0);
+        assert!(fast > slow);
+        assert_eq!(fast, 4500); // (10000 * 0.9) / 2
+        // no evidence yet: split the difference
+        assert_eq!(next_batch_work(8000, 0.0, 100.0), 2000);
+        // floors: a vanishing share still claims the 1/64 slice (here 1)
+        assert_eq!(next_batch_work(64, 1.0, 1e9), 1);
+        assert_eq!(next_batch_work(0, 1.0, 1.0), 1);
+    }
+}

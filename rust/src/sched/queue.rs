@@ -1,0 +1,621 @@
+//! The density-ordered shared work queue (the paper's Sec. V work queue,
+//! realised): grid cells sorted densest-first into a flat SoA arena, with
+//! a lock-free two-ended cursor over the flattened query list.
+//!
+//! * the **GPU master** claims large batches of aggregate estimated work
+//!   from the dense *head* (`claim_head_work`) - high-density cells are
+//!   where device throughput per kernel launch is maximised (Sec. V-A);
+//! * **CPU ranks** claim small chunks from the sparse *tail*
+//!   (`claim_tail`) - low-density cells are where the kd-tree wins;
+//! * the two fronts meet in the middle, so the CPU/GPU split is
+//!   *discovered* at run time instead of predicted by γ/ρ up front;
+//! * queries the GPU fails (< K in-ε neighbors) recirculate through a
+//!   single-producer/multi-consumer buffer (`push_failed` /
+//!   `claim_recirc`) and are absorbed by the CPU ranks while the join is
+//!   still running - the serial Q^Fail post-pass of Algorithm 1
+//!   disappears.
+//!
+//! Claim disjointness is inherited from [`TwoEndedCursor`]: a single CAS
+//! decides every claim, so each query position is handed out exactly
+//! once; the recirculation buffer is written only by the GPU master and
+//! drained through a CAS'd read cursor, so each failed query is re-solved
+//! exactly once. Per-claim telemetry feeds a *running* ρ^Model (Eq. 6 as
+//! feedback): the GPU sizes its next batch from the live CPU/GPU work
+//! rates instead of diagnosing the balance after the fact.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
+use crate::util::pool::TwoEndedCursor;
+
+/// Which architecture serviced a claim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Cpu,
+    Gpu,
+}
+
+/// One claim serviced by one architecture - the unit of the scheduling
+/// telemetry that replaces the single-shot T1/T2 accounting.
+#[derive(Debug, Clone)]
+pub struct ClaimRecord {
+    pub arch: Arch,
+    /// queries solved under this claim
+    pub queries: usize,
+    /// estimated work (candidate scans) of the claim
+    pub est_work: u64,
+    /// wall seconds spent servicing it
+    pub secs: f64,
+    /// true when the claim drained recirculated Q^Fail queries
+    pub from_recirc: bool,
+}
+
+/// One grid cell's entry into the queue, pre-sorted by the builder
+/// (`sched::build_queue`) densest first.
+#[derive(Debug, Clone)]
+pub struct QueueCell {
+    /// linearised grid cell id (diagnostics)
+    pub cell_id: u64,
+    /// estimated work per query of this cell (adjacent-block population)
+    pub per_query_work: u64,
+    /// query ids (into R) whose point falls in this cell; non-empty
+    pub queries: Vec<u32>,
+}
+
+/// The shared work queue. Built once before the join, then drained
+/// concurrently from both ends; all claim paths are lock-free.
+#[derive(Debug)]
+pub struct WorkQueue {
+    /// query ids, grouped by cell, densest cell first
+    queries: Vec<u32>,
+    /// cell boundaries into `queries`, with a final sentinel == len
+    cell_starts: Vec<u32>,
+    /// linearised grid id per cell (diagnostics, aligned with boundaries)
+    cell_ids: Vec<u64>,
+    /// prefix_work[i] = estimated work of queries[0..i]; len == n + 1
+    prefix_work: Vec<u64>,
+    cursor: TwoEndedCursor,
+    /// queries in cells meeting the γ threshold (the static split's Q^GPU
+    /// - kept as a *seed hint* for the first GPU batch and as the GPU cap
+    /// on single-core hosts)
+    dense_prefix: usize,
+    /// ρ floor: tail positions claimable only by the CPU
+    reserve: usize,
+    /// the n^thresh used (diagnostics)
+    threshold: f64,
+
+    // ---- Q^Fail recirculation (single producer: the GPU master) ----
+    recirc: Vec<AtomicU32>,
+    recirc_published: AtomicUsize,
+    recirc_taken: AtomicUsize,
+    gpu_done: AtomicBool,
+
+    // ---- live telemetry for the running ρ^Model ----
+    t0: Instant,
+    cpu_busy_nanos: AtomicU64,
+    cpu_work: AtomicU64,
+    cpu_queries: AtomicUsize,
+}
+
+impl WorkQueue {
+    /// Assemble the queue from cells already sorted densest-first.
+    /// `dense_prefix` is the number of *leading* queries whose cells meet
+    /// the γ threshold; `reserve` is the ρ floor in queries.
+    pub fn from_cells(
+        cells: Vec<QueueCell>,
+        dense_prefix: usize,
+        reserve: usize,
+        threshold: f64,
+    ) -> Self {
+        let n: usize = cells.iter().map(|c| c.queries.len()).sum();
+        let mut queries = Vec::with_capacity(n);
+        let mut cell_starts = Vec::with_capacity(cells.len() + 1);
+        let mut cell_ids = Vec::with_capacity(cells.len());
+        let mut prefix_work = Vec::with_capacity(n + 1);
+        let mut acc = 0u64;
+        prefix_work.push(acc);
+        for c in &cells {
+            debug_assert!(!c.queries.is_empty(), "empty cell in queue build");
+            cell_starts.push(queries.len() as u32);
+            cell_ids.push(c.cell_id);
+            let w = c.per_query_work.max(1);
+            for &q in &c.queries {
+                queries.push(q);
+                acc += w;
+                prefix_work.push(acc);
+            }
+        }
+        cell_starts.push(n as u32);
+        let reserve = reserve.min(n);
+        WorkQueue {
+            cursor: TwoEndedCursor::new(n, reserve),
+            queries,
+            cell_starts,
+            cell_ids,
+            prefix_work,
+            dense_prefix: dense_prefix.min(n),
+            reserve,
+            threshold,
+            recirc: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            recirc_published: AtomicUsize::new(0),
+            recirc_taken: AtomicUsize::new(0),
+            gpu_done: AtomicBool::new(false),
+            t0: Instant::now(),
+            cpu_busy_nanos: AtomicU64::new(0),
+            cpu_work: AtomicU64::new(0),
+            cpu_queries: AtomicUsize::new(0),
+        }
+    }
+
+    /// Total queries in the queue.
+    pub fn len(&self) -> usize {
+        self.queries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queries.is_empty()
+    }
+
+    /// Number of cells.
+    pub fn cells(&self) -> usize {
+        self.cell_ids.len()
+    }
+
+    /// The query ids of a claimed position range.
+    pub fn query_slice(&self, r: Range<usize>) -> &[u32] {
+        &self.queries[r]
+    }
+
+    /// Estimated work of a position range.
+    pub fn range_work(&self, r: Range<usize>) -> u64 {
+        self.prefix_work[r.end] - self.prefix_work[r.start]
+    }
+
+    /// Total estimated work of the queue.
+    pub fn total_work(&self) -> u64 {
+        *self.prefix_work.last().unwrap()
+    }
+
+    /// Queries in cells meeting the γ threshold (static split's Q^GPU).
+    pub fn dense_prefix(&self) -> usize {
+        self.dense_prefix
+    }
+
+    /// Estimated work of the dense prefix (the γ seed).
+    pub fn dense_work(&self) -> u64 {
+        self.prefix_work[self.dense_prefix]
+    }
+
+    /// ρ floor actually applied, in queries.
+    pub fn reserve(&self) -> usize {
+        self.reserve
+    }
+
+    /// Mean estimated work per query. Recirculated Q^Fail queries are
+    /// re-credited at this price (their tail position is gone), so the
+    /// live CPU work rate - the GPU's batch-sizing feedback - does not
+    /// decay toward zero on recirculation-heavy runs.
+    pub fn mean_query_work(&self) -> u64 {
+        if self.queries.is_empty() {
+            1
+        } else {
+            (self.total_work() / self.len() as u64).max(1)
+        }
+    }
+
+    /// The n^thresh the γ seeding used (diagnostics).
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+
+    /// Split a claimed position range at cell boundaries. Each returned
+    /// sub-range lies within one cell, so its queries share one candidate
+    /// list. (A range may *start* mid-cell when a previous front claim was
+    /// clipped by the advancing back - the partial remainder still groups
+    /// correctly.)
+    pub fn cell_ranges(&self, r: Range<usize>) -> Vec<Range<usize>> {
+        let mut out = Vec::new();
+        let mut s = r.start;
+        let mut bi = self.cell_starts.partition_point(|&b| (b as usize) <= s);
+        while s < r.end {
+            let e = self
+                .cell_starts
+                .get(bi)
+                .map(|&b| b as usize)
+                .unwrap_or(self.queries.len())
+                .min(r.end);
+            out.push(s..e);
+            s = e;
+            bi += 1;
+        }
+        out
+    }
+
+    // ---- claims ----
+
+    /// GPU-master claim: take whole cells off the dense head until their
+    /// aggregate estimated work reaches `target` (at least one cell; the
+    /// final claim may be clipped by the advancing CPU back or by
+    /// `pos_cap`). Returns the claimed position range.
+    pub fn claim_head_work(&self, target: u64, pos_cap: usize) -> Option<Range<usize>> {
+        self.cursor.claim_front_with(pos_cap, |head, avail| {
+            let limit = head + avail;
+            let base = self.prefix_work[head];
+            // first cell boundary past head whose cumulated work meets the
+            // target; fall back to everything available
+            let bi = self.cell_starts.partition_point(|&b| (b as usize) <= head);
+            let mut end = limit;
+            for &b in &self.cell_starts[bi..] {
+                let b = b as usize;
+                if b >= limit {
+                    break;
+                }
+                if self.prefix_work[b] - base >= target {
+                    end = b;
+                    break;
+                }
+            }
+            end - head
+        })
+    }
+
+    /// CPU-rank claim: up to `chunk` queries off the sparse tail.
+    pub fn claim_tail(&self, chunk: usize) -> Option<Range<usize>> {
+        self.cursor.claim_back(chunk)
+    }
+
+    /// Can the head still yield work under `pos_cap`?
+    pub fn head_open(&self, pos_cap: usize) -> bool {
+        let head = self.cursor.claimed_front();
+        let back = self.cursor.claimed_back();
+        head < self.cursor.front_limit().min(pos_cap).min(self.len() - back)
+    }
+
+    /// Estimated work still claimable from the head (heuristic snapshot;
+    /// the live cursors move underneath it).
+    pub fn head_work_remaining(&self, pos_cap: usize) -> u64 {
+        let head = self.cursor.claimed_front();
+        let back = self.cursor.claimed_back();
+        let limit = self.cursor.front_limit().min(pos_cap).min(self.len() - back);
+        if head >= limit {
+            0
+        } else {
+            self.prefix_work[limit] - self.prefix_work[head]
+        }
+    }
+
+    /// Queries claimed by the GPU so far.
+    pub fn claimed_head(&self) -> usize {
+        self.cursor.claimed_front()
+    }
+
+    /// Queries claimed by CPU ranks (tail claims) so far.
+    pub fn claimed_tail(&self) -> usize {
+        self.cursor.claimed_back()
+    }
+
+    // ---- Q^Fail recirculation ----
+
+    /// Recirculate failed queries into the live queue. **Single producer**:
+    /// only the GPU master may call this (it is the only source of
+    /// failures); the Release publish makes the ids visible to any
+    /// consumer that observes the new count.
+    pub fn push_failed(&self, ids: &[u32]) {
+        if ids.is_empty() {
+            return;
+        }
+        let start = self.recirc_published.load(Ordering::Relaxed);
+        assert!(
+            start + ids.len() <= self.recirc.len(),
+            "recirculation overflow: {} + {} > {}",
+            start,
+            ids.len(),
+            self.recirc.len()
+        );
+        for (i, &q) in ids.iter().enumerate() {
+            self.recirc[start + i].store(q, Ordering::Relaxed);
+        }
+        self.recirc_published.store(start + ids.len(), Ordering::Release);
+    }
+
+    /// Claim up to `max` recirculated queries (multi-consumer; each id is
+    /// handed out exactly once).
+    pub fn claim_recirc(&self, max: usize) -> Option<Vec<u32>> {
+        let max = max.max(1);
+        loop {
+            let published = self.recirc_published.load(Ordering::Acquire);
+            let taken = self.recirc_taken.load(Ordering::Acquire);
+            if taken >= published {
+                return None;
+            }
+            let take = max.min(published - taken);
+            if self
+                .recirc_taken
+                .compare_exchange(taken, taken + take, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                continue;
+            }
+            return Some(
+                (taken..taken + take)
+                    .map(|i| self.recirc[i].load(Ordering::Relaxed))
+                    .collect(),
+            );
+        }
+    }
+
+    /// Failures recirculated so far (diagnostics).
+    pub fn recirc_pushed(&self) -> usize {
+        self.recirc_published.load(Ordering::Acquire)
+    }
+
+    /// The GPU master is done claiming and has published its last
+    /// failures; CPU ranks may exit once the tail and the recirculation
+    /// buffer are both drained.
+    pub fn set_gpu_done(&self) {
+        self.gpu_done.store(true, Ordering::Release);
+    }
+
+    pub fn gpu_done(&self) -> bool {
+        self.gpu_done.load(Ordering::Acquire)
+    }
+
+    // ---- live telemetry (running ρ^Model feedback) ----
+
+    /// CPU ranks report a serviced claim.
+    pub fn note_cpu(&self, queries: usize, work: u64, secs: f64) {
+        self.cpu_busy_nanos
+            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        self.cpu_work.fetch_add(work, Ordering::Relaxed);
+        self.cpu_queries.fetch_add(queries, Ordering::Relaxed);
+    }
+
+    /// Collective CPU throughput in estimated-work units per second since
+    /// queue construction (0.0 until the first CPU claim lands). The GPU
+    /// master divides its own rate by this to size the next batch.
+    pub fn cpu_work_rate(&self) -> f64 {
+        let w = self.cpu_work.load(Ordering::Relaxed) as f64;
+        let secs = self.t0.elapsed().as_secs_f64();
+        if w <= 0.0 || secs <= 0.0 {
+            0.0
+        } else {
+            w / secs
+        }
+    }
+
+    /// Total CPU busy seconds reported so far.
+    pub fn cpu_busy_secs(&self) -> f64 {
+        self.cpu_busy_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Queries the CPU has solved so far (tail + recirculated).
+    pub fn cpu_queries_done(&self) -> usize {
+        self.cpu_queries.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Random queue: `n_cells` cells with random sizes/works; query ids
+    /// are 0..n in flat order so position == id (easiest to audit).
+    fn random_queue(rng: &mut Rng) -> WorkQueue {
+        let n_cells = 1 + rng.below(40);
+        let mut next_id = 0u32;
+        let cells: Vec<QueueCell> = (0..n_cells)
+            .map(|c| {
+                let sz = 1 + rng.below(30);
+                let queries: Vec<u32> = (next_id..next_id + sz as u32).collect();
+                next_id += sz as u32;
+                QueueCell {
+                    cell_id: c as u64,
+                    per_query_work: 1 + rng.below(50) as u64,
+                    queries,
+                }
+            })
+            .collect();
+        let n = next_id as usize;
+        let dense = rng.below(n + 1);
+        let reserve = rng.below(n + 1);
+        WorkQueue::from_cells(cells, dense, reserve, 0.0)
+    }
+
+    #[test]
+    fn head_claims_align_to_cell_boundaries() {
+        let cells = vec![
+            QueueCell { cell_id: 0, per_query_work: 10, queries: vec![0, 1, 2] },
+            QueueCell { cell_id: 1, per_query_work: 5, queries: vec![3, 4] },
+            QueueCell { cell_id: 2, per_query_work: 1, queries: vec![5] },
+        ];
+        let q = WorkQueue::from_cells(cells, 3, 0, 0.0);
+        assert_eq!(q.len(), 6);
+        assert_eq!(q.total_work(), 3 * 10 + 2 * 5 + 1);
+        assert_eq!(q.dense_work(), 30);
+        // a tiny target still claims the whole first cell
+        let r = q.claim_head_work(1, q.len()).unwrap();
+        assert_eq!(r, 0..3);
+        // a target spanning cell 1 claims exactly cell 1
+        let r = q.claim_head_work(10, q.len()).unwrap();
+        assert_eq!(r, 3..5);
+        // remainder
+        let r = q.claim_head_work(u64::MAX, q.len()).unwrap();
+        assert_eq!(r, 5..6);
+        assert!(q.claim_head_work(1, q.len()).is_none());
+    }
+
+    #[test]
+    fn cell_ranges_split_claims_per_cell() {
+        let cells = vec![
+            QueueCell { cell_id: 7, per_query_work: 2, queries: vec![10, 11] },
+            QueueCell { cell_id: 8, per_query_work: 2, queries: vec![12, 13, 14] },
+            QueueCell { cell_id: 9, per_query_work: 2, queries: vec![15] },
+        ];
+        let q = WorkQueue::from_cells(cells, 0, 0, 0.0);
+        assert_eq!(q.cells(), 3);
+        let rs = q.cell_ranges(0..6);
+        assert_eq!(rs, vec![0..2, 2..5, 5..6]);
+        // mid-cell start and end
+        let rs = q.cell_ranges(1..4);
+        assert_eq!(rs, vec![1..2, 2..4]);
+        assert_eq!(q.query_slice(2..5), &[12, 13, 14]);
+        assert!(q.cell_ranges(3..3).is_empty());
+    }
+
+    #[test]
+    fn rho_reserve_caps_the_head() {
+        let cells = vec![QueueCell {
+            cell_id: 0,
+            per_query_work: 1,
+            queries: (0..10).collect(),
+        }];
+        let q = WorkQueue::from_cells(cells, 10, 4, 0.0);
+        assert_eq!(q.reserve(), 4);
+        let r = q.claim_head_work(u64::MAX, q.len()).unwrap();
+        assert_eq!(r, 0..6, "head clipped by the ρ reserve");
+        assert!(!q.head_open(q.len()));
+        assert_eq!(q.head_work_remaining(q.len()), 0);
+        let mut tail = 0;
+        while let Some(r) = q.claim_tail(3) {
+            tail += r.len();
+        }
+        assert_eq!(tail, 4);
+    }
+
+    #[test]
+    fn recirc_single_producer_multi_consumer_exact_once() {
+        let cells = vec![QueueCell {
+            cell_id: 0,
+            per_query_work: 1,
+            queries: (0..2000).collect(),
+        }];
+        let q = WorkQueue::from_cells(cells, 0, 0, 0.0);
+        let hits: Vec<AtomicUsize> = (0..2000).map(|_| AtomicUsize::new(0)).collect();
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                // GPU-master pattern: publish failures in bursts, then done
+                for burst in 0..40u32 {
+                    let ids: Vec<u32> = (burst * 50..(burst + 1) * 50).collect();
+                    q.push_failed(&ids);
+                }
+                q.set_gpu_done();
+            });
+            for _ in 0..3 {
+                let (q, hits) = (&q, &hits);
+                scope.spawn(move || loop {
+                    if let Some(ids) = q.claim_recirc(7) {
+                        for id in ids {
+                            hits[id as usize].fetch_add(1, Ordering::Relaxed);
+                        }
+                        continue;
+                    }
+                    if q.gpu_done() {
+                        if let Some(ids) = q.claim_recirc(7) {
+                            for id in ids {
+                                hits[id as usize].fetch_add(1, Ordering::Relaxed);
+                            }
+                            continue;
+                        }
+                        break;
+                    }
+                    std::thread::yield_now();
+                });
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(q.recirc_pushed(), 2000);
+    }
+
+    #[test]
+    fn concurrent_two_ended_drain_partitions_exactly_once() {
+        // The satellite property: under concurrent two-ended draining with
+        // any rank count, batch sizing, and reserve, every query position
+        // is claimed exactly once and the reserve never leaks to the head.
+        prop::cases(12, 0x52ED, |rng| {
+            let q = random_queue(rng);
+            let n = q.len();
+            let ranks = 1 + rng.below(4);
+            let chunk = 1 + rng.below(9);
+            let target0 = 1 + rng.below(200) as u64;
+            let reserve = q.reserve();
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            std::thread::scope(|scope| {
+                {
+                    let (q, hits) = (&q, &hits);
+                    scope.spawn(move || {
+                        let mut target = target0;
+                        while let Some(r) = q.claim_head_work(target, n) {
+                            for i in r {
+                                hits[i].fetch_add(1, Ordering::Relaxed);
+                            }
+                            target = (target * 2).max(1) % 500 + 1;
+                        }
+                        q.set_gpu_done();
+                    });
+                }
+                for _ in 0..ranks {
+                    let (q, hits) = (&q, &hits);
+                    scope.spawn(move || loop {
+                        if let Some(r) = q.claim_tail(chunk) {
+                            for i in r {
+                                hits[i].fetch_add(1, Ordering::Relaxed);
+                            }
+                            continue;
+                        }
+                        if q.gpu_done() {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    });
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "every position claimed exactly once"
+            );
+            assert_eq!(q.claimed_head() + q.claimed_tail(), n);
+            assert!(q.claimed_tail() >= reserve, "ρ reserve honoured");
+        });
+    }
+
+    #[test]
+    fn degenerate_queues() {
+        let q = WorkQueue::from_cells(Vec::new(), 0, 0, 0.0);
+        assert!(q.is_empty());
+        assert!(q.claim_head_work(100, 10).is_none());
+        assert!(q.claim_tail(4).is_none());
+        assert!(q.claim_recirc(4).is_none());
+        assert_eq!(q.total_work(), 0);
+        assert!(!q.head_open(usize::MAX));
+
+        // single query, full reserve
+        let q = WorkQueue::from_cells(
+            vec![QueueCell { cell_id: 1, per_query_work: 3, queries: vec![9] }],
+            1,
+            1,
+            0.0,
+        );
+        assert!(q.claim_head_work(1, q.len()).is_none());
+        assert_eq!(q.claim_tail(8).unwrap(), 0..1);
+        assert_eq!(q.query_slice(0..1), &[9]);
+    }
+
+    #[test]
+    fn telemetry_accumulates() {
+        let q = WorkQueue::from_cells(
+            vec![QueueCell { cell_id: 0, per_query_work: 2, queries: vec![0, 1] }],
+            0,
+            0,
+            0.0,
+        );
+        assert_eq!(q.cpu_work_rate(), 0.0);
+        q.note_cpu(2, 40, 0.5);
+        q.note_cpu(1, 10, 0.25);
+        assert_eq!(q.cpu_queries_done(), 3);
+        assert!((q.cpu_busy_secs() - 0.75).abs() < 1e-9);
+        assert!(q.cpu_work_rate() > 0.0);
+    }
+}

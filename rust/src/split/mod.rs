@@ -1,5 +1,15 @@
-//! Work division between CPU and GPU (paper Sec. V-D, V-F) and the
+//! The γ/ρ work-division *predicates* (paper Sec. V-D, V-F) and the
 //! ρ^Model load-balancing estimate (Sec. VI-E2, Eq. 6).
+//!
+//! Since the density-ordered work queue landed (`sched`), these formulas
+//! play a seeding role rather than a partitioning one: `n_thresh` marks
+//! the queue's dense prefix (the GPU's first-batch seed and its
+//! single-core cap), the ρ floor becomes the queue's tail reservation,
+//! and `rho_model` runs *live* inside the GPU batch loop
+//! (`sched::next_batch_work`) instead of only as post-hoc diagnosis.
+//! `split_work` itself - the one-shot partition - survives as the
+//! `Scheduler::StaticSplit` ablation baseline and as the reference
+//! the queue's γ seeding is property-tested against.
 
 use crate::core::Dataset;
 use crate::index::GridIndex;

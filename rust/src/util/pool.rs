@@ -7,9 +7,17 @@
 //! chunks off a shared atomic cursor (self-balancing under density skew,
 //! unlike static round-robin) while carrying a per-worker state - the
 //! reusable `KnnScratch` of EXACT-ANN lives there.
+//!
+//! `TwoEndedCursor` generalises the single cursor to *two ends* of one
+//! index range: one claimant eats from the front, many eat from the back,
+//! and the two fronts meet in the middle. This is the claim machinery of
+//! the density-ordered work queue (`sched`): the GPU master claims large
+//! batches off the dense head while CPU ranks chunk through the sparse
+//! tail, so the CPU/GPU split is discovered at run time instead of
+//! predicted up front.
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// Run `ranks` workers; worker `k` receives its rank id. Results are
 /// returned in rank order. Panics propagate.
@@ -107,6 +115,139 @@ where
     parallel_chunks_stateful(n, workers, chunk, |_| (), |(), r| f(r), |()| ());
 }
 
+/// Lock-free two-ended claim cursor over indices [0, n): front claims
+/// grow a `head` cursor, back claims grow a `taken_back` count, and a
+/// claim succeeds only when the two regions would stay disjoint - both
+/// cursors live in one packed `AtomicU64`, so a single CAS decides every
+/// claim and no interleaving can hand out an index twice. An optional
+/// *back reserve* keeps the front out of the last `reserve` indices (the
+/// ρ floor of the hybrid join: that tail belongs to the CPU no matter
+/// what), while back claims may freely eat into front territory - that is
+/// exactly how a mispredicted split self-corrects.
+///
+/// Indices must fit in u32 (the query-id width of the whole repo).
+#[derive(Debug)]
+pub struct TwoEndedCursor {
+    /// (head << 32) | taken_back
+    state: AtomicU64,
+    n: usize,
+    /// front claims never reach at or beyond this index
+    front_limit: usize,
+}
+
+impl TwoEndedCursor {
+    /// Cursor over [0, n) with the last `back_reserve` indices claimable
+    /// only from the back.
+    pub fn new(n: usize, back_reserve: usize) -> Self {
+        assert!(n <= u32::MAX as usize, "range {n} exceeds u32 index space");
+        TwoEndedCursor {
+            state: AtomicU64::new(0),
+            n,
+            front_limit: n - back_reserve.min(n),
+        }
+    }
+
+    #[inline]
+    fn unpack(s: u64) -> (usize, usize) {
+        ((s >> 32) as usize, (s & u32::MAX as u64) as usize)
+    }
+
+    #[inline]
+    fn pack(head: usize, back: usize) -> u64 {
+        ((head as u64) << 32) | back as u64
+    }
+
+    /// Claim from the front with a caller-chosen size: `f` receives the
+    /// current head position and the indices available to the front
+    /// (respecting the back reserve, `pos_cap`, and the advancing back
+    /// region) and returns how many to take (clamped; 0 gives up).
+    /// The closure may run several times under CAS contention.
+    pub fn claim_front_with(
+        &self,
+        pos_cap: usize,
+        f: impl Fn(usize, usize) -> usize,
+    ) -> Option<Range<usize>> {
+        loop {
+            let s = self.state.load(Ordering::Acquire);
+            let (head, back) = Self::unpack(s);
+            let limit = self.front_limit.min(pos_cap).min(self.n - back);
+            if head >= limit {
+                return None;
+            }
+            let take = f(head, limit - head).min(limit - head);
+            if take == 0 {
+                return None;
+            }
+            let ns = Self::pack(head + take, back);
+            if self
+                .state
+                .compare_exchange_weak(s, ns, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return Some(head..head + take);
+            }
+        }
+    }
+
+    /// Claim up to `max` indices from the front.
+    pub fn claim_front(&self, max: usize) -> Option<Range<usize>> {
+        self.claim_front_with(self.n, |_, avail| avail.min(max.max(1)))
+    }
+
+    /// Claim up to `chunk` indices from the back (the range closest to the
+    /// end that is still unclaimed).
+    pub fn claim_back(&self, chunk: usize) -> Option<Range<usize>> {
+        let chunk = chunk.max(1);
+        loop {
+            let s = self.state.load(Ordering::Acquire);
+            let (head, back) = Self::unpack(s);
+            let avail = self.n - back - head;
+            if avail == 0 {
+                return None;
+            }
+            let take = chunk.min(avail);
+            let ns = Self::pack(head, back + take);
+            if self
+                .state
+                .compare_exchange_weak(s, ns, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                let end = self.n - back;
+                return Some(end - take..end);
+            }
+        }
+    }
+
+    /// Total indices handed out from the front so far.
+    pub fn claimed_front(&self) -> usize {
+        Self::unpack(self.state.load(Ordering::Acquire)).0
+    }
+
+    /// Total indices handed out from the back so far.
+    pub fn claimed_back(&self) -> usize {
+        Self::unpack(self.state.load(Ordering::Acquire)).1
+    }
+
+    /// Unclaimed indices between the two fronts.
+    pub fn remaining(&self) -> usize {
+        let (head, back) = Self::unpack(self.state.load(Ordering::Acquire));
+        self.n - back - head
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// First index the front may never reach (n - back reserve).
+    pub fn front_limit(&self) -> usize {
+        self.front_limit
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,6 +294,103 @@ mod tests {
         assert_eq!(per_worker.len(), 4);
         assert_eq!(per_worker.iter().map(|s| s.0).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
         assert_eq!(per_worker.iter().map(|s| s.1).sum::<usize>(), n);
+    }
+
+    #[test]
+    fn two_ended_claims_are_disjoint_and_exhaustive() {
+        let c = TwoEndedCursor::new(100, 0);
+        let f = c.claim_front(30).unwrap();
+        assert_eq!(f, 0..30);
+        let b = c.claim_back(25).unwrap();
+        assert_eq!(b, 75..100);
+        let f2 = c.claim_front(100).unwrap();
+        assert_eq!(f2, 30..75, "front stops where the back begins");
+        assert!(c.claim_front(1).is_none());
+        assert!(c.claim_back(1).is_none());
+        assert_eq!(c.claimed_front() + c.claimed_back(), 100);
+        assert_eq!(c.remaining(), 0);
+    }
+
+    #[test]
+    fn back_reserve_blocks_front_not_back() {
+        let c = TwoEndedCursor::new(10, 4);
+        assert_eq!(c.front_limit(), 6);
+        let f = c.claim_front(100).unwrap();
+        assert_eq!(f, 0..6, "front capped by the reserve");
+        assert!(c.claim_front(1).is_none());
+        // the back drains the reserve and nothing is lost
+        let mut got = 0;
+        while let Some(r) = c.claim_back(3) {
+            got += r.len();
+        }
+        assert_eq!(got, 4);
+        // full reserve: front gets nothing at all
+        let c = TwoEndedCursor::new(5, 5);
+        assert!(c.claim_front(1).is_none());
+        assert_eq!(c.claim_back(10).unwrap(), 0..5);
+    }
+
+    #[test]
+    fn front_with_sees_live_position_and_may_decline() {
+        let c = TwoEndedCursor::new(50, 0);
+        let r = c
+            .claim_front_with(50, |head, avail| {
+                assert_eq!(head, 0);
+                assert_eq!(avail, 50);
+                7
+            })
+            .unwrap();
+        assert_eq!(r, 0..7);
+        assert!(c.claim_front_with(50, |_, _| 0).is_none());
+        // pos_cap bounds the front like a temporary limit
+        let r = c.claim_front_with(10, |head, avail| {
+            assert_eq!(head, 7);
+            assert_eq!(avail, 3);
+            avail
+        });
+        assert_eq!(r.unwrap(), 7..10);
+        assert!(c.claim_front_with(10, |_, a| a).is_none());
+    }
+
+    #[test]
+    fn two_ended_concurrent_partition_exactly_once() {
+        let n = 20_000;
+        let c = TwoEndedCursor::new(n, 1000);
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        std::thread::scope(|scope| {
+            // one front claimant (the GPU-master pattern), variable sizes
+            scope.spawn(|| {
+                let mut sz = 1usize;
+                while let Some(r) = c.claim_front(sz) {
+                    for i in r {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                    sz = (sz * 2 + 1) % 700;
+                }
+            });
+            // several back claimants (the CPU-rank pattern)
+            for w in 0..4 {
+                let (c, hits) = (&c, &hits);
+                scope.spawn(move || {
+                    while let Some(r) = c.claim_back(17 + w) {
+                        for i in r {
+                            hits[i].fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(c.claimed_front() + c.claimed_back(), n);
+        assert!(c.claimed_back() >= 1000, "reserve honoured");
+    }
+
+    #[test]
+    fn cursor_empty_range() {
+        let c = TwoEndedCursor::new(0, 0);
+        assert!(c.claim_front(4).is_none());
+        assert!(c.claim_back(4).is_none());
+        assert!(c.is_empty());
     }
 
     #[test]

@@ -1,0 +1,307 @@
+//! Scheduler-level integration tests: the density-ordered work queue
+//! against the paper's one-shot static split, without touching the
+//! device layer (everything here is host-side and deterministic).
+//!
+//! The load-imbalance tests run both schedulers in *virtual time*: each
+//! actor (1 GPU master + |p| CPU ranks) owns a clock, claims work through
+//! the real queue machinery, and advances its clock by est_work/speed.
+//! This isolates scheduling quality from wall-clock noise - the same
+//! trick `cpu::rank_work_times` uses for Fig. 6.
+
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::sched::{build_queue, first_batch_work, next_batch_work};
+use hybrid_knn_join::util::prop;
+
+/// Virtual-time outcome of one schedule.
+#[derive(Debug)]
+struct Sim {
+    /// finish time of the whole join
+    makespan: f64,
+    /// (makespan - earlier architecture finish) / makespan: the fraction
+    /// of the run one architecture spent idle after exhausting its share
+    idle_frac: f64,
+    gpu_queries: usize,
+    cpu_queries: usize,
+}
+
+/// Drain `queue` in virtual time: the GPU master claims head batches
+/// sized by the live policy, `ranks` CPU actors chunk through the tail.
+fn simulate_dynamic(
+    queue: &WorkQueue,
+    gpu_speed: f64,
+    cpu_speed: f64,
+    ranks: usize,
+    chunk: usize,
+) -> Sim {
+    let mut gpu_clock = 0.0f64;
+    let mut gpu_open = true;
+    let mut cpu_clocks = vec![0.0f64; ranks];
+    let mut cpu_open = vec![true; ranks];
+    let (mut gpu_queries, mut cpu_queries) = (0usize, 0usize);
+    let mut target = first_batch_work(
+        queue.head_work_remaining(queue.len()),
+        queue.dense_work(),
+    );
+    loop {
+        // the actor whose clock is furthest behind claims next (CPU wins
+        // ties so the order is deterministic)
+        let mut best: Option<(f64, usize)> = None;
+        for (i, &c) in cpu_clocks.iter().enumerate() {
+            if cpu_open[i] && best.map(|(bc, _)| c < bc).unwrap_or(true) {
+                best = Some((c, i));
+            }
+        }
+        if gpu_open && best.map(|(bc, _)| gpu_clock < bc).unwrap_or(true) {
+            best = Some((gpu_clock, ranks));
+        }
+        let Some((_, actor)) = best else { break };
+        if actor == ranks {
+            match queue.claim_head_work(target, queue.len()) {
+                Some(r) => {
+                    let w = queue.range_work(r.clone());
+                    gpu_clock += w as f64 / gpu_speed;
+                    gpu_queries += r.len();
+                    target = next_batch_work(
+                        queue.head_work_remaining(queue.len()),
+                        gpu_speed,
+                        cpu_speed * ranks as f64,
+                    );
+                }
+                None => gpu_open = false,
+            }
+        } else {
+            match queue.claim_tail(chunk) {
+                Some(r) => {
+                    let w = queue.range_work(r.clone());
+                    cpu_clocks[actor] += w as f64 / cpu_speed;
+                    cpu_queries += r.len();
+                }
+                None => cpu_open[actor] = false,
+            }
+        }
+    }
+    let cpu_finish = cpu_clocks.iter().cloned().fold(0.0, f64::max);
+    let makespan = cpu_finish.max(gpu_clock);
+    let idle_frac = if makespan > 0.0 {
+        (makespan - cpu_finish.min(gpu_clock)) / makespan
+    } else {
+        0.0
+    };
+    Sim { makespan, idle_frac, gpu_queries, cpu_queries }
+}
+
+/// The static split in virtual time: each side gets its fixed share up
+/// front. Within the CPU the dynamic chunk scheduler balances ranks
+/// near-perfectly (PR 1), so the CPU finishes at W_cpu / (ranks x speed).
+fn simulate_static(
+    d: &Dataset,
+    grid: &GridIndex,
+    k: usize,
+    gamma: f64,
+    rho: f64,
+    gpu_speed: f64,
+    cpu_speed: f64,
+    ranks: usize,
+) -> Sim {
+    let s = split_work(d, grid, k, gamma, rho);
+    let work_of = |qs: &[u32]| -> u64 {
+        qs.iter()
+            .map(|&q| grid.adjacent_population(d.point(q as usize)).max(1) as u64)
+            .sum()
+    };
+    let (wg, wc) = (work_of(&s.q_gpu), work_of(&s.q_cpu));
+    let t_gpu = wg as f64 / gpu_speed;
+    let t_cpu = wc as f64 / (cpu_speed * ranks as f64);
+    let makespan = t_gpu.max(t_cpu);
+    Sim {
+        makespan,
+        idle_frac: if makespan > 0.0 {
+            (makespan - t_gpu.min(t_cpu)) / makespan
+        } else {
+            0.0
+        },
+        gpu_queries: s.q_gpu.len(),
+        cpu_queries: s.q_cpu.len(),
+    }
+}
+
+/// The headline scheduling claim: on a skewed (clustered) dataset, the
+/// dynamic queue's worst per-architecture idle tail is a fraction of the
+/// static split's, across the whole γ sweep - a mispredicted γ cannot
+/// strand an architecture because the fronts keep moving until they meet.
+#[test]
+fn dynamic_queue_shrinks_idle_tail_on_skewed_chist() {
+    let d = chist_like(2500).generate(0xD15C);
+    // small ε relative to the data spread keeps cell populations low, so
+    // high γ thresholds are unreachable - the classic misprediction
+    let eps = EpsilonSelector::default().select_host(&d, 5, 0.0).eps;
+    let grid = GridIndex::build(&d, 6, eps);
+    let queries: Vec<u32> = (0..d.len() as u32).collect();
+    let (k, ranks, chunk) = (5, 3, 32);
+    // balanced hardware: the device matches the aggregate CPU throughput,
+    // so any idle tail is pure scheduling error
+    let (gpu_speed, cpu_speed) = (3000.0, 1000.0);
+
+    let mut worst_static = 0.0f64;
+    let mut dyn_at_worst = 0.0f64;
+    for gamma in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let stat = simulate_static(&d, &grid, k, gamma, 0.0, gpu_speed, cpu_speed, ranks);
+        let queue = build_queue(&d, &grid, &queries, k, gamma, 0.0);
+        let dy = simulate_dynamic(&queue, gpu_speed, cpu_speed, ranks, chunk);
+        // every query is computed exactly once under either schedule
+        assert_eq!(dy.gpu_queries + dy.cpu_queries, d.len(), "γ={gamma}");
+        assert_eq!(stat.gpu_queries + stat.cpu_queries, d.len());
+        // the dynamic queue is never meaningfully worse (the margin covers
+        // cell-granular claim rounding at the meet point)...
+        assert!(
+            dy.idle_frac <= stat.idle_frac + 0.15,
+            "γ={gamma}: dynamic idle {:.3} vs static {:.3}",
+            dy.idle_frac,
+            stat.idle_frac
+        );
+        assert!(dy.makespan > 0.0);
+        if stat.idle_frac > worst_static {
+            worst_static = stat.idle_frac;
+            dyn_at_worst = dy.idle_frac;
+        }
+    }
+    // ...and where the static γ mispredicts worst, the queue collapses the
+    // idle tail
+    assert!(
+        worst_static > 0.15,
+        "sweep should contain a mispredicted γ (worst static idle {worst_static:.3})"
+    );
+    assert!(
+        dyn_at_worst < worst_static * 0.5,
+        "dynamic idle {dyn_at_worst:.3} should halve the static worst {worst_static:.3}"
+    );
+}
+
+/// Same harness on near-uniform data: the dynamic queue must not regress
+/// where the static split was already fine.
+#[test]
+fn dynamic_queue_no_worse_on_uniform_susy() {
+    let d = susy_like(2000).generate(0x5EED);
+    let grid = GridIndex::build(&d, 6, 2.5);
+    let queries: Vec<u32> = (0..d.len() as u32).collect();
+    for gamma in [0.0, 0.5] {
+        let stat = simulate_static(&d, &grid, 5, gamma, 0.0, 2000.0, 1000.0, 2);
+        let queue = build_queue(&d, &grid, &queries, 5, gamma, 0.0);
+        let dy = simulate_dynamic(&queue, 2000.0, 1000.0, 2, 16);
+        assert!(
+            dy.idle_frac <= stat.idle_frac + 0.15,
+            "γ={gamma}: {:.3} vs {:.3}",
+            dy.idle_frac,
+            stat.idle_frac
+        );
+    }
+}
+
+/// Concurrent (real threads) two-ended drain with Q^Fail recirculation
+/// over a queue built from a real grid: every query is claimed exactly
+/// once, recirculated failures are absorbed exactly once, and the ρ
+/// reserve stays CPU-owned. This is the integration-level version of the
+/// `sched::queue` unit property tests.
+#[test]
+fn concurrent_drain_with_recirc_partitions_queries() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    prop::cases(6, 0xC1A1, |rng| {
+        let n = 500 + rng.below(1500);
+        let d = susy_like(n).generate(rng.next_u64());
+        let grid = GridIndex::build(&d, 6, 1.5 + rng.f64() * 2.0);
+        let queries: Vec<u32> = (0..d.len() as u32).collect();
+        let gamma = rng.f64();
+        let rho = rng.f64() * 0.5;
+        let queue = build_queue(&d, &grid, &queries, 4, gamma, rho);
+        let ranks = 1 + rng.below(3);
+        let chunk = 8 + rng.below(32);
+        let solved: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let reserve = queue.reserve();
+
+        std::thread::scope(|scope| {
+            // fake GPU master: claims head batches, fails every 5th query
+            // into the recirculation buffer, "solves" the rest
+            {
+                let (queue, solved) = (&queue, &solved);
+                scope.spawn(move || {
+                    let mut target = first_batch_work(
+                        queue.head_work_remaining(queue.len()),
+                        queue.dense_work(),
+                    );
+                    while let Some(r) = queue.claim_head_work(target, queue.len()) {
+                        let mut failed = Vec::new();
+                        for (i, &q) in queue.query_slice(r.clone()).iter().enumerate() {
+                            if i % 5 == 4 {
+                                failed.push(q);
+                            } else {
+                                solved[q as usize].fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        queue.push_failed(&failed);
+                        target = next_batch_work(
+                            queue.head_work_remaining(queue.len()),
+                            1.0,
+                            1.0,
+                        );
+                    }
+                    queue.set_gpu_done();
+                });
+            }
+            // CPU ranks: tail + recirc until everything is drained
+            for _ in 0..ranks {
+                let (queue, solved) = (&queue, &solved);
+                scope.spawn(move || loop {
+                    if let Some(r) = queue.claim_tail(chunk) {
+                        for &q in queue.query_slice(r) {
+                            solved[q as usize].fetch_add(1, Ordering::Relaxed);
+                        }
+                        continue;
+                    }
+                    if let Some(ids) = queue.claim_recirc(chunk) {
+                        for q in ids {
+                            solved[q as usize].fetch_add(1, Ordering::Relaxed);
+                        }
+                        continue;
+                    }
+                    if queue.gpu_done() {
+                        if let Some(ids) = queue.claim_recirc(chunk) {
+                            for q in ids {
+                                solved[q as usize].fetch_add(1, Ordering::Relaxed);
+                            }
+                            continue;
+                        }
+                        break;
+                    }
+                    std::thread::yield_now();
+                });
+            }
+        });
+
+        // failed queries were solved once by the CPU, everything else
+        // once by whoever claimed it
+        assert!(
+            solved.iter().all(|s| s.load(Ordering::Relaxed) == 1),
+            "every query solved exactly once (n={n} γ={gamma:.2} ρ={rho:.2})"
+        );
+        assert_eq!(queue.claimed_head() + queue.claimed_tail(), n);
+        assert!(queue.claimed_tail() >= reserve, "ρ reserve is CPU-owned");
+    });
+}
+
+/// γ/ρ reinterpretation sanity: the dense prefix shrinks monotonically in
+/// γ (it is the static Q^GPU) and the reserve is exactly the ρ floor.
+#[test]
+fn gamma_and_rho_seed_the_queue_monotonically() {
+    let d = susy_like(1800).generate(77);
+    let grid = GridIndex::build(&d, 6, 2.2);
+    let queries: Vec<u32> = (0..d.len() as u32).collect();
+    let mut last = usize::MAX;
+    for gamma in [0.0, 0.3, 0.6, 1.0] {
+        let q = build_queue(&d, &grid, &queries, 5, gamma, 0.25);
+        assert!(q.dense_prefix() <= last, "γ must shrink the dense prefix");
+        last = q.dense_prefix();
+        assert_eq!(q.reserve(), (0.25f64 * d.len() as f64).ceil() as usize);
+        assert_eq!(q.len(), d.len());
+    }
+}
