@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Regression gate for tracked bench columns vs committed baselines.
+
+Usage: check_regression.py [--allow-missing] FRESH BASELINE
+
+The baseline JSON mirrors the bench output schema plus three gate fields:
+
+  "tracked":   row columns to gate - ratio columns (speedups), which are
+               same-run relative and therefore comparable across machines,
+               unlike absolute seconds;
+  "tolerance": fractional drop allowed vs the baseline value (default
+               0.15, the >15% regression gate of ROADMAP (g));
+  "key":       row field(s) identifying a row across runs.
+
+A fresh row regresses when fresh[col] < baseline[col] * (1 - tolerance).
+Baseline rows missing from the fresh run fail (coverage loss); fresh rows
+absent from the baseline pass with a notice (new cases stay untracked
+until the baseline is refreshed). --allow-missing turns a missing FRESH
+file into a skip - for benches that cannot run on stock runners (the
+scheduler bench needs the AOT artifacts + xla native lib).
+"""
+
+import json
+import sys
+
+
+def key_of(row, keys):
+    return tuple(row.get(k) for k in keys)
+
+
+def main(argv):
+    allow_missing = "--allow-missing" in argv
+    paths = [a for a in argv if not a.startswith("--")]
+    if len(paths) != 2:
+        print(__doc__)
+        return 2
+    fresh_path, base_path = paths
+    try:
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+    except FileNotFoundError:
+        msg = f"[check_regression] fresh results {fresh_path} missing"
+        if allow_missing:
+            print(msg + " - skipping (bench did not run on this runner)")
+            return 0
+        print(msg)
+        return 1
+    with open(base_path) as f:
+        base = json.load(f)
+
+    tracked = base.get("tracked", [])
+    tol = float(base.get("tolerance", 0.15))
+    keys = base.get("key", ["case"])
+    fresh_rows = {key_of(r, keys): r for r in fresh.get("rows", [])}
+    base_keys = {key_of(r, keys) for r in base.get("rows", [])}
+    failures = []
+
+    print(
+        f"[check_regression] {fresh_path} vs {base_path} "
+        f"(tracked={tracked}, tolerance={tol:.0%})"
+    )
+    for brow in base.get("rows", []):
+        k = key_of(brow, keys)
+        frow = fresh_rows.get(k)
+        if frow is None:
+            failures.append(f"row {k}: in baseline but missing from fresh run")
+            continue
+        for col in tracked:
+            bv = brow.get(col)
+            if bv is None:
+                continue  # column not gated for this row
+            fv = frow.get(col)
+            if fv is None:
+                failures.append(f"row {k}: column {col} missing from fresh run")
+                continue
+            floor = bv * (1.0 - tol)
+            ok = fv >= floor
+            print(
+                f"  {'OK  ' if ok else 'FAIL'} {k} {col}: "
+                f"fresh {fv:.3f} vs floor {floor:.3f} (baseline {bv:.3f})"
+            )
+            if not ok:
+                failures.append(
+                    f"row {k}: {col} regressed to {fv:.3f} < floor {floor:.3f}"
+                )
+    for k in fresh_rows:
+        if k not in base_keys:
+            print(f"  note: new row {k} untracked until the baseline is refreshed")
+
+    if failures:
+        print("[check_regression] REGRESSIONS (>{:.0%} vs baseline):".format(tol))
+        for f in failures:
+            print("  - " + f)
+        return 1
+    print("[check_regression] all tracked columns within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

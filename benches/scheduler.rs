@@ -1,12 +1,17 @@
 //! Work-division shootout: the density-ordered dynamic work queue vs the
-//! paper's one-shot static split, end to end through the hybrid join.
+//! paper's one-shot static split, end to end through the hybrid join -
+//! with a sync-vs-pipelined column isolating the GPU master's
+//! exec/filter overlap (the double-buffered claim pipeline).
 //!
 //! Covers self-join and bipartite workloads at several skew levels, with
 //! a deliberately mispredicted γ in the sweep - the regime where the
 //! static split strands one architecture while the other finishes its
 //! fixed share. Emits `BENCH_scheduler.json` (uploaded as a CI artifact
-//! alongside `BENCH_cpu_engine.json`) so later PRs can track the
-//! scheduling trajectory.
+//! alongside `BENCH_cpu_engine.json`, and regression-gated against
+//! `benches/baselines/`) so later PRs can track the scheduling
+//! trajectory. Overlap is observable per row: `gpu_exec_time +
+//! gpu_filter_time > gpu_total_time` exactly when the pipeline overlapped
+//! the two stages.
 //!
 //!   cargo bench --bench scheduler
 //!   HKNN_RANKS=8 cargo bench --bench scheduler
@@ -29,12 +34,14 @@ fn run_one(
     case: &Case,
     scheduler: Scheduler,
     ranks: usize,
+    pipelined: bool,
 ) -> HybridReport {
     let mut p = HybridParams::new(case.k);
     p.cpu_ranks = ranks;
     p.gamma = case.gamma;
     p.rho = case.rho;
     p.scheduler = scheduler;
+    p.pipelined_gpu = pipelined;
     match &case.s {
         None => HybridKnnJoin::run(engine, &case.r, &p).expect(case.name),
         Some(s) => HybridKnnJoin::run_rs(engine, &case.r, s, &p).expect(case.name),
@@ -97,14 +104,19 @@ fn main() {
     ];
 
     let mut rows = Vec::new();
-    println!("scheduler shootout: static split vs dynamic queue (ranks={ranks}, hw={hw})");
     println!(
-        "{:>34} {:>12} {:>12} {:>8} {:>14} {:>10}",
-        "case", "static s", "dynamic s", "speedup", "claims g/c", "q_fail"
+        "scheduler shootout: static split vs dynamic queue, sync vs \
+         pipelined GPU (ranks={ranks}, hw={hw})"
+    );
+    println!(
+        "{:>34} {:>10} {:>10} {:>10} {:>8} {:>7} {:>9} {:>8}",
+        "case", "static s", "dyn-sync", "dyn-pipe", "speedup", "pipe x",
+        "overlap s", "q_fail"
     );
     for case in &cases {
-        let stat = run_one(&engine, case, Scheduler::StaticSplit, ranks);
-        let dyn_ = run_one(&engine, case, Scheduler::DynamicQueue, ranks);
+        let stat = run_one(&engine, case, Scheduler::StaticSplit, ranks, false);
+        let dyn_sync = run_one(&engine, case, Scheduler::DynamicQueue, ranks, false);
+        let dyn_ = run_one(&engine, case, Scheduler::DynamicQueue, ranks, true);
         let gpu_claims = dyn_
             .claims
             .iter()
@@ -112,20 +124,29 @@ fn main() {
             .count();
         let cpu_claims = dyn_.claims.len() - gpu_claims;
         let speedup = stat.response_time / dyn_.response_time.max(1e-12);
+        let pipeline_speedup =
+            dyn_sync.response_time / dyn_.response_time.max(1e-12);
         println!(
-            "{:>34} {:>12.4} {:>12.4} {:>7.2}x {:>8}/{:<5} {:>10}",
+            "{:>34} {:>10.4} {:>10.4} {:>10.4} {:>7.2}x {:>6.2}x {:>9.4} {:>8}",
             case.name,
             stat.response_time,
+            dyn_sync.response_time,
             dyn_.response_time,
             speedup,
-            gpu_claims,
-            cpu_claims,
+            pipeline_speedup,
+            dyn_.gpu_filter_overlap,
             dyn_.q_fail
         );
-        // both runs must have produced complete, identical-cardinality
-        // results - a scheduler can move work, never drop it
+        // all three runs must have produced complete, identical-
+        // cardinality results - a scheduler can move work, never drop it
         let solved_k = case.k.min(case.r.len().saturating_sub(1));
         assert_eq!(stat.result.solved_count(solved_k), case.r.len(), "{}", case.name);
+        assert_eq!(
+            dyn_sync.result.solved_count(solved_k),
+            case.r.len(),
+            "{}",
+            case.name
+        );
         assert_eq!(dyn_.result.solved_count(solved_k), case.r.len(), "{}", case.name);
         rows.push(Json::obj(vec![
             ("case", Json::Str(case.name.into())),
@@ -135,8 +156,13 @@ fn main() {
             ("gamma", Json::Num(case.gamma)),
             ("rho", Json::Num(case.rho)),
             ("static_secs", Json::Num(stat.response_time)),
+            ("dynamic_sync_secs", Json::Num(dyn_sync.response_time)),
             ("dynamic_secs", Json::Num(dyn_.response_time)),
             ("speedup", Json::Num(speedup)),
+            ("pipeline_speedup", Json::Num(pipeline_speedup)),
+            ("gpu_exec_time", Json::Num(dyn_.gpu_exec_time)),
+            ("gpu_filter_time", Json::Num(dyn_.gpu_filter_time)),
+            ("gpu_filter_overlap", Json::Num(dyn_.gpu_filter_overlap)),
             ("static_q_gpu", Json::Num(stat.q_gpu as f64)),
             ("static_q_cpu", Json::Num(stat.q_cpu as f64)),
             ("dynamic_q_gpu", Json::Num(dyn_.q_gpu as f64)),
@@ -158,7 +184,9 @@ fn main() {
             "contender",
             Json::Str(
                 "density-ordered shared work queue, two-ended dynamic claims, \
-                 live Q^Fail recirculation"
+                 live Q^Fail recirculation, pipelined GPU master \
+                 (exec/filter overlap via double-buffered claims; \
+                 dynamic_sync_secs = same queue with the synchronous drain)"
                     .into(),
             ),
         ),

@@ -1,4 +1,4 @@
-//! One runner per paper table / figure (see DESIGN.md §4 for the index).
+//! One runner per paper table / figure (see DESIGN.md §6 for the index).
 //! Every runner returns `Table`s whose rows mirror what the paper plots,
 //! so `cargo bench` output can be compared against the paper shape by
 //! shape (EXPERIMENTS.md records the comparison).

@@ -234,6 +234,8 @@ pub fn exact_ann_drain(
                         queries: qs.len(),
                         est_work: work,
                         secs,
+                        exec_secs: 0.0,
+                        filter_secs: 0.0,
                         from_recirc: false,
                     });
                     tail_q += qs.len();
@@ -255,6 +257,8 @@ pub fn exact_ann_drain(
                         queries: ids.len(),
                         est_work: work,
                         secs,
+                        exec_secs: 0.0,
+                        filter_secs: 0.0,
                         from_recirc: true,
                     });
                     rec_q += ids.len();

@@ -23,7 +23,13 @@
 //! work off the dense head of the shared work queue (`sched`), sizes each
 //! next claim from the live CPU/GPU work rates (Eq. 6 as feedback), and
 //! *recirculates* failed queries into the queue for CPU ranks to absorb
-//! while the join is still running.
+//! while the join is still running. The queue drain runs as a two-stage
+//! pipeline by default (`GpuJoinParams::pipelined`): device execution of
+//! claim i+1 overlaps host filtering of claim i through two alternating
+//! staging arenas and a persistent `pool::stage_scope` worker pool - the
+//! batching scheme's exec/transfer/filter overlap (Sec. IV-B), applied
+//! to the claim loop. The synchronous drain survives as the ablation
+//! baseline and the single-core schedule.
 //!
 //! A query with >= K neighbors within ε is *exactly* solved: its true K
 //! nearest all lie within ε, and the grid walk provably visits every point
@@ -31,6 +37,8 @@
 
 use std::cell::UnsafeCell;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -61,6 +69,14 @@ pub struct GpuJoinParams {
     /// self-join semantics: drop candidate id == query id. Off for
     /// bipartite R JOIN S (Sec. III: "directly applicable to R x S").
     pub exclude_self: bool,
+    /// queue-driven drain only: overlap device execution of claim i+1
+    /// with host filtering of claim i through the double-buffered stage
+    /// pipeline. Off = the synchronous drain (exec and filtering
+    /// alternate per claim) - the ablation baseline, and what single-core
+    /// hosts use (the pipeline's extra threads would fight the PJRT pool
+    /// over one core). Results are bit-identical either way
+    /// (rust/tests/pipeline.rs).
+    pub pipelined: bool,
 }
 
 impl GpuJoinParams {
@@ -79,6 +95,7 @@ impl GpuJoinParams {
             assign: ThreadAssign::Static(8),
             estimator_frac: 0.01,
             exclude_self: true,
+            pipelined: true,
         }
     }
 }
@@ -124,6 +141,14 @@ pub struct GpuJoinStats {
     pub estimated_pairs: u64,
     pub result_pairs: u64,
     pub max_batch_pairs: u64,
+    /// master-thread seconds materialising, packing and executing tiles
+    /// (claim resolution included). `exec_time + filter_time >
+    /// total_time` is the observable signature of the pipelined drain
+    /// actually overlapping the two stages.
+    pub exec_time: f64,
+    /// filter-stage wall seconds (host-side ε test + heap merge) summed
+    /// over flush rounds
+    pub filter_time: f64,
     /// per-claim telemetry (queue-driven form only; empty for the list
     /// form)
     pub claims: Vec<ClaimRecord>,
@@ -238,7 +263,8 @@ pub fn gpu_join_rs_into(
         .cloned()
         .collect();
     let sampled_queries: usize = sample.iter().map(|c| c.queries.len()).sum();
-    let (_, _, sample_pairs) = exec_filter_cells(
+    let mut filter_time = 0f64;
+    let (_, _, sample_pairs, sample_filter_secs) = exec_filter_cells(
         engine,
         (r_data, data),
         (&plan_large, &plan_small),
@@ -247,6 +273,7 @@ pub fn gpu_join_rs_into(
         params,
         &mut kernel_time,
     )?;
+    filter_time += sample_filter_secs;
     let estimated_pairs = if sampled_queries > 0 {
         (sample_pairs as f64 * queries.len() as f64 / sampled_queries as f64)
             .ceil() as u64
@@ -276,15 +303,17 @@ pub fn gpu_join_rs_into(
         if batch.is_empty() {
             continue;
         }
-        let (batch_queries, mut heaps, batch_pairs) = exec_filter_cells(
-            engine,
-            (r_data, data),
-            (&plan_large, &plan_small),
-            use_topk,
-            batch,
-            params,
-            &mut kernel_time,
-        )?;
+        let (batch_queries, mut heaps, batch_pairs, batch_filter_secs) =
+            exec_filter_cells(
+                engine,
+                (r_data, data),
+                (&plan_large, &plan_small),
+                use_topk,
+                batch,
+                params,
+                &mut kernel_time,
+            )?;
+        filter_time += batch_filter_secs;
         for (pos, &q) in batch_queries.iter().enumerate() {
             let h = &mut heaps[pos];
             if h.len() >= params.k {
@@ -303,16 +332,19 @@ pub fn gpu_join_rs_into(
     }
     failed.sort_unstable();
 
+    let total_time = t_start.elapsed().as_secs_f64();
     Ok(GpuJoinStats {
         failed,
         solved,
         kernel_time,
-        total_time: t_start.elapsed().as_secs_f64(),
+        total_time,
         device_model,
         batches: executed_batches,
         estimated_pairs,
         result_pairs,
         max_batch_pairs,
+        exec_time: (total_time - filter_time).max(0.0),
+        filter_time,
         claims: Vec::new(),
     })
 }
@@ -338,6 +370,13 @@ pub fn gpu_join_rs_into(
 /// disjoint from tail claims by the two-ended cursor, and failed ids are
 /// written by whichever CPU rank claims them from recirculation, never
 /// here.
+///
+/// With `params.pipelined` the drain runs as a two-stage pipeline
+/// (`drain_pipelined`): the master executes claim i+1's tiles while the
+/// `streams` filter workers are still filtering claim i into its staging
+/// arena. Without it (`drain_sync`) exec and filtering alternate per
+/// claim - the ablation baseline. Both produce bit-identical results
+/// (rust/tests/pipeline.rs); see DESIGN.md §5 for the hand-off contract.
 #[allow(clippy::too_many_arguments)]
 pub fn gpu_join_drain(
     engine: &Engine,
@@ -355,13 +394,12 @@ pub fn gpu_join_drain(
 
     // seed claim first: a fast CPU must not drain the queue while we
     // compile tile plans
-    let mut target = sched::first_batch_work(
+    let target = sched::first_batch_work(
         queue.head_work_remaining(pos_cap),
         queue.dense_work(),
     )
     .min(buffer_cap);
-    let mut pending = queue.claim_head_work(target, pos_cap);
-    if pending.is_none() {
+    let Some(first) = queue.claim_head_work(target, pos_cap) else {
         return Ok(GpuJoinStats {
             failed: Vec::new(),
             solved: 0,
@@ -372,9 +410,11 @@ pub fn gpu_join_drain(
             estimated_pairs: 0,
             result_pairs: 0,
             max_batch_pairs: 0,
+            exec_time: 0.0,
+            filter_time: 0.0,
             claims: Vec::new(),
         });
-    }
+    };
 
     let plan_large = tiles::plan_for(engine, data.dims(), params.tile_class)?;
     let plan_small = tiles::plan_for(engine, data.dims(), TileClass::Small)
@@ -382,7 +422,64 @@ pub fn gpu_join_drain(
     let use_topk = params.use_topk
         && plan_large.topk_name.is_some()
         && params.k <= plan_large.topk_k;
+    let plans = (&plan_large, &plan_small);
 
+    if params.pipelined {
+        drain_pipelined(
+            engine, r_data, data, grid, queue, params, slots, pos_cap, plans,
+            use_topk, first, t_start,
+        )
+    } else {
+        drain_sync(
+            engine, r_data, data, grid, queue, params, slots, pos_cap, plans,
+            use_topk, first, t_start,
+        )
+    }
+}
+
+/// Materialise a claimed position range as per-cell work units (a claim
+/// may start or end mid-cell when clipped by the advancing tail; the
+/// partial remainder still shares its cell's candidate list). Appends
+/// each query's candidate count to `work_log` for the device model.
+fn claim_cells(
+    queue: &WorkQueue,
+    grid: &GridIndex,
+    r_data: &Dataset,
+    range: std::ops::Range<usize>,
+    work_log: &mut Vec<u64>,
+) -> Vec<WorkCell> {
+    let mut cells: Vec<WorkCell> = Vec::new();
+    for r in queue.cell_ranges(range) {
+        let qs = queue.query_slice(r).to_vec();
+        let candidates = grid.candidates_of(r_data.point(qs[0] as usize));
+        for _ in &qs {
+            work_log.push(candidates.len() as u64);
+        }
+        cells.push(WorkCell { queries: qs, candidates });
+    }
+    cells
+}
+
+/// The synchronous queue drain: device execution and host filtering
+/// alternate within each claim. Kept as the ablation baseline of the
+/// pipelined drain and as the single-core schedule (where the pipeline's
+/// extra concurrency would only thrash one core).
+#[allow(clippy::too_many_arguments)]
+fn drain_sync(
+    engine: &Engine,
+    r_data: &Dataset,
+    data: &Dataset,
+    grid: &GridIndex,
+    queue: &WorkQueue,
+    params: &GpuJoinParams,
+    slots: &SoaSlots<'_>,
+    pos_cap: usize,
+    plans: (&tiles::TilePlan, &tiles::TilePlan),
+    use_topk: bool,
+    first: std::ops::Range<usize>,
+    t_start: Instant,
+) -> Result<GpuJoinStats> {
+    let buffer_cap = params.buffer_pairs.max(1);
     let mut kernel_time = 0f64;
     let mut claims: Vec<ClaimRecord> = Vec::new();
     let mut failed_all: Vec<u32> = Vec::new();
@@ -392,31 +489,24 @@ pub fn gpu_join_drain(
     let mut max_batch_pairs = 0u64;
     let mut batches = 0usize;
     let mut gpu_busy = 0f64;
+    let mut exec_time = 0f64;
+    let mut filter_time = 0f64;
     let mut work_done = 0u64;
 
+    let mut pending = Some(first);
     while let Some(range) = pending.take() {
         let t_claim = Instant::now();
-        // materialise the claim as per-cell work units (a claim may start
-        // or end mid-cell when clipped by the advancing tail; the partial
-        // remainder still shares its cell's candidate list)
-        let mut cells: Vec<WorkCell> = Vec::new();
-        for r in queue.cell_ranges(range.clone()) {
-            let qs = queue.query_slice(r).to_vec();
-            let candidates = grid.candidates_of(r_data.point(qs[0] as usize));
-            for _ in &qs {
-                work_log.push(candidates.len() as u64);
-            }
-            cells.push(WorkCell { queries: qs, candidates });
-        }
-        let (batch_queries, mut heaps, batch_pairs) = exec_filter_cells(
-            engine,
-            (r_data, data),
-            (&plan_large, &plan_small),
-            use_topk,
-            &cells,
-            params,
-            &mut kernel_time,
-        )?;
+        let cells = claim_cells(queue, grid, r_data, range.clone(), &mut work_log);
+        let (batch_queries, mut heaps, batch_pairs, filter_secs) =
+            exec_filter_cells(
+                engine,
+                (r_data, data),
+                plans,
+                use_topk,
+                &cells,
+                params,
+                &mut kernel_time,
+            )?;
         let mut failed_batch = Vec::new();
         for (pos, &q) in batch_queries.iter().enumerate() {
             let h = &mut heaps[pos];
@@ -437,6 +527,9 @@ pub fn gpu_join_drain(
         batches += 1;
         let secs = t_claim.elapsed().as_secs_f64();
         gpu_busy += secs;
+        let exec_secs = (secs - filter_secs).max(0.0);
+        exec_time += exec_secs;
+        filter_time += filter_secs;
         let est = queue.range_work(range.clone());
         work_done += est;
         claims.push(ClaimRecord {
@@ -444,12 +537,14 @@ pub fn gpu_join_drain(
             queries: range.len(),
             est_work: est,
             secs,
+            exec_secs,
+            filter_secs,
             from_recirc: false,
         });
 
         // Eq. 6 as feedback: size the next claim from live rates
         let gpu_rate = if gpu_busy > 0.0 { work_done as f64 / gpu_busy } else { 0.0 };
-        target = sched::next_batch_work(
+        let target = sched::next_batch_work(
             queue.head_work_remaining(pos_cap),
             gpu_rate,
             queue.cpu_work_rate(),
@@ -470,7 +565,325 @@ pub fn gpu_join_drain(
         estimated_pairs: work_done,
         result_pairs,
         max_batch_pairs,
+        exec_time,
+        filter_time,
         claims,
+    })
+}
+
+/// Shared staging half of one in-flight claim: the claim's flat query
+/// list, the dense heap arena its filter rounds write, and the two
+/// accumulators the workers feed. Two of these alternate between the
+/// master (filling claim i+1) and the filter stage (draining claim i) -
+/// the double buffer of the pipelined drain. The plain fields are only
+/// mutated through `Arc::get_mut`, i.e. while no filter round holds a
+/// clone - uniqueness *is* the proof that the workers are done with it.
+struct ClaimStage {
+    batch_queries: Vec<u32>,
+    arena: HeapArena,
+    /// in-ε pairs found in this claim (filter workers accumulate)
+    pairs: AtomicU64,
+    /// filter wall nanoseconds over this claim's rounds (stage-pool
+    /// retire hook; overlaps the next claim's exec under the pipeline)
+    filter_nanos: AtomicU64,
+}
+
+impl ClaimStage {
+    fn new(k: usize) -> Self {
+        ClaimStage {
+            batch_queries: Vec::new(),
+            arena: HeapArena::new(0, k.max(1)),
+            pairs: AtomicU64::new(0),
+            filter_nanos: AtomicU64::new(0),
+        }
+    }
+}
+
+/// One flush round handed to the stage pool: a set of position-disjoint
+/// tiles targeting `stage`'s arena (a tile split across rounds re-appears
+/// in the next round; the pool's strict round ordering keeps that safe).
+struct FilterRound {
+    stage: Arc<ClaimStage>,
+    tiles: Vec<TileOut>,
+}
+
+/// Master-side half of an in-flight claim (never seen by the workers).
+struct ClaimMeta {
+    range: std::ops::Range<usize>,
+    est_work: u64,
+    /// master-thread seconds materialising + packing + executing
+    exec_secs: f64,
+    /// stage-pool epoch of the claim's last flush round (0 = none)
+    last_epoch: usize,
+}
+
+/// Accumulators of the pipelined drain, shared with the resolve path.
+#[derive(Default)]
+struct DrainAcc {
+    claims: Vec<ClaimRecord>,
+    failed: Vec<u32>,
+    work_log: Vec<u64>,
+    solved: usize,
+    result_pairs: u64,
+    max_batch_pairs: u64,
+    batches: usize,
+    exec_time: f64,
+    filter_time: f64,
+    kernel_time: f64,
+    work_done: u64,
+}
+
+/// Wait out a claim's outstanding filter rounds, then resolve its arena
+/// into result slots / Q^Fail and log the claim. Runs on the master
+/// thread only: slot writes and `push_failed` keep their single-writer /
+/// single-producer contracts. Under the pipeline this runs *after* the
+/// next claim was already taken off the head, so a claim's Q^Fail may
+/// recirculate behind its successor - the reordering the
+/// failure-injection suite pins down.
+#[allow(clippy::too_many_arguments)]
+fn resolve_stage(
+    stage: &mut Arc<ClaimStage>,
+    meta: ClaimMeta,
+    pool_handle: &pool::StageHandle<FilterRound>,
+    queue: &WorkQueue,
+    k: usize,
+    slots: &SoaSlots<'_>,
+    acc: &mut DrainAcc,
+) {
+    pool_handle.wait(meta.last_epoch);
+    let stage = Arc::get_mut(stage)
+        .expect("claim rounds retired but stage still shared");
+    let mut failed_batch = Vec::new();
+    for (pos, &q) in stage.batch_queries.iter().enumerate() {
+        let h = stage.arena.heap_mut(pos);
+        if h.len() >= k {
+            // SAFETY: head claims are disjoint from all other writers,
+            // and only the master thread resolves GPU-side slots.
+            unsafe { slots.slot(q as usize) }.write_heap(h);
+            acc.solved += 1;
+        } else {
+            failed_batch.push(q);
+        }
+    }
+    queue.push_failed(&failed_batch);
+    acc.failed.extend_from_slice(&failed_batch);
+
+    let batch_pairs = stage.pairs.load(Ordering::Relaxed);
+    let filter_secs = stage.filter_nanos.load(Ordering::Relaxed) as f64 / 1e9;
+    acc.result_pairs += batch_pairs;
+    acc.max_batch_pairs = acc.max_batch_pairs.max(batch_pairs);
+    acc.batches += 1;
+    acc.exec_time += meta.exec_secs;
+    acc.filter_time += filter_secs;
+    acc.claims.push(ClaimRecord {
+        arch: Arch::Gpu,
+        queries: meta.range.len(),
+        est_work: meta.est_work,
+        secs: meta.exec_secs + filter_secs,
+        exec_secs: meta.exec_secs,
+        filter_secs,
+        from_recirc: false,
+    });
+}
+
+/// The pipelined queue drain: device execution of claim i+1 overlaps
+/// host filtering of claim i.
+///
+/// * the master thread (PJRT client is !Send) claims, materialises and
+///   executes tiles, handing each flush round (≤ `round_cap` chunks) to
+///   a persistent pool of `streams` filter workers;
+/// * two [`ClaimStage`] staging sets alternate per claim: before slot
+///   i%2 is refilled for claim i, claim i-2's rounds are waited out and
+///   its arena resolved - so at any instant at most two claims are live,
+///   one filling and one filtering, and their arenas are position-
+///   disjoint because their queue claims are disjoint;
+/// * the hand-off is bounded (pool capacity 1, `round_cap` = half the
+///   synchronous flush envelope), so buffered device output stays within
+///   the former `chunk_cap` envelope: one round in flight + one filling;
+/// * the next claim is sized at claim time from the *exec-side* work
+///   rate (available before claim i's filter completes) against the live
+///   CPU rate - the telemetry split that makes claim-ahead sizing
+///   possible.
+#[allow(clippy::too_many_arguments)]
+fn drain_pipelined(
+    engine: &Engine,
+    r_data: &Dataset,
+    data: &Dataset,
+    grid: &GridIndex,
+    queue: &WorkQueue,
+    params: &GpuJoinParams,
+    slots: &SoaSlots<'_>,
+    pos_cap: usize,
+    plans: (&tiles::TilePlan, &tiles::TilePlan),
+    use_topk: bool,
+    first: std::ops::Range<usize>,
+    t_start: Instant,
+) -> Result<GpuJoinStats> {
+    let buffer_cap = params.buffer_pairs.max(1);
+    let eps2 = params.eps * params.eps;
+    let exclude_self = params.exclude_self;
+    // heap bound for the staging arenas; the solved test below uses the
+    // RAW params.k so the partition matches the synchronous drains even
+    // for the degenerate k = 0
+    let arena_k = params.k.max(1);
+    let n_workers = params.streams.max(1);
+    // Per-round chunk cap: HALF the synchronous flush envelope, so one
+    // round in flight plus one being filled never exceed the former
+    // `chunk_cap` worth of buffered device output.
+    let round_cap = (n_workers * 8 / 2).max(1);
+
+    let (master_out, _worker_units) = pool::stage_scope(
+        n_workers,
+        1, // bounded hand-off: one round queued/filtering at a time
+        |_w| (),
+        |_s: &mut (), job: &FilterRound, i: usize| {
+            let mut pairs = 0u64;
+            apply_tile(
+                &job.tiles[i],
+                &job.stage.batch_queries,
+                &job.stage.arena,
+                eps2,
+                exclude_self,
+                &mut pairs,
+            );
+            if pairs > 0 {
+                job.stage.pairs.fetch_add(pairs, Ordering::Relaxed);
+            }
+        },
+        |job: &FilterRound, wall: f64| {
+            job.stage
+                .filter_nanos
+                .fetch_add((wall * 1e9) as u64, Ordering::Relaxed);
+        },
+        |_s| (),
+        |pool_handle| -> Result<DrainAcc> {
+            let mut acc = DrainAcc::default();
+            let mut stages: [Arc<ClaimStage>; 2] = [
+                Arc::new(ClaimStage::new(arena_k)),
+                Arc::new(ClaimStage::new(arena_k)),
+            ];
+            let mut metas: [Option<ClaimMeta>; 2] = [None, None];
+            let mut claim_idx = 0usize;
+            let mut pending = Some(first);
+
+            while let Some(range) = pending.take() {
+                let si = claim_idx % 2;
+                // reclaim this staging set: the claim two back must fully
+                // filter and resolve before its arena is reused
+                if let Some(meta) = metas[si].take() {
+                    resolve_stage(
+                        &mut stages[si], meta, pool_handle, queue, params.k,
+                        slots, &mut acc,
+                    );
+                }
+                let t_exec = Instant::now();
+                let cells =
+                    claim_cells(queue, grid, r_data, range.clone(), &mut acc.work_log);
+                let n_queries: usize = cells.iter().map(|c| c.queries.len()).sum();
+                {
+                    // unique access: all of this set's rounds have retired
+                    let stage = Arc::get_mut(&mut stages[si])
+                        .expect("stage still shared at refill");
+                    stage.batch_queries.clear();
+                    stage
+                        .batch_queries
+                        .extend(cells.iter().flat_map(|c| c.queries.iter().copied()));
+                    stage.arena.reset(n_queries, arena_k);
+                    stage.pairs.store(0, Ordering::Relaxed);
+                    stage.filter_nanos.store(0, Ordering::Relaxed);
+                }
+                // execute this claim's tiles; claim i-1's rounds keep
+                // filtering on the workers while the device runs
+                let mut last_epoch = 0usize;
+                // master seconds spent BLOCKED in submit backpressure -
+                // that is the filter stage lagging, not device work, so it
+                // must not inflate exec_secs (or fabricate overlap, or
+                // bias the exec-side rate low)
+                let mut submit_wait = 0f64;
+                {
+                    let stage_arc = &stages[si];
+                    exec_cells_into_rounds(
+                        engine,
+                        (r_data, data),
+                        plans,
+                        use_topk,
+                        &cells,
+                        params,
+                        round_cap,
+                        &mut acc.kernel_time,
+                        &mut |tiles: Vec<TileOut>| {
+                            debug_assert!(
+                                tiles.iter().all(|t| t.pos.end <= n_queries),
+                                "round tile positions exceed the claim arena"
+                            );
+                            let len = tiles.len();
+                            let t_submit = Instant::now();
+                            last_epoch = pool_handle.submit(
+                                FilterRound { stage: Arc::clone(stage_arc), tiles },
+                                len,
+                            );
+                            submit_wait += t_submit.elapsed().as_secs_f64();
+                        },
+                    )?;
+                }
+                let est = queue.range_work(range.clone());
+                let exec_secs =
+                    (t_exec.elapsed().as_secs_f64() - submit_wait).max(0.0);
+                acc.work_done += est;
+                metas[si] =
+                    Some(ClaimMeta { range, est_work: est, exec_secs, last_epoch });
+                claim_idx += 1;
+
+                // claim-ahead sizing: the exec-side rate is known NOW,
+                // before this claim's filter completes; the CPU rate is
+                // read live off the queue at claim time
+                let exec_busy = acc.exec_time
+                    + metas.iter().flatten().map(|m| m.exec_secs).sum::<f64>();
+                let gpu_rate = if exec_busy > 0.0 {
+                    acc.work_done as f64 / exec_busy
+                } else {
+                    0.0
+                };
+                let target = sched::next_batch_work(
+                    queue.head_work_remaining(pos_cap),
+                    gpu_rate,
+                    queue.cpu_work_rate(),
+                )
+                .min(buffer_cap);
+                pending = queue.claim_head_work(target, pos_cap);
+            }
+
+            // head exhausted: drain the (≤2) in-flight claims in claim
+            // order - oldest staging set first
+            for off in 0..2 {
+                let si = (claim_idx + off) % 2;
+                if let Some(meta) = metas[si].take() {
+                    resolve_stage(
+                        &mut stages[si], meta, pool_handle, queue, params.k,
+                        slots, &mut acc,
+                    );
+                }
+            }
+            Ok(acc)
+        },
+    );
+
+    let mut acc = master_out?;
+    let device_model = DeviceModel::default().estimate(&acc.work_log, params.assign);
+    acc.failed.sort_unstable();
+    Ok(GpuJoinStats {
+        failed: acc.failed,
+        solved: acc.solved,
+        kernel_time: acc.kernel_time,
+        total_time: t_start.elapsed().as_secs_f64(),
+        device_model,
+        batches: acc.batches,
+        estimated_pairs: acc.work_done,
+        result_pairs: acc.result_pairs,
+        max_batch_pairs: acc.max_batch_pairs,
+        exec_time: acc.exec_time,
+        filter_time: acc.filter_time,
+        claims: acc.claims,
     })
 }
 
@@ -532,6 +945,28 @@ impl HeapArena {
 
     fn into_heaps(self) -> Vec<BoundedHeap> {
         self.heaps.into_iter().map(UnsafeCell::into_inner).collect()
+    }
+
+    /// Re-arm positions [0, n) for a new batch with bound `k`, reusing
+    /// allocations (the double-buffered staging path; positions beyond
+    /// `n` may hold stale heaps from a larger previous batch - they are
+    /// never read, resolve walks exactly the batch's query list).
+    fn reset(&mut self, n: usize, k: usize) {
+        let k = k.max(1);
+        for c in self.heaps.iter_mut().take(n) {
+            c.get_mut().reset(k);
+        }
+        if self.heaps.len() < n {
+            let more = n - self.heaps.len();
+            self.heaps
+                .extend((0..more).map(|_| UnsafeCell::new(BoundedHeap::new(k))));
+        }
+    }
+
+    /// Exclusive access to one position's heap - the master's resolve
+    /// path, where `&mut self` proves no filter worker is live.
+    fn heap_mut(&mut self, i: usize) -> &mut BoundedHeap {
+        self.heaps[i].get_mut()
     }
 }
 
@@ -655,43 +1090,31 @@ fn apply_tile(
     }
 }
 
-/// Execute the tile program over a set of cells and filter the outputs
-/// into a fresh dense heap arena. Device execution happens on this thread
-/// (the PJRT client is !Send, the paper's single GPU-master rank); device
-/// output is buffered up to a fixed number of *chunks* — the same unit
-/// the former stream channels bounded — then flushed to the `streams`
-/// filter workers. A query tile whose candidate list spans more chunks
-/// than the cap is split across flush rounds: rounds run sequentially, so
-/// the within-round position-disjointness that makes the arena race-free
-/// is preserved even when two rounds touch the same tile. The flush is
-/// synchronous — exec and filtering alternate within a batch rather than
-/// overlapping; overlapping them again via double-buffered queue claims
-/// is ROADMAP follow-up (e). Returns the batch's flat query list (cell by
-/// cell), one heap per position, and the in-ε pair count.
-fn exec_filter_cells(
+/// Execute the tile program over a set of cells on this thread (the PJRT
+/// client is !Send, the paper's single GPU-master rank), buffering device
+/// chunk outputs and handing them to `emit` in flush *rounds* of at most
+/// `round_cap` chunks (each <= qt x ct x 4B) — the unit the former stream
+/// channels bounded. Positions index the batch's flat query list, cell by
+/// cell. A query tile whose candidate list spans more chunks than the cap
+/// is split across rounds — the same position range re-appears in the
+/// next round — so consumers must process rounds *strictly sequentially*
+/// for the within-round position-disjointness that makes a heap arena
+/// race-free to hold. Both consumers do: the synchronous path filters
+/// each round inline before the next device call, and the pipelined
+/// drain's stage pool retires rounds in submission order.
+#[allow(clippy::too_many_arguments)]
+fn exec_cells_into_rounds(
     engine: &Engine,
     (r_data, data): (&Dataset, &Dataset),
     (plan_large, plan_small): (&tiles::TilePlan, &tiles::TilePlan),
     use_topk: bool,
     cells: &[WorkCell],
     params: &GpuJoinParams,
+    round_cap: usize,
     kernel_time: &mut f64,
-) -> Result<(Vec<u32>, Vec<BoundedHeap>, u64)> {
-    let n_queries: usize = cells.iter().map(|c| c.queries.len()).sum();
-    let batch_queries: Vec<u32> = cells
-        .iter()
-        .flat_map(|c| c.queries.iter().copied())
-        .collect();
-    let arena = HeapArena::new(n_queries, params.k.max(1));
-    let eps2 = params.eps * params.eps;
-    let n_workers = params.streams.max(1);
-    // flush threshold in buffered device chunks (each <= qt x ct x 4B):
-    // enough to keep every filter worker busy, small enough that host
-    // memory stays bounded regardless of any one cell's candidate count -
-    // the same unit the former sync_channel depth (4/worker) bounded.
-    let chunk_cap = n_workers * 8;
-
-    let mut pairs_total = 0u64;
+    emit: &mut dyn FnMut(Vec<TileOut>),
+) -> Result<()> {
+    let round_cap = round_cap.max(1);
     let mut tiles_buf: Vec<TileOut> = Vec::new();
     let mut chunks_buffered = 0usize;
     let mut q_buf: Vec<f32> = Vec::new();
@@ -744,23 +1167,14 @@ fn exec_filter_cells(
                 };
                 chunks.push(ChunkOut { cand_ids: c_chunk.to_vec(), payload });
                 chunks_buffered += 1;
-                if chunks_buffered >= chunk_cap {
-                    // emit the tile's chunks so far and flush; the next
-                    // round may revisit this tile's positions - rounds run
-                    // sequentially, so within-round disjointness holds
+                if chunks_buffered >= round_cap {
+                    // emit the tile's chunks so far and close the round;
+                    // the next round may revisit this tile's positions
                     tiles_buf.push(TileOut {
                         pos: base..base + q_chunk.len(),
                         chunks: std::mem::take(&mut chunks),
                     });
-                    pairs_total += filter_tiles(
-                        &tiles_buf,
-                        &batch_queries,
-                        &arena,
-                        eps2,
-                        params.exclude_self,
-                        n_workers,
-                    );
-                    tiles_buf.clear();
+                    emit(std::mem::take(&mut tiles_buf));
                     chunks_buffered = 0;
                 }
             }
@@ -770,16 +1184,69 @@ fn exec_filter_cells(
             base += q_chunk.len();
         }
     }
-    pairs_total += filter_tiles(
-        &tiles_buf,
-        &batch_queries,
-        &arena,
-        eps2,
-        params.exclude_self,
-        n_workers,
-    );
+    if !tiles_buf.is_empty() {
+        emit(std::mem::take(&mut tiles_buf));
+    }
+    Ok(())
+}
 
-    Ok((batch_queries, arena.into_heaps(), pairs_total))
+/// Execute + filter a set of cells *synchronously*: each flush round is
+/// filtered inline on `streams` workers before the next device call, so
+/// exec and filtering alternate within the batch. This is the list-driven
+/// join's path and the ablation baseline of the pipelined queue drain,
+/// which instead overlaps the two stages across claims (`drain_pipelined`
+/// / DESIGN.md §5). Returns the batch's flat query list (cell by cell),
+/// one heap per position, the in-ε pair count, and the filter wall
+/// seconds (the exec/filter telemetry split).
+fn exec_filter_cells(
+    engine: &Engine,
+    (r_data, data): (&Dataset, &Dataset),
+    (plan_large, plan_small): (&tiles::TilePlan, &tiles::TilePlan),
+    use_topk: bool,
+    cells: &[WorkCell],
+    params: &GpuJoinParams,
+    kernel_time: &mut f64,
+) -> Result<(Vec<u32>, Vec<BoundedHeap>, u64, f64)> {
+    let n_queries: usize = cells.iter().map(|c| c.queries.len()).sum();
+    let batch_queries: Vec<u32> = cells
+        .iter()
+        .flat_map(|c| c.queries.iter().copied())
+        .collect();
+    let arena = HeapArena::new(n_queries, params.k.max(1));
+    let eps2 = params.eps * params.eps;
+    let n_workers = params.streams.max(1);
+    // flush threshold in buffered device chunks: enough to keep every
+    // filter worker busy, small enough that host memory stays bounded
+    // regardless of any one cell's candidate count - the same unit the
+    // former sync_channel depth (4/worker) bounded.
+    let chunk_cap = n_workers * 8;
+
+    let mut pairs_total = 0u64;
+    let mut filter_secs = 0f64;
+    exec_cells_into_rounds(
+        engine,
+        (r_data, data),
+        (plan_large, plan_small),
+        use_topk,
+        cells,
+        params,
+        chunk_cap,
+        kernel_time,
+        &mut |tiles: Vec<TileOut>| {
+            let t = Instant::now();
+            pairs_total += filter_tiles(
+                &tiles,
+                &batch_queries,
+                &arena,
+                eps2,
+                params.exclude_self,
+                n_workers,
+            );
+            filter_secs += t.elapsed().as_secs_f64();
+        },
+    )?;
+
+    Ok((batch_queries, arena.into_heaps(), pairs_total, filter_secs))
 }
 
 #[cfg(test)]
@@ -913,6 +1380,122 @@ mod tests {
         assert!(out.solved + out.failed.len() == queries.len());
         assert!(out.kernel_time > 0.0);
         assert!(out.device_model.threads > 0);
+    }
+
+    /// Test replica of `exec_cells_into_rounds`' buffering arithmetic:
+    /// given cell shapes (queries, candidates) and tile dims, produce the
+    /// flush rounds as (position range, chunk count) tiles, exactly as
+    /// the exec loop would emit them.
+    fn plan_rounds(
+        shapes: &[(usize, usize)],
+        qt: usize,
+        ct: usize,
+        cap: usize,
+    ) -> Vec<Vec<(std::ops::Range<usize>, usize)>> {
+        let cap = cap.max(1);
+        let mut rounds = Vec::new();
+        let mut buf: Vec<(std::ops::Range<usize>, usize)> = Vec::new();
+        let mut buffered = 0usize;
+        let mut base = 0usize;
+        for &(nq, nc) in shapes {
+            let n_cchunks = nc.div_ceil(ct);
+            let mut q0 = 0usize;
+            while q0 < nq {
+                let qlen = qt.min(nq - q0);
+                let mut chunks_here = 0usize;
+                for _ in 0..n_cchunks {
+                    chunks_here += 1;
+                    buffered += 1;
+                    if buffered >= cap {
+                        buf.push((base..base + qlen, chunks_here));
+                        chunks_here = 0;
+                        rounds.push(std::mem::take(&mut buf));
+                        buffered = 0;
+                    }
+                }
+                if chunks_here > 0 {
+                    buf.push((base..base + qlen, chunks_here));
+                }
+                base += qlen;
+                q0 += qlen;
+            }
+        }
+        if !buf.is_empty() {
+            rounds.push(buf);
+        }
+        rounds
+    }
+
+    #[test]
+    fn flush_rounds_position_disjoint_across_staging_sets() {
+        // The double-buffer soundness property: for random cell/chunk
+        // shapes, (a) no queue position is aliased within a flush round,
+        // (b) no round exceeds the chunk cap (the bounded hand-off), (c)
+        // every (position, candidate-chunk) pair is covered exactly once
+        // across rounds - tiles split across rounds included - and (d)
+        // the two staging sets' claims occupy disjoint queue intervals,
+        // so concurrently-live arenas can never alias a queue position.
+        use crate::util::prop;
+        prop::cases(60, 0x0D15C0, |rng| {
+            let qt = 1 + rng.below(8);
+            let ct = 1 + rng.below(8);
+            let cap = 1 + rng.below(6);
+            // two consecutive claims = the two staging sets; claim B's
+            // queue positions start where claim A's end
+            let claims: Vec<Vec<(usize, usize)>> = (0..2)
+                .map(|_| {
+                    (0..1 + rng.below(6))
+                        .map(|_| (1 + rng.below(20), rng.below(40)))
+                        .collect()
+                })
+                .collect();
+            let mut offset = 0usize;
+            let mut intervals = Vec::new();
+            for shapes in &claims {
+                let n: usize = shapes.iter().map(|s| s.0).sum();
+                // expected chunk coverage per claim-local position
+                let mut expect = vec![0usize; n];
+                let mut p = 0usize;
+                for &(nq, nc) in shapes {
+                    for _ in 0..nq {
+                        expect[p] = nc.div_ceil(ct);
+                        p += 1;
+                    }
+                }
+                let rounds = plan_rounds(shapes, qt, ct, cap);
+                let mut got = vec![0usize; n];
+                for round in &rounds {
+                    // (b) bounded hand-off: a round never buffers more
+                    // than `cap` device chunks
+                    let chunks: usize = round.iter().map(|t| t.1).sum();
+                    assert!(chunks <= cap, "round of {chunks} chunks > cap {cap}");
+                    // (a) within-round position disjointness
+                    let mut in_round = vec![false; n];
+                    for (pos, nchunks) in round {
+                        assert!(pos.end <= n, "tile escapes the claim arena");
+                        assert!(!pos.is_empty(), "empty tile emitted");
+                        for i in pos.clone() {
+                            assert!(
+                                !in_round[i],
+                                "position {i} aliased within one round"
+                            );
+                            in_round[i] = true;
+                            got[i] += nchunks;
+                        }
+                    }
+                }
+                // (c) exact coverage, split tiles included
+                assert_eq!(got, expect, "per-position chunk coverage");
+                intervals.push(offset..offset + n);
+                offset += n;
+            }
+            // (d) the staging sets' queue intervals are disjoint, so the
+            // two live arenas never map to one queue position
+            assert!(
+                intervals[0].end <= intervals[1].start,
+                "staging-set claims overlap in queue space"
+            );
+        });
     }
 
     #[test]

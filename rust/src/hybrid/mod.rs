@@ -10,7 +10,9 @@
 //!    GPU's first batch, ρ reserves the sparse tail         [timed]
 //! 6. drain the queue concurrently: the GPU master (this
 //!    thread owns the PJRT client) claims work-sized batches
-//!    off the dense head, CPU ranks chunk through the sparse
+//!    off the dense head - pipelined, so device execution of
+//!    claim i+1 overlaps host filtering of claim i
+//!    (DESIGN.md §5) - CPU ranks chunk through the sparse
 //!    tail, and the two fronts meet in the middle; Q^Fail
 //!    recirculates into the live queue and is absorbed by
 //!    the CPU ranks while the join runs - the serial Q^Fail
@@ -86,6 +88,13 @@ pub struct HybridParams {
     pub buffer_pairs: u64,
     /// stream workers overlapping device exec and host filtering
     pub streams: usize,
+    /// pipelined GPU master (dynamic queue only): overlap device exec of
+    /// claim i+1 with host filtering of claim i through double-buffered
+    /// staging arenas. Off = the synchronous drain (the ablation
+    /// baseline benches/scheduler.rs measures against). Ignored on
+    /// single-core hosts and under `Scheduler::StaticSplit`, which always
+    /// take the synchronous path. Results are identical either way.
+    pub pipelined_gpu: bool,
     pub selector: EpsilonSelector,
     /// process only a fraction f of the queries (Table VI parameter
     /// recovery); 1.0 = all
@@ -112,6 +121,7 @@ impl HybridParams {
             assign: ThreadAssign::Static(8),
             buffer_pairs: 10_000_000,
             streams: 3,
+            pipelined_gpu: true,
             selector: EpsilonSelector::default(),
             query_fraction: 1.0,
             scheduler: Scheduler::DynamicQueue,
@@ -150,6 +160,15 @@ pub struct HybridReport {
     pub gpu_result_pairs: u64,
     pub device_model_seconds: f64,
     pub solved_on_gpu: usize,
+    /// master-thread seconds materialising/packing/executing GPU claims
+    pub gpu_exec_time: f64,
+    /// filter-stage wall seconds over the GPU claims' flush rounds
+    pub gpu_filter_time: f64,
+    /// seconds of exec/filter overlap the pipelined drain achieved:
+    /// `max(0, gpu_exec_time + gpu_filter_time - gpu phase wall)`. 0 on
+    /// the synchronous paths - this is the observable the sync-vs-
+    /// pipelined bench column tracks.
+    pub gpu_filter_overlap: f64,
     /// per-claim scheduling telemetry (dynamic queue only; empty under
     /// the static split)
     pub claims: Vec<ClaimRecord>,
@@ -270,6 +289,18 @@ impl HybridKnnJoin {
             )
         });
 
+        // Scheduling: with >1 hardware threads the GPU master and the CPU
+        // ranks drain the queue concurrently; on a single-core host the
+        // "concurrency" would only make the PJRT thread pool and the rank
+        // threads fight over one core (~7x slowdown measured), so the GPU
+        // master runs first - capped at the γ dense prefix, so the
+        // sequential schedule equals the static split - and the CPU ranks
+        // drain the rest plus the recirculated failures afterwards. The
+        // pipelined drain is gated the same way: its filter workers only
+        // pay off when they have cores to overlap on.
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
         let gpu_params = GpuJoinParams {
             k: params.k,
             eps: eps_sel.eps,
@@ -280,20 +311,10 @@ impl HybridKnnJoin {
             assign: params.assign,
             estimator_frac: 0.01,
             exclude_self: self_join,
+            pipelined: params.pipelined_gpu && hw > 1,
         };
         let mut result = KnnResult::new(r_data.len(), params.k);
         let slots = result.slots();
-
-        // Scheduling: with >1 hardware threads the GPU master and the CPU
-        // ranks drain the queue concurrently; on a single-core host the
-        // "concurrency" would only make the PJRT thread pool and the rank
-        // threads fight over one core (~7x slowdown measured), so the GPU
-        // master runs first - capped at the γ dense prefix, so the
-        // sequential schedule equals the static split - and the CPU ranks
-        // drain the rest plus the recirculated failures afterwards.
-        let hw = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
         let pos_cap = if hw > 1 { queue.len() } else { queue.dense_prefix() };
         let t_main = std::time::Instant::now();
         // The CPU ranks only exit after observing gpu_done; release them on
@@ -342,6 +363,8 @@ impl HybridKnnJoin {
             (0.0, 0usize, 0u64);
         let (mut device_model_seconds, mut solved_on_gpu, mut gpu_total) =
             (0.0, 0usize, 0.0);
+        let (mut gpu_exec_time, mut gpu_filter_time, mut gpu_filter_overlap) =
+            (0.0, 0.0, 0.0f64);
         let mut claims: Vec<ClaimRecord> = Vec::new();
         let mut q_fail = 0usize;
         if let Some(g) = gpu_stats {
@@ -351,6 +374,11 @@ impl HybridKnnJoin {
             device_model_seconds = g.device_model.seconds;
             solved_on_gpu = g.solved;
             gpu_total = g.total_time;
+            gpu_exec_time = g.exec_time;
+            gpu_filter_time = g.filter_time;
+            // exec + filter exceeding the GPU phase wall time is exactly
+            // the pipeline's overlap made visible
+            gpu_filter_overlap = (g.exec_time + g.filter_time - g.total_time).max(0.0);
             q_fail = g.failed.len();
             claims.extend(g.claims);
         }
@@ -412,6 +440,9 @@ impl HybridKnnJoin {
             gpu_result_pairs: gpu_pairs,
             device_model_seconds,
             solved_on_gpu,
+            gpu_exec_time,
+            gpu_filter_time,
+            gpu_filter_overlap,
             claims,
         })
     }
@@ -461,6 +492,9 @@ impl HybridKnnJoin {
             assign: params.assign,
             estimator_frac: 0.01,
             exclude_self: self_join,
+            // the list-driven form is always synchronous - the static
+            // split is the whole-pipeline ablation baseline
+            pipelined: false,
         };
         let mut result = KnnResult::new(r_data.len(), params.k);
         let slots = result.slots();
@@ -516,6 +550,7 @@ impl HybridKnnJoin {
         let (mut gpu_kernel_time, mut gpu_batches, mut gpu_pairs) = (0.0, 0usize, 0u64);
         let (mut device_model_seconds, mut solved_on_gpu, mut gpu_total) =
             (0.0, 0usize, 0.0);
+        let (mut gpu_exec_time, mut gpu_filter_time) = (0.0, 0.0);
         if let Some(g) = gpu_out {
             gpu_kernel_time = g.kernel_time;
             gpu_batches = g.batches;
@@ -523,6 +558,8 @@ impl HybridKnnJoin {
             device_model_seconds = g.device_model.seconds;
             solved_on_gpu = g.solved;
             gpu_total = g.total_time;
+            gpu_exec_time = g.exec_time;
+            gpu_filter_time = g.filter_time;
         }
 
         // T1: mean per-query EXACT-ANN time (Sec. VI-E2). On an
@@ -576,6 +613,10 @@ impl HybridKnnJoin {
             gpu_result_pairs: gpu_pairs,
             device_model_seconds,
             solved_on_gpu,
+            gpu_exec_time,
+            gpu_filter_time,
+            // the synchronous list form alternates the stages: no overlap
+            gpu_filter_overlap: 0.0,
             claims: Vec::new(),
         })
     }

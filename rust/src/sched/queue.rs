@@ -45,8 +45,18 @@ pub struct ClaimRecord {
     pub queries: usize,
     /// estimated work (candidate scans) of the claim
     pub est_work: u64,
-    /// wall seconds spent servicing it
+    /// seconds spent servicing the claim. For pipelined GPU claims this
+    /// is `exec_secs + filter_secs` (resource time - the two components
+    /// overlap in wall time); everywhere else it is plain wall time.
     pub secs: f64,
+    /// GPU claims: master-thread seconds materialising, packing and
+    /// executing the claim's tiles. 0 for CPU claims.
+    pub exec_secs: f64,
+    /// GPU claims: filter-stage wall seconds over the claim's flush
+    /// rounds. Under the pipelined drain this overlaps the *next* claim's
+    /// `exec_secs`, which is what makes Σexec + Σfilter exceed the GPU
+    /// phase wall time when the pipeline is working. 0 for CPU claims.
+    pub filter_secs: f64,
     /// true when the claim drained recirculated Q^Fail queries
     pub from_recirc: bool,
 }

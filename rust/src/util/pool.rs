@@ -15,9 +15,20 @@
 //! batches off the dense head while CPU ranks chunk through the sparse
 //! tail, so the CPU/GPU split is discovered at run time instead of
 //! predicted up front.
+//!
+//! `stage_scope` is the pipeline variant of `parallel_chunks_stateful`:
+//! instead of spawning workers per call, it keeps a *persistent* pool of
+//! stateful workers alive next to a producing master thread. The master
+//! submits bounded *rounds* of work (the staged flush sets of the
+//! pipelined GPU drain) and keeps producing while the workers chew
+//! through them strictly in submission order - the hand-off that lets
+//! device execution of claim i+1 overlap host filtering of claim i.
 
+use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 /// Run `ranks` workers; worker `k` receives its rank id. Results are
 /// returned in rank order. Panics propagate.
@@ -113,6 +124,341 @@ where
     F: Fn(Range<usize>) + Sync,
 {
     parallel_chunks_stateful(n, workers, chunk, |_| (), |(), r| f(r), |()| ());
+}
+
+/// One submitted round of a [`stage_scope`] pipeline: a job plus its item
+/// count and claim bookkeeping. The job is boxed so its heap address
+/// stays stable while the `VecDeque` grows and rounds move - workers hold
+/// raw pointers into it between `take` and `finish`.
+struct Round<J> {
+    /// 1-based submission index; `completed` reports these in order
+    epoch: usize,
+    job: Box<J>,
+    len: usize,
+    /// next item to hand out
+    next: usize,
+    /// items handed out but not yet finished
+    active: usize,
+    /// set when the first item is taken (round wall-time start)
+    started: Option<Instant>,
+}
+
+struct StageQueue<J> {
+    rounds: VecDeque<Round<J>>,
+    /// rounds submitted so far (== the last epoch issued)
+    submitted: usize,
+    /// highest epoch fully processed; rounds retire strictly in order
+    completed: usize,
+    closed: bool,
+    /// a worker panicked: the front round may never complete, so the
+    /// blocking master entry points panic instead of waiting forever
+    failed: bool,
+}
+
+/// Hand-off between the master thread and the stage workers of a
+/// [`stage_scope`] pipeline. The master `submit`s rounds (blocking while
+/// `capacity` rounds are already in flight - the bounded hand-off that
+/// keeps host memory inside the staging envelope) and `wait`s for their
+/// completion; workers drain rounds *strictly in submission order*, so
+/// two rounds never run concurrently - the within-round disjointness
+/// that makes the filter arena race-free extends across rounds for free.
+pub struct StageHandle<J> {
+    shared: Mutex<StageQueue<J>>,
+    /// master waits here (completions free capacity / advance `wait`)
+    cv_space: Condvar,
+    /// workers wait here (new rounds / front-round retirement)
+    cv_work: Condvar,
+    capacity: usize,
+}
+
+impl<J: Send> StageHandle<J> {
+    fn new(capacity: usize) -> Self {
+        StageHandle {
+            shared: Mutex::new(StageQueue {
+                rounds: VecDeque::new(),
+                submitted: 0,
+                completed: 0,
+                closed: false,
+                failed: false,
+            }),
+            cv_space: Condvar::new(),
+            cv_work: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Submit a round of `len` items; blocks while `capacity` rounds are
+    /// in flight. Returns the round's epoch (1-based, monotone).
+    pub fn submit(&self, job: J, len: usize) -> usize {
+        let mut g = self.shared.lock().unwrap();
+        while g.rounds.len() >= self.capacity && !g.failed {
+            g = self.cv_space.wait(g).unwrap();
+        }
+        assert!(!g.failed, "stage pool failed: a worker panicked");
+        g.submitted += 1;
+        let epoch = g.submitted;
+        g.rounds.push_back(Round {
+            epoch,
+            job: Box::new(job),
+            len,
+            next: 0,
+            active: 0,
+            started: None,
+        });
+        drop(g);
+        self.cv_work.notify_all();
+        epoch
+    }
+
+    /// Block until every round up to and including `epoch` has retired.
+    pub fn wait(&self, epoch: usize) {
+        let mut g = self.shared.lock().unwrap();
+        while g.completed < epoch && !g.failed {
+            g = self.cv_space.wait(g).unwrap();
+        }
+        assert!(!g.failed, "stage pool failed: a worker panicked");
+    }
+
+    /// Block until every round submitted so far has retired.
+    pub fn drain(&self) {
+        let mut g = self.shared.lock().unwrap();
+        let target = g.submitted;
+        while g.completed < target && !g.failed {
+            g = self.cv_space.wait(g).unwrap();
+        }
+        assert!(!g.failed, "stage pool failed: a worker panicked");
+    }
+
+    /// Rounds submitted so far.
+    pub fn submitted(&self) -> usize {
+        self.shared.lock().unwrap().submitted
+    }
+
+    /// Rounds fully processed so far.
+    pub fn completed(&self) -> usize {
+        self.shared.lock().unwrap().completed
+    }
+
+    /// Lock, recovering from poisoning - used on the paths that must
+    /// still run while another thread is unwinding (close, finish), so
+    /// a panic stays a panic instead of becoming a deadlock or abort.
+    fn lock_recover(&self) -> std::sync::MutexGuard<'_, StageQueue<J>> {
+        match self.shared.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Mark the pool closed and wake every worker; workers exit once the
+    /// queued rounds are drained.
+    fn close(&self) {
+        let mut g = self.lock_recover();
+        g.closed = true;
+        drop(g);
+        self.cv_work.notify_all();
+    }
+
+    /// Mark the pool failed (a worker is unwinding: its round may never
+    /// complete) and wake everyone - the master's blocking entry points
+    /// panic instead of waiting on a round that cannot retire, and idle
+    /// workers exit.
+    fn fail(&self) {
+        let mut g = self.lock_recover();
+        g.failed = true;
+        drop(g);
+        self.cv_space.notify_all();
+        self.cv_work.notify_all();
+    }
+
+    /// Take one item off the front round, retiring exhausted rounds along
+    /// the way. Returns a raw pointer to the round's job plus the item
+    /// index, or `None` once the pool is closed and drained.
+    ///
+    /// The pointer stays valid until the matching [`finish`]: the job is
+    /// boxed (heap address stable under queue growth) and a round is only
+    /// popped once `active == 0`, i.e. when no item pointer is live.
+    fn take(&self, retire: &(impl Fn(&J, f64) + Sync)) -> Option<(*const J, usize)> {
+        enum Action<J> {
+            Take(*const J, usize),
+            Retire,
+            Wait,
+            Exit,
+        }
+        let mut g = self.shared.lock().unwrap();
+        loop {
+            let act: Action<J> = if g.failed {
+                // a sibling worker is unwinding: results are no longer
+                // trustworthy, stop drawing work
+                Action::Exit
+            } else if let Some(front) = g.rounds.front_mut() {
+                if front.next < front.len {
+                    if front.started.is_none() {
+                        front.started = Some(Instant::now());
+                    }
+                    let i = front.next;
+                    front.next += 1;
+                    front.active += 1;
+                    Action::Take(&*front.job as *const J, i)
+                } else if front.active == 0 {
+                    // exhausted (or empty) round with no live items
+                    Action::Retire
+                } else {
+                    // exhausted but other workers still processing: rounds
+                    // run strictly in order, so wait for retirement
+                    Action::Wait
+                }
+            } else if g.closed {
+                Action::Exit
+            } else {
+                Action::Wait
+            };
+            match act {
+                Action::Take(j, i) => return Some((j, i)),
+                Action::Exit => return None,
+                Action::Retire => {
+                    let r = g.rounds.pop_front().expect("retire with no round");
+                    let epoch = r.epoch;
+                    let wall =
+                        r.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+                    // retire + job destruction run under the lock, BEFORE
+                    // `completed` is published: a master woken by `wait`
+                    // may immediately assert uniqueness of state the job
+                    // still references (the drain's Arc::get_mut resolve),
+                    // so the job must be gone by the time the epoch is
+                    // observable. Keep callbacks light (one atomic add).
+                    retire(&r.job, wall);
+                    drop(r);
+                    g.completed = epoch;
+                    drop(g);
+                    self.cv_space.notify_all();
+                    self.cv_work.notify_all();
+                    g = self.shared.lock().unwrap();
+                }
+                Action::Wait => {
+                    g = self.cv_work.wait(g).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Release one item hold on the front round (the worker's round is
+    /// necessarily still the front: rounds retire in order and ours has a
+    /// live item). When this was the round's last item, retire it HERE
+    /// rather than in the next `take`: this may be the last live worker
+    /// (the others exited - or this one is unwinding and will never take
+    /// again), and a round nobody retires would deadlock the master.
+    fn finish(&self, retire: &(impl Fn(&J, f64) + Sync)) {
+        let mut g = self.lock_recover();
+        let front = g.rounds.front_mut().expect("finish with no round");
+        debug_assert!(front.active > 0, "finish without a taken item");
+        front.active -= 1;
+        if front.active == 0 && front.next >= front.len {
+            let r = g.rounds.pop_front().expect("retire with no round");
+            let epoch = r.epoch;
+            let wall = r.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+            // as in `take`: callback + job destruction precede the epoch
+            // publish, so a woken master can assert job uniqueness
+            retire(&r.job, wall);
+            drop(r);
+            g.completed = epoch;
+            drop(g);
+            self.cv_space.notify_all();
+            self.cv_work.notify_all();
+        }
+    }
+}
+
+/// Run a producing master thread next to a persistent pool of `workers`
+/// stateful stage workers (see [`StageHandle`]).
+///
+/// * `init(w)` builds worker `w`'s thread-local state;
+/// * `process(&mut state, &job, item)` handles one item of a round -
+///   items of one round fan out across workers, rounds run strictly in
+///   submission order;
+/// * `retire(&job, wall_secs)` runs once per round when its last item
+///   completes, with the round's processing wall time (first take to
+///   retirement) - the filter-time telemetry hook;
+/// * `fini(state)` converts each worker's state into its result;
+/// * `master(&handle)` runs on the calling thread and drives the pool.
+///
+/// Returns the master's result and the worker results in worker order.
+/// Rounds still queued when the master returns are drained before the
+/// workers exit.
+pub fn stage_scope<J, S, W, T, I, P, R, G, M>(
+    workers: usize,
+    capacity: usize,
+    init: I,
+    process: P,
+    retire: R,
+    fini: G,
+    master: M,
+) -> (T, Vec<W>)
+where
+    J: Send,
+    W: Send,
+    I: Fn(usize) -> S + Sync,
+    P: Fn(&mut S, &J, usize) + Sync,
+    R: Fn(&J, f64) + Sync,
+    G: Fn(S) -> W + Sync,
+    M: FnOnce(&StageHandle<J>) -> T,
+{
+    let workers = workers.max(1);
+    let handle = StageHandle::new(capacity);
+    std::thread::scope(|scope| {
+        let joins: Vec<_> = (0..workers)
+            .map(|w| {
+                let (handle, init, process, retire, fini) =
+                    (&handle, &init, &process, &retire, &fini);
+                scope.spawn(move || {
+                    /// Drops the item hold (and retires the round when it
+                    /// was the last item) even when `process` unwinds; an
+                    /// unwinding worker additionally fails the pool, so a
+                    /// round it leaves incomplete cannot strand the master
+                    /// - the panic propagates instead of deadlocking.
+                    struct FinishGuard<'a, J: Send, R: Fn(&J, f64) + Sync>(
+                        &'a StageHandle<J>,
+                        &'a R,
+                    );
+                    impl<J: Send, R: Fn(&J, f64) + Sync> Drop
+                        for FinishGuard<'_, J, R>
+                    {
+                        fn drop(&mut self) {
+                            self.0.finish(self.1);
+                            if std::thread::panicking() {
+                                self.0.fail();
+                            }
+                        }
+                    }
+                    let mut state = init(w);
+                    while let Some((job, item)) = handle.take(retire) {
+                        let _fin = FinishGuard(handle, retire);
+                        // SAFETY: `take` hands out a pointer that stays
+                        // valid until the matching `finish` (see `take`).
+                        process(&mut state, unsafe { &*job }, item);
+                    }
+                    fini(state)
+                })
+            })
+            .collect();
+        let out = {
+            /// Closes the pool even when `master` unwinds, so the workers
+            /// drain and exit and the scope can propagate the panic
+            /// instead of deadlocking on the join.
+            struct CloseGuard<'a, J: Send>(&'a StageHandle<J>);
+            impl<J: Send> Drop for CloseGuard<'_, J> {
+                fn drop(&mut self) {
+                    self.0.close();
+                }
+            }
+            let _close = CloseGuard(&handle);
+            master(&handle)
+        };
+        let worker_out = joins
+            .into_iter()
+            .map(|h| h.join().expect("stage worker panicked"))
+            .collect();
+        (out, worker_out)
+    })
 }
 
 /// Lock-free two-ended claim cursor over indices [0, n): front claims
@@ -391,6 +737,132 @@ mod tests {
         assert!(c.claim_front(4).is_none());
         assert!(c.claim_back(4).is_none());
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn stage_pool_rounds_run_in_order_exactly_once() {
+        // Rounds must be processed strictly in submission order (no item
+        // of round r runs before round r-1 retired), every item exactly
+        // once, with worker state carried across rounds.
+        let (n_rounds, items) = (20usize, 37usize);
+        let hits: Vec<AtomicUsize> =
+            (0..n_rounds * items).map(|_| AtomicUsize::new(0)).collect();
+        let done: Vec<AtomicUsize> =
+            (0..n_rounds).map(|_| AtomicUsize::new(0)).collect();
+        let ((), states) = stage_scope(
+            3,
+            2,
+            |_w| 0usize,
+            |count: &mut usize, job: &(usize, usize), i| {
+                let (round, base) = *job;
+                if round > 0 {
+                    // strict sequencing: the previous round fully retired
+                    // before any item of this round was handed out
+                    assert_eq!(
+                        done[round - 1].load(Ordering::SeqCst),
+                        items,
+                        "round {round} started before round {} finished",
+                        round - 1
+                    );
+                }
+                hits[base + i].fetch_add(1, Ordering::Relaxed);
+                *count += 1;
+                done[round].fetch_add(1, Ordering::SeqCst);
+            },
+            |_job, _wall| {},
+            |count| count,
+            |h| {
+                for r in 0..n_rounds {
+                    h.submit((r, r * items), items);
+                }
+                h.drain();
+                assert_eq!(h.completed(), n_rounds);
+            },
+        );
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(states.len(), 3);
+        assert_eq!(states.iter().sum::<usize>(), n_rounds * items);
+    }
+
+    #[test]
+    fn stage_pool_bounded_handoff_blocks_until_retirement() {
+        // capacity 1: the second submit must block until the first round
+        // has fully retired - the memory bound of the pipelined drain.
+        let retired = std::sync::Mutex::new(Vec::new());
+        let ((), _) = stage_scope(
+            2,
+            1,
+            |_w| (),
+            |_s, _job: &usize, _i| {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            },
+            |job, wall| {
+                assert!(wall >= 0.0);
+                retired.lock().unwrap().push(*job);
+            },
+            |_s| (),
+            |h| {
+                let e1 = h.submit(1, 3);
+                assert_eq!(e1, 1);
+                let e2 = h.submit(2, 3);
+                assert_eq!(e2, 2);
+                // capacity 1: submit(2) waited for round 1 to retire
+                assert_eq!(retired.lock().unwrap().as_slice(), &[1]);
+                h.wait(e2);
+                assert_eq!(retired.lock().unwrap().as_slice(), &[1, 2]);
+            },
+        );
+        assert_eq!(retired.lock().unwrap().as_slice(), &[1, 2]);
+    }
+
+    #[test]
+    fn stage_pool_worker_panic_fails_fast_instead_of_hanging() {
+        // A worker panicking mid-round (untaken items left, no surviving
+        // worker) must propagate a panic through the blocked master - a
+        // hang here would freeze the whole hybrid join.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            stage_scope(
+                1,
+                1,
+                |_w| (),
+                |_s, _job: &(), i| {
+                    if i == 0 {
+                        panic!("injected filter panic");
+                    }
+                },
+                |_job, _wall| {},
+                |_s| (),
+                |h| {
+                    let e = h.submit((), 3);
+                    h.wait(e); // must panic, not hang
+                },
+            );
+        }));
+        assert!(result.is_err(), "worker panic must propagate to the caller");
+    }
+
+    #[test]
+    fn stage_pool_empty_rounds_and_undrained_exit() {
+        // empty rounds retire; rounds still queued when the master
+        // returns are drained before the workers exit
+        let seen = AtomicUsize::new(0);
+        let ((), _) = stage_scope(
+            2,
+            4,
+            |_w| (),
+            |_s, _job: &(), _i| {
+                seen.fetch_add(1, Ordering::Relaxed);
+            },
+            |_job, _wall| {},
+            |_s| (),
+            |h| {
+                let e = h.submit((), 0); // empty round must still retire
+                h.wait(e);
+                h.submit((), 5); // master exits without draining
+                assert_eq!(h.submitted(), 2);
+            },
+        );
+        assert_eq!(seen.load(Ordering::Relaxed), 5, "undrained round completed");
     }
 
     #[test]

@@ -1,10 +1,16 @@
 //! Failure injection: the runtime must fail loudly and cleanly on broken
-//! artifact trees, and the engines must behave on degenerate inputs.
+//! artifact trees, the engines must behave on degenerate inputs, and the
+//! queue's Q^Fail recirculation contract must survive the pipelined
+//! master's interleaving (claim i's failures published only after claim
+//! i+1 was taken).
 
 use std::fs;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::sched::{first_batch_work, next_batch_work};
+use hybrid_knn_join::util::prop;
 
 fn tmp_dir(name: &str) -> PathBuf {
     let p = std::env::temp_dir().join(format!("hknn_fi_{}_{name}", std::process::id()));
@@ -108,6 +114,122 @@ fn degenerate_datasets_do_not_crash() {
     for q in 0..small.len() {
         assert_eq!(rep.result.get(q).len(), small.len() - 1);
     }
+}
+
+#[test]
+fn deferred_recirculation_never_loses_or_duplicates_queries() {
+    // The pipelined GPU master resolves claim i only after claim i+1 was
+    // already taken off the head, so claim i's Q^Fail enters the
+    // recirculation buffer *behind* its successor claim. Inject failures
+    // under exactly that interleaving, with CPU ranks racing the tail
+    // and the recirc buffer, and assert the exactly-once contract holds:
+    // no query lost, none double-written, none resolved twice across the
+    // CPU ranks and the GPU master.
+    prop::cases(8, 0xFA11, |rng| {
+        let n = 400 + rng.below(1200);
+        let d = susy_like(n).generate(rng.next_u64());
+        let grid = GridIndex::build(&d, 6, 1.5 + rng.f64() * 2.0);
+        let queries: Vec<u32> = (0..d.len() as u32).collect();
+        let gamma = rng.f64();
+        let rho = rng.f64() * 0.4;
+        let queue = build_queue(&d, &grid, &queries, 4, gamma, rho);
+        let ranks = 1 + rng.below(3);
+        let chunk = 8 + rng.below(24);
+        let fail_mod = 2 + rng.below(5); // fail every fail_mod-th query
+        let solved: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let reserve = queue.reserve();
+        let mut total_failed = 0usize;
+
+        std::thread::scope(|scope| {
+            // pipelined master pattern: one-claim delay between failing a
+            // query and publishing it for recirculation
+            {
+                let (queue, solved) = (&queue, &solved);
+                let total_failed = &mut total_failed;
+                scope.spawn(move || {
+                    let mut deferred: Option<Vec<u32>> = None;
+                    let mut target = first_batch_work(
+                        queue.head_work_remaining(queue.len()),
+                        queue.dense_work(),
+                    );
+                    while let Some(r) = queue.claim_head_work(target, queue.len()) {
+                        // claim i+1 is taken: NOW claim i's failures land
+                        if let Some(f) = deferred.take() {
+                            *total_failed += f.len();
+                            queue.push_failed(&f);
+                        }
+                        let mut failed = Vec::new();
+                        for (i, &q) in
+                            queue.query_slice(r.clone()).iter().enumerate()
+                        {
+                            if i % fail_mod == fail_mod - 1 {
+                                failed.push(q);
+                            } else {
+                                solved[q as usize].fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        deferred = Some(failed);
+                        target = next_batch_work(
+                            queue.head_work_remaining(queue.len()),
+                            1.0,
+                            queue.cpu_work_rate(),
+                        );
+                    }
+                    // final claim's failures: published after the head is
+                    // exhausted, right before gpu_done - the drain's
+                    // resolve-at-end path
+                    if let Some(f) = deferred.take() {
+                        *total_failed += f.len();
+                        queue.push_failed(&f);
+                    }
+                    queue.set_gpu_done();
+                });
+            }
+            // CPU ranks: tail chunks, then recirculated failures, exit
+            // only after done + two empty claim attempts
+            for _ in 0..ranks {
+                let (queue, solved) = (&queue, &solved);
+                scope.spawn(move || loop {
+                    let done = queue.gpu_done();
+                    if let Some(r) = queue.claim_tail(chunk) {
+                        for &q in queue.query_slice(r) {
+                            solved[q as usize].fetch_add(1, Ordering::Relaxed);
+                        }
+                        continue;
+                    }
+                    if let Some(ids) = queue.claim_recirc(chunk) {
+                        for q in ids {
+                            solved[q as usize].fetch_add(1, Ordering::Relaxed);
+                        }
+                        continue;
+                    }
+                    if done {
+                        break;
+                    }
+                    std::thread::yield_now();
+                });
+            }
+        });
+
+        // exactly-once across master + ranks: failures were re-solved by
+        // exactly one CPU claimant, everything else by its first owner
+        for (q, s) in solved.iter().enumerate() {
+            assert_eq!(
+                s.load(Ordering::Relaxed),
+                1,
+                "query {q} resolved {} times (n={n} γ={gamma:.2} ρ={rho:.2} \
+                 fail_mod={fail_mod})",
+                s.load(Ordering::Relaxed)
+            );
+        }
+        assert_eq!(queue.claimed_head() + queue.claimed_tail(), n);
+        assert_eq!(
+            queue.recirc_pushed(),
+            total_failed,
+            "every deferred failure was published"
+        );
+        assert!(queue.claimed_tail() >= reserve, "ρ reserve stays CPU-owned");
+    });
 }
 
 #[test]

@@ -1,0 +1,173 @@
+//! Sync-vs-pipelined equivalence: the pipelined GPU drain (device exec of
+//! claim i+1 overlapping host filtering of claim i) must be *invisible*
+//! in the output - bit-identical `KnnResult` slots and the same
+//! solved/failed partition as the synchronous drain, on every workload
+//! shape and staging configuration.
+//!
+//! Why bit-identity is the right bar: with no CPU ranks draining the
+//! tail, claim sizing is deterministic (the CPU rate is 0, so the sizing
+//! policy takes its evidence-free 0.5 branch), and within a claim each
+//! query's candidate pushes arrive in candidate order regardless of flush
+//! round boundaries - so the two drains must agree to the last bit, and
+//! any divergence is a real pipeline bug (aliased arena slot, lost round,
+//! mis-ordered resolve), not numeric noise.
+
+use hybrid_knn_join::gpu::join::gpu_join_drain;
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::sched::build_queue;
+
+/// Run a GPU-only queue drain over `queries` of `r_data` against `data`
+/// (self-join when they are the same dataset) and return the result
+/// table, the failed set, and the drain stats.
+#[allow(clippy::too_many_arguments)]
+fn drain(
+    engine: &Engine,
+    r_data: &Dataset,
+    data: &Dataset,
+    eps: f64,
+    k: usize,
+    streams: usize,
+    buffer_pairs: u64,
+    pipelined: bool,
+    exclude_self: bool,
+) -> (KnnResult, Vec<u32>, usize) {
+    let grid = GridIndex::build(data, 6, eps);
+    let queries: Vec<u32> = (0..r_data.len() as u32).collect();
+    let queue = build_queue(r_data, &grid, &queries, k, 0.0, 0.0);
+    let mut params = GpuJoinParams::new(k, eps);
+    params.streams = streams;
+    params.buffer_pairs = buffer_pairs;
+    params.pipelined = pipelined;
+    params.exclude_self = exclude_self;
+    let mut result = KnnResult::new(r_data.len(), k);
+    let slots = result.slots();
+    let stats = gpu_join_drain(
+        engine, r_data, data, &grid, &queue, &params, &slots,
+        queue.len(),
+    )
+    .unwrap();
+    drop(slots);
+    assert_eq!(
+        stats.solved + stats.failed.len(),
+        queries.len(),
+        "every claimed query resolved exactly once"
+    );
+    assert_eq!(queue.claimed_head(), queries.len());
+    assert_eq!(queue.recirc_pushed(), stats.failed.len());
+    (result, stats.failed, stats.batches)
+}
+
+/// Bit-identical result tables: same counts, same id lanes, same dist²
+/// bits for every query slot.
+fn assert_bit_identical(a: &KnnResult, b: &KnnResult, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: table sizes");
+    for q in 0..a.len() {
+        let (x, y) = (a.get(q), b.get(q));
+        assert_eq!(x.len(), y.len(), "{ctx}: q={q} neighbor count");
+        assert_eq!(x.ids(), y.ids(), "{ctx}: q={q} id lane");
+        assert_eq!(x.dist2s(), y.dist2s(), "{ctx}: q={q} dist² lane");
+    }
+}
+
+/// The equivalence sweep for one workload: for several streams and
+/// buffer settings, the pipelined drain must match the synchronous drain
+/// bit for bit, including the solved/failed partition.
+fn check_workload(
+    engine: &Engine,
+    name: &str,
+    r_data: &Dataset,
+    data: &Dataset,
+    eps: f64,
+    k: usize,
+    exclude_self: bool,
+) {
+    // small buffer forces many claims (deep pipeline); large buffer
+    // collapses to few claims (shallow pipeline, resolve-at-end path)
+    for &(streams, buffer_pairs) in
+        &[(1usize, 3_000u64), (3, 3_000), (2, 10_000_000)]
+    {
+        let ctx = format!("{name} streams={streams} buffer={buffer_pairs}");
+        let (sync_res, sync_failed, _) = drain(
+            engine, r_data, data, eps, k, streams, buffer_pairs, false,
+            exclude_self,
+        );
+        let (pipe_res, pipe_failed, pipe_batches) = drain(
+            engine, r_data, data, eps, k, streams, buffer_pairs, true,
+            exclude_self,
+        );
+        assert_eq!(sync_failed, pipe_failed, "{ctx}: Q^Fail partition");
+        assert_bit_identical(&sync_res, &pipe_res, &ctx);
+        assert!(pipe_batches > 0, "{ctx}: pipelined drain claimed nothing");
+    }
+}
+
+#[test]
+fn pipelined_drain_matches_sync_on_uniform_selfjoin() {
+    let engine = Engine::load_default().unwrap();
+    let data = susy_like(900).generate(0x51DE);
+    check_workload(&engine, "susy_uniform", &data, &data, 2.0, 6, true);
+}
+
+#[test]
+fn pipelined_drain_matches_sync_on_skewed_gaussian() {
+    // chist-like clustered Gaussian data: dense head cells produce big
+    // claims with many flush rounds, plus a long sparse tail of
+    // one-query cells - the shape that stresses split tiles and the
+    // double-buffer swap
+    let engine = Engine::load_default().unwrap();
+    let data = chist_like(700).generate(0x5E3D);
+    let sel = EpsilonSelector::default().select_host(&data, 4, 0.3);
+    check_workload(&engine, "chist_skewed", &data, &data, sel.eps, 4, true);
+}
+
+#[test]
+fn pipelined_drain_matches_sync_on_bipartite() {
+    // R JOIN S: queries from R, grid + candidates from S, no
+    // self-exclusion; R cells with no S candidates exercise empty-claim
+    // rounds (a claim whose cells emit no tiles still resolves as all
+    // failed, in order)
+    let engine = Engine::load_default().unwrap();
+    let r = susy_like(400).generate(0xB1);
+    let s = susy_like(800).generate(0xB2);
+    check_workload(&engine, "bipartite", &r, &s, 2.2, 4, false);
+}
+
+#[test]
+fn pipelined_drain_overlap_telemetry_is_consistent() {
+    // Not a timing assertion (wall-clock overlap is environment
+    // dependent) - just the accounting invariants: per-claim exec/filter
+    // components are finite, non-negative, and sum to the claim's
+    // service seconds; the stats' totals match the per-claim telemetry.
+    let engine = Engine::load_default().unwrap();
+    let data = susy_like(800).generate(0x0E);
+    let grid = GridIndex::build(&data, 6, 2.0);
+    let queries: Vec<u32> = (0..data.len() as u32).collect();
+    let queue = build_queue(&data, &grid, &queries, 5, 0.0, 0.0);
+    let mut params = GpuJoinParams::new(5, 2.0);
+    params.buffer_pairs = 3_000; // many claims
+    params.pipelined = true;
+    let mut result = KnnResult::new(data.len(), 5);
+    let slots = result.slots();
+    let stats = gpu_join_drain(
+        &engine, &data, &data, &grid, &queue, &params, &slots,
+        queue.len(),
+    )
+    .unwrap();
+    drop(slots);
+    assert!(!stats.claims.is_empty());
+    let (mut exec_sum, mut filter_sum) = (0.0f64, 0.0f64);
+    for c in &stats.claims {
+        assert!(matches!(c.arch, Arch::Gpu));
+        assert!(c.exec_secs >= 0.0 && c.exec_secs.is_finite());
+        assert!(c.filter_secs >= 0.0 && c.filter_secs.is_finite());
+        assert!(
+            (c.secs - (c.exec_secs + c.filter_secs)).abs() < 1e-9,
+            "pipelined claim secs = exec + filter (resource time)"
+        );
+        exec_sum += c.exec_secs;
+        filter_sum += c.filter_secs;
+    }
+    assert!((stats.exec_time - exec_sum).abs() < 1e-9);
+    assert!((stats.filter_time - filter_sum).abs() < 1e-9);
+    assert!(stats.exec_time > 0.0, "claims executed device tiles");
+}

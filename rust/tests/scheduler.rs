@@ -90,6 +90,103 @@ fn simulate_dynamic(
     Sim { makespan, idle_frac, gpu_queries, cpu_queries }
 }
 
+/// Drain `queue` in virtual time with the GPU master's exec/filter split
+/// modeled explicitly: executing a claim of work w costs w/gpu_speed on
+/// the master's clock and its host filtering costs w*filter_frac/gpu_speed
+/// on the filter stage. `pipelined` = the double-buffered drain: the
+/// master claims again as soon as *exec* finishes (filtering of the
+/// previous claim overlaps), constrained by the two staging sets - exec
+/// of claim j waits for filter completion of claim j-2. Sync = the master
+/// waits out each claim's filter before claiming again.
+fn simulate_overlap(
+    queue: &WorkQueue,
+    gpu_speed: f64,
+    filter_frac: f64,
+    cpu_speed: f64,
+    ranks: usize,
+    chunk: usize,
+    pipelined: bool,
+) -> Sim {
+    // when the master can next claim+execute / when the filter stage
+    // frees up / filter completion of the two staging sets
+    let mut exec_free = 0.0f64;
+    let mut filter_free = 0.0f64;
+    let mut stage_filter_end = [0.0f64; 2];
+    let mut claim_idx = 0usize;
+    let mut gpu_open = true;
+    let mut cpu_clocks = vec![0.0f64; ranks];
+    let mut cpu_open = vec![true; ranks];
+    let (mut gpu_queries, mut cpu_queries) = (0usize, 0usize);
+    let mut target = first_batch_work(
+        queue.head_work_remaining(queue.len()),
+        queue.dense_work(),
+    );
+    loop {
+        let gpu_clock = if pipelined {
+            exec_free.max(stage_filter_end[claim_idx % 2])
+        } else {
+            filter_free.max(exec_free)
+        };
+        let mut best: Option<(f64, usize)> = None;
+        for (i, &c) in cpu_clocks.iter().enumerate() {
+            if cpu_open[i] && best.map(|(bc, _)| c < bc).unwrap_or(true) {
+                best = Some((c, i));
+            }
+        }
+        if gpu_open && best.map(|(bc, _)| gpu_clock < bc).unwrap_or(true) {
+            best = Some((gpu_clock, ranks));
+        }
+        let Some((_, actor)) = best else { break };
+        if actor == ranks {
+            match queue.claim_head_work(target, queue.len()) {
+                Some(r) => {
+                    let w = queue.range_work(r.clone()) as f64;
+                    let exec_start = gpu_clock;
+                    let exec_end = exec_start + w / gpu_speed;
+                    let filter_start = exec_end.max(filter_free);
+                    let filter_end = filter_start + w * filter_frac / gpu_speed;
+                    exec_free = exec_end;
+                    filter_free = filter_end;
+                    stage_filter_end[claim_idx % 2] = filter_end;
+                    claim_idx += 1;
+                    gpu_queries += r.len();
+                    // claim-ahead sizing reads the exec-side rate - the
+                    // rate available before the claim's filter completes
+                    let gpu_rate = if pipelined {
+                        gpu_speed
+                    } else {
+                        gpu_speed / (1.0 + filter_frac)
+                    };
+                    target = next_batch_work(
+                        queue.head_work_remaining(queue.len()),
+                        gpu_rate,
+                        cpu_speed * ranks as f64,
+                    );
+                }
+                None => gpu_open = false,
+            }
+        } else {
+            match queue.claim_tail(chunk) {
+                Some(r) => {
+                    let w = queue.range_work(r.clone());
+                    cpu_clocks[actor] += w as f64 / cpu_speed;
+                    cpu_queries += r.len();
+                }
+                None => cpu_open[actor] = false,
+            }
+        }
+    }
+    let cpu_finish = cpu_clocks.iter().cloned().fold(0.0, f64::max);
+    let gpu_finish = filter_free.max(exec_free);
+    let makespan = cpu_finish.max(gpu_finish);
+    let idle_frac = if makespan > 0.0 {
+        (makespan - cpu_finish.min(gpu_finish)) / makespan
+    } else {
+        0.0
+    };
+    Sim { makespan, idle_frac, gpu_queries, cpu_queries }
+}
+
 /// The static split in virtual time: each side gets its fixed share up
 /// front. Within the CPU the dynamic chunk scheduler balances ranks
 /// near-perfectly (PR 1), so the CPU finishes at W_cpu / (ranks x speed).
@@ -195,6 +292,76 @@ fn dynamic_queue_no_worse_on_uniform_susy() {
             stat.idle_frac
         );
     }
+}
+
+/// The pipelined-GPU variant of the load-imbalance study: overlapping
+/// device exec with host filtering makes the GPU front effectively
+/// faster, which must shorten (never lengthen) the join and must not
+/// starve the CPU ranks of their tail chunks under density skew.
+#[test]
+fn pipelined_gpu_overlap_does_not_starve_cpu_tail() {
+    let d = chist_like(2500).generate(0xD15C);
+    let eps = EpsilonSelector::default().select_host(&d, 5, 0.0).eps;
+    let grid = GridIndex::build(&d, 6, eps);
+    let queries: Vec<u32> = (0..d.len() as u32).collect();
+    let (k, ranks, chunk) = (5, 3, 32);
+    // balanced hardware with an expensive filter stage: 80% of exec -
+    // exactly what the pipeline exists to hide
+    let (gpu_speed, cpu_speed, filter_frac) = (3000.0, 1000.0, 0.8);
+
+    for (gamma, rho) in [(0.0, 0.2), (0.5, 0.2)] {
+        let q_sync = build_queue(&d, &grid, &queries, k, gamma, rho);
+        let sync = simulate_overlap(
+            &q_sync, gpu_speed, filter_frac, cpu_speed, ranks, chunk, false,
+        );
+        let q_pipe = build_queue(&d, &grid, &queries, k, gamma, rho);
+        let pipe = simulate_overlap(
+            &q_pipe, gpu_speed, filter_frac, cpu_speed, ranks, chunk, true,
+        );
+
+        // every query computed exactly once under both drains
+        assert_eq!(sync.gpu_queries + sync.cpu_queries, d.len(), "γ={gamma}");
+        assert_eq!(pipe.gpu_queries + pipe.cpu_queries, d.len(), "γ={gamma}");
+        // no starvation: the CPU keeps the ρ reserve plus a real share of
+        // the open middle even though the overlapped GPU claims faster
+        assert!(
+            pipe.cpu_queries >= q_pipe.reserve(),
+            "γ={gamma}: CPU lost its ρ reserve ({} < {})",
+            pipe.cpu_queries,
+            q_pipe.reserve()
+        );
+        assert!(
+            pipe.cpu_queries > q_pipe.reserve(),
+            "γ={gamma}: overlap starved the CPU of the open middle"
+        );
+        // a faster effective GPU must never be worse, and the overlap
+        // must not blow up the per-architecture idle tail
+        assert!(
+            pipe.makespan <= sync.makespan * 1.02,
+            "γ={gamma}: pipelined makespan {:.4} vs sync {:.4}",
+            pipe.makespan,
+            sync.makespan
+        );
+        assert!(
+            pipe.idle_frac <= sync.idle_frac + 0.15,
+            "γ={gamma}: pipelined idle {:.3} vs sync {:.3}",
+            pipe.idle_frac,
+            sync.idle_frac
+        );
+    }
+
+    // GPU-heavy regime (one slow CPU rank): the join is GPU-bound, so
+    // hiding the filter stage must shorten the makespan materially
+    let q_sync = build_queue(&d, &grid, &queries, k, 0.0, 0.0);
+    let sync = simulate_overlap(&q_sync, 3000.0, 0.9, 100.0, 1, 32, false);
+    let q_pipe = build_queue(&d, &grid, &queries, k, 0.0, 0.0);
+    let pipe = simulate_overlap(&q_pipe, 3000.0, 0.9, 100.0, 1, 32, true);
+    assert!(
+        pipe.makespan < sync.makespan * 0.8,
+        "overlap should hide most of the filter stage: {:.4} vs {:.4}",
+        pipe.makespan,
+        sync.makespan
+    );
 }
 
 /// Concurrent (real threads) two-ended drain with Q^Fail recirculation
