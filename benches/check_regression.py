@@ -2,6 +2,7 @@
 """Regression gate for tracked bench columns vs committed baselines.
 
 Usage: check_regression.py [--allow-missing] FRESH BASELINE
+       check_regression.py --update-baselines FRESH BASELINE
 
 The baseline JSON mirrors the bench output schema plus three gate fields:
 
@@ -18,6 +19,18 @@ absent from the baseline pass with a notice (new cases stay untracked
 until the baseline is refreshed). --allow-missing turns a missing FRESH
 file into a skip - for benches that cannot run on stock runners (the
 scheduler bench needs the AOT artifacts + xla native lib).
+
+--update-baselines rewrites BASELINE in place from FRESH: every fresh
+row's tracked columns replace (or add) the matching baseline row, keeping
+the gate fields and note. Run the bench on the reference machine (ideally
+taking the median of several runs), then:
+
+    cargo bench --bench scheduler
+    python3 benches/check_regression.py --update-baselines \
+        BENCH_scheduler.json benches/baselines/BENCH_scheduler.json
+
+and commit the result - this is how the conservative bootstrap floors
+are replaced with measured medians (ROADMAP (g)).
 """
 
 import json
@@ -28,13 +41,48 @@ def key_of(row, keys):
     return tuple(row.get(k) for k in keys)
 
 
+def update_baselines(fresh_path, base_path):
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(base_path) as f:
+        base = json.load(f)
+    tracked = base.get("tracked", [])
+    keys = base.get("key", ["case"])
+    base_rows = {key_of(r, keys): r for r in base.get("rows", [])}
+    updated, added = 0, 0
+    for frow in fresh.get("rows", []):
+        k = key_of(frow, keys)
+        vals = {c: frow[c] for c in tracked if c in frow}
+        if k in base_rows:
+            base_rows[k].update(vals)
+            updated += 1
+        else:
+            row = {kf: kv for kf, kv in zip(keys, k)}
+            row.update(vals)
+            base["rows"].append(row)
+            base_rows[k] = row
+            added += 1
+        print(f"  set {k}: " + ", ".join(f"{c}={v:.3f}" for c, v in vals.items()))
+    with open(base_path, "w") as f:
+        json.dump(base, f, indent=2)
+        f.write("\n")
+    print(
+        f"[check_regression] refreshed {base_path} from {fresh_path} "
+        f"({updated} updated, {added} added); review + commit it"
+    )
+    return 0
+
+
 def main(argv):
     allow_missing = "--allow-missing" in argv
+    update = "--update-baselines" in argv
     paths = [a for a in argv if not a.startswith("--")]
     if len(paths) != 2:
         print(__doc__)
         return 2
     fresh_path, base_path = paths
+    if update:
+        return update_baselines(fresh_path, base_path)
     try:
         with open(fresh_path) as f:
             fresh = json.load(f)

@@ -1,7 +1,8 @@
 //! Work-division shootout: the density-ordered dynamic work queue vs the
 //! paper's one-shot static split, end to end through the hybrid join -
-//! with a sync-vs-pipelined column isolating the GPU master's
-//! exec/filter overlap (the double-buffered claim pipeline).
+//! with a sync / two-stage / three-stage drain matrix isolating what
+//! each pipeline stage buys (exec/filter overlap, then the dedicated
+//! device-to-host transfer stage).
 //!
 //! Covers self-join and bipartite workloads at several skew levels, with
 //! a deliberately mispredicted γ in the sweep - the regime where the
@@ -10,8 +11,9 @@
 //! alongside `BENCH_cpu_engine.json`, and regression-gated against
 //! `benches/baselines/`) so later PRs can track the scheduling
 //! trajectory. Overlap is observable per row: `gpu_exec_time +
-//! gpu_filter_time > gpu_total_time` exactly when the pipeline overlapped
-//! the two stages.
+//! gpu_transfer_time + gpu_filter_time > gpu wall` exactly when a
+//! pipeline overlapped its stages, and `gpu_transfer_overlap` isolates
+//! the share the transfer stage hid.
 //!
 //!   cargo bench --bench scheduler
 //!   HKNN_RANKS=8 cargo bench --bench scheduler
@@ -34,14 +36,14 @@ fn run_one(
     case: &Case,
     scheduler: Scheduler,
     ranks: usize,
-    pipelined: bool,
+    drain: DrainMode,
 ) -> HybridReport {
     let mut p = HybridParams::new(case.k);
     p.cpu_ranks = ranks;
     p.gamma = case.gamma;
     p.rho = case.rho;
     p.scheduler = scheduler;
-    p.pipelined_gpu = pipelined;
+    p.gpu_drain = drain;
     match &case.s {
         None => HybridKnnJoin::run(engine, &case.r, &p).expect(case.name),
         Some(s) => HybridKnnJoin::run_rs(engine, &case.r, s, &p).expect(case.name),
@@ -58,7 +60,7 @@ fn main() {
         .map(|n| n.get())
         .unwrap_or(1);
 
-    // warm the executable cache so neither contender pays compilation
+    // warm the executable cache so no contender pays compilation
     {
         let warm = susy_like(400).generate(1);
         let mut p = HybridParams::new(3);
@@ -105,18 +107,25 @@ fn main() {
 
     let mut rows = Vec::new();
     println!(
-        "scheduler shootout: static split vs dynamic queue, sync vs \
-         pipelined GPU (ranks={ranks}, hw={hw})"
+        "scheduler shootout: static split vs dynamic queue, sync vs two-stage \
+         vs three-stage GPU drain (ranks={ranks}, hw={hw})"
     );
     println!(
-        "{:>34} {:>10} {:>10} {:>10} {:>8} {:>7} {:>9} {:>8}",
-        "case", "static s", "dyn-sync", "dyn-pipe", "speedup", "pipe x",
-        "overlap s", "q_fail"
+        "{:>34} {:>9} {:>9} {:>9} {:>9} {:>8} {:>7} {:>9} {:>8}",
+        "case", "static s", "dyn-sync", "dyn-2st", "dyn-3st", "speedup",
+        "pipe x", "xfer ovl", "q_fail"
     );
     for case in &cases {
-        let stat = run_one(&engine, case, Scheduler::StaticSplit, ranks, false);
-        let dyn_sync = run_one(&engine, case, Scheduler::DynamicQueue, ranks, false);
-        let dyn_ = run_one(&engine, case, Scheduler::DynamicQueue, ranks, true);
+        let stat =
+            run_one(&engine, case, Scheduler::StaticSplit, ranks, DrainMode::Sync);
+        let dyn_sync =
+            run_one(&engine, case, Scheduler::DynamicQueue, ranks, DrainMode::Sync);
+        let dyn_two = run_one(
+            &engine, case, Scheduler::DynamicQueue, ranks, DrainMode::TwoStage,
+        );
+        let dyn_ = run_one(
+            &engine, case, Scheduler::DynamicQueue, ranks, DrainMode::ThreeStage,
+        );
         let gpu_claims = dyn_
             .claims
             .iter()
@@ -126,28 +135,37 @@ fn main() {
         let speedup = stat.response_time / dyn_.response_time.max(1e-12);
         let pipeline_speedup =
             dyn_sync.response_time / dyn_.response_time.max(1e-12);
+        let three_stage_gain =
+            dyn_two.response_time / dyn_.response_time.max(1e-12);
         println!(
-            "{:>34} {:>10.4} {:>10.4} {:>10.4} {:>7.2}x {:>6.2}x {:>9.4} {:>8}",
+            "{:>34} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>7.2}x {:>6.2}x {:>9.4} {:>8}",
             case.name,
             stat.response_time,
             dyn_sync.response_time,
+            dyn_two.response_time,
             dyn_.response_time,
             speedup,
             pipeline_speedup,
-            dyn_.gpu_filter_overlap,
+            dyn_.gpu_transfer_overlap,
             dyn_.q_fail
         );
-        // all three runs must have produced complete, identical-
+        // all four runs must have produced complete, identical-
         // cardinality results - a scheduler can move work, never drop it
         let solved_k = case.k.min(case.r.len().saturating_sub(1));
-        assert_eq!(stat.result.solved_count(solved_k), case.r.len(), "{}", case.name);
-        assert_eq!(
-            dyn_sync.result.solved_count(solved_k),
-            case.r.len(),
-            "{}",
-            case.name
-        );
-        assert_eq!(dyn_.result.solved_count(solved_k), case.r.len(), "{}", case.name);
+        for (rep, tag) in [
+            (&stat, "static"),
+            (&dyn_sync, "dyn-sync"),
+            (&dyn_two, "dyn-two-stage"),
+            (&dyn_, "dyn-three-stage"),
+        ] {
+            assert_eq!(
+                rep.result.solved_count(solved_k),
+                case.r.len(),
+                "{} [{}]",
+                case.name,
+                tag
+            );
+        }
         rows.push(Json::obj(vec![
             ("case", Json::Str(case.name.into())),
             ("n", Json::Num(case.r.len() as f64)),
@@ -157,12 +175,16 @@ fn main() {
             ("rho", Json::Num(case.rho)),
             ("static_secs", Json::Num(stat.response_time)),
             ("dynamic_sync_secs", Json::Num(dyn_sync.response_time)),
+            ("dynamic_two_stage_secs", Json::Num(dyn_two.response_time)),
             ("dynamic_secs", Json::Num(dyn_.response_time)),
             ("speedup", Json::Num(speedup)),
             ("pipeline_speedup", Json::Num(pipeline_speedup)),
+            ("three_stage_gain", Json::Num(three_stage_gain)),
             ("gpu_exec_time", Json::Num(dyn_.gpu_exec_time)),
+            ("gpu_transfer_time", Json::Num(dyn_.gpu_transfer_time)),
             ("gpu_filter_time", Json::Num(dyn_.gpu_filter_time)),
             ("gpu_filter_overlap", Json::Num(dyn_.gpu_filter_overlap)),
+            ("gpu_transfer_overlap", Json::Num(dyn_.gpu_transfer_overlap)),
             ("static_q_gpu", Json::Num(stat.q_gpu as f64)),
             ("static_q_cpu", Json::Num(stat.q_cpu as f64)),
             ("dynamic_q_gpu", Json::Num(dyn_.q_gpu as f64)),
@@ -184,9 +206,11 @@ fn main() {
             "contender",
             Json::Str(
                 "density-ordered shared work queue, two-ended dynamic claims, \
-                 live Q^Fail recirculation, pipelined GPU master \
-                 (exec/filter overlap via double-buffered claims; \
-                 dynamic_sync_secs = same queue with the synchronous drain)"
+                 live Q^Fail recirculation, three-stage pipelined GPU master \
+                 (exec claim i+1 / transfer claim i / filter claim i-1 via \
+                 per-claim round lanes; dynamic_sync_secs and \
+                 dynamic_two_stage_secs = same queue with the sync and \
+                 two-stage ablation drains)"
                     .into(),
             ),
         ),

@@ -13,19 +13,25 @@ use crate::index::GridIndex;
 /// Label for unclustered points.
 pub const NOISE: i32 = -1;
 
+/// DBSCAN parameters.
 #[derive(Debug, Clone)]
 pub struct DbscanParams {
+    /// neighborhood radius
     pub eps: f64,
+    /// core-point density threshold
     pub min_pts: usize,
     /// indexed dims of the grid (m <= n, as in the join)
     pub m: usize,
 }
 
+/// DBSCAN clustering outcome.
 #[derive(Debug)]
 pub struct DbscanResult {
     /// cluster id per point, or NOISE
     pub labels: Vec<i32>,
+    /// clusters found
     pub clusters: usize,
+    /// points labeled NOISE
     pub noise: usize,
 }
 

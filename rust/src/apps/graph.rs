@@ -7,14 +7,17 @@ use crate::core::KnnResult;
 /// Adjacency-list graph over point ids.
 #[derive(Debug, Clone)]
 pub struct KnnGraph {
+    /// out-neighbors per point id
     pub adj: Vec<Vec<u32>>,
 }
 
 impl KnnGraph {
+    /// Number of vertices.
     pub fn n(&self) -> usize {
         self.adj.len()
     }
 
+    /// Total directed edges.
     pub fn edge_count(&self) -> usize {
         self.adj.iter().map(|a| a.len()).sum()
     }

@@ -6,8 +6,11 @@
 //! DBSCAN implementation running its range queries over the same ε-grid
 //! index as GPU-JOIN.
 
+/// DBSCAN over the ε-grid (a KNN-join consumer).
 pub mod dbscan;
+/// kNN / mutual-kNN graphs and connected components.
 pub mod graph;
+/// k-dist curves (the DBSCAN ε-selection heuristic).
 pub mod kdist;
 
 pub use dbscan::{dbscan, DbscanParams, DbscanResult, NOISE};

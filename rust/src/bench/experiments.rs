@@ -16,8 +16,10 @@ use crate::runtime::Engine;
 use crate::split;
 
 /// Default EXACT-ANN ranks for hybrid runs (paper: 15 + 1 GPU master,
-/// scaled to this host) and REFIMPL ranks (one extra, Sec. VI-C).
+/// scaled to this host).
 pub const HYBRID_RANKS: usize = 3;
+/// REFIMPL ranks (one extra - the paper frees the GPU-master rank,
+/// Sec. VI-C).
 pub const REFIMPL_RANKS: usize = 4;
 
 fn base_params(k: usize) -> HybridParams {

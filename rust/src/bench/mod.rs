@@ -3,6 +3,7 @@
 //! figure (experiments::*). The `benches/` binaries and the CLI
 //! `experiments` subcommand are thin wrappers over this module.
 
+/// One runner per paper table / figure.
 pub mod experiments;
 
 use crate::core::Dataset;
@@ -14,7 +15,9 @@ use crate::data::synthetic::{self, DatasetSpec};
 /// longer, more faithful run).
 #[derive(Debug, Clone)]
 pub struct Workload {
+    /// display name (paper dataset it surrogates, starred)
     pub name: &'static str,
+    /// generator recipe (dims, clusters, size)
     pub spec: DatasetSpec,
     /// the paper's per-dataset K for Tables III/IV/V/VI
     pub table_k: usize,
@@ -53,6 +56,7 @@ pub fn workloads_quick() -> Vec<Workload> {
 }
 
 impl Workload {
+    /// Generate the workload's dataset (deterministic per spec).
     pub fn dataset(&self) -> Dataset {
         self.spec.generate(0xDA7A ^ self.spec.dims as u64)
     }
@@ -62,12 +66,16 @@ impl Workload {
 /// pasted into EXPERIMENTS.md.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// table heading (printed as a `##` line)
     pub title: String,
+    /// column names
     pub header: Vec<String>,
+    /// data rows; each must match the header arity
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// New empty table with the given title and column names.
     pub fn new(title: &str, header: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -76,11 +84,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "row arity");
         self.rows.push(cells);
     }
 
+    /// Render the table as aligned monospace text.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for row in &self.rows {

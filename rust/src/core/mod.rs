@@ -1,6 +1,7 @@
 //! Core types: the point database, distance kernels (incl. SHORTC), and
 //! KNN result containers (paper Sec. III problem statement).
 
+/// The flat SoA KNN result table and its disjoint slot writers.
 pub mod result;
 
 pub use result::{
@@ -16,6 +17,7 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Wrap a flat row-major buffer (length must divide by `dims`).
     pub fn new(data: Vec<f32>, dims: usize) -> Dataset {
         assert!(dims > 0, "dims must be positive");
         assert!(
@@ -26,6 +28,7 @@ impl Dataset {
         Dataset { data, dims }
     }
 
+    /// Build from per-point rows (all rows must share one length).
     pub fn from_rows(rows: &[Vec<f32>]) -> Dataset {
         assert!(!rows.is_empty());
         let dims = rows[0].len();
@@ -37,26 +40,31 @@ impl Dataset {
         Dataset::new(data, dims)
     }
 
+    /// Number of points.
     #[inline]
     pub fn len(&self) -> usize {
         self.data.len() / self.dims
     }
 
+    /// True when the dataset holds no points.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Dimensionality n.
     #[inline]
     pub fn dims(&self) -> usize {
         self.dims
     }
 
+    /// Point i's coordinates.
     #[inline]
     pub fn point(&self, i: usize) -> &[f32] {
         &self.data[i * self.dims..(i + 1) * self.dims]
     }
 
+    /// The flat row-major buffer.
     #[inline]
     pub fn raw(&self) -> &[f32] {
         &self.data

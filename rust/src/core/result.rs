@@ -15,7 +15,9 @@ use std::marker::PhantomData;
 /// One neighbor: point id + squared distance.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Neighbor {
+    /// neighbor point id
     pub id: u32,
+    /// squared distance to the query
     pub dist2: f64,
 }
 
@@ -48,6 +50,7 @@ pub struct BoundedHeap {
 }
 
 impl BoundedHeap {
+    /// New empty heap bounded at `k` entries.
     pub fn new(k: usize) -> Self {
         assert!(k > 0);
         BoundedHeap { k, heap: Vec::with_capacity(k) }
@@ -63,16 +66,19 @@ impl BoundedHeap {
         self.heap.reserve(k);
     }
 
+    /// Neighbors currently held (≤ K).
     #[inline]
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// True when no neighbor has been kept yet.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
 
+    /// True when the heap holds K neighbors (bound is live).
     #[inline]
     pub fn is_full(&self) -> bool {
         self.heap.len() == self.k
@@ -160,6 +166,7 @@ impl BoundedHeap {
         n
     }
 
+    /// The kept neighbors in heap order (unsorted).
     pub fn as_slice(&self) -> &[Neighbor] {
         &self.heap
     }
@@ -193,6 +200,7 @@ impl KnnResult {
         self.counts.len()
     }
 
+    /// True when the table has no query slots.
     pub fn is_empty(&self) -> bool {
         self.counts.is_empty()
     }
@@ -276,10 +284,12 @@ pub struct Neighbors<'a> {
 }
 
 impl<'a> Neighbors<'a> {
+    /// Number of neighbors in the view.
     pub fn len(&self) -> usize {
         self.ids.len()
     }
 
+    /// True when the query has no stored neighbors.
     pub fn is_empty(&self) -> bool {
         self.ids.is_empty()
     }
@@ -298,10 +308,12 @@ impl<'a> Neighbors<'a> {
         self.get(i).expect("neighbor index out of range")
     }
 
+    /// The nearest neighbor, if any.
     pub fn first(&self) -> Option<Neighbor> {
         self.get(0)
     }
 
+    /// Iterate neighbors ascending by distance.
     pub fn iter(&self) -> NeighborsIter<'a> {
         NeighborsIter { ids: self.ids.iter(), dist2: self.dist2.iter() }
     }
@@ -316,6 +328,7 @@ impl<'a> Neighbors<'a> {
         self.dist2
     }
 
+    /// Collect the view into owned `Neighbor`s (tests/consumers).
     pub fn to_vec(&self) -> Vec<Neighbor> {
         self.iter().collect()
     }
@@ -374,10 +387,12 @@ unsafe impl Send for SoaSlots<'_> {}
 unsafe impl Sync for SoaSlots<'_> {}
 
 impl SoaSlots<'_> {
+    /// Number of query slots in the underlying table.
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// True when the underlying table has no query slots.
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }
@@ -430,6 +445,7 @@ impl SlotMut<'_> {
         *self.count = ns.len() as u32;
     }
 
+    /// Mark the query unsolved (count 0; lanes left as-is).
     pub fn clear(&mut self) {
         *self.count = 0;
     }

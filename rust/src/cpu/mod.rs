@@ -25,11 +25,13 @@ use crate::util::pool;
 /// Outcome of a CPU-side KNN pass that owns its result table.
 #[derive(Debug)]
 pub struct CpuKnnOutcome {
+    /// the KNN table (every requested query filled)
     pub result: KnnResult,
     /// wall time of each rank (seconds)
     pub per_rank_time: Vec<f64>,
     /// wall time of the whole pass
     pub total_time: f64,
+    /// queries processed
     pub queries: usize,
 }
 
@@ -41,6 +43,7 @@ pub struct CpuKnnStats {
     pub per_rank_time: Vec<f64>,
     /// wall time of the whole pass
     pub total_time: f64,
+    /// queries processed
     pub queries: usize,
     /// dynamic-scheduling grain used (diagnostics)
     pub chunk: usize,
@@ -235,6 +238,7 @@ pub fn exact_ann_drain(
                         est_work: work,
                         secs,
                         exec_secs: 0.0,
+                        transfer_secs: 0.0,
                         filter_secs: 0.0,
                         from_recirc: false,
                     });
@@ -258,6 +262,7 @@ pub fn exact_ann_drain(
                         est_work: work,
                         secs,
                         exec_secs: 0.0,
+                        transfer_secs: 0.0,
                         filter_secs: 0.0,
                         from_recirc: true,
                     });

@@ -1,8 +1,11 @@
 //! Datasets: synthetic surrogates for the paper's UCI workloads, CSV/binary
 //! IO, and the REORDER (variance) preprocessing step.
 
+/// Dataset loading/saving (CSV-ish flat files).
 pub mod io;
+/// Synthetic surrogate dataset generators (DESIGN.md §2).
 pub mod synthetic;
+/// Variance-descending dimension reorder (Sec. IV-D).
 pub mod variance;
 
 pub use synthetic::{chist_like, fma_like, songs_like, susy_like, DatasetSpec};

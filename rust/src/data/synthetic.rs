@@ -13,9 +13,13 @@ use crate::util::rng::Rng;
 /// Shape of a Gaussian-mixture surrogate.
 #[derive(Debug, Clone)]
 pub struct DatasetSpec {
+    /// generator name (which paper dataset it surrogates)
     pub name: &'static str,
+    /// |D| - points to generate
     pub n_points: usize,
+    /// dimensionality n
     pub dims: usize,
+    /// Gaussian mixture components
     pub clusters: usize,
     /// fraction of points drawn from the uniform background (sparse region)
     pub background: f64,

@@ -20,6 +20,7 @@ use crate::util::rng::Rng;
 /// Tuning knobs for the estimator (paper defaults are lightweight).
 #[derive(Debug, Clone)]
 pub struct EpsilonSelector {
+    /// histogram bins between 0 and ε^mean
     pub n_bins: usize,
     /// points sampled for the ε^mean pair estimate
     pub mean_sample: usize,
@@ -28,6 +29,7 @@ pub struct EpsilonSelector {
     /// dataset chunks (of artifact CT) scanned per histogram; caps cost on
     /// large datasets while scanning everything on small ones
     pub max_chunks: usize,
+    /// sampling seed (selection is deterministic per seed)
     pub seed: u64,
 }
 
@@ -46,8 +48,11 @@ impl Default for EpsilonSelector {
 /// Outcome of the selection.
 #[derive(Debug, Clone)]
 pub struct EpsilonSelection {
+    /// ε^mean - mean pairwise distance of the sample (Sec. V-C1)
     pub eps_mean: f64,
+    /// ε^default - the K-th-neighbor histogram estimate (Sec. V-C1)
     pub eps_default: f64,
+    /// ε^β - ε^default inflated toward ε^mean by β (Sec. V-C2)
     pub eps_beta: f64,
     /// final grid/search ε = 2 ε^β
     pub eps: f64,

@@ -15,6 +15,7 @@ pub struct BruteOutcome {
     /// kernel-only wall time (the paper's lower-bound metric excludes
     /// host-side filtering and result returns)
     pub kernel_time: f64,
+    /// wall time of the whole pass
     pub total_time: f64,
     /// tiles executed
     pub tiles: usize,

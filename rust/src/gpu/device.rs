@@ -35,6 +35,7 @@ pub enum ThreadAssign {
 /// Model constants (GP100-flavoured defaults).
 #[derive(Debug, Clone)]
 pub struct DeviceModel {
+    /// SIMT width (32 on NVIDIA)
     pub lanes_per_warp: usize,
     /// SMs x resident warps each that can hide latency concurrently
     pub concurrent_warps: usize,
@@ -65,10 +66,15 @@ impl Default for DeviceModel {
 /// Result of a model evaluation.
 #[derive(Debug, Clone, Default)]
 pub struct DeviceEstimate {
+    /// total threads launched
     pub threads: u64,
+    /// 32-lane warps formed
     pub warps: u64,
+    /// full waves over the concurrent-warp width
     pub waves: u64,
+    /// modeled device cycles
     pub cycles: f64,
+    /// modeled kernel seconds (cycles / clock)
     pub seconds: f64,
     /// fraction of lane slots doing useful work in the mean warp
     pub lane_utilisation: f64,

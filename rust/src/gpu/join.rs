@@ -18,18 +18,24 @@
 //!
 //! Two entry shapes exist. The list-driven form (`gpu_join_rs_into`)
 //! processes a fixed query set in estimator-sized batches - the paper's
-//! Sec. IV-B batching. The queue-driven form (`gpu_join_drain`) is the
-//! hybrid join's GPU master: it claims batches of aggregate estimated
-//! work off the dense head of the shared work queue (`sched`), sizes each
-//! next claim from the live CPU/GPU work rates (Eq. 6 as feedback), and
-//! *recirculates* failed queries into the queue for CPU ranks to absorb
-//! while the join is still running. The queue drain runs as a two-stage
-//! pipeline by default (`GpuJoinParams::pipelined`): device execution of
-//! claim i+1 overlaps host filtering of claim i through two alternating
-//! staging arenas and a persistent `pool::stage_scope` worker pool - the
-//! batching scheme's exec/transfer/filter overlap (Sec. IV-B), applied
-//! to the claim loop. The synchronous drain survives as the ablation
-//! baseline and the single-core schedule.
+//! Sec. IV-B batching - handing each flush round to a persistent
+//! `pool::stage_scope` filter pool (one batch in flight at a time). The
+//! queue-driven form (`gpu_join_drain`) is the hybrid join's GPU master:
+//! it claims batches of aggregate estimated work off the dense head of
+//! the shared work queue (`sched`), sizes each next claim from the live
+//! CPU/GPU work rates (Eq. 6 as feedback), and *recirculates* failed
+//! queries into the queue for CPU ranks to absorb while the join is
+//! still running. The queue drain runs as a three-stage pipeline by
+//! default ([`DrainMode::ThreeStage`]): device **exec** of claim i+1,
+//! the device-to-host **transfer** of claim i on a dedicated transfer
+//! stage, and host **filter**ing of claim i-1 all overlap, through
+//! rotating staging arenas and per-claim round lanes on the shared
+//! stage pool - the batching scheme's exec/transfer/filter overlap
+//! (Sec. IV-B), applied to the claim loop. The two-stage drain (transfer
+//! still on the master thread) and the synchronous drain survive as
+//! ablation modes; the synchronous drain is also the single-core
+//! schedule. All three produce bit-identical results
+//! (rust/tests/pipeline.rs).
 //!
 //! A query with >= K neighbors within ε is *exactly* solved: its true K
 //! nearest all lie within ε, and the grid walk provably visits every point
@@ -38,7 +44,7 @@
 use std::cell::UnsafeCell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -50,11 +56,38 @@ use crate::runtime::{tiles, tiles::TileClass, Engine};
 use crate::sched::{self, Arch, ClaimRecord, WorkQueue};
 use crate::util::pool;
 
+/// How the queue-driven GPU master (`gpu_join_drain`) overlaps its
+/// per-claim stages. All modes produce bit-identical results and the
+/// same solved/failed partition (rust/tests/pipeline.rs) - the mode only
+/// moves work between threads and wall-clock phases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainMode {
+    /// Device execution, device-to-host transfer and host filtering
+    /// alternate within each claim. The ablation baseline of the
+    /// pipelined drains, and the single-core schedule (the pipelines'
+    /// extra threads would fight the PJRT pool over one core).
+    Sync,
+    /// Two-stage pipeline: device exec of claim i+1 overlaps host
+    /// filtering of claim i through two alternating staging arenas. The
+    /// device-to-host transfer stays on the master thread - the ablation
+    /// that isolates what the dedicated transfer stage buys.
+    TwoStage,
+    /// Three-stage pipeline (the default): device exec of claim i+1, the
+    /// device-to-host transfer of claim i on a dedicated transfer
+    /// worker, and host filtering of claim i-1 all overlap through three
+    /// rotating staging arenas and per-claim round lanes on the filter
+    /// pool.
+    ThreeStage,
+}
+
 /// Parameters of the GPU side.
 #[derive(Debug, Clone)]
 pub struct GpuJoinParams {
+    /// neighbors per query
     pub k: usize,
+    /// grid/search radius ε
     pub eps: f64,
+    /// device tile family (large/small qt x ct shapes)
     pub tile_class: TileClass,
     /// prefer the on-device top-k artifact when k allows (perf path)
     pub use_topk: bool,
@@ -69,17 +102,14 @@ pub struct GpuJoinParams {
     /// self-join semantics: drop candidate id == query id. Off for
     /// bipartite R JOIN S (Sec. III: "directly applicable to R x S").
     pub exclude_self: bool,
-    /// queue-driven drain only: overlap device execution of claim i+1
-    /// with host filtering of claim i through the double-buffered stage
-    /// pipeline. Off = the synchronous drain (exec and filtering
-    /// alternate per claim) - the ablation baseline, and what single-core
-    /// hosts use (the pipeline's extra threads would fight the PJRT pool
-    /// over one core). Results are bit-identical either way
-    /// (rust/tests/pipeline.rs).
-    pub pipelined: bool,
+    /// queue-driven drain only: how the per-claim stages overlap (the
+    /// list-driven form always pipelines its flush rounds through the
+    /// stage pool within one batch and ignores this field).
+    pub drain: DrainMode,
 }
 
 impl GpuJoinParams {
+    /// Paper-default parameters for the given K and ε.
     pub fn new(k: usize, eps: f64) -> Self {
         GpuJoinParams {
             k,
@@ -95,7 +125,7 @@ impl GpuJoinParams {
             assign: ThreadAssign::Static(8),
             estimator_frac: 0.01,
             exclude_self: true,
-            pipelined: true,
+            drain: DrainMode::ThreeStage,
         }
     }
 }
@@ -107,6 +137,7 @@ pub struct GpuJoinOutcome {
     pub result: KnnResult,
     /// Q^Fail - queries with < K neighbors within ε
     pub failed: Vec<u32>,
+    /// queries solved exactly
     pub solved: usize,
     /// wall time inside PJRT execution
     pub kernel_time: f64,
@@ -131,21 +162,41 @@ pub struct GpuJoinOutcome {
 pub struct GpuJoinStats {
     /// Q^Fail - queries with < K neighbors within ε (slots untouched)
     pub failed: Vec<u32>,
+    /// queries solved exactly (slots written)
     pub solved: usize,
+    /// wall time inside PJRT execution
     pub kernel_time: f64,
+    /// wall time of the whole join (incl. packing + filtering)
     pub total_time: f64,
+    /// modeled GPU kernel time for the configured ThreadAssign
     pub device_model: DeviceEstimate,
+    /// batches (list form) / claims (queue form) executed
     pub batches: usize,
     /// list form: estimator-predicted result pairs; queue form: estimated
     /// work actually claimed
     pub estimated_pairs: u64,
+    /// realised in-ε result pairs
     pub result_pairs: u64,
+    /// max pairs observed in one batch (must stay <= buffer_pairs)
     pub max_batch_pairs: u64,
     /// master-thread seconds materialising, packing and executing tiles
-    /// (claim resolution included). `exec_time + filter_time >
-    /// total_time` is the observable signature of the pipelined drain
-    /// actually overlapping the two stages.
+    /// on the device (claim resolution included; the literal-to-host
+    /// conversion excluded - see `transfer_time`). `exec_time +
+    /// transfer_time + filter_time > total_time` is the observable
+    /// signature of a pipelined drain actually overlapping its stages.
     pub exec_time: f64,
+    /// seconds converting device output literals into flat host buffers
+    /// (`to_f32`/`to_i32`), summed over flush rounds - the host half of
+    /// the device-to-host path. On this PJRT-CPU stack the preceding
+    /// buffer-to-literal materialisation happens inside `exec_lits`
+    /// (`to_literal_sync`) and therefore stays on the master thread
+    /// inside `exec_time`/`kernel_time`; a real-accelerator backend
+    /// would want that DMA moved onto the transfer stage too (async
+    /// PJRT transfers). On the three-stage drain this conversion runs
+    /// on the dedicated transfer stage and overlaps `exec_time`; on the
+    /// sync/two-stage drains and the list form it runs on the master
+    /// thread.
+    pub transfer_time: f64,
     /// filter-stage wall seconds (host-side ε test + heap merge) summed
     /// over flush rounds
     pub filter_time: f64,
@@ -207,6 +258,16 @@ pub fn gpu_join_rs(
 /// Q^Fail CPU pass. The caller must not concurrently write the slots of
 /// `queries` elsewhere (see `SoaSlots::slot`); this function itself
 /// resolves results on the calling thread only.
+///
+/// Batches flow through the same stage-pool machinery as the queue
+/// drains: one persistent filter pool serves every batch, so device
+/// execution overlaps filtering *within* a batch while batches stay
+/// synchronous - each batch is fully filtered and resolved before the
+/// next one starts, so results are identical to the former
+/// inline-filtered path (and the per-round worker spawns are gone). All
+/// batches share one lane and one staging arena - batches are strictly
+/// sequential here, and one lane per arena is exactly the pool's
+/// lane/arena contract (rounds targeting one arena stay ordered).
 pub fn gpu_join_rs_into(
     engine: &Engine,
     r_data: &Dataset,
@@ -227,6 +288,7 @@ pub fn gpu_join_rs_into(
     let use_topk = params.use_topk
         && plan_large.topk_name.is_some()
         && params.k <= plan_large.topk_k;
+    let plans = (&plan_large, &plan_small);
 
     // ---- group queries by cell (shared candidate lists) ----
     let mut by_cell: HashMap<u64, Vec<u32>> = HashMap::new();
@@ -253,8 +315,7 @@ pub fn gpu_join_rs_into(
         .collect();
     let device_model = DeviceModel::default().estimate(&work, params.assign);
 
-    // ---- batch estimator (Sec. IV-B) ----
-    let mut kernel_time = 0f64;
+    // ---- estimator sample (Sec. IV-B) ----
     let sample_n = ((cells.len() as f64 * params.estimator_frac).ceil() as usize)
         .clamp(1.min(cells.len()), cells.len());
     let sample: Vec<WorkCell> = cells
@@ -263,90 +324,207 @@ pub fn gpu_join_rs_into(
         .cloned()
         .collect();
     let sampled_queries: usize = sample.iter().map(|c| c.queries.len()).sum();
-    let mut filter_time = 0f64;
-    let (_, _, sample_pairs, sample_filter_secs) = exec_filter_cells(
-        engine,
-        (r_data, data),
-        (&plan_large, &plan_small),
-        use_topk,
-        &sample,
-        params,
-        &mut kernel_time,
-    )?;
-    filter_time += sample_filter_secs;
-    let estimated_pairs = if sampled_queries > 0 {
-        (sample_pairs as f64 * queries.len() as f64 / sampled_queries as f64)
-            .ceil() as u64
-    } else {
-        0
-    };
 
-    // number of batches: >= 3 (stream overlap), 1.5x estimator slack
-    let n_batches = ((estimated_pairs as f64 * 1.5 / params.buffer_pairs as f64)
-        .ceil() as usize)
-        .max(3)
-        .min(cells.len().max(3));
+    // Per-round chunk cap: half the synchronous flush envelope, so one
+    // round in flight plus one being filled never exceed the former
+    // buffered-output envelope (as in the two-stage drain). On a
+    // single-core host each round is instead waited out inline - the
+    // overlap would only thrash the one core.
+    let n_workers = params.streams.max(1);
+    let round_cap = (n_workers * 8 / 2).max(1);
+    let overlap_rounds = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        > 1;
+    let arena_k = params.k.max(1);
+    let eps2 = params.eps * params.eps;
+    let exclude_self = params.exclude_self;
+    let n_queries_total = queries.len();
 
-    // ---- partition cells into batches (round-robin by size rank) ----
-    let mut batches: Vec<Vec<WorkCell>> = vec![Vec::new(); n_batches];
-    for (i, c) in cells.into_iter().enumerate() {
-        batches[i % n_batches].push(c);
-    }
-
-    // ---- execute batches, resolving each into slots / Q^Fail ----
-    let mut failed = Vec::new();
-    let mut solved = 0usize;
-    let mut result_pairs = 0u64;
-    let mut max_batch_pairs = 0u64;
-    let mut executed_batches = 0usize;
-    for batch in &batches {
-        if batch.is_empty() {
-            continue;
-        }
-        let (batch_queries, mut heaps, batch_pairs, batch_filter_secs) =
-            exec_filter_cells(
-                engine,
-                (r_data, data),
-                (&plan_large, &plan_small),
-                use_topk,
-                batch,
-                params,
-                &mut kernel_time,
-            )?;
-        filter_time += batch_filter_secs;
-        for (pos, &q) in batch_queries.iter().enumerate() {
-            let h = &mut heaps[pos];
-            if h.len() >= params.k {
-                // SAFETY: `queries` is duplicate-free and only this thread
-                // writes GPU-side slots (caller keeps concurrent writers
-                // off these ids).
-                unsafe { slots.slot(q as usize) }.write_heap(h);
-                solved += 1;
-            } else {
-                failed.push(q);
+    let (master_out, _worker_units) = pool::stage_scope(
+        n_workers,
+        1, // bounded hand-off: one flush round queued/filtering at a time
+        |_w| (),
+        |_s: &mut (), job: &FilterRound, i: usize| {
+            let mut pairs = 0u64;
+            apply_tile(
+                &job.tiles[i],
+                &job.stage.batch_queries,
+                &job.stage.arena,
+                eps2,
+                exclude_self,
+                &mut pairs,
+            );
+            if pairs > 0 {
+                job.stage.pairs.fetch_add(pairs, Ordering::Relaxed);
             }
-        }
-        result_pairs += batch_pairs;
-        max_batch_pairs = max_batch_pairs.max(batch_pairs);
-        executed_batches += 1;
-    }
-    failed.sort_unstable();
+        },
+        |job: &FilterRound, wall: f64| {
+            job.stage
+                .filter_nanos
+                .fetch_add((wall * 1e9) as u64, Ordering::Relaxed);
+        },
+        |_s| (),
+        |handle| -> Result<(DrainAcc, u64)> {
+            let mut acc = DrainAcc::default();
+            let mut stage = Arc::new(ClaimStage::new(arena_k));
 
+            // batch estimator: run the sample through the pool and scale
+            // the in-ε pair count to the full query set
+            let sample_pairs = exec_filter_batch_pooled(
+                engine, (r_data, data), plans, use_topk, &sample, params,
+                round_cap, handle, overlap_rounds, &mut stage, &mut acc,
+            )?;
+            let estimated_pairs = if sampled_queries > 0 {
+                (sample_pairs as f64 * n_queries_total as f64
+                    / sampled_queries as f64)
+                    .ceil() as u64
+            } else {
+                0
+            };
+
+            // number of batches: >= 3 (stream overlap), 1.5x estimator slack
+            let n_batches = ((estimated_pairs as f64 * 1.5
+                / params.buffer_pairs as f64)
+                .ceil() as usize)
+                .max(3)
+                .min(cells.len().max(3));
+
+            // ---- partition cells into batches (round-robin by size rank) ----
+            let mut batches: Vec<Vec<WorkCell>> = vec![Vec::new(); n_batches];
+            for (i, c) in cells.into_iter().enumerate() {
+                batches[i % n_batches].push(c);
+            }
+
+            // ---- execute batches, resolving each into slots / Q^Fail ----
+            for batch in &batches {
+                if batch.is_empty() {
+                    continue;
+                }
+                let batch_pairs = exec_filter_batch_pooled(
+                    engine, (r_data, data), plans, use_topk, batch, params,
+                    round_cap, handle, overlap_rounds, &mut stage, &mut acc,
+                )?;
+                // the lane is drained: the stage is unique again and its
+                // arena holds the batch's filtered heaps
+                let s = Arc::get_mut(&mut stage).expect("stage shared after batch");
+                for (pos, &q) in s.batch_queries.iter().enumerate() {
+                    let h = s.arena.heap_mut(pos);
+                    if h.len() >= params.k {
+                        // SAFETY: `queries` is duplicate-free and only this
+                        // thread writes GPU-side slots (caller keeps
+                        // concurrent writers off these ids).
+                        unsafe { slots.slot(q as usize) }.write_heap(h);
+                        acc.solved += 1;
+                    } else {
+                        acc.failed.push(q);
+                    }
+                }
+                acc.result_pairs += batch_pairs;
+                acc.max_batch_pairs = acc.max_batch_pairs.max(batch_pairs);
+                acc.batches += 1;
+            }
+            Ok((acc, estimated_pairs))
+        },
+    );
+
+    let (mut acc, estimated_pairs) = master_out?;
+    acc.failed.sort_unstable();
     let total_time = t_start.elapsed().as_secs_f64();
     Ok(GpuJoinStats {
-        failed,
-        solved,
-        kernel_time,
+        failed: acc.failed,
+        solved: acc.solved,
+        kernel_time: acc.kernel_time,
         total_time,
         device_model,
-        batches: executed_batches,
+        batches: acc.batches,
         estimated_pairs,
-        result_pairs,
-        max_batch_pairs,
-        exec_time: (total_time - filter_time).max(0.0),
-        filter_time,
+        result_pairs: acc.result_pairs,
+        max_batch_pairs: acc.max_batch_pairs,
+        // list form: master time is not separately clocked - exec is the
+        // wall minus the measured transfer/filter components
+        exec_time: (total_time - acc.transfer_time - acc.filter_time).max(0.0),
+        transfer_time: acc.transfer_time,
+        filter_time: acc.filter_time,
         claims: Vec::new(),
     })
+}
+
+/// Execute + filter one batch of cells through the shared stage pool
+/// (the list-driven path): refill `stage` (unique at entry), execute the
+/// batch's tiles - converting device output on this thread (the
+/// master-side transfer) and handing each flush round to the pool's
+/// filter workers - then wait the lane out, so at return the stage is
+/// unique again and its arena holds the batch's filtered heaps. Every
+/// batch reuses one lane and one arena (batches are sequential; one
+/// lane per arena is the pool's lane/arena contract). With
+/// `overlap_rounds` the filter workers run concurrently with the next
+/// device call (within-batch exec/filter overlap); without it each
+/// round is waited out inline (the single-core schedule). Adds
+/// kernel/transfer/filter seconds to `acc` and returns the batch's in-ε
+/// pair count.
+#[allow(clippy::too_many_arguments)]
+fn exec_filter_batch_pooled(
+    engine: &Engine,
+    (r_data, data): (&Dataset, &Dataset),
+    plans: (&tiles::TilePlan, &tiles::TilePlan),
+    use_topk: bool,
+    cells: &[WorkCell],
+    params: &GpuJoinParams,
+    round_cap: usize,
+    handle: &pool::StageHandle<FilterRound>,
+    overlap_rounds: bool,
+    stage: &mut Arc<ClaimStage>,
+    acc: &mut DrainAcc,
+) -> Result<u64> {
+    // the list form's single lane: one arena, sequential batches
+    let lane = 0u64;
+    let arena_k = params.k.max(1);
+    let n_queries: usize = cells.iter().map(|c| c.queries.len()).sum();
+    {
+        let s = Arc::get_mut(stage).expect("stage shared at batch refill");
+        s.batch_queries.clear();
+        s.batch_queries
+            .extend(cells.iter().flat_map(|c| c.queries.iter().copied()));
+        s.arena.reset(n_queries, arena_k);
+        s.pairs.store(0, Ordering::Relaxed);
+        s.filter_nanos.store(0, Ordering::Relaxed);
+        s.transfer_nanos.store(0, Ordering::Relaxed);
+    }
+    let mut transfer_secs = 0f64;
+    {
+        let stage_arc = &*stage;
+        exec_cells_into_rounds(
+            engine,
+            (r_data, data),
+            plans,
+            use_topk,
+            cells,
+            params,
+            round_cap,
+            &mut acc.kernel_time,
+            &mut |raw: Vec<RawTile>| {
+                let t0 = Instant::now();
+                let tiles = convert_tiles(raw)?;
+                transfer_secs += t0.elapsed().as_secs_f64();
+                let len = tiles.len();
+                handle.submit(
+                    FilterRound { stage: Arc::clone(stage_arc), tiles },
+                    len,
+                    lane,
+                );
+                if !overlap_rounds {
+                    handle.wait_lane(lane);
+                }
+                Ok(())
+            },
+        )?;
+    }
+    handle.wait_lane(lane);
+    acc.transfer_time += transfer_secs;
+    let s = Arc::get_mut(stage).expect("stage shared after lane wait");
+    acc.filter_time += s.filter_nanos.load(Ordering::Relaxed) as f64 / 1e9;
+    Ok(s.pairs.load(Ordering::Relaxed))
 }
 
 /// The hybrid join's GPU master: drain the dense head of the shared work
@@ -371,12 +549,14 @@ pub fn gpu_join_rs_into(
 /// written by whichever CPU rank claims them from recirculation, never
 /// here.
 ///
-/// With `params.pipelined` the drain runs as a two-stage pipeline
-/// (`drain_pipelined`): the master executes claim i+1's tiles while the
-/// `streams` filter workers are still filtering claim i into its staging
-/// arena. Without it (`drain_sync`) exec and filtering alternate per
-/// claim - the ablation baseline. Both produce bit-identical results
-/// (rust/tests/pipeline.rs); see DESIGN.md §5 for the hand-off contract.
+/// `params.drain` picks the claim-level overlap: the three-stage
+/// pipeline (default - device exec of claim i+1, device-to-host transfer
+/// of claim i, host filtering of claim i-1), the two-stage pipeline
+/// (transfer stays on the master - the ablation isolating the dedicated
+/// transfer stage), or the synchronous drain (`drain_sync`, where all
+/// stages alternate per claim - the ablation baseline). All modes
+/// produce bit-identical results (rust/tests/pipeline.rs); see DESIGN.md
+/// §5 for the hand-off contract.
 #[allow(clippy::too_many_arguments)]
 pub fn gpu_join_drain(
     engine: &Engine,
@@ -411,6 +591,7 @@ pub fn gpu_join_drain(
             result_pairs: 0,
             max_batch_pairs: 0,
             exec_time: 0.0,
+            transfer_time: 0.0,
             filter_time: 0.0,
             claims: Vec::new(),
         });
@@ -424,16 +605,19 @@ pub fn gpu_join_drain(
         && params.k <= plan_large.topk_k;
     let plans = (&plan_large, &plan_small);
 
-    if params.pipelined {
-        drain_pipelined(
+    match params.drain {
+        DrainMode::Sync => drain_sync(
             engine, r_data, data, grid, queue, params, slots, pos_cap, plans,
             use_topk, first, t_start,
-        )
-    } else {
-        drain_sync(
+        ),
+        DrainMode::TwoStage => drain_pipelined(
             engine, r_data, data, grid, queue, params, slots, pos_cap, plans,
-            use_topk, first, t_start,
-        )
+            use_topk, first, t_start, false,
+        ),
+        DrainMode::ThreeStage => drain_pipelined(
+            engine, r_data, data, grid, queue, params, slots, pos_cap, plans,
+            use_topk, first, t_start, true,
+        ),
     }
 }
 
@@ -490,6 +674,7 @@ fn drain_sync(
     let mut batches = 0usize;
     let mut gpu_busy = 0f64;
     let mut exec_time = 0f64;
+    let mut transfer_time = 0f64;
     let mut filter_time = 0f64;
     let mut work_done = 0u64;
 
@@ -497,7 +682,7 @@ fn drain_sync(
     while let Some(range) = pending.take() {
         let t_claim = Instant::now();
         let cells = claim_cells(queue, grid, r_data, range.clone(), &mut work_log);
-        let (batch_queries, mut heaps, batch_pairs, filter_secs) =
+        let (batch_queries, mut heaps, batch_pairs, transfer_secs, filter_secs) =
             exec_filter_cells(
                 engine,
                 (r_data, data),
@@ -527,8 +712,9 @@ fn drain_sync(
         batches += 1;
         let secs = t_claim.elapsed().as_secs_f64();
         gpu_busy += secs;
-        let exec_secs = (secs - filter_secs).max(0.0);
+        let exec_secs = (secs - transfer_secs - filter_secs).max(0.0);
         exec_time += exec_secs;
+        transfer_time += transfer_secs;
         filter_time += filter_secs;
         let est = queue.range_work(range.clone());
         work_done += est;
@@ -538,11 +724,16 @@ fn drain_sync(
             est_work: est,
             secs,
             exec_secs,
+            transfer_secs,
             filter_secs,
             from_recirc: false,
         });
 
-        // Eq. 6 as feedback: size the next claim from live rates
+        // Eq. 6 as feedback: size the next claim from live rates. The
+        // sync drain really does pay exec + transfer + filter serially
+        // per claim, so its honest throughput is work over *total* busy
+        // seconds (unlike the pipelined drains, which size from the
+        // kernel-only rate because their other stages overlap).
         let gpu_rate = if gpu_busy > 0.0 { work_done as f64 / gpu_busy } else { 0.0 };
         let target = sched::next_batch_work(
             queue.head_work_remaining(pos_cap),
@@ -566,26 +757,37 @@ fn drain_sync(
         result_pairs,
         max_batch_pairs,
         exec_time,
+        transfer_time,
         filter_time,
         claims,
     })
 }
 
-/// Shared staging half of one in-flight claim: the claim's flat query
-/// list, the dense heap arena its filter rounds write, and the two
-/// accumulators the workers feed. Two of these alternate between the
-/// master (filling claim i+1) and the filter stage (draining claim i) -
-/// the double buffer of the pipelined drain. The plain fields are only
-/// mutated through `Arc::get_mut`, i.e. while no filter round holds a
-/// clone - uniqueness *is* the proof that the workers are done with it.
+/// Shared staging half of one in-flight claim (or list-form batch): the
+/// claim's flat query list, the dense heap arena its filter rounds
+/// write, and the accumulators the stage workers feed. The pipelined
+/// drains rotate two (two-stage) or three (three-stage) of these between
+/// the master (filling claim i), the transfer stage (converting claim
+/// i-1) and the filter stage (draining claim i-2). The plain fields are
+/// only mutated through `Arc::get_mut`, i.e. while no round holds a
+/// clone - uniqueness *is* the proof that the stages are done with it.
 struct ClaimStage {
     batch_queries: Vec<u32>,
     arena: HeapArena,
     /// in-ε pairs found in this claim (filter workers accumulate)
     pairs: AtomicU64,
+    /// transfer nanoseconds over this claim's rounds, accumulated by the
+    /// dedicated transfer worker (three-stage drain only; the sync/
+    /// two-stage/list paths time the master-side conversion directly)
+    transfer_nanos: AtomicU64,
     /// filter wall nanoseconds over this claim's rounds (stage-pool
-    /// retire hook; overlaps the next claim's exec under the pipeline)
+    /// retire hook; overlaps later claims' exec under the pipelines)
     filter_nanos: AtomicU64,
+    /// first device-to-host conversion error of the transfer stage, if
+    /// any - surfaced as the claim's resolve error (three-stage drain
+    /// only; the other paths convert on the master and propagate
+    /// directly)
+    transfer_err: Mutex<Option<anyhow::Error>>,
 }
 
 impl ClaimStage {
@@ -594,30 +796,56 @@ impl ClaimStage {
             batch_queries: Vec::new(),
             arena: HeapArena::new(0, k.max(1)),
             pairs: AtomicU64::new(0),
+            transfer_nanos: AtomicU64::new(0),
             filter_nanos: AtomicU64::new(0),
+            transfer_err: Mutex::new(None),
         }
     }
 }
 
-/// One flush round handed to the stage pool: a set of position-disjoint
-/// tiles targeting `stage`'s arena (a tile split across rounds re-appears
-/// in the next round; the pool's strict round ordering keeps that safe).
+/// One converted flush round handed to the filter pool: a set of
+/// position-disjoint tiles targeting `stage`'s arena (a tile split
+/// across rounds re-appears in the lane's next round; the pool's
+/// per-lane round ordering keeps that safe, and rounds of different
+/// lanes target different stages' arenas, so cross-lane overlap cannot
+/// alias a position).
 struct FilterRound {
     stage: Arc<ClaimStage>,
     tiles: Vec<TileOut>,
+}
+
+/// One raw flush round handed to the dedicated transfer stage
+/// (three-stage drain): device output literals to convert into host
+/// buffers and re-submit to the filter pool on the same lane. A single
+/// item per round - the single transfer worker processes rounds in lane
+/// order, so filter rounds arrive at the filter pool in claim/round
+/// order.
+struct TransferRound {
+    stage: Arc<ClaimStage>,
+    /// the claim lane the converted filter round is submitted on
+    lane: u64,
+    /// consumed (once) by the transfer worker; `Mutex<Option<..>>` so the
+    /// tiles can be moved out through the pool's shared job reference
+    tiles: Mutex<Option<Vec<RawTile>>>,
 }
 
 /// Master-side half of an in-flight claim (never seen by the workers).
 struct ClaimMeta {
     range: std::ops::Range<usize>,
     est_work: u64,
-    /// master-thread seconds materialising + packing + executing
+    /// master-thread seconds materialising + packing + executing on the
+    /// device (submit backpressure and master-side transfer excluded)
     exec_secs: f64,
-    /// stage-pool epoch of the claim's last flush round (0 = none)
-    last_epoch: usize,
+    /// master-thread seconds converting device output (two-stage drain;
+    /// the three-stage drain transfers off-master into
+    /// `ClaimStage::transfer_nanos` instead)
+    transfer_secs: f64,
+    /// the claim's stage-pool lane (claim ordinal)
+    lane: u64,
 }
 
-/// Accumulators of the pipelined drain, shared with the resolve path.
+/// Accumulators of the pipelined drains and the list-form batch loop,
+/// shared with the resolve path.
 #[derive(Default)]
 struct DrainAcc {
     claims: Vec<ClaimRecord>,
@@ -628,31 +856,43 @@ struct DrainAcc {
     max_batch_pairs: u64,
     batches: usize,
     exec_time: f64,
+    transfer_time: f64,
     filter_time: f64,
     kernel_time: f64,
     work_done: u64,
 }
 
-/// Wait out a claim's outstanding filter rounds, then resolve its arena
-/// into result slots / Q^Fail and log the claim. Runs on the master
-/// thread only: slot writes and `push_failed` keep their single-writer /
-/// single-producer contracts. Under the pipeline this runs *after* the
-/// next claim was already taken off the head, so a claim's Q^Fail may
-/// recirculate behind its successor - the reordering the
-/// failure-injection suite pins down.
+/// Wait out a claim's outstanding transfer and filter rounds, then
+/// resolve its arena into result slots / Q^Fail and log the claim. Runs
+/// on the master thread only: slot writes and `push_failed` keep their
+/// single-writer / single-producer contracts. Under the pipelines this
+/// runs *after* later claims were already taken off the head, so a
+/// claim's Q^Fail may recirculate several claims behind its successor -
+/// the reordering the failure-injection suite pins down.
 #[allow(clippy::too_many_arguments)]
 fn resolve_stage(
     stage: &mut Arc<ClaimStage>,
     meta: ClaimMeta,
-    pool_handle: &pool::StageHandle<FilterRound>,
+    transfer_handle: Option<&pool::StageHandle<TransferRound>>,
+    filter_handle: &pool::StageHandle<FilterRound>,
     queue: &WorkQueue,
     k: usize,
     slots: &SoaSlots<'_>,
     acc: &mut DrainAcc,
-) {
-    pool_handle.wait(meta.last_epoch);
+) -> Result<()> {
+    // dependency order: once the transfer lane is empty, every filter
+    // round of the claim has been submitted (the transfer worker submits
+    // before its round retires); once the filter lane is empty, the
+    // arena is quiescent and the Arc is unique again
+    if let Some(th) = transfer_handle {
+        th.wait_lane(meta.lane);
+    }
+    filter_handle.wait_lane(meta.lane);
     let stage = Arc::get_mut(stage)
         .expect("claim rounds retired but stage still shared");
+    if let Some(e) = stage.transfer_err.lock().unwrap().take() {
+        return Err(e);
+    }
     let mut failed_batch = Vec::new();
     for (pos, &q) in stage.batch_queries.iter().enumerate() {
         let h = stage.arena.heap_mut(pos);
@@ -669,41 +909,58 @@ fn resolve_stage(
     acc.failed.extend_from_slice(&failed_batch);
 
     let batch_pairs = stage.pairs.load(Ordering::Relaxed);
+    let transfer_secs = meta.transfer_secs
+        + stage.transfer_nanos.load(Ordering::Relaxed) as f64 / 1e9;
     let filter_secs = stage.filter_nanos.load(Ordering::Relaxed) as f64 / 1e9;
     acc.result_pairs += batch_pairs;
     acc.max_batch_pairs = acc.max_batch_pairs.max(batch_pairs);
     acc.batches += 1;
     acc.exec_time += meta.exec_secs;
+    acc.transfer_time += transfer_secs;
     acc.filter_time += filter_secs;
     acc.claims.push(ClaimRecord {
         arch: Arch::Gpu,
         queries: meta.range.len(),
         est_work: meta.est_work,
-        secs: meta.exec_secs + filter_secs,
+        secs: meta.exec_secs + transfer_secs + filter_secs,
         exec_secs: meta.exec_secs,
+        transfer_secs,
         filter_secs,
         from_recirc: false,
     });
+    Ok(())
 }
 
-/// The pipelined queue drain: device execution of claim i+1 overlaps
-/// host filtering of claim i.
+/// The pipelined queue drains: device execution of claim i+1 overlaps
+/// the downstream stages of earlier claims.
 ///
 /// * the master thread (PJRT client is !Send) claims, materialises and
-///   executes tiles, handing each flush round (≤ `round_cap` chunks) to
-///   a persistent pool of `streams` filter workers;
-/// * two [`ClaimStage`] staging sets alternate per claim: before slot
-///   i%2 is refilled for claim i, claim i-2's rounds are waited out and
-///   its arena resolved - so at any instant at most two claims are live,
-///   one filling and one filtering, and their arenas are position-
-///   disjoint because their queue claims are disjoint;
-/// * the hand-off is bounded (pool capacity 1, `round_cap` = half the
-///   synchronous flush envelope), so buffered device output stays within
-///   the former `chunk_cap` envelope: one round in flight + one filling;
-/// * the next claim is sized at claim time from the *exec-side* work
-///   rate (available before claim i's filter completes) against the live
-///   CPU rate - the telemetry split that makes claim-ahead sizing
-///   possible.
+///   executes tiles, emitting flush rounds of ≤ `round_cap` device
+///   chunks on the claim's *lane*;
+/// * **two-stage** (`three_stage = false`): the master converts each
+///   round's device output itself and hands it to a persistent pool of
+///   `streams` filter workers - exec of claim i+1 overlaps filtering of
+///   claim i through two rotating [`ClaimStage`] staging sets;
+/// * **three-stage** (`three_stage = true`): raw rounds go to a
+///   dedicated transfer worker that converts the literals off the master
+///   thread and re-submits the converted round to the filter pool on the
+///   same lane - exec of claim i+1, transfer of claim i and filtering of
+///   claim i-1 all overlap through three rotating staging sets, and the
+///   filter pool (capacity 2, per-lane ordering) may interleave rounds
+///   of adjacent claims for extra tail parallelism;
+/// * before staging set i mod depth is refilled for claim i, claim
+///   i-depth is waited out and resolved - at most `depth` claims are
+///   live, and their arenas can never alias a queue position because
+///   their queue claims are disjoint intervals;
+/// * the hand-off is bounded: the per-round chunk cap divides the former
+///   synchronous flush envelope by the number of rounds that can be
+///   buffered at once, so total buffered device output stays within the
+///   old `chunk_cap` envelope and backpressure degrades the pipeline
+///   gracefully toward the synchronous schedule;
+/// * the next claim is sized at claim time from the *kernel-side* work
+///   rate (`exec_secs` excludes transfer and backpressure) against the
+///   live CPU rate - the telemetry split that makes claim-ahead sizing
+///   honest under overlap.
 #[allow(clippy::too_many_arguments)]
 fn drain_pipelined(
     engine: &Engine,
@@ -718,23 +975,25 @@ fn drain_pipelined(
     use_topk: bool,
     first: std::ops::Range<usize>,
     t_start: Instant,
+    three_stage: bool,
 ) -> Result<GpuJoinStats> {
-    let buffer_cap = params.buffer_pairs.max(1);
     let eps2 = params.eps * params.eps;
     let exclude_self = params.exclude_self;
-    // heap bound for the staging arenas; the solved test below uses the
-    // RAW params.k so the partition matches the synchronous drains even
-    // for the degenerate k = 0
-    let arena_k = params.k.max(1);
     let n_workers = params.streams.max(1);
-    // Per-round chunk cap: HALF the synchronous flush envelope, so one
-    // round in flight plus one being filled never exceed the former
-    // `chunk_cap` worth of buffered device output.
-    let round_cap = (n_workers * 8 / 2).max(1);
+    // Memory envelope: the sync drain buffers up to `streams * 8` device
+    // chunks at a time. Divide that envelope by the number of rounds
+    // that can be buffered at once: two-stage = one in flight + one
+    // filling; three-stage = one filling + one staged for transfer + two
+    // in the filter pool.
+    let (round_cap, filter_cap) = if three_stage {
+        ((n_workers * 8 / 4).max(1), 2)
+    } else {
+        ((n_workers * 8 / 2).max(1), 1)
+    };
 
     let (master_out, _worker_units) = pool::stage_scope(
         n_workers,
-        1, // bounded hand-off: one round queued/filtering at a time
+        filter_cap,
         |_w| (),
         |_s: &mut (), job: &FilterRound, i: usize| {
             let mut pairs = 0u64;
@@ -756,115 +1015,65 @@ fn drain_pipelined(
                 .fetch_add((wall * 1e9) as u64, Ordering::Relaxed);
         },
         |_s| (),
-        |pool_handle| -> Result<DrainAcc> {
-            let mut acc = DrainAcc::default();
-            let mut stages: [Arc<ClaimStage>; 2] = [
-                Arc::new(ClaimStage::new(arena_k)),
-                Arc::new(ClaimStage::new(arena_k)),
-            ];
-            let mut metas: [Option<ClaimMeta>; 2] = [None, None];
-            let mut claim_idx = 0usize;
-            let mut pending = Some(first);
-
-            while let Some(range) = pending.take() {
-                let si = claim_idx % 2;
-                // reclaim this staging set: the claim two back must fully
-                // filter and resolve before its arena is reused
-                if let Some(meta) = metas[si].take() {
-                    resolve_stage(
-                        &mut stages[si], meta, pool_handle, queue, params.k,
-                        slots, &mut acc,
-                    );
-                }
-                let t_exec = Instant::now();
-                let cells =
-                    claim_cells(queue, grid, r_data, range.clone(), &mut acc.work_log);
-                let n_queries: usize = cells.iter().map(|c| c.queries.len()).sum();
-                {
-                    // unique access: all of this set's rounds have retired
-                    let stage = Arc::get_mut(&mut stages[si])
-                        .expect("stage still shared at refill");
-                    stage.batch_queries.clear();
-                    stage
-                        .batch_queries
-                        .extend(cells.iter().flat_map(|c| c.queries.iter().copied()));
-                    stage.arena.reset(n_queries, arena_k);
-                    stage.pairs.store(0, Ordering::Relaxed);
-                    stage.filter_nanos.store(0, Ordering::Relaxed);
-                }
-                // execute this claim's tiles; claim i-1's rounds keep
-                // filtering on the workers while the device runs
-                let mut last_epoch = 0usize;
-                // master seconds spent BLOCKED in submit backpressure -
-                // that is the filter stage lagging, not device work, so it
-                // must not inflate exec_secs (or fabricate overlap, or
-                // bias the exec-side rate low)
-                let mut submit_wait = 0f64;
-                {
-                    let stage_arc = &stages[si];
-                    exec_cells_into_rounds(
-                        engine,
-                        (r_data, data),
-                        plans,
-                        use_topk,
-                        &cells,
-                        params,
-                        round_cap,
-                        &mut acc.kernel_time,
-                        &mut |tiles: Vec<TileOut>| {
-                            debug_assert!(
-                                tiles.iter().all(|t| t.pos.end <= n_queries),
-                                "round tile positions exceed the claim arena"
-                            );
-                            let len = tiles.len();
-                            let t_submit = Instant::now();
-                            last_epoch = pool_handle.submit(
-                                FilterRound { stage: Arc::clone(stage_arc), tiles },
-                                len,
-                            );
-                            submit_wait += t_submit.elapsed().as_secs_f64();
-                        },
-                    )?;
-                }
-                let est = queue.range_work(range.clone());
-                let exec_secs =
-                    (t_exec.elapsed().as_secs_f64() - submit_wait).max(0.0);
-                acc.work_done += est;
-                metas[si] =
-                    Some(ClaimMeta { range, est_work: est, exec_secs, last_epoch });
-                claim_idx += 1;
-
-                // claim-ahead sizing: the exec-side rate is known NOW,
-                // before this claim's filter completes; the CPU rate is
-                // read live off the queue at claim time
-                let exec_busy = acc.exec_time
-                    + metas.iter().flatten().map(|m| m.exec_secs).sum::<f64>();
-                let gpu_rate = if exec_busy > 0.0 {
-                    acc.work_done as f64 / exec_busy
-                } else {
-                    0.0
-                };
-                let target = sched::next_batch_work(
-                    queue.head_work_remaining(pos_cap),
-                    gpu_rate,
-                    queue.cpu_work_rate(),
+        |filter_handle| -> Result<DrainAcc> {
+            if three_stage {
+                let (out, _transfer_units) = pool::stage_scope(
+                    1, // the dedicated transfer worker
+                    1, // bounded hand-off: one raw round staged at a time
+                    |_w| (),
+                    |_s: &mut (), job: &TransferRound, _i: usize| {
+                        let raw = job
+                            .tiles
+                            .lock()
+                            .unwrap()
+                            .take()
+                            .expect("transfer round taken twice");
+                        let t0 = Instant::now();
+                        match convert_tiles(raw) {
+                            Ok(tiles) => {
+                                job.stage.transfer_nanos.fetch_add(
+                                    (t0.elapsed().as_secs_f64() * 1e9) as u64,
+                                    Ordering::Relaxed,
+                                );
+                                let len = tiles.len();
+                                filter_handle.submit(
+                                    FilterRound {
+                                        stage: Arc::clone(&job.stage),
+                                        tiles,
+                                    },
+                                    len,
+                                    job.lane,
+                                );
+                            }
+                            Err(e) => {
+                                // surface at the claim's resolve; skipping
+                                // the filter submit is safe (lane waits
+                                // are emptiness-based, not count-based)
+                                let mut slot =
+                                    job.stage.transfer_err.lock().unwrap();
+                                if slot.is_none() {
+                                    *slot = Some(e);
+                                }
+                            }
+                        }
+                    },
+                    |_job, _wall| {},
+                    |_s| (),
+                    |transfer_handle| {
+                        pipelined_claim_loop(
+                            engine, r_data, data, grid, queue, params, slots,
+                            pos_cap, plans, use_topk, first, round_cap,
+                            Some(transfer_handle), filter_handle,
+                        )
+                    },
+                );
+                out
+            } else {
+                pipelined_claim_loop(
+                    engine, r_data, data, grid, queue, params, slots, pos_cap,
+                    plans, use_topk, first, round_cap, None, filter_handle,
                 )
-                .min(buffer_cap);
-                pending = queue.claim_head_work(target, pos_cap);
             }
-
-            // head exhausted: drain the (≤2) in-flight claims in claim
-            // order - oldest staging set first
-            for off in 0..2 {
-                let si = (claim_idx + off) % 2;
-                if let Some(meta) = metas[si].take() {
-                    resolve_stage(
-                        &mut stages[si], meta, pool_handle, queue, params.k,
-                        slots, &mut acc,
-                    );
-                }
-            }
-            Ok(acc)
         },
     );
 
@@ -882,9 +1091,178 @@ fn drain_pipelined(
         result_pairs: acc.result_pairs,
         max_batch_pairs: acc.max_batch_pairs,
         exec_time: acc.exec_time,
+        transfer_time: acc.transfer_time,
         filter_time: acc.filter_time,
         claims: acc.claims,
     })
+}
+
+/// The claim loop shared by the two- and three-stage drains: rotate
+/// `depth` staging sets (depth = 2 without a transfer stage, 3 with
+/// one), resolving the claim `depth` back before refilling its set, and
+/// size every next claim from the kernel-side rate. See
+/// [`drain_pipelined`] for the stage topology.
+#[allow(clippy::too_many_arguments)]
+fn pipelined_claim_loop(
+    engine: &Engine,
+    r_data: &Dataset,
+    data: &Dataset,
+    grid: &GridIndex,
+    queue: &WorkQueue,
+    params: &GpuJoinParams,
+    slots: &SoaSlots<'_>,
+    pos_cap: usize,
+    plans: (&tiles::TilePlan, &tiles::TilePlan),
+    use_topk: bool,
+    first: std::ops::Range<usize>,
+    round_cap: usize,
+    transfer_handle: Option<&pool::StageHandle<TransferRound>>,
+    filter_handle: &pool::StageHandle<FilterRound>,
+) -> Result<DrainAcc> {
+    let buffer_cap = params.buffer_pairs.max(1);
+    // heap bound for the staging arenas; the solved test at resolve uses
+    // the RAW params.k so the partition matches the synchronous drains
+    // even for the degenerate k = 0
+    let arena_k = params.k.max(1);
+    let depth = if transfer_handle.is_some() { 3 } else { 2 };
+    let mut acc = DrainAcc::default();
+    let mut stages: Vec<Arc<ClaimStage>> =
+        (0..depth).map(|_| Arc::new(ClaimStage::new(arena_k))).collect();
+    let mut metas: Vec<Option<ClaimMeta>> = (0..depth).map(|_| None).collect();
+    let mut claim_idx = 0usize;
+    let mut pending = Some(first);
+
+    while let Some(range) = pending.take() {
+        let si = claim_idx % depth;
+        // reclaim this staging set: the claim `depth` back must be fully
+        // transferred + filtered and resolved before its arena is reused
+        if let Some(meta) = metas[si].take() {
+            resolve_stage(
+                &mut stages[si], meta, transfer_handle, filter_handle, queue,
+                params.k, slots, &mut acc,
+            )?;
+        }
+        let lane = claim_idx as u64;
+        let t_exec = Instant::now();
+        let cells =
+            claim_cells(queue, grid, r_data, range.clone(), &mut acc.work_log);
+        let n_queries: usize = cells.iter().map(|c| c.queries.len()).sum();
+        {
+            // unique access: all of this set's rounds have retired
+            let stage = Arc::get_mut(&mut stages[si])
+                .expect("stage still shared at refill");
+            stage.batch_queries.clear();
+            stage
+                .batch_queries
+                .extend(cells.iter().flat_map(|c| c.queries.iter().copied()));
+            stage.arena.reset(n_queries, arena_k);
+            stage.pairs.store(0, Ordering::Relaxed);
+            stage.filter_nanos.store(0, Ordering::Relaxed);
+            stage.transfer_nanos.store(0, Ordering::Relaxed);
+        }
+        // execute this claim's tiles; earlier claims' rounds keep
+        // transferring/filtering on their stages while the device runs.
+        // Master seconds spent BLOCKED in submit backpressure (a
+        // downstream stage lagging) or - on the two-stage path -
+        // converting device output are not device work, so neither may
+        // inflate exec_secs (or fabricate overlap, or bias the
+        // kernel-side rate the claim sizing feeds on).
+        let mut submit_wait = 0f64;
+        let mut transfer_master = 0f64;
+        {
+            let stage_arc = &stages[si];
+            exec_cells_into_rounds(
+                engine,
+                (r_data, data),
+                plans,
+                use_topk,
+                &cells,
+                params,
+                round_cap,
+                &mut acc.kernel_time,
+                &mut |raw: Vec<RawTile>| {
+                    debug_assert!(
+                        raw.iter().all(|t| t.pos.end <= n_queries),
+                        "round tile positions exceed the claim arena"
+                    );
+                    if let Some(th) = transfer_handle {
+                        // three-stage: raw literals to the transfer stage
+                        let t_submit = Instant::now();
+                        th.submit(
+                            TransferRound {
+                                stage: Arc::clone(stage_arc),
+                                lane,
+                                tiles: Mutex::new(Some(raw)),
+                            },
+                            1,
+                            lane,
+                        );
+                        submit_wait += t_submit.elapsed().as_secs_f64();
+                    } else {
+                        // two-stage: convert here, filter on the pool
+                        let t_conv = Instant::now();
+                        let tiles = convert_tiles(raw)?;
+                        transfer_master += t_conv.elapsed().as_secs_f64();
+                        let len = tiles.len();
+                        let t_submit = Instant::now();
+                        filter_handle.submit(
+                            FilterRound { stage: Arc::clone(stage_arc), tiles },
+                            len,
+                            lane,
+                        );
+                        submit_wait += t_submit.elapsed().as_secs_f64();
+                    }
+                    Ok(())
+                },
+            )?;
+        }
+        let est = queue.range_work(range.clone());
+        let exec_secs = (t_exec.elapsed().as_secs_f64()
+            - submit_wait
+            - transfer_master)
+            .max(0.0);
+        acc.work_done += est;
+        metas[si] = Some(ClaimMeta {
+            range,
+            est_work: est,
+            exec_secs,
+            transfer_secs: transfer_master,
+            lane,
+        });
+        claim_idx += 1;
+
+        // claim-ahead sizing from the KERNEL-side rate: exec_secs is
+        // known now - before this claim's transfer/filter complete - and
+        // excludes the copy, so the ρ^Model feedback is no longer biased
+        // by transfer cost; the CPU rate is read live off the queue
+        let exec_busy = acc.exec_time
+            + metas.iter().flatten().map(|m| m.exec_secs).sum::<f64>();
+        let gpu_rate = if exec_busy > 0.0 {
+            acc.work_done as f64 / exec_busy
+        } else {
+            0.0
+        };
+        let target = sched::next_batch_work(
+            queue.head_work_remaining(pos_cap),
+            gpu_rate,
+            queue.cpu_work_rate(),
+        )
+        .min(buffer_cap);
+        pending = queue.claim_head_work(target, pos_cap);
+    }
+
+    // head exhausted: drain the (≤ depth) in-flight claims in claim
+    // order - oldest staging set first
+    for off in 0..depth {
+        let si = (claim_idx + off) % depth;
+        if let Some(meta) = metas[si].take() {
+            resolve_stage(
+                &mut stages[si], meta, transfer_handle, filter_handle, queue,
+                params.k, slots, &mut acc,
+            )?;
+        }
+    }
+    Ok(acc)
 }
 
 /// Per-query candidate workload (distance calculations per query) under a
@@ -921,8 +1299,10 @@ struct HeapArena {
 }
 
 // SAFETY: access is partitioned by query-tile position ranges; each tile
-// is claimed by exactly one filter worker (see `filter_tiles`), so no two
-// threads ever touch the same slot.
+// is claimed by exactly one filter worker - via the chunk cursor on the
+// synchronous path (`filter_tiles`) or one stage-pool item per tile on
+// the pooled paths - and rounds targeting one arena run in order (the
+// pool's per-lane FIFO), so no two threads ever touch the same slot.
 unsafe impl Sync for HeapArena {}
 
 impl HeapArena {
@@ -990,6 +1370,74 @@ struct ChunkOut {
 struct TileOut {
     pos: std::ops::Range<usize>,
     chunks: Vec<ChunkOut>,
+}
+
+/// A device output literal that may be moved to the transfer stage.
+///
+/// SAFETY: `exec_lits` already materialised the literal on the host
+/// (`to_literal_sync`), so it is a plain host-memory buffer detached
+/// from the device; it is *moved* - never shared - to exactly one
+/// consumer thread, which converts it and drops it. xla-rs leaves the
+/// wrapper `!Send` only because it holds a raw pointer; single-owner
+/// hand-off of a host buffer is sound.
+struct SendLit(xla::Literal);
+
+unsafe impl Send for SendLit {}
+
+/// Raw (unconverted) device output of one candidate chunk: the literals
+/// as PJRT returned them, before the device-to-host `to_f32`/`to_i32`
+/// copy-out. What the exec stage emits and the transfer stage consumes.
+enum RawPayload {
+    /// full distance tile output, stride `ct` after conversion
+    Dist { lit: SendLit, ct: usize },
+    /// top-k tile outputs: values and candidate indices, row width `k`
+    TopK { vals: SendLit, idx: SendLit, k: usize },
+}
+
+/// Raw form of [`ChunkOut`] (literal payload instead of host vectors).
+struct RawChunk {
+    cand_ids: Vec<u32>,
+    payload: RawPayload,
+}
+
+/// Raw form of [`TileOut`]: same position contract, literal payloads.
+struct RawTile {
+    pos: std::ops::Range<usize>,
+    chunks: Vec<RawChunk>,
+}
+
+/// The device-to-host transfer: convert a flush round's literals into
+/// the flat host buffers the filter stage scans. This is the copy that
+/// used to hide inside `exec_secs` on the master thread; the three-stage
+/// drain runs it on a dedicated transfer worker instead.
+fn convert_tiles(raw: Vec<RawTile>) -> Result<Vec<TileOut>> {
+    raw.into_iter()
+        .map(|t| {
+            Ok(TileOut {
+                pos: t.pos,
+                chunks: t
+                    .chunks
+                    .into_iter()
+                    .map(|c| {
+                        Ok(ChunkOut {
+                            cand_ids: c.cand_ids,
+                            payload: match c.payload {
+                                RawPayload::Dist { lit, ct } => Payload::Dist {
+                                    d2: Engine::to_f32(&lit.0)?,
+                                    ct,
+                                },
+                                RawPayload::TopK { vals, idx, k } => Payload::TopK {
+                                    vals: Engine::to_f32(&vals.0)?,
+                                    idx: Engine::to_i32(&idx.0)?,
+                                    k,
+                                },
+                            },
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect()
 }
 
 /// Filter a buffered set of tiles into the arena on `workers` threads via
@@ -1091,17 +1539,20 @@ fn apply_tile(
 }
 
 /// Execute the tile program over a set of cells on this thread (the PJRT
-/// client is !Send, the paper's single GPU-master rank), buffering device
-/// chunk outputs and handing them to `emit` in flush *rounds* of at most
-/// `round_cap` chunks (each <= qt x ct x 4B) — the unit the former stream
-/// channels bounded. Positions index the batch's flat query list, cell by
-/// cell. A query tile whose candidate list spans more chunks than the cap
-/// is split across rounds — the same position range re-appears in the
-/// next round — so consumers must process rounds *strictly sequentially*
-/// for the within-round position-disjointness that makes a heap arena
-/// race-free to hold. Both consumers do: the synchronous path filters
-/// each round inline before the next device call, and the pipelined
-/// drain's stage pool retires rounds in submission order.
+/// client is !Send, the paper's single GPU-master rank), buffering *raw*
+/// device chunk outputs (literals - see [`RawTile`]; the device-to-host
+/// conversion is the consumer's job, so it can run off this thread) and
+/// handing them to `emit` in flush *rounds* of at most `round_cap`
+/// chunks (each <= qt x ct x 4B) — the unit the former stream channels
+/// bounded. Positions index the batch's flat query list, cell by cell. A
+/// query tile whose candidate list spans more chunks than the cap is
+/// split across rounds — the same position range re-appears in the next
+/// round — so a round's consumer must process the rounds of one batch
+/// *strictly sequentially* for the within-round position-disjointness
+/// that makes a heap arena race-free to hold. All consumers do: the
+/// synchronous path converts + filters each round inline before the next
+/// device call, and the pooled paths submit rounds on a per-claim lane
+/// whose ordering the stage pool enforces.
 #[allow(clippy::too_many_arguments)]
 fn exec_cells_into_rounds(
     engine: &Engine,
@@ -1112,10 +1563,10 @@ fn exec_cells_into_rounds(
     params: &GpuJoinParams,
     round_cap: usize,
     kernel_time: &mut f64,
-    emit: &mut dyn FnMut(Vec<TileOut>),
+    emit: &mut dyn FnMut(Vec<RawTile>) -> Result<()>,
 ) -> Result<()> {
     let round_cap = round_cap.max(1);
-    let mut tiles_buf: Vec<TileOut> = Vec::new();
+    let mut tiles_buf: Vec<RawTile> = Vec::new();
     let mut chunks_buffered = 0usize;
     let mut q_buf: Vec<f32> = Vec::new();
     let mut c_buf: Vec<f32> = Vec::new();
@@ -1146,7 +1597,7 @@ fn exec_cells_into_rounds(
         for q_chunk in cell.queries.chunks(qt) {
             tiles::pack(&mut q_buf, r_data, q_chunk, qt, d_pad, 0.0);
             let q_lit = Engine::literal(&q_buf, &[qt as i64, d_pad as i64])?;
-            let mut chunks: Vec<ChunkOut> = Vec::new();
+            let mut chunks: Vec<RawChunk> = Vec::new();
             for (c_chunk, c_lit) in &c_lits {
                 let t0 = Instant::now();
                 let payload = if cell_topk {
@@ -1155,49 +1606,55 @@ fn exec_cells_into_rounds(
                         &[&q_lit, c_lit],
                     )?;
                     *kernel_time += t0.elapsed().as_secs_f64();
-                    Payload::TopK {
-                        vals: Engine::to_f32(&out[0])?,
-                        idx: Engine::to_i32(&out[1])?,
+                    let mut it = out.into_iter();
+                    let vals = it.next().expect("topk artifact tuple arity");
+                    let idx = it.next().expect("topk artifact tuple arity");
+                    RawPayload::TopK {
+                        vals: SendLit(vals),
+                        idx: SendLit(idx),
                         k: plan.topk_k,
                     }
                 } else {
                     let out = engine.exec_lits(&plan.dist_name, &[&q_lit, c_lit])?;
                     *kernel_time += t0.elapsed().as_secs_f64();
-                    Payload::Dist { d2: Engine::to_f32(&out[0])?, ct }
+                    let lit =
+                        out.into_iter().next().expect("dist artifact tuple arity");
+                    RawPayload::Dist { lit: SendLit(lit), ct }
                 };
-                chunks.push(ChunkOut { cand_ids: c_chunk.to_vec(), payload });
+                chunks.push(RawChunk { cand_ids: c_chunk.to_vec(), payload });
                 chunks_buffered += 1;
                 if chunks_buffered >= round_cap {
                     // emit the tile's chunks so far and close the round;
                     // the next round may revisit this tile's positions
-                    tiles_buf.push(TileOut {
+                    tiles_buf.push(RawTile {
                         pos: base..base + q_chunk.len(),
                         chunks: std::mem::take(&mut chunks),
                     });
-                    emit(std::mem::take(&mut tiles_buf));
+                    emit(std::mem::take(&mut tiles_buf))?;
                     chunks_buffered = 0;
                 }
             }
             if !chunks.is_empty() {
-                tiles_buf.push(TileOut { pos: base..base + q_chunk.len(), chunks });
+                tiles_buf.push(RawTile { pos: base..base + q_chunk.len(), chunks });
             }
             base += q_chunk.len();
         }
     }
     if !tiles_buf.is_empty() {
-        emit(std::mem::take(&mut tiles_buf));
+        emit(std::mem::take(&mut tiles_buf))?;
     }
     Ok(())
 }
 
 /// Execute + filter a set of cells *synchronously*: each flush round is
-/// filtered inline on `streams` workers before the next device call, so
-/// exec and filtering alternate within the batch. This is the list-driven
-/// join's path and the ablation baseline of the pipelined queue drain,
-/// which instead overlaps the two stages across claims (`drain_pipelined`
-/// / DESIGN.md §5). Returns the batch's flat query list (cell by cell),
-/// one heap per position, the in-ε pair count, and the filter wall
-/// seconds (the exec/filter telemetry split).
+/// converted (device-to-host transfer, timed separately) and filtered
+/// inline on `streams` workers before the next device call, so all three
+/// stages alternate within the batch. This is the synchronous queue
+/// drain's path - the ablation baseline of the pipelined drains, which
+/// instead overlap the stages across claims (`drain_pipelined` /
+/// DESIGN.md §5). Returns the batch's flat query list (cell by cell),
+/// one heap per position, the in-ε pair count, and the transfer / filter
+/// wall seconds (the exec/transfer/filter telemetry split).
 fn exec_filter_cells(
     engine: &Engine,
     (r_data, data): (&Dataset, &Dataset),
@@ -1206,7 +1663,7 @@ fn exec_filter_cells(
     cells: &[WorkCell],
     params: &GpuJoinParams,
     kernel_time: &mut f64,
-) -> Result<(Vec<u32>, Vec<BoundedHeap>, u64, f64)> {
+) -> Result<(Vec<u32>, Vec<BoundedHeap>, u64, f64, f64)> {
     let n_queries: usize = cells.iter().map(|c| c.queries.len()).sum();
     let batch_queries: Vec<u32> = cells
         .iter()
@@ -1222,6 +1679,7 @@ fn exec_filter_cells(
     let chunk_cap = n_workers * 8;
 
     let mut pairs_total = 0u64;
+    let mut transfer_secs = 0f64;
     let mut filter_secs = 0f64;
     exec_cells_into_rounds(
         engine,
@@ -1232,7 +1690,10 @@ fn exec_filter_cells(
         params,
         chunk_cap,
         kernel_time,
-        &mut |tiles: Vec<TileOut>| {
+        &mut |raw: Vec<RawTile>| {
+            let t = Instant::now();
+            let tiles = convert_tiles(raw)?;
+            transfer_secs += t.elapsed().as_secs_f64();
             let t = Instant::now();
             pairs_total += filter_tiles(
                 &tiles,
@@ -1243,10 +1704,11 @@ fn exec_filter_cells(
                 n_workers,
             );
             filter_secs += t.elapsed().as_secs_f64();
+            Ok(())
         },
     )?;
 
-    Ok((batch_queries, arena.into_heaps(), pairs_total, filter_secs))
+    Ok((batch_queries, arena.into_heaps(), pairs_total, transfer_secs, filter_secs))
 }
 
 #[cfg(test)]
@@ -1428,21 +1890,24 @@ mod tests {
 
     #[test]
     fn flush_rounds_position_disjoint_across_staging_sets() {
-        // The double-buffer soundness property: for random cell/chunk
+        // The staging-set soundness property: for random cell/chunk
         // shapes, (a) no queue position is aliased within a flush round,
         // (b) no round exceeds the chunk cap (the bounded hand-off), (c)
         // every (position, candidate-chunk) pair is covered exactly once
         // across rounds - tiles split across rounds included - and (d)
-        // the two staging sets' claims occupy disjoint queue intervals,
-        // so concurrently-live arenas can never alias a queue position.
+        // the staging sets' claims occupy pairwise-disjoint queue
+        // intervals, so concurrently-live arenas can never alias a queue
+        // position - the invariant that lets the stage pool retire
+        // rounds of different claims out of order.
         use crate::util::prop;
         prop::cases(60, 0x0D15C0, |rng| {
             let qt = 1 + rng.below(8);
             let ct = 1 + rng.below(8);
             let cap = 1 + rng.below(6);
-            // two consecutive claims = the two staging sets; claim B's
-            // queue positions start where claim A's end
-            let claims: Vec<Vec<(usize, usize)>> = (0..2)
+            // three consecutive claims = the three-stage drain's rotating
+            // staging sets (exec / transfer / filter); each claim's queue
+            // positions start where the previous claim's end
+            let claims: Vec<Vec<(usize, usize)>> = (0..3)
                 .map(|_| {
                     (0..1 + rng.below(6))
                         .map(|_| (1 + rng.below(20), rng.below(40)))
@@ -1489,12 +1954,14 @@ mod tests {
                 intervals.push(offset..offset + n);
                 offset += n;
             }
-            // (d) the staging sets' queue intervals are disjoint, so the
-            // two live arenas never map to one queue position
-            assert!(
-                intervals[0].end <= intervals[1].start,
-                "staging-set claims overlap in queue space"
-            );
+            // (d) the staging sets' queue intervals are pairwise
+            // disjoint, so no two live arenas map to one queue position
+            for w in intervals.windows(2) {
+                assert!(
+                    w[0].end <= w[1].start,
+                    "staging-set claims overlap in queue space"
+                );
+            }
         });
     }
 

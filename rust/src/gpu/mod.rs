@@ -2,13 +2,16 @@
 //! (join), the brute-force lower bound (brute), and the warp-level
 //! device model for the task-granularity study (device).
 
+/// GPU-JOINLINEAR: the brute-force lower bound (Sec. VI-D).
 pub mod brute;
+/// Analytic warp model for the thread-granularity study (Sec. V-G).
 pub mod device;
+/// GPU-JOIN over the ε-grid, with the pipelined queue drains.
 pub mod join;
 
 pub use brute::{brute_join_linear, BruteOutcome};
 pub use device::{DeviceEstimate, DeviceModel, ThreadAssign};
 pub use join::{
-    gpu_join, gpu_join_drain, gpu_join_rs, gpu_join_rs_into, GpuJoinOutcome,
-    GpuJoinParams, GpuJoinStats,
+    gpu_join, gpu_join_drain, gpu_join_rs, gpu_join_rs_into, DrainMode,
+    GpuJoinOutcome, GpuJoinParams, GpuJoinStats,
 };

@@ -10,8 +10,9 @@
 //!    GPU's first batch, ρ reserves the sparse tail         [timed]
 //! 6. drain the queue concurrently: the GPU master (this
 //!    thread owns the PJRT client) claims work-sized batches
-//!    off the dense head - pipelined, so device execution of
-//!    claim i+1 overlaps host filtering of claim i
+//!    off the dense head - pipelined three stages deep, so
+//!    device exec of claim i+1, the device-to-host transfer
+//!    of claim i and host filtering of claim i-1 all overlap
 //!    (DESIGN.md §5) - CPU ranks chunk through the sparse
 //!    tail, and the two fronts meet in the middle; Q^Fail
 //!    recirculates into the live queue and is absorbed by
@@ -40,7 +41,7 @@ use crate::core::{Dataset, KnnResult};
 use crate::cpu;
 use crate::data::variance::reorder_by_variance;
 use crate::epsilon::{EpsilonSelection, EpsilonSelector};
-use crate::gpu::{self, GpuJoinParams, GpuJoinStats, ThreadAssign};
+use crate::gpu::{self, DrainMode, GpuJoinParams, GpuJoinStats, ThreadAssign};
 use crate::index::{GridIndex, KdTree};
 use crate::runtime::{tiles::TileClass, Engine};
 use crate::sched::{self, ClaimRecord};
@@ -81,6 +82,7 @@ pub struct HybridParams {
     pub reorder: bool,
     /// SHORTC equivalent: on-device top-k path vs full distance tiles
     pub use_topk: bool,
+    /// device tile family (large/small qt x ct shapes)
     pub tile_class: TileClass,
     /// kernel granularity strategy (Table III; device-model accounting)
     pub assign: ThreadAssign,
@@ -88,23 +90,29 @@ pub struct HybridParams {
     pub buffer_pairs: u64,
     /// stream workers overlapping device exec and host filtering
     pub streams: usize,
-    /// pipelined GPU master (dynamic queue only): overlap device exec of
-    /// claim i+1 with host filtering of claim i through double-buffered
-    /// staging arenas. Off = the synchronous drain (the ablation
-    /// baseline benches/scheduler.rs measures against). Ignored on
-    /// single-core hosts and under `Scheduler::StaticSplit`, which always
-    /// take the synchronous path. Results are identical either way.
-    pub pipelined_gpu: bool,
+    /// GPU master drain mode (dynamic queue only): the three-stage
+    /// pipeline (default - device exec of claim i+1 / device-to-host
+    /// transfer of claim i / host filtering of claim i-1 all overlap),
+    /// the two-stage pipeline (transfer stays on the master), or the
+    /// synchronous drain (the ablation baseline benches/scheduler.rs
+    /// measures against). Forced to `DrainMode::Sync` on single-core
+    /// hosts; under `Scheduler::StaticSplit` the list-driven join is
+    /// used instead, which ignores this field. Results are bit-identical
+    /// across all modes.
+    pub gpu_drain: DrainMode,
+    /// ε-selection tuning knobs (Sec. V-C)
     pub selector: EpsilonSelector,
     /// process only a fraction f of the queries (Table VI parameter
     /// recovery); 1.0 = all
     pub query_fraction: f64,
     /// work-division strategy (dynamic queue vs static split ablation)
     pub scheduler: Scheduler,
+    /// seed for the sampled phases (ε selection)
     pub seed: u64,
 }
 
 impl HybridParams {
+    /// Paper-default parameters for the given K.
     pub fn new(k: usize) -> Self {
         HybridParams {
             k,
@@ -121,7 +129,7 @@ impl HybridParams {
             assign: ThreadAssign::Static(8),
             buffer_pairs: 10_000_000,
             streams: 3,
-            pipelined_gpu: true,
+            gpu_drain: DrainMode::ThreeStage,
             selector: EpsilonSelector::default(),
             query_fraction: 1.0,
             scheduler: Scheduler::DynamicQueue,
@@ -133,7 +141,9 @@ impl HybridParams {
 /// Everything the evaluation section needs from one run.
 #[derive(Debug)]
 pub struct HybridReport {
+    /// the KNN table - every processed query's neighbors, in place
     pub result: KnnResult,
+    /// the ε selection that drove the grid (Sec. V-C)
     pub eps: EpsilonSelection,
     /// queries computed on the GPU side (dynamic: head claims; static:
     /// |Q^GPU|). Q^Fail queries count here, as in the paper.
@@ -141,12 +151,14 @@ pub struct HybridReport {
     /// queries computed on the CPU side (dynamic: tail claims; static:
     /// |Q^CPU|), excluding recirculated Q^Fail
     pub q_cpu: usize,
+    /// queries the GPU failed (< K in-ε neighbors), re-solved on the CPU
     pub q_fail: usize,
     /// dynamic: the ρ tail reservation; static: queries moved GPU->CPU by
     /// the ρ floor
     pub rho_moved: usize,
-    /// avg per-query seconds of EXACT-ANN (T1) and GPU-JOIN (T2)
+    /// avg per-query seconds of EXACT-ANN (T1)
     pub t1: f64,
+    /// avg per-query seconds of GPU-JOIN (T2)
     pub t2: f64,
     /// Eq. 6 load-balanced ρ estimate from this run's T1/T2
     pub rho_model: f64,
@@ -154,21 +166,39 @@ pub struct HybridReport {
     pub response_time: f64,
     /// all phases, including excluded ones
     pub timers: PhaseTimer,
-    /// GPU engine telemetry
+    /// GPU engine telemetry: wall seconds inside PJRT execution
     pub gpu_kernel_time: f64,
+    /// GPU batches/claims executed
     pub gpu_batches: usize,
+    /// realised in-ε result pairs on the GPU side
     pub gpu_result_pairs: u64,
+    /// modeled GPU kernel seconds for the configured ThreadAssign
     pub device_model_seconds: f64,
+    /// queries the GPU solved exactly
     pub solved_on_gpu: usize,
     /// master-thread seconds materialising/packing/executing GPU claims
+    /// on the device (device-to-host copies excluded - the kernel-side
+    /// time the claim sizing feeds on)
     pub gpu_exec_time: f64,
+    /// seconds converting device output literals into host buffers (the
+    /// device-to-host transfer lane of the per-claim telemetry). Runs on
+    /// the dedicated transfer stage under the three-stage drain, on the
+    /// master thread otherwise.
+    pub gpu_transfer_time: f64,
     /// filter-stage wall seconds over the GPU claims' flush rounds
     pub gpu_filter_time: f64,
-    /// seconds of exec/filter overlap the pipelined drain achieved:
+    /// seconds of exec/filter overlap the pipelined drains achieved:
     /// `max(0, gpu_exec_time + gpu_filter_time - gpu phase wall)`. 0 on
     /// the synchronous paths - this is the observable the sync-vs-
     /// pipelined bench column tracks.
     pub gpu_filter_overlap: f64,
+    /// seconds of transfer hidden behind the other stages: the total
+    /// pipeline overlap `max(0, exec + transfer + filter - gpu wall)`
+    /// minus `gpu_filter_overlap`. > 0 is the three-stage drain's
+    /// dedicated transfer stage observably working; ~0 under the
+    /// sync/two-stage drains, where the copy serialises with exec on the
+    /// master thread.
+    pub gpu_transfer_overlap: f64,
     /// per-claim scheduling telemetry (dynamic queue only; empty under
     /// the static split)
     pub claims: Vec<ClaimRecord>,
@@ -296,8 +326,8 @@ impl HybridKnnJoin {
         // master runs first - capped at the γ dense prefix, so the
         // sequential schedule equals the static split - and the CPU ranks
         // drain the rest plus the recirculated failures afterwards. The
-        // pipelined drain is gated the same way: its filter workers only
-        // pay off when they have cores to overlap on.
+        // pipelined drains are gated the same way: their transfer/filter
+        // workers only pay off when they have cores to overlap on.
         let hw = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1);
@@ -311,7 +341,7 @@ impl HybridKnnJoin {
             assign: params.assign,
             estimator_frac: 0.01,
             exclude_self: self_join,
-            pipelined: params.pipelined_gpu && hw > 1,
+            drain: if hw > 1 { params.gpu_drain } else { DrainMode::Sync },
         };
         let mut result = KnnResult::new(r_data.len(), params.k);
         let slots = result.slots();
@@ -363,8 +393,9 @@ impl HybridKnnJoin {
             (0.0, 0usize, 0u64);
         let (mut device_model_seconds, mut solved_on_gpu, mut gpu_total) =
             (0.0, 0usize, 0.0);
-        let (mut gpu_exec_time, mut gpu_filter_time, mut gpu_filter_overlap) =
+        let (mut gpu_exec_time, mut gpu_transfer_time, mut gpu_filter_time) =
             (0.0, 0.0, 0.0f64);
+        let (mut gpu_filter_overlap, mut gpu_transfer_overlap) = (0.0f64, 0.0f64);
         let mut claims: Vec<ClaimRecord> = Vec::new();
         let mut q_fail = 0usize;
         if let Some(g) = gpu_stats {
@@ -375,10 +406,17 @@ impl HybridKnnJoin {
             solved_on_gpu = g.solved;
             gpu_total = g.total_time;
             gpu_exec_time = g.exec_time;
+            gpu_transfer_time = g.transfer_time;
             gpu_filter_time = g.filter_time;
-            // exec + filter exceeding the GPU phase wall time is exactly
-            // the pipeline's overlap made visible
+            // stage seconds exceeding the GPU phase wall time is exactly
+            // the pipeline's overlap made visible; the transfer lane's
+            // share is what the dedicated transfer stage hides on top of
+            // the exec/filter overlap
             gpu_filter_overlap = (g.exec_time + g.filter_time - g.total_time).max(0.0);
+            let total_overlap = (g.exec_time + g.transfer_time + g.filter_time
+                - g.total_time)
+                .max(0.0);
+            gpu_transfer_overlap = (total_overlap - gpu_filter_overlap).max(0.0);
             q_fail = g.failed.len();
             claims.extend(g.claims);
         }
@@ -441,8 +479,10 @@ impl HybridKnnJoin {
             device_model_seconds,
             solved_on_gpu,
             gpu_exec_time,
+            gpu_transfer_time,
             gpu_filter_time,
             gpu_filter_overlap,
+            gpu_transfer_overlap,
             claims,
         })
     }
@@ -492,9 +532,10 @@ impl HybridKnnJoin {
             assign: params.assign,
             estimator_frac: 0.01,
             exclude_self: self_join,
-            // the list-driven form is always synchronous - the static
-            // split is the whole-pipeline ablation baseline
-            pipelined: false,
+            // the static split uses the list-driven form, which ignores
+            // the queue-drain mode - the static split is the
+            // whole-pipeline ablation baseline
+            drain: DrainMode::Sync,
         };
         let mut result = KnnResult::new(r_data.len(), params.k);
         let slots = result.slots();
@@ -550,7 +591,8 @@ impl HybridKnnJoin {
         let (mut gpu_kernel_time, mut gpu_batches, mut gpu_pairs) = (0.0, 0usize, 0u64);
         let (mut device_model_seconds, mut solved_on_gpu, mut gpu_total) =
             (0.0, 0usize, 0.0);
-        let (mut gpu_exec_time, mut gpu_filter_time) = (0.0, 0.0);
+        let (mut gpu_exec_time, mut gpu_transfer_time, mut gpu_filter_time) =
+            (0.0, 0.0, 0.0);
         if let Some(g) = gpu_out {
             gpu_kernel_time = g.kernel_time;
             gpu_batches = g.batches;
@@ -559,6 +601,7 @@ impl HybridKnnJoin {
             solved_on_gpu = g.solved;
             gpu_total = g.total_time;
             gpu_exec_time = g.exec_time;
+            gpu_transfer_time = g.transfer_time;
             gpu_filter_time = g.filter_time;
         }
 
@@ -614,9 +657,12 @@ impl HybridKnnJoin {
             device_model_seconds,
             solved_on_gpu,
             gpu_exec_time,
+            gpu_transfer_time,
             gpu_filter_time,
-            // the synchronous list form alternates the stages: no overlap
+            // the list form derives exec as wall minus transfer/filter,
+            // so overlap is identically 0 by construction here
             gpu_filter_overlap: 0.0,
+            gpu_transfer_overlap: 0.0,
             claims: Vec::new(),
         })
     }

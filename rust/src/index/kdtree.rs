@@ -43,6 +43,7 @@ pub struct KnnScratch {
 }
 
 impl KnnScratch {
+    /// New empty scratch (buffers grow to steady size on first use).
     pub fn new() -> Self {
         KnnScratch { heap: BoundedHeap::new(1), stack: Vec::with_capacity(64) }
     }
@@ -342,10 +343,12 @@ impl KdTree {
         self.leaf_rank[id as usize]
     }
 
+    /// Number of indexed points.
     pub fn len(&self) -> usize {
         self.ids.len()
     }
 
+    /// True when the tree indexes no points.
     pub fn is_empty(&self) -> bool {
         self.ids.is_empty()
     }

@@ -1,7 +1,9 @@
 //! Spatial indexes: the data-oblivious ε-grid used by GPU-JOIN (paper
 //! Sec. IV-A) and the data-aware kd-tree used by EXACT-ANN (the CPU side).
 
+/// The non-hierarchical ε-grid over m indexed dims (Sec. IV-A/C).
 pub mod grid;
+/// Sliding-midpoint kd-tree, the EXACT-ANN substrate (Sec. V-B).
 pub mod kdtree;
 
 pub use grid::GridIndex;

@@ -11,18 +11,36 @@
 //! * L2/L1 (python/compile): JAX graphs + Pallas kernels AOT-lowered to
 //!   HLO text artifacts, executed at runtime through PJRT (runtime::Engine).
 
+// Docs are part of the public surface: every public item must say what
+// it is. CI builds `cargo doc --no-deps` with RUSTDOCFLAGS="-D warnings",
+// which promotes this lint (and broken intra-doc links) to errors.
+#![warn(missing_docs)]
+
+/// Downstream applications of the join (DBSCAN, k-dist, KNN graphs).
 pub mod apps;
+/// Paper-artifact experiment runners (one per table / figure).
 pub mod bench;
+/// Core data types: datasets, the SoA result table, bounded heaps.
 pub mod core;
+/// EXACT-ANN: rank-parallel exact KNN over the kd-tree (Sec. V-B).
 pub mod cpu;
+/// Dataset surrogates, I/O and the variance reorder (Sec. IV-D).
 pub mod data;
+/// Empirical ε selection on the device (Sec. V-C).
 pub mod epsilon;
+/// The GPU component: grid join, brute-force bound, device model.
 pub mod gpu;
+/// HYBRIDKNN-JOIN - Algorithm 1 end to end.
 pub mod hybrid;
+/// Spatial indexes: the ε-grid and the kd-tree.
 pub mod index;
+/// PJRT runtime executing the AOT-compiled HLO artifacts.
 pub mod runtime;
+/// The density-ordered shared work queue and its claim policies.
 pub mod sched;
+/// γ/ρ split predicates and the Eq. 6 ρ^Model (static split).
 pub mod split;
+/// Shared utilities: thread pools, RNG, JSON, timers, CLI, property tests.
 pub mod util;
 
 /// Convenience re-exports for examples and benches.
@@ -37,7 +55,8 @@ pub mod prelude {
     };
     pub use crate::epsilon::{EpsilonSelection, EpsilonSelector};
     pub use crate::gpu::{
-        brute_join_linear, gpu_join, join::gpu_join_rs, GpuJoinParams, ThreadAssign,
+        brute_join_linear, gpu_join, join::gpu_join_rs, DrainMode, GpuJoinParams,
+        ThreadAssign,
     };
     pub use crate::hybrid::{HybridKnnJoin, HybridParams, HybridReport, Scheduler};
     pub use crate::index::{GridIndex, KdTree, KnnScratch};

@@ -6,6 +6,7 @@
 //! artifact name. Artifacts are compiled lazily on first use and reused
 //! for the life of the process - python never runs at request time.
 
+/// Tile plans: which artifact family fits a workload's dims/shape.
 pub mod tiles;
 
 use std::collections::HashMap;
@@ -23,14 +24,18 @@ pub const PAD_SENTINEL: f32 = 1.0e15;
 /// Artifact descriptor from manifest.json.
 #[derive(Debug, Clone)]
 pub struct ArtifactInfo {
+    /// artifact name (cache key, e.g. `dist_q32_c256_d24`)
     pub name: String,
+    /// HLO text file relative to the artifacts dir
     pub file: String,
+    /// artifact family (`dist`, `disttopk`, `hist`, ...)
     pub kind: String,
     /// static params (qt/ct/d/k/s/bins as present)
     pub params: HashMap<String, usize>,
 }
 
 impl ArtifactInfo {
+    /// A required static param; panics when the manifest lacks it.
     pub fn param(&self, key: &str) -> usize {
         *self
             .params
@@ -120,14 +125,17 @@ impl Engine {
         Engine::load(Path::new(&dir))
     }
 
+    /// Manifest entry for `name`, if present.
     pub fn artifact(&self, name: &str) -> Option<&ArtifactInfo> {
         self.artifacts.get(name)
     }
 
+    /// All artifact names in the manifest (unordered).
     pub fn artifact_names(&self) -> Vec<&str> {
         self.artifacts.keys().map(|s| s.as_str()).collect()
     }
 
+    /// Device executions performed so far (telemetry).
     pub fn executions(&self) -> u64 {
         self.exec_count.load(std::sync::atomic::Ordering::Relaxed)
     }

@@ -15,12 +15,17 @@ use crate::core::Dataset;
 /// Which artifact tile the caller will drive.
 #[derive(Debug, Clone)]
 pub struct TilePlan {
+    /// query rows per tile
     pub qt: usize,
+    /// candidate rows per tile
     pub ct: usize,
+    /// padded dimensionality of the artifact
     pub d: usize,
+    /// distance-tile artifact name
     pub dist_name: String,
     /// topk variant (same qt/ct/d), when the manifest has one
     pub topk_name: Option<String>,
+    /// k of the topk variant (0 when absent)
     pub topk_k: usize,
 }
 
@@ -28,7 +33,9 @@ pub struct TilePlan {
 /// waste low for thin workloads (paper Sec. V-G's granularity trade-off).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TileClass {
+    /// 128 x 512 tiles - saturate the device
     Large,
+    /// 32 x 256 tiles - low padding waste for thin workloads
     Small,
 }
 

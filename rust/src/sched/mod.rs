@@ -14,6 +14,7 @@
 //! sized from the live CPU/GPU work rates so the two fronts meet in the
 //! middle with neither architecture idling on a misprediction.
 
+/// The shared work queue itself (claims, recirculation, telemetry).
 pub mod queue;
 
 use std::collections::HashMap;

@@ -32,7 +32,9 @@ use crate::util::pool::TwoEndedCursor;
 /// Which architecture serviced a claim.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Arch {
+    /// an EXACT-ANN CPU rank
     Cpu,
+    /// the GPU master
     Gpu,
 }
 
@@ -40,22 +42,35 @@ pub enum Arch {
 /// telemetry that replaces the single-shot T1/T2 accounting.
 #[derive(Debug, Clone)]
 pub struct ClaimRecord {
+    /// which architecture serviced the claim
     pub arch: Arch,
     /// queries solved under this claim
     pub queries: usize,
     /// estimated work (candidate scans) of the claim
     pub est_work: u64,
     /// seconds spent servicing the claim. For pipelined GPU claims this
-    /// is `exec_secs + filter_secs` (resource time - the two components
-    /// overlap in wall time); everywhere else it is plain wall time.
+    /// is `exec_secs + transfer_secs + filter_secs` (resource time - the
+    /// components overlap in wall time); everywhere else it is plain
+    /// wall time.
     pub secs: f64,
     /// GPU claims: master-thread seconds materialising, packing and
-    /// executing the claim's tiles. 0 for CPU claims.
+    /// executing the claim's tiles on the device - the kernel-side time
+    /// the claim-ahead sizing feeds on. Excludes the device-to-host copy
+    /// (`transfer_secs`). 0 for CPU claims.
     pub exec_secs: f64,
+    /// GPU claims: seconds converting the claim's device output literals
+    /// into flat host buffers (the host half of the device-to-host path;
+    /// the buffer-to-literal step inside `exec_lits` stays in
+    /// `exec_secs` - see `GpuJoinStats::transfer_time`). Under the
+    /// three-stage drain this runs on the dedicated transfer stage and
+    /// overlaps later claims' `exec_secs`; under the sync/two-stage
+    /// drains it runs on the master thread. 0 for CPU claims.
+    pub transfer_secs: f64,
     /// GPU claims: filter-stage wall seconds over the claim's flush
-    /// rounds. Under the pipelined drain this overlaps the *next* claim's
-    /// `exec_secs`, which is what makes Σexec + Σfilter exceed the GPU
-    /// phase wall time when the pipeline is working. 0 for CPU claims.
+    /// rounds. Under the pipelined drains this overlaps later claims'
+    /// `exec_secs`, which is what makes Σexec + Σtransfer + Σfilter
+    /// exceed the GPU phase wall time when the pipeline is working. 0
+    /// for CPU claims.
     pub filter_secs: f64,
     /// true when the claim drained recirculated Q^Fail queries
     pub from_recirc: bool,
@@ -163,6 +178,7 @@ impl WorkQueue {
         self.queries.len()
     }
 
+    /// True when the queue was built over zero queries.
     pub fn is_empty(&self) -> bool {
         self.queries.is_empty()
     }
@@ -311,6 +327,16 @@ impl WorkQueue {
     /// only the GPU master may call this (it is the only source of
     /// failures); the Release publish makes the ids visible to any
     /// consumer that observes the new count.
+    ///
+    /// Publication may lag claiming: under the pipelined GPU drains a
+    /// claim's failures land here only when the claim is *resolved* - up
+    /// to two (two-stage) or three (three-stage) claims after it was
+    /// taken off the head. The exactly-once contract is unaffected (it
+    /// depends only on the published-count CAS), but consumers must not
+    /// assume a failure is visible before later head claims are; the
+    /// CPU exit protocol (done flag read before the final empty claims)
+    /// already tolerates this, and `rust/tests/failure_injection.rs`
+    /// race-tests exactly this deferred ordering at both pipeline depths.
     pub fn push_failed(&self, ids: &[u32]) {
         if ids.is_empty() {
             return;
@@ -367,6 +393,7 @@ impl WorkQueue {
         self.gpu_done.store(true, Ordering::Release);
     }
 
+    /// Has the GPU master finished claiming and publishing failures?
     pub fn gpu_done(&self) -> bool {
         self.gpu_done.load(Ordering::Acquire)
     }

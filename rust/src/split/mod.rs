@@ -33,7 +33,9 @@ pub fn n_thresh(k: usize, m: usize, gamma: f64) -> f64 {
 /// The split of query points between architectures.
 #[derive(Debug, Clone, Default)]
 pub struct WorkSplit {
+    /// Q^GPU - queries in cells meeting the γ threshold
     pub q_gpu: Vec<u32>,
+    /// Q^CPU - everything else, plus the ρ floor's transfers
     pub q_cpu: Vec<u32>,
     /// the threshold used (diagnostics)
     pub threshold: f64,

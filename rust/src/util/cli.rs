@@ -44,26 +44,32 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Is the boolean flag `--name` present?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw value of `--name=value` / `--name value`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// String option with a default.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// `usize` option with a default (panics on malformed input).
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.parse_or(name, default)
     }
 
+    /// `u64` option with a default (panics on malformed input).
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
         self.parse_or(name, default)
     }
 
+    /// `f64` option with a default (panics on malformed input).
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.parse_or(name, default)
     }
@@ -77,6 +83,7 @@ impl Args {
         }
     }
 
+    /// All positional (non-flag) arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

@@ -3,10 +3,18 @@
 //! numeric helpers, CLI parsing, JSON, rank-parallel helpers, a property
 //! test harness, and phase/bench timers.
 
+/// Dependency-free CLI argument parsing.
 pub mod cli;
+/// Tiny JSON reader/writer (no serde in the vendor set).
 pub mod json;
+/// Small numeric helpers.
 pub mod math;
+/// Thread pools, chunk cursors, the two-ended claim cursor, and the
+/// lane-ordered stage pool behind the GPU pipelines.
 pub mod pool;
+/// Seeded property-test harness.
 pub mod prop;
+/// Deterministic xorshift RNG.
 pub mod rng;
+/// Phase timers and trial statistics.
 pub mod timer;

@@ -20,9 +20,14 @@
 //! instead of spawning workers per call, it keeps a *persistent* pool of
 //! stateful workers alive next to a producing master thread. The master
 //! submits bounded *rounds* of work (the staged flush sets of the
-//! pipelined GPU drain) and keeps producing while the workers chew
-//! through them strictly in submission order - the hand-off that lets
-//! device execution of claim i+1 overlap host filtering of claim i.
+//! pipelined GPU drains) on **lanes**: rounds of one lane run strictly
+//! in submission order, rounds of different lanes may overlap and retire
+//! out of order. The GPU drains key lanes by claim - within a claim the
+//! flush rounds stay ordered (split tiles revisit arena positions), while
+//! rounds of different claims target disjoint staging arenas and are free
+//! to interleave - the hand-off that lets device execution of claim i+1
+//! overlap the device-to-host transfer of claim i and the host filtering
+//! of claim i-1.
 
 use std::collections::VecDeque;
 use std::ops::Range;
@@ -131,8 +136,11 @@ where
 /// stays stable while the `VecDeque` grows and rounds move - workers hold
 /// raw pointers into it between `take` and `finish`.
 struct Round<J> {
-    /// 1-based submission index; `completed` reports these in order
-    epoch: usize,
+    /// 1-based global submission ordinal (monotone across lanes)
+    uid: usize,
+    /// ordering lane: rounds of one lane run strictly in submission
+    /// order; rounds of different lanes are mutually unordered
+    lane: u64,
     job: Box<J>,
     len: usize,
     /// next item to hand out
@@ -144,29 +152,40 @@ struct Round<J> {
 }
 
 struct StageQueue<J> {
+    /// in submission (uid) order; retirement may remove from the middle,
+    /// so the order is preserved but not contiguous
     rounds: VecDeque<Round<J>>,
-    /// rounds submitted so far (== the last epoch issued)
+    /// rounds submitted so far (== the last uid issued)
     submitted: usize,
-    /// highest epoch fully processed; rounds retire strictly in order
-    completed: usize,
+    /// rounds fully processed so far (a count: with lanes, retirement is
+    /// not a prefix of the submission order)
+    retired: usize,
     closed: bool,
-    /// a worker panicked: the front round may never complete, so the
-    /// blocking master entry points panic instead of waiting forever
+    /// a worker panicked: some round may never complete, so the blocking
+    /// master entry points panic instead of waiting forever
     failed: bool,
 }
 
 /// Hand-off between the master thread and the stage workers of a
-/// [`stage_scope`] pipeline. The master `submit`s rounds (blocking while
-/// `capacity` rounds are already in flight - the bounded hand-off that
-/// keeps host memory inside the staging envelope) and `wait`s for their
-/// completion; workers drain rounds *strictly in submission order*, so
-/// two rounds never run concurrently - the within-round disjointness
-/// that makes the filter arena race-free extends across rounds for free.
+/// [`stage_scope`] pipeline. The master `submit`s rounds on *lanes*
+/// (blocking while `capacity` rounds are already in flight - the bounded
+/// hand-off that keeps host memory inside the staging envelope) and waits
+/// for their completion per lane (`wait_lane`) or globally (`wait`,
+/// `drain`).
+///
+/// Ordering contract: rounds of **one lane** are processed strictly in
+/// submission order - no item of a lane's round is handed out before the
+/// lane's previous round retired - which is what lets a tile split across
+/// rounds revisit the same arena positions safely. Rounds of **different
+/// lanes** are mutually unordered: they may be processed concurrently and
+/// retire out of submission order. The pipelined GPU drains key lanes by
+/// claim, whose staging arenas are disjoint objects, so cross-lane
+/// concurrency can never alias a filter-arena slot.
 pub struct StageHandle<J> {
     shared: Mutex<StageQueue<J>>,
-    /// master waits here (completions free capacity / advance `wait`)
+    /// master waits here (retirements free capacity / advance the waits)
     cv_space: Condvar,
-    /// workers wait here (new rounds / front-round retirement)
+    /// workers wait here (new rounds / a retirement unblocking a lane)
     cv_work: Condvar,
     capacity: usize,
 }
@@ -177,7 +196,7 @@ impl<J: Send> StageHandle<J> {
             shared: Mutex::new(StageQueue {
                 rounds: VecDeque::new(),
                 submitted: 0,
-                completed: 0,
+                retired: 0,
                 closed: false,
                 failed: false,
             }),
@@ -187,18 +206,20 @@ impl<J: Send> StageHandle<J> {
         }
     }
 
-    /// Submit a round of `len` items; blocks while `capacity` rounds are
-    /// in flight. Returns the round's epoch (1-based, monotone).
-    pub fn submit(&self, job: J, len: usize) -> usize {
+    /// Submit a round of `len` items on `lane`; blocks while `capacity`
+    /// rounds are in flight (queued or processing, across all lanes).
+    /// Returns the round's uid (1-based, monotone across lanes).
+    pub fn submit(&self, job: J, len: usize, lane: u64) -> usize {
         let mut g = self.shared.lock().unwrap();
         while g.rounds.len() >= self.capacity && !g.failed {
             g = self.cv_space.wait(g).unwrap();
         }
         assert!(!g.failed, "stage pool failed: a worker panicked");
         g.submitted += 1;
-        let epoch = g.submitted;
+        let uid = g.submitted;
         g.rounds.push_back(Round {
-            epoch,
+            uid,
+            lane,
             job: Box::new(job),
             len,
             next: 0,
@@ -207,13 +228,29 @@ impl<J: Send> StageHandle<J> {
         });
         drop(g);
         self.cv_work.notify_all();
-        epoch
+        uid
     }
 
-    /// Block until every round up to and including `epoch` has retired.
-    pub fn wait(&self, epoch: usize) {
+    /// Block until every round with a uid up to and including `uid` has
+    /// retired (a global barrier over the submission prefix, regardless
+    /// of lane).
+    pub fn wait(&self, uid: usize) {
         let mut g = self.shared.lock().unwrap();
-        while g.completed < epoch && !g.failed {
+        // the queue is in uid order, so "no round with uid <= target
+        // remains" is exactly "the oldest remaining round is younger"
+        while g.rounds.front().is_some_and(|r| r.uid <= uid) && !g.failed {
+            g = self.cv_space.wait(g).unwrap();
+        }
+        assert!(!g.failed, "stage pool failed: a worker panicked");
+    }
+
+    /// Block until `lane` has no submitted-but-unretired rounds. With
+    /// per-lane FIFO processing this means everything submitted on the
+    /// lane so far is fully done - the per-claim resolve barrier of the
+    /// pipelined GPU drains.
+    pub fn wait_lane(&self, lane: u64) {
+        let mut g = self.shared.lock().unwrap();
+        while g.rounds.iter().any(|r| r.lane == lane) && !g.failed {
             g = self.cv_space.wait(g).unwrap();
         }
         assert!(!g.failed, "stage pool failed: a worker panicked");
@@ -223,7 +260,7 @@ impl<J: Send> StageHandle<J> {
     pub fn drain(&self) {
         let mut g = self.shared.lock().unwrap();
         let target = g.submitted;
-        while g.completed < target && !g.failed {
+        while g.rounds.front().is_some_and(|r| r.uid <= target) && !g.failed {
             g = self.cv_space.wait(g).unwrap();
         }
         assert!(!g.failed, "stage pool failed: a worker panicked");
@@ -235,8 +272,8 @@ impl<J: Send> StageHandle<J> {
     }
 
     /// Rounds fully processed so far.
-    pub fn completed(&self) -> usize {
-        self.shared.lock().unwrap().completed
+    pub fn retired(&self) -> usize {
+        self.shared.lock().unwrap().retired
     }
 
     /// Lock, recovering from poisoning - used on the paths that must
@@ -270,97 +307,114 @@ impl<J: Send> StageHandle<J> {
         self.cv_work.notify_all();
     }
 
-    /// Take one item off the front round, retiring exhausted rounds along
-    /// the way. Returns a raw pointer to the round's job plus the item
-    /// index, or `None` once the pool is closed and drained.
+    /// Remove round `i` from the queue and run the retire callback. The
+    /// callback and the job's destruction run under the lock, BEFORE the
+    /// removal becomes observable through the blocking entry points: a
+    /// master woken by `wait`/`wait_lane` may immediately assert
+    /// uniqueness of state the job still references (the drains'
+    /// Arc::get_mut resolve), so the job must be gone by then. Keep
+    /// callbacks light (one atomic add). Callers notify both condvars
+    /// after dropping the lock.
+    fn retire_at(
+        g: &mut std::sync::MutexGuard<'_, StageQueue<J>>,
+        i: usize,
+        retire: &(impl Fn(&J, f64) + Sync),
+    ) {
+        let r = g.rounds.remove(i).expect("retire with no round");
+        let wall = r.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        retire(&r.job, wall);
+        drop(r);
+        g.retired += 1;
+    }
+
+    /// Take one item off the oldest *eligible* round - a round is
+    /// eligible when it is its lane's front (per-lane FIFO) - retiring
+    /// exhausted eligible rounds along the way. Returns a raw pointer to
+    /// the round's job, the item index, and the round's uid; or `None`
+    /// once the pool is closed and drained.
     ///
     /// The pointer stays valid until the matching [`finish`]: the job is
-    /// boxed (heap address stable under queue growth) and a round is only
-    /// popped once `active == 0`, i.e. when no item pointer is live.
-    fn take(&self, retire: &(impl Fn(&J, f64) + Sync)) -> Option<(*const J, usize)> {
-        enum Action<J> {
-            Take(*const J, usize),
-            Retire,
-            Wait,
-            Exit,
-        }
+    /// boxed (heap address stable while the queue mutates) and a round is
+    /// only removed once `active == 0`, i.e. when no item pointer is
+    /// live.
+    fn take(
+        &self,
+        retire: &(impl Fn(&J, f64) + Sync),
+    ) -> Option<(*const J, usize, usize)> {
         let mut g = self.shared.lock().unwrap();
         loop {
-            let act: Action<J> = if g.failed {
+            if g.failed {
                 // a sibling worker is unwinding: results are no longer
                 // trustworthy, stop drawing work
-                Action::Exit
-            } else if let Some(front) = g.rounds.front_mut() {
-                if front.next < front.len {
-                    if front.started.is_none() {
-                        front.started = Some(Instant::now());
+                return None;
+            }
+            // scan in uid order for the first lane-front round with an
+            // item to hand out, or with nothing left at all (retire it
+            // and rescan); a lane whose front round is exhausted but
+            // still processing is blocked, later lanes may proceed. The
+            // lane-front test rescans the prefix instead of keeping a
+            // seen-set: the queue is capacity-bounded (a handful of
+            // rounds), so O(n²) beats allocating under the hot mutex.
+            let mut take_idx = None;
+            let mut retire_idx = None;
+            'scan: for (i, r) in g.rounds.iter().enumerate() {
+                for earlier in g.rounds.iter().take(i) {
+                    if earlier.lane == r.lane {
+                        continue 'scan; // not the lane's front round
                     }
-                    let i = front.next;
-                    front.next += 1;
-                    front.active += 1;
-                    Action::Take(&*front.job as *const J, i)
-                } else if front.active == 0 {
-                    // exhausted (or empty) round with no live items
-                    Action::Retire
-                } else {
-                    // exhausted but other workers still processing: rounds
-                    // run strictly in order, so wait for retirement
-                    Action::Wait
                 }
-            } else if g.closed {
-                Action::Exit
-            } else {
-                Action::Wait
-            };
-            match act {
-                Action::Take(j, i) => return Some((j, i)),
-                Action::Exit => return None,
-                Action::Retire => {
-                    let r = g.rounds.pop_front().expect("retire with no round");
-                    let epoch = r.epoch;
-                    let wall =
-                        r.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
-                    // retire + job destruction run under the lock, BEFORE
-                    // `completed` is published: a master woken by `wait`
-                    // may immediately assert uniqueness of state the job
-                    // still references (the drain's Arc::get_mut resolve),
-                    // so the job must be gone by the time the epoch is
-                    // observable. Keep callbacks light (one atomic add).
-                    retire(&r.job, wall);
-                    drop(r);
-                    g.completed = epoch;
-                    drop(g);
-                    self.cv_space.notify_all();
-                    self.cv_work.notify_all();
-                    g = self.shared.lock().unwrap();
+                if r.next < r.len {
+                    take_idx = Some(i);
+                    break;
                 }
-                Action::Wait => {
-                    g = self.cv_work.wait(g).unwrap();
+                if r.active == 0 {
+                    retire_idx = Some(i);
+                    break;
                 }
             }
+            if let Some(i) = take_idx {
+                let r = &mut g.rounds[i];
+                if r.started.is_none() {
+                    r.started = Some(Instant::now());
+                }
+                let item = r.next;
+                r.next += 1;
+                r.active += 1;
+                return Some((&*r.job as *const J, item, r.uid));
+            }
+            if let Some(i) = retire_idx {
+                Self::retire_at(&mut g, i, retire);
+                drop(g);
+                self.cv_space.notify_all();
+                self.cv_work.notify_all();
+                g = self.shared.lock().unwrap();
+                continue;
+            }
+            if g.closed && g.rounds.is_empty() {
+                return None;
+            }
+            g = self.cv_work.wait(g).unwrap();
         }
     }
 
-    /// Release one item hold on the front round (the worker's round is
-    /// necessarily still the front: rounds retire in order and ours has a
-    /// live item). When this was the round's last item, retire it HERE
-    /// rather than in the next `take`: this may be the last live worker
-    /// (the others exited - or this one is unwinding and will never take
-    /// again), and a round nobody retires would deadlock the master.
-    fn finish(&self, retire: &(impl Fn(&J, f64) + Sync)) {
+    /// Release one item hold on round `uid` (still queued: a round is
+    /// only removed once no item is live). When this was the round's last
+    /// item, retire it HERE rather than in the next `take`: this may be
+    /// the last live worker (the others exited - or this one is unwinding
+    /// and will never take again), and a round nobody retires would
+    /// deadlock the master.
+    fn finish(&self, uid: usize, retire: &(impl Fn(&J, f64) + Sync)) {
         let mut g = self.lock_recover();
-        let front = g.rounds.front_mut().expect("finish with no round");
-        debug_assert!(front.active > 0, "finish without a taken item");
-        front.active -= 1;
-        if front.active == 0 && front.next >= front.len {
-            let r = g.rounds.pop_front().expect("retire with no round");
-            let epoch = r.epoch;
-            let wall = r.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
-            // as in `take`: callback + job destruction precede the epoch
-            // publish, so a woken master can assert job uniqueness
-            retire(&r.job, wall);
-            drop(r);
-            g.completed = epoch;
+        let i = g
+            .rounds
+            .iter()
+            .position(|r| r.uid == uid)
+            .expect("finish: round already retired");
+        let r = &mut g.rounds[i];
+        debug_assert!(r.active > 0, "finish without a taken item");
+        r.active -= 1;
+        if r.active == 0 && r.next >= r.len {
+            Self::retire_at(&mut g, i, retire);
             drop(g);
             self.cv_space.notify_all();
             self.cv_work.notify_all();
@@ -373,8 +427,9 @@ impl<J: Send> StageHandle<J> {
 ///
 /// * `init(w)` builds worker `w`'s thread-local state;
 /// * `process(&mut state, &job, item)` handles one item of a round -
-///   items of one round fan out across workers, rounds run strictly in
-///   submission order;
+///   items of one round fan out across workers, rounds of one *lane* run
+///   strictly in submission order, rounds of different lanes may overlap
+///   and retire out of order;
 /// * `retire(&job, wall_secs)` runs once per round when its last item
 ///   completes, with the round's processing wall time (first take to
 ///   retirement) - the filter-time telemetry hook;
@@ -394,7 +449,9 @@ pub fn stage_scope<J, S, W, T, I, P, R, G, M>(
     master: M,
 ) -> (T, Vec<W>)
 where
-    J: Send,
+    // Sync because items of one round fan out across workers: several
+    // threads hold `&J` at once (through the pool's raw pointer).
+    J: Send + Sync,
     W: Send,
     I: Fn(usize) -> S + Sync,
     P: Fn(&mut S, &J, usize) + Sync,
@@ -418,20 +475,21 @@ where
                     struct FinishGuard<'a, J: Send, R: Fn(&J, f64) + Sync>(
                         &'a StageHandle<J>,
                         &'a R,
+                        usize,
                     );
                     impl<J: Send, R: Fn(&J, f64) + Sync> Drop
                         for FinishGuard<'_, J, R>
                     {
                         fn drop(&mut self) {
-                            self.0.finish(self.1);
+                            self.0.finish(self.2, self.1);
                             if std::thread::panicking() {
                                 self.0.fail();
                             }
                         }
                     }
                     let mut state = init(w);
-                    while let Some((job, item)) = handle.take(retire) {
-                        let _fin = FinishGuard(handle, retire);
+                    while let Some((job, item, uid)) = handle.take(retire) {
+                        let _fin = FinishGuard(handle, retire, uid);
                         // SAFETY: `take` hands out a pointer that stays
                         // valid until the matching `finish` (see `take`).
                         process(&mut state, unsafe { &*job }, item);
@@ -580,10 +638,12 @@ impl TwoEndedCursor {
         self.n - back - head
     }
 
+    /// Size of the index range the cursor covers.
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// True when the cursor covers an empty range.
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }
@@ -773,10 +833,10 @@ mod tests {
             |count| count,
             |h| {
                 for r in 0..n_rounds {
-                    h.submit((r, r * items), items);
+                    h.submit((r, r * items), items, 0);
                 }
                 h.drain();
-                assert_eq!(h.completed(), n_rounds);
+                assert_eq!(h.retired(), n_rounds);
             },
         );
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
@@ -802,9 +862,9 @@ mod tests {
             },
             |_s| (),
             |h| {
-                let e1 = h.submit(1, 3);
+                let e1 = h.submit(1, 3, 0);
                 assert_eq!(e1, 1);
-                let e2 = h.submit(2, 3);
+                let e2 = h.submit(2, 3, 0);
                 assert_eq!(e2, 2);
                 // capacity 1: submit(2) waited for round 1 to retire
                 assert_eq!(retired.lock().unwrap().as_slice(), &[1]);
@@ -833,7 +893,7 @@ mod tests {
                 |_job, _wall| {},
                 |_s| (),
                 |h| {
-                    let e = h.submit((), 3);
+                    let e = h.submit((), 3, 0);
                     h.wait(e); // must panic, not hang
                 },
             );
@@ -856,13 +916,99 @@ mod tests {
             |_job, _wall| {},
             |_s| (),
             |h| {
-                let e = h.submit((), 0); // empty round must still retire
+                let e = h.submit((), 0, 0); // empty round must still retire
                 h.wait(e);
-                h.submit((), 5); // master exits without draining
+                h.submit((), 5, 0); // master exits without draining
                 assert_eq!(h.submitted(), 2);
             },
         );
         assert_eq!(seen.load(Ordering::Relaxed), 5, "undrained round completed");
+    }
+
+    #[test]
+    fn stage_pool_lanes_retire_out_of_order() {
+        // A short round on lane 1 must be able to start, finish and
+        // retire while lane 0's older round is still processing - the
+        // cross-claim filter parallelism of the three-stage drain - and
+        // wait_lane(1) must return while lane 0 is still live.
+        use std::sync::atomic::AtomicBool;
+        let release = AtomicBool::new(false);
+        let lane1_done = AtomicBool::new(false);
+        let ((), _) = stage_scope(
+            2,
+            4,
+            |_w| (),
+            |_s, job: &u64, _i| match *job {
+                0 => {
+                    // lane 0: block until the master observed lane 1 retire
+                    while !release.load(Ordering::Acquire) {
+                        std::thread::yield_now();
+                    }
+                }
+                _ => lane1_done.store(true, Ordering::Release),
+            },
+            |_job, _wall| {},
+            |_s| (),
+            |h| {
+                h.submit(0u64, 1, 0);
+                h.submit(1u64, 1, 1);
+                // lane 1 retires although the older lane-0 round is blocked
+                h.wait_lane(1);
+                assert!(lane1_done.load(Ordering::Acquire));
+                assert_eq!(h.retired(), 1);
+                // a lane with no rounds is a no-op wait
+                h.wait_lane(99);
+                release.store(true, Ordering::Release);
+                h.wait_lane(0);
+                assert_eq!(h.retired(), 2);
+            },
+        );
+    }
+
+    #[test]
+    fn stage_pool_per_lane_fifo_with_interleaved_lanes() {
+        // Rounds of one lane never start before the lane's previous round
+        // fully retired, even with rounds of other lanes interleaved
+        // between them; every item runs exactly once.
+        let (lanes, per_lane, items) = (3usize, 8usize, 11usize);
+        let hits: Vec<AtomicUsize> =
+            (0..lanes * per_lane * items).map(|_| AtomicUsize::new(0)).collect();
+        let done: Vec<AtomicUsize> =
+            (0..lanes * per_lane).map(|_| AtomicUsize::new(0)).collect();
+        let ((), _) = stage_scope(
+            4,
+            6,
+            |_w| (),
+            |_s, job: &(usize, usize, usize), i| {
+                let (lane, seq, base) = *job;
+                if seq > 0 {
+                    // per-lane strict sequencing: the lane's previous
+                    // round fully retired before this round's first item
+                    assert_eq!(
+                        done[lane * per_lane + seq - 1].load(Ordering::SeqCst),
+                        items,
+                        "lane {lane} round {seq} started before round {} retired",
+                        seq - 1
+                    );
+                }
+                hits[base + i].fetch_add(1, Ordering::Relaxed);
+                done[lane * per_lane + seq].fetch_add(1, Ordering::SeqCst);
+            },
+            |_job, _wall| {},
+            |_s| (),
+            |h| {
+                let mut base = 0usize;
+                for seq in 0..per_lane {
+                    for lane in 0..lanes {
+                        h.submit((lane, seq, base), items, lane as u64);
+                        base += items;
+                    }
+                }
+                h.drain();
+                assert_eq!(h.retired(), lanes * per_lane);
+            },
+        );
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 
     #[test]

@@ -40,6 +40,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15))
     }
 
+    /// Next raw 64-bit value (xoshiro256++ step).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

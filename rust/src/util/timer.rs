@@ -10,6 +10,7 @@ pub struct PhaseTimer {
 }
 
 impl PhaseTimer {
+    /// New empty timer.
     pub fn new() -> Self {
         Self::default()
     }
@@ -22,10 +23,12 @@ impl PhaseTimer {
         out
     }
 
+    /// Record an externally measured duration under `name`.
     pub fn add(&mut self, name: &str, secs: f64) {
         self.phases.push((name.to_string(), secs));
     }
 
+    /// Total seconds recorded under `name` (0.0 if absent).
     pub fn get(&self, name: &str) -> f64 {
         self.phases
             .iter()
@@ -34,14 +37,17 @@ impl PhaseTimer {
             .sum()
     }
 
+    /// Sum over all recorded phases.
     pub fn total(&self) -> f64 {
         self.phases.iter().map(|(_, s)| s).sum()
     }
 
+    /// The recorded (name, seconds) pairs, in recording order.
     pub fn phases(&self) -> &[(String, f64)] {
         &self.phases
     }
 
+    /// Aligned text report of all phases plus the total.
     pub fn report(&self) -> String {
         let mut s = String::new();
         for (n, secs) in &self.phases {
@@ -55,16 +61,20 @@ impl PhaseTimer {
 /// Result of a micro-bench run.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// per-trial wall seconds (warmup excluded)
     pub trials: Vec<f64>,
 }
 
 impl BenchStats {
+    /// Fastest trial.
     pub fn min(&self) -> f64 {
         self.trials.iter().cloned().fold(f64::INFINITY, f64::min)
     }
+    /// Mean trial time.
     pub fn mean(&self) -> f64 {
         crate::util::math::mean(&self.trials)
     }
+    /// Median trial time.
     pub fn median(&self) -> f64 {
         crate::util::math::median(&self.trials)
     }

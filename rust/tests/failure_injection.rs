@@ -118,12 +118,15 @@ fn degenerate_datasets_do_not_crash() {
 
 #[test]
 fn deferred_recirculation_never_loses_or_duplicates_queries() {
-    // The pipelined GPU master resolves claim i only after claim i+1 was
-    // already taken off the head, so claim i's Q^Fail enters the
-    // recirculation buffer *behind* its successor claim. Inject failures
-    // under exactly that interleaving, with CPU ranks racing the tail
-    // and the recirc buffer, and assert the exactly-once contract holds:
-    // no query lost, none double-written, none resolved twice across the
+    // The pipelined GPU master resolves claim i only after later claims
+    // were already taken off the head - one claim behind under the
+    // two-stage drain, up to three behind under the three-stage drain
+    // (exec i+1 / transfer i / filter i-1 in flight at once) - so claim
+    // i's Q^Fail enters the recirculation buffer *behind* its
+    // successors. Inject failures under exactly that interleaving at a
+    // random pipeline depth, with CPU ranks racing the tail and the
+    // recirc buffer, and assert the exactly-once contract holds: no
+    // query lost, none double-written, none resolved twice across the
     // CPU ranks and the GPU master.
     prop::cases(8, 0xFA11, |rng| {
         let n = 400 + rng.below(1200);
@@ -136,25 +139,29 @@ fn deferred_recirculation_never_loses_or_duplicates_queries() {
         let ranks = 1 + rng.below(3);
         let chunk = 8 + rng.below(24);
         let fail_mod = 2 + rng.below(5); // fail every fail_mod-th query
+        let depth = 1 + rng.below(3); // resolve lag: sync+1 .. three-stage
         let solved: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
         let reserve = queue.reserve();
         let mut total_failed = 0usize;
 
         std::thread::scope(|scope| {
-            // pipelined master pattern: one-claim delay between failing a
-            // query and publishing it for recirculation
+            // pipelined master pattern: a `depth`-claim delay between
+            // failing a query and publishing it for recirculation
             {
                 let (queue, solved) = (&queue, &solved);
                 let total_failed = &mut total_failed;
                 scope.spawn(move || {
-                    let mut deferred: Option<Vec<u32>> = None;
+                    let mut deferred: std::collections::VecDeque<Vec<u32>> =
+                        std::collections::VecDeque::new();
                     let mut target = first_batch_work(
                         queue.head_work_remaining(queue.len()),
                         queue.dense_work(),
                     );
                     while let Some(r) = queue.claim_head_work(target, queue.len()) {
-                        // claim i+1 is taken: NOW claim i's failures land
-                        if let Some(f) = deferred.take() {
+                        // a new claim is taken: the claim `depth` back
+                        // resolves NOW and its failures land
+                        while deferred.len() >= depth {
+                            let f = deferred.pop_front().unwrap();
                             *total_failed += f.len();
                             queue.push_failed(&f);
                         }
@@ -168,17 +175,17 @@ fn deferred_recirculation_never_loses_or_duplicates_queries() {
                                 solved[q as usize].fetch_add(1, Ordering::Relaxed);
                             }
                         }
-                        deferred = Some(failed);
+                        deferred.push_back(failed);
                         target = next_batch_work(
                             queue.head_work_remaining(queue.len()),
                             1.0,
                             queue.cpu_work_rate(),
                         );
                     }
-                    // final claim's failures: published after the head is
-                    // exhausted, right before gpu_done - the drain's
-                    // resolve-at-end path
-                    if let Some(f) = deferred.take() {
+                    // in-flight claims' failures: published after the head
+                    // is exhausted, right before gpu_done - the drains'
+                    // resolve-at-end path, oldest claim first
+                    for f in deferred {
                         *total_failed += f.len();
                         queue.push_failed(&f);
                     }

@@ -1,16 +1,23 @@
-//! Sync-vs-pipelined equivalence: the pipelined GPU drain (device exec of
-//! claim i+1 overlapping host filtering of claim i) must be *invisible*
-//! in the output - bit-identical `KnnResult` slots and the same
-//! solved/failed partition as the synchronous drain, on every workload
-//! shape and staging configuration.
+//! Drain-mode equivalence: the pipelined GPU drains (two-stage: device
+//! exec of claim i+1 overlapping host filtering of claim i; three-stage:
+//! exec of claim i+1, device-to-host transfer of claim i, and filtering
+//! of claim i-1 all overlapping) must be *invisible* in the output -
+//! bit-identical `KnnResult` slots and the same solved/failed partition
+//! as the synchronous drain, on every workload shape and staging
+//! configuration.
 //!
 //! Why bit-identity is the right bar: with no CPU ranks draining the
 //! tail, claim sizing is deterministic (the CPU rate is 0, so the sizing
 //! policy takes its evidence-free 0.5 branch), and within a claim each
 //! query's candidate pushes arrive in candidate order regardless of flush
-//! round boundaries - so the two drains must agree to the last bit, and
+//! round boundaries - so all three drains must agree to the last bit, and
 //! any divergence is a real pipeline bug (aliased arena slot, lost round,
-//! mis-ordered resolve), not numeric noise.
+//! mis-ordered resolve, transfer-stage reordering), not numeric noise.
+//! (In production the modes may draw different claim *boundaries* - the
+//! sync drain sizes from its total busy rate, the pipelined drains from
+//! the kernel-only rate against a live CPU rate - but results stay
+//! identical there too: a query's pushes arrive in candidate order
+//! within whatever claim it lands in.)
 
 use hybrid_knn_join::gpu::join::gpu_join_drain;
 use hybrid_knn_join::prelude::*;
@@ -28,7 +35,7 @@ fn drain(
     k: usize,
     streams: usize,
     buffer_pairs: u64,
-    pipelined: bool,
+    mode: DrainMode,
     exclude_self: bool,
 ) -> (KnnResult, Vec<u32>, usize) {
     let grid = GridIndex::build(data, 6, eps);
@@ -37,7 +44,7 @@ fn drain(
     let mut params = GpuJoinParams::new(k, eps);
     params.streams = streams;
     params.buffer_pairs = buffer_pairs;
-    params.pipelined = pipelined;
+    params.drain = mode;
     params.exclude_self = exclude_self;
     let mut result = KnnResult::new(r_data.len(), k);
     let slots = result.slots();
@@ -69,9 +76,10 @@ fn assert_bit_identical(a: &KnnResult, b: &KnnResult, ctx: &str) {
     }
 }
 
-/// The equivalence sweep for one workload: for several streams and
-/// buffer settings, the pipelined drain must match the synchronous drain
-/// bit for bit, including the solved/failed partition.
+/// The three-way equivalence matrix for one workload: for several
+/// streams and buffer settings, the two-stage and three-stage drains
+/// must match the synchronous drain bit for bit, including the
+/// solved/failed partition.
 fn check_workload(
     engine: &Engine,
     name: &str,
@@ -86,34 +94,37 @@ fn check_workload(
     for &(streams, buffer_pairs) in
         &[(1usize, 3_000u64), (3, 3_000), (2, 10_000_000)]
     {
-        let ctx = format!("{name} streams={streams} buffer={buffer_pairs}");
+        let base_ctx = format!("{name} streams={streams} buffer={buffer_pairs}");
         let (sync_res, sync_failed, _) = drain(
-            engine, r_data, data, eps, k, streams, buffer_pairs, false,
-            exclude_self,
+            engine, r_data, data, eps, k, streams, buffer_pairs,
+            DrainMode::Sync, exclude_self,
         );
-        let (pipe_res, pipe_failed, pipe_batches) = drain(
-            engine, r_data, data, eps, k, streams, buffer_pairs, true,
-            exclude_self,
-        );
-        assert_eq!(sync_failed, pipe_failed, "{ctx}: Q^Fail partition");
-        assert_bit_identical(&sync_res, &pipe_res, &ctx);
-        assert!(pipe_batches > 0, "{ctx}: pipelined drain claimed nothing");
+        for mode in [DrainMode::TwoStage, DrainMode::ThreeStage] {
+            let ctx = format!("{base_ctx} mode={mode:?}");
+            let (pipe_res, pipe_failed, pipe_batches) = drain(
+                engine, r_data, data, eps, k, streams, buffer_pairs, mode,
+                exclude_self,
+            );
+            assert_eq!(sync_failed, pipe_failed, "{ctx}: Q^Fail partition");
+            assert_bit_identical(&sync_res, &pipe_res, &ctx);
+            assert!(pipe_batches > 0, "{ctx}: pipelined drain claimed nothing");
+        }
     }
 }
 
 #[test]
-fn pipelined_drain_matches_sync_on_uniform_selfjoin() {
+fn pipelined_drains_match_sync_on_uniform_selfjoin() {
     let engine = Engine::load_default().unwrap();
     let data = susy_like(900).generate(0x51DE);
     check_workload(&engine, "susy_uniform", &data, &data, 2.0, 6, true);
 }
 
 #[test]
-fn pipelined_drain_matches_sync_on_skewed_gaussian() {
+fn pipelined_drains_match_sync_on_skewed_gaussian() {
     // chist-like clustered Gaussian data: dense head cells produce big
     // claims with many flush rounds, plus a long sparse tail of
-    // one-query cells - the shape that stresses split tiles and the
-    // double-buffer swap
+    // one-query cells - the shape that stresses split tiles, the
+    // staging-set rotation, and the transfer stage's lane ordering
     let engine = Engine::load_default().unwrap();
     let data = chist_like(700).generate(0x5E3D);
     let sel = EpsilonSelector::default().select_host(&data, 4, 0.3);
@@ -121,11 +132,11 @@ fn pipelined_drain_matches_sync_on_skewed_gaussian() {
 }
 
 #[test]
-fn pipelined_drain_matches_sync_on_bipartite() {
+fn pipelined_drains_match_sync_on_bipartite() {
     // R JOIN S: queries from R, grid + candidates from S, no
     // self-exclusion; R cells with no S candidates exercise empty-claim
     // rounds (a claim whose cells emit no tiles still resolves as all
-    // failed, in order)
+    // failed, in order, through every pipeline depth)
     let engine = Engine::load_default().unwrap();
     let r = susy_like(400).generate(0xB1);
     let s = susy_like(800).generate(0xB2);
@@ -135,39 +146,57 @@ fn pipelined_drain_matches_sync_on_bipartite() {
 #[test]
 fn pipelined_drain_overlap_telemetry_is_consistent() {
     // Not a timing assertion (wall-clock overlap is environment
-    // dependent) - just the accounting invariants: per-claim exec/filter
-    // components are finite, non-negative, and sum to the claim's
-    // service seconds; the stats' totals match the per-claim telemetry.
+    // dependent) - just the accounting invariants: per-claim
+    // exec/transfer/filter components are finite, non-negative, and sum
+    // to the claim's service seconds; the stats' totals match the
+    // per-claim telemetry; and under the three-stage drain the transfer
+    // lane actually carries the copy seconds.
     let engine = Engine::load_default().unwrap();
     let data = susy_like(800).generate(0x0E);
     let grid = GridIndex::build(&data, 6, 2.0);
     let queries: Vec<u32> = (0..data.len() as u32).collect();
-    let queue = build_queue(&data, &grid, &queries, 5, 0.0, 0.0);
-    let mut params = GpuJoinParams::new(5, 2.0);
-    params.buffer_pairs = 3_000; // many claims
-    params.pipelined = true;
-    let mut result = KnnResult::new(data.len(), 5);
-    let slots = result.slots();
-    let stats = gpu_join_drain(
-        &engine, &data, &data, &grid, &queue, &params, &slots,
-        queue.len(),
-    )
-    .unwrap();
-    drop(slots);
-    assert!(!stats.claims.is_empty());
-    let (mut exec_sum, mut filter_sum) = (0.0f64, 0.0f64);
-    for c in &stats.claims {
-        assert!(matches!(c.arch, Arch::Gpu));
-        assert!(c.exec_secs >= 0.0 && c.exec_secs.is_finite());
-        assert!(c.filter_secs >= 0.0 && c.filter_secs.is_finite());
-        assert!(
-            (c.secs - (c.exec_secs + c.filter_secs)).abs() < 1e-9,
-            "pipelined claim secs = exec + filter (resource time)"
-        );
-        exec_sum += c.exec_secs;
-        filter_sum += c.filter_secs;
+    for mode in [DrainMode::TwoStage, DrainMode::ThreeStage] {
+        let queue = build_queue(&data, &grid, &queries, 5, 0.0, 0.0);
+        let mut params = GpuJoinParams::new(5, 2.0);
+        params.buffer_pairs = 3_000; // many claims
+        params.drain = mode;
+        let mut result = KnnResult::new(data.len(), 5);
+        let slots = result.slots();
+        let stats = gpu_join_drain(
+            &engine, &data, &data, &grid, &queue, &params, &slots,
+            queue.len(),
+        )
+        .unwrap();
+        drop(slots);
+        assert!(!stats.claims.is_empty(), "{mode:?}");
+        let (mut exec_sum, mut transfer_sum, mut filter_sum) =
+            (0.0f64, 0.0f64, 0.0f64);
+        for c in &stats.claims {
+            assert!(matches!(c.arch, Arch::Gpu));
+            assert!(c.exec_secs >= 0.0 && c.exec_secs.is_finite());
+            assert!(c.transfer_secs >= 0.0 && c.transfer_secs.is_finite());
+            assert!(c.filter_secs >= 0.0 && c.filter_secs.is_finite());
+            assert!(
+                (c.secs - (c.exec_secs + c.transfer_secs + c.filter_secs)).abs()
+                    < 1e-9,
+                "{mode:?}: pipelined claim secs = exec + transfer + filter \
+                 (resource time)"
+            );
+            exec_sum += c.exec_secs;
+            transfer_sum += c.transfer_secs;
+            filter_sum += c.filter_secs;
+        }
+        assert!((stats.exec_time - exec_sum).abs() < 1e-9, "{mode:?}");
+        assert!((stats.transfer_time - transfer_sum).abs() < 1e-9, "{mode:?}");
+        assert!((stats.filter_time - filter_sum).abs() < 1e-9, "{mode:?}");
+        assert!(stats.exec_time > 0.0, "{mode:?}: claims executed device tiles");
+        // the copy is real work on every mode: a drain that found pairs
+        // must have spent time converting device output into host buffers
+        if stats.result_pairs > 0 {
+            assert!(
+                stats.transfer_time > 0.0,
+                "{mode:?}: transfer lane must carry the device-to-host copy"
+            );
+        }
     }
-    assert!((stats.exec_time - exec_sum).abs() < 1e-9);
-    assert!((stats.filter_time - filter_sum).abs() < 1e-9);
-    assert!(stats.exec_time > 0.0, "claims executed device tiles");
 }

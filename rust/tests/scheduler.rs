@@ -90,28 +90,42 @@ fn simulate_dynamic(
     Sim { makespan, idle_frac, gpu_queries, cpu_queries }
 }
 
-/// Drain `queue` in virtual time with the GPU master's exec/filter split
-/// modeled explicitly: executing a claim of work w costs w/gpu_speed on
-/// the master's clock and its host filtering costs w*filter_frac/gpu_speed
-/// on the filter stage. `pipelined` = the double-buffered drain: the
-/// master claims again as soon as *exec* finishes (filtering of the
-/// previous claim overlaps), constrained by the two staging sets - exec
-/// of claim j waits for filter completion of claim j-2. Sync = the master
-/// waits out each claim's filter before claiming again.
+/// Drain `queue` in virtual time with the GPU master's
+/// exec/transfer/filter split modeled explicitly: executing a claim of
+/// work w costs w/gpu_speed, its device-to-host transfer costs
+/// w*transfer_frac/gpu_speed, and its host filtering costs
+/// w*filter_frac/gpu_speed. `depth` picks the drain:
+///
+/// * 1 = synchronous: the master pays exec + transfer + filter serially
+///   per claim;
+/// * 2 = two-stage: the master pays exec + transfer (the copy stays on
+///   the master thread), filtering runs on its own stage; exec of claim
+///   j waits for filter completion of claim j-2 (two staging sets);
+/// * 3 = three-stage: the master pays exec alone, transfer and filter
+///   each run on their own serial stage; exec of claim j waits for
+///   filter completion of claim j-3 (three staging sets).
+///
+/// The claim-ahead sizing reads the master-side rate each mode actually
+/// observes: total rate (sync), exec+transfer rate (two-stage), or the
+/// kernel-only rate (three-stage).
+#[allow(clippy::too_many_arguments)]
 fn simulate_overlap(
     queue: &WorkQueue,
     gpu_speed: f64,
+    transfer_frac: f64,
     filter_frac: f64,
     cpu_speed: f64,
     ranks: usize,
     chunk: usize,
-    pipelined: bool,
+    depth: usize,
 ) -> Sim {
-    // when the master can next claim+execute / when the filter stage
-    // frees up / filter completion of the two staging sets
+    assert!((1..=3).contains(&depth));
+    // when the master can next claim+execute / when the transfer and
+    // filter stages free up / filter completion of the staging sets
     let mut exec_free = 0.0f64;
+    let mut transfer_free = 0.0f64;
     let mut filter_free = 0.0f64;
-    let mut stage_filter_end = [0.0f64; 2];
+    let mut stage_filter_end = [0.0f64; 3];
     let mut claim_idx = 0usize;
     let mut gpu_open = true;
     let mut cpu_clocks = vec![0.0f64; ranks];
@@ -122,10 +136,10 @@ fn simulate_overlap(
         queue.dense_work(),
     );
     loop {
-        let gpu_clock = if pipelined {
-            exec_free.max(stage_filter_end[claim_idx % 2])
+        let gpu_clock = if depth == 1 {
+            filter_free.max(transfer_free).max(exec_free)
         } else {
-            filter_free.max(exec_free)
+            exec_free.max(stage_filter_end[claim_idx % depth])
         };
         let mut best: Option<(f64, usize)> = None;
         for (i, &c) in cpu_clocks.iter().enumerate() {
@@ -141,21 +155,44 @@ fn simulate_overlap(
             match queue.claim_head_work(target, queue.len()) {
                 Some(r) => {
                     let w = queue.range_work(r.clone()) as f64;
+                    let (e, tr, f) = (
+                        w / gpu_speed,
+                        w * transfer_frac / gpu_speed,
+                        w * filter_frac / gpu_speed,
+                    );
                     let exec_start = gpu_clock;
-                    let exec_end = exec_start + w / gpu_speed;
-                    let filter_start = exec_end.max(filter_free);
-                    let filter_end = filter_start + w * filter_frac / gpu_speed;
+                    // master-side cost per depth: sync pays everything,
+                    // two-stage keeps the copy, three-stage execs alone
+                    let exec_end = exec_start
+                        + match depth {
+                            1 => e + tr + f,
+                            2 => e + tr,
+                            _ => e,
+                        };
                     exec_free = exec_end;
-                    filter_free = filter_end;
-                    stage_filter_end[claim_idx % 2] = filter_end;
+                    if depth == 3 {
+                        let transfer_end = exec_end.max(transfer_free) + tr;
+                        transfer_free = transfer_end;
+                        let filter_end = transfer_end.max(filter_free) + f;
+                        filter_free = filter_end;
+                        stage_filter_end[claim_idx % 3] = filter_end;
+                    } else if depth == 2 {
+                        let filter_end = exec_end.max(filter_free) + f;
+                        filter_free = filter_end;
+                        stage_filter_end[claim_idx % 2] = filter_end;
+                    } else {
+                        transfer_free = exec_end;
+                        filter_free = exec_end;
+                    }
                     claim_idx += 1;
                     gpu_queries += r.len();
-                    // claim-ahead sizing reads the exec-side rate - the
-                    // rate available before the claim's filter completes
-                    let gpu_rate = if pipelined {
-                        gpu_speed
-                    } else {
-                        gpu_speed / (1.0 + filter_frac)
+                    // claim-ahead sizing reads the master-side rate each
+                    // mode observes before the claim's downstream stages
+                    // complete
+                    let gpu_rate = match depth {
+                        1 => gpu_speed / (1.0 + transfer_frac + filter_frac),
+                        2 => gpu_speed / (1.0 + transfer_frac),
+                        _ => gpu_speed,
                     };
                     target = next_batch_work(
                         queue.head_work_remaining(queue.len()),
@@ -177,7 +214,7 @@ fn simulate_overlap(
         }
     }
     let cpu_finish = cpu_clocks.iter().cloned().fold(0.0, f64::max);
-    let gpu_finish = filter_free.max(exec_free);
+    let gpu_finish = filter_free.max(transfer_free).max(exec_free);
     let makespan = cpu_finish.max(gpu_finish);
     let idle_frac = if makespan > 0.0 {
         (makespan - cpu_finish.min(gpu_finish)) / makespan
@@ -312,11 +349,11 @@ fn pipelined_gpu_overlap_does_not_starve_cpu_tail() {
     for (gamma, rho) in [(0.0, 0.2), (0.5, 0.2)] {
         let q_sync = build_queue(&d, &grid, &queries, k, gamma, rho);
         let sync = simulate_overlap(
-            &q_sync, gpu_speed, filter_frac, cpu_speed, ranks, chunk, false,
+            &q_sync, gpu_speed, 0.0, filter_frac, cpu_speed, ranks, chunk, 1,
         );
         let q_pipe = build_queue(&d, &grid, &queries, k, gamma, rho);
         let pipe = simulate_overlap(
-            &q_pipe, gpu_speed, filter_frac, cpu_speed, ranks, chunk, true,
+            &q_pipe, gpu_speed, 0.0, filter_frac, cpu_speed, ranks, chunk, 2,
         );
 
         // every query computed exactly once under both drains
@@ -353,15 +390,70 @@ fn pipelined_gpu_overlap_does_not_starve_cpu_tail() {
     // GPU-heavy regime (one slow CPU rank): the join is GPU-bound, so
     // hiding the filter stage must shorten the makespan materially
     let q_sync = build_queue(&d, &grid, &queries, k, 0.0, 0.0);
-    let sync = simulate_overlap(&q_sync, 3000.0, 0.9, 100.0, 1, 32, false);
+    let sync = simulate_overlap(&q_sync, 3000.0, 0.0, 0.9, 100.0, 1, 32, 1);
     let q_pipe = build_queue(&d, &grid, &queries, k, 0.0, 0.0);
-    let pipe = simulate_overlap(&q_pipe, 3000.0, 0.9, 100.0, 1, 32, true);
+    let pipe = simulate_overlap(&q_pipe, 3000.0, 0.0, 0.9, 100.0, 1, 32, 2);
     assert!(
         pipe.makespan < sync.makespan * 0.8,
         "overlap should hide most of the filter stage: {:.4} vs {:.4}",
         pipe.makespan,
         sync.makespan
     );
+}
+
+/// The transfer stage's reason to exist: when the join is GPU-bound and
+/// the device-to-host copy is a large fraction of exec, moving the copy
+/// off the master thread must shorten the makespan by about the copy
+/// time - the two-stage master pays exec + transfer serially per unit of
+/// work, the three-stage master pays exec alone, with transfer AND
+/// filter both hidden behind the device.
+#[test]
+fn three_stage_hides_transfer_in_gpu_bound_regime() {
+    let d = chist_like(2500).generate(0xD15C);
+    let eps = EpsilonSelector::default().select_host(&d, 5, 0.0).eps;
+    let grid = GridIndex::build(&d, 6, eps);
+    let queries: Vec<u32> = (0..d.len() as u32).collect();
+    let (k, ranks, chunk) = (5, 1, 32);
+    // GPU-bound: one slow CPU rank; heavy copy (60% of exec) and a
+    // moderate filter (30%) - both individually smaller than exec, so a
+    // perfect pipeline hides them entirely
+    let (gpu_speed, cpu_speed) = (3000.0, 100.0);
+    let (transfer_frac, filter_frac) = (0.6, 0.3);
+
+    let run = |depth: usize| {
+        let q = build_queue(&d, &grid, &queries, k, 0.0, 0.0);
+        simulate_overlap(
+            &q, gpu_speed, transfer_frac, filter_frac, cpu_speed, ranks, chunk,
+            depth,
+        )
+    };
+    let sync = run(1);
+    let two = run(2);
+    let three = run(3);
+
+    // every query computed exactly once under all three drains
+    for s in [&sync, &two, &three] {
+        assert_eq!(s.gpu_queries + s.cpu_queries, d.len());
+    }
+    // the two-stage drain already hides the filter...
+    assert!(
+        two.makespan < sync.makespan,
+        "two-stage {:.4} vs sync {:.4}",
+        two.makespan,
+        sync.makespan
+    );
+    // ...and the dedicated transfer stage hides most of the copy on top:
+    // the GPU-bound makespan should drop by roughly transfer_frac /
+    // (1 + transfer_frac) (~37% here); assert a conservative 15% so the
+    // test stays robust to claim-tail and CPU-share effects
+    assert!(
+        three.makespan < two.makespan * 0.85,
+        "transfer stage not hidden: three-stage {:.4} vs two-stage {:.4}",
+        three.makespan,
+        two.makespan
+    );
+    // and a deeper pipeline must never be worse than a shallower one
+    assert!(three.makespan <= sync.makespan, "three-stage regressed past sync");
 }
 
 /// Concurrent (real threads) two-ended drain with Q^Fail recirculation
