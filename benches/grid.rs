@@ -1,0 +1,274 @@
+//! Grid-engine microbench: the CSR cell-adjacency engine (O(1) point→cell
+//! rank map + precomputed neighbor rows + memoized adjacent populations)
+//! vs an in-tree reconstruction of the pre-refactor walk (per-query
+//! coordinate recompute with a fresh `Vec<u64>`, a binary search per
+//! adjacent cell, per-cell `Vec` allocations).
+//!
+//! Two workloads, mirroring the two hot consumers:
+//!
+//! * **pricing** - what `sched::build_queue` pays per query: cell
+//!   population + adjacent-block population. Legacy: recompute + 3^m walk
+//!   per query; CSR: two O(1) array reads.
+//! * **tile_build** - what `gpu::join`'s tile builders pay per cell:
+//!   materialise the cell's candidate list once. Legacy: walk with growth
+//!   reallocations; CSR: exact-capacity reserve + flat slice copies.
+//!
+//! Emits `BENCH_grid.json` (tracked `speedup` column per case x dataset),
+//! gated against `benches/baselines/BENCH_grid.json` in CI.
+//!
+//!   cargo bench --bench grid
+
+use std::time::Instant;
+
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::util::json::Json;
+
+/// The seed grid engine, reconstructed: B/G/A arrays only, coordinates
+/// recomputed per call into a fresh `Vec`, every adjacent cell binary-
+/// searched. Kept here (not in the library) purely as the measurement
+/// baseline.
+struct LegacyGrid {
+    eps: f64,
+    m: usize,
+    mins: Vec<f64>,
+    widths: Vec<u64>,
+    cell_ids: Vec<u64>,
+    ranges: Vec<(u32, u32)>,
+    point_ids: Vec<u32>,
+}
+
+impl LegacyGrid {
+    fn build(d: &Dataset, m: usize, eps: f64) -> LegacyGrid {
+        let m = m.clamp(1, d.dims());
+        let n = d.len();
+        let mut mins = vec![f64::INFINITY; m];
+        let mut maxs = vec![f64::NEG_INFINITY; m];
+        for i in 0..n {
+            let p = d.point(i);
+            for j in 0..m {
+                mins[j] = mins[j].min(p[j] as f64);
+                maxs[j] = maxs[j].max(p[j] as f64);
+            }
+        }
+        let widths: Vec<u64> = (0..m)
+            .map(|j| (((maxs[j] - mins[j]) / eps).floor() as u64 + 1).max(1))
+            .collect();
+        let mut pairs: Vec<(u64, u32)> = (0..n)
+            .map(|i| {
+                let coords = Self::cell_coords_of(d.point(i), &mins, eps, m);
+                (Self::linearise(&coords, &widths), i as u32)
+            })
+            .collect();
+        pairs.sort_unstable();
+        let mut cell_ids = Vec::new();
+        let mut ranges: Vec<(u32, u32)> = Vec::new();
+        let mut point_ids = Vec::with_capacity(n);
+        for (cell, pid) in pairs {
+            if cell_ids.last() != Some(&cell) {
+                cell_ids.push(cell);
+                let s = point_ids.len() as u32;
+                ranges.push((s, s));
+            }
+            point_ids.push(pid);
+            ranges.last_mut().unwrap().1 += 1;
+        }
+        LegacyGrid { eps, m, mins, widths, cell_ids, ranges, point_ids }
+    }
+
+    fn cell_coords_of(p: &[f32], mins: &[f64], eps: f64, m: usize) -> Vec<u64> {
+        (0..m)
+            .map(|j| (((p[j] as f64 - mins[j]) / eps).floor().max(0.0)) as u64)
+            .collect()
+    }
+
+    fn linearise(coords: &[u64], widths: &[u64]) -> u64 {
+        let mut id = 0u64;
+        for (c, w) in coords.iter().zip(widths) {
+            id = id.wrapping_mul(*w).wrapping_add(*c);
+        }
+        id
+    }
+
+    fn cell_population(&self, p: &[f32]) -> usize {
+        let coords = Self::cell_coords_of(p, &self.mins, self.eps, self.m);
+        match self.cell_ids.binary_search(&Self::linearise(&coords, &self.widths)) {
+            Ok(pos) => {
+                let (s, e) = self.ranges[pos];
+                (e - s) as usize
+            }
+            Err(_) => 0,
+        }
+    }
+
+    fn visit_adjacent(&self, p: &[f32], mut visit: impl FnMut(&[u32])) {
+        let base = Self::cell_coords_of(p, &self.mins, self.eps, self.m);
+        let m = self.m;
+        let mut offs = vec![-1i64; m];
+        'outer: loop {
+            let mut coords = Vec::with_capacity(m);
+            let mut ok = true;
+            for j in 0..m {
+                let c = base[j] as i64 + offs[j];
+                if c < 0 || c >= self.widths[j] as i64 {
+                    ok = false;
+                    break;
+                }
+                coords.push(c as u64);
+            }
+            if ok {
+                let id = Self::linearise(&coords, &self.widths);
+                if let Ok(pos) = self.cell_ids.binary_search(&id) {
+                    let (s, e) = self.ranges[pos];
+                    visit(&self.point_ids[s as usize..e as usize]);
+                }
+            }
+            for j in (0..m).rev() {
+                if offs[j] < 1 {
+                    offs[j] += 1;
+                    continue 'outer;
+                }
+                offs[j] = -1;
+            }
+            break;
+        }
+    }
+
+    fn candidates_of(&self, p: &[f32]) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.visit_adjacent(p, |ids| out.extend_from_slice(ids));
+        out
+    }
+
+    fn adjacent_population(&self, p: &[f32]) -> usize {
+        let mut n = 0usize;
+        self.visit_adjacent(p, |ids| n += ids.len());
+        n
+    }
+}
+
+fn qps(items: usize, secs: f64) -> f64 {
+    items as f64 / secs.max(1e-12)
+}
+
+fn main() {
+    let susy = susy_like(12_000).generate(0x6B1D);
+    let chist = chist_like(8_000).generate(0x6B1E);
+    let chist_eps = EpsilonSelector::default().select_host(&chist, 5, 0.2).eps;
+    let cases: Vec<(&str, &Dataset, f64)> = vec![
+        ("susy_like", &susy, 2.0),
+        ("chist_skewed", &chist, chist_eps),
+    ];
+
+    let mut rows = Vec::new();
+    println!("grid engine: CSR cell-adjacency vs reconstructed legacy walk (m=6)");
+    println!(
+        "{:>12} {:>14} {:>14} {:>14} {:>8}",
+        "case", "dataset", "csr q/s", "legacy q/s", "speedup"
+    );
+    for &(name, data, eps) in &cases {
+        let t0 = Instant::now();
+        let grid = GridIndex::build(data, 6, eps);
+        let csr_build = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let legacy = LegacyGrid::build(data, 6, eps);
+        let legacy_build = t1.elapsed().as_secs_f64();
+
+        let queries: Vec<u32> = (0..data.len() as u32).collect();
+
+        // ---- pricing: per-query cell pop + adjacent-block pop ----
+        // warm-up touch so page faults do not skew the first measurement
+        let mut warm = 0u64;
+        for &q in queries.iter().step_by(97) {
+            warm += grid.adjacent_population_of_id(q) as u64;
+        }
+        let t = Instant::now();
+        let mut csr_acc = 0u64;
+        for &q in &queries {
+            csr_acc += grid.cell_population_of_id(q) as u64
+                + grid.adjacent_population_of_id(q) as u64;
+        }
+        let csr_pricing = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let mut legacy_acc = 0u64;
+        for &q in &queries {
+            let p = data.point(q as usize);
+            legacy_acc += legacy.cell_population(p) as u64
+                + legacy.adjacent_population(p) as u64;
+        }
+        let legacy_pricing = t.elapsed().as_secs_f64();
+        assert_eq!(csr_acc, legacy_acc, "pricing engines disagree ({name})");
+        assert!(warm <= csr_acc);
+
+        // ---- tile build: materialise each cell's candidate list ----
+        let n_cells = grid.non_empty_cells();
+        let reps: Vec<u32> = (0..n_cells)
+            .map(|rank| grid.rank_points(rank)[0])
+            .collect();
+        let mut buf: Vec<u32> = Vec::new();
+        let t = Instant::now();
+        let mut csr_sum = 0u64;
+        for rank in 0..n_cells {
+            grid.candidates_into_rank(rank, &mut buf);
+            csr_sum += buf.iter().map(|&x| x as u64).sum::<u64>();
+        }
+        let csr_tiles = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let mut legacy_sum = 0u64;
+        for &rep in &reps {
+            let c = legacy.candidates_of(data.point(rep as usize));
+            legacy_sum += c.iter().map(|&x| x as u64).sum::<u64>();
+        }
+        let legacy_tiles = t.elapsed().as_secs_f64();
+        assert_eq!(csr_sum, legacy_sum, "tile builders disagree ({name})");
+
+        for (case, items, csr_secs, legacy_secs) in [
+            ("pricing", queries.len(), csr_pricing, legacy_pricing),
+            ("tile_build", n_cells, csr_tiles, legacy_tiles),
+        ] {
+            let (csr_qps, legacy_qps) = (qps(items, csr_secs), qps(items, legacy_secs));
+            let speedup = csr_qps / legacy_qps.max(1e-12);
+            println!(
+                "{:>12} {:>14} {:>14.0} {:>14.0} {:>7.2}x",
+                case, name, csr_qps, legacy_qps, speedup
+            );
+            rows.push(Json::obj(vec![
+                ("case", Json::Str(case.into())),
+                ("dataset", Json::Str(name.into())),
+                ("items", Json::Num(items as f64)),
+                ("csr_qps", Json::Num(csr_qps)),
+                ("legacy_qps", Json::Num(legacy_qps)),
+                ("csr_secs", Json::Num(csr_secs)),
+                ("legacy_secs", Json::Num(legacy_secs)),
+                ("speedup", Json::Num(speedup)),
+                // build-time context (untracked): the CSR precomputation
+                // is paid once at build, amortised by every consumer
+                ("csr_build_secs", Json::Num(csr_build)),
+                ("legacy_build_secs", Json::Num(legacy_build)),
+            ]));
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("grid".into())),
+        (
+            "engine",
+            Json::Str(
+                "CSR cell-adjacency grid (O(1) rank map + precomputed \
+                 neighbor rows + memoized adjacent populations)"
+                    .into(),
+            ),
+        ),
+        (
+            "baseline",
+            Json::Str(
+                "pre-refactor walk: per-query coordinate recompute, binary \
+                 search per adjacent cell, per-cell Vec allocations"
+                    .into(),
+            ),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_grid.json", doc.to_string() + "\n")
+        .expect("write BENCH_grid.json");
+    println!("wrote BENCH_grid.json");
+}

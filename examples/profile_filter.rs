@@ -9,7 +9,7 @@ fn main() -> anyhow::Result<()> {
     let (data, _) = reorder_by_variance(&data);
     let sel = EpsilonSelector::default().select(&e, &data, 16, 1.0)?;
     let grid = GridIndex::build(&data, 6, sel.eps);
-    let sp = split_work(&data, &grid, 16, 0.0, 0.2);
+    let sp = split_work(&data, &grid, 16, 0.0, 0.2, true);
     let mut params = GpuJoinParams::new(16, sel.eps);
     params.streams = std::env::var("STREAMS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
     let t0 = Instant::now();

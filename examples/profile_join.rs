@@ -9,9 +9,9 @@ fn main() -> anyhow::Result<()> {
     let (data, _) = reorder_by_variance(&data);
     let sel = EpsilonSelector::default().select(&e, &data, 1, 0.0)?;
     let grid = GridIndex::build(&data, 6, sel.eps);
-    let sp = split_work(&data, &grid, 1, 0.0, 0.0);
+    let sp = split_work(&data, &grid, 1, 0.0, 0.0, true);
     println!("|Q_gpu|={} cells(non-empty)={}", sp.q_gpu.len(), grid.non_empty_cells());
-    let work = hybrid_knn_join::gpu::join::workload_vector(&data, &grid, &sp.q_gpu);
+    let work = hybrid_knn_join::gpu::join::workload_vector(&grid, &sp.q_gpu);
     let total_work: u64 = work.iter().sum();
     let max_work = work.iter().max().unwrap();
     println!("total candidate-pairs={} max/query={} avg/query={}",

@@ -36,42 +36,48 @@ pub struct DbscanResult {
 }
 
 /// Run DBSCAN. Builds an ε-grid over the first `m` dims and expands
-/// clusters by BFS over in-ε neighborhoods.
+/// clusters by BFS over in-ε neighborhoods. Every range query is the
+/// grid's id-keyed CSR walk into one reusable candidate buffer, so the
+/// BFS allocates nothing per point.
 pub fn dbscan(data: &Dataset, params: &DbscanParams) -> DbscanResult {
     let n = data.len();
     let grid = GridIndex::build(data, params.m, params.eps);
     let eps2 = params.eps * params.eps;
 
-    let neighbors = |i: usize| -> Vec<u32> {
-        let mut out = Vec::new();
-        grid.visit_adjacent(data.point(i), |ids| {
+    // in-ε neighborhood of point i into `out` (cleared first); includes
+    // i itself (dist 0), matching the min_pts convention
+    let neighbors = |i: usize, out: &mut Vec<u32>| {
+        out.clear();
+        grid.visit_adjacent_of_id(i as u32, |ids| {
             for &j in ids {
                 if sqdist(data.point(i), data.point(j as usize)) <= eps2 {
                     out.push(j);
                 }
             }
         });
-        out // includes i itself (dist 0), matching the min_pts convention
     };
 
     let mut labels = vec![NOISE; n];
     let mut visited = vec![false; n];
     let mut cluster = 0i32;
     let mut queue: std::collections::VecDeque<u32> = Default::default();
+    // candidate scratch, reused across all range queries: the BFS
+    // consumes it (into `queue`) before the next query refills it
+    let mut nbuf: Vec<u32> = Vec::new();
 
     for p in 0..n {
         if visited[p] {
             continue;
         }
         visited[p] = true;
-        let ns = neighbors(p);
-        if ns.len() < params.min_pts {
+        neighbors(p, &mut nbuf);
+        if nbuf.len() < params.min_pts {
             continue; // noise (may later become a border point)
         }
         // new cluster seeded at core point p
         labels[p] = cluster;
         queue.clear();
-        queue.extend(ns);
+        queue.extend(nbuf.iter().copied());
         while let Some(q) = queue.pop_front() {
             let q = q as usize;
             if labels[q] == NOISE {
@@ -81,9 +87,9 @@ pub fn dbscan(data: &Dataset, params: &DbscanParams) -> DbscanResult {
                 continue;
             }
             visited[q] = true;
-            let qn = neighbors(q);
-            if qn.len() >= params.min_pts {
-                queue.extend(qn); // q is core: expand through it
+            neighbors(q, &mut nbuf);
+            if nbuf.len() >= params.min_pts {
+                queue.extend(nbuf.iter().copied()); // q is core: expand
             }
         }
         cluster += 1;

@@ -129,8 +129,8 @@ pub fn table3(engine: &Engine, workloads: &[Workload]) -> Result<Table> {
         let (data, _) = reorder_by_variance(&data);
         let sel = EpsilonSelector::default().select(engine, &data, k, 0.0)?;
         let grid = GridIndex::build(&data, 6, sel.eps);
-        let sp = split::split_work(&data, &grid, k, 0.0, 0.0);
-        let work = gpu::join::workload_vector(&data, &grid, &sp.q_gpu);
+        let sp = split::split_work(&data, &grid, k, 0.0, 0.0, true);
+        let work = gpu::join::workload_vector(&grid, &sp.q_gpu);
         let model = DeviceModel::default();
         let assigns = [
             ThreadAssign::Static(1),

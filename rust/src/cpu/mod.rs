@@ -434,7 +434,7 @@ mod tests {
         let k = 4;
         let grid = GridIndex::build(&data, 6, 2.0);
         let queries: Vec<u32> = (0..data.len() as u32).collect();
-        let queue = build_queue(&data, &grid, &queries, k, 0.0, 0.0);
+        let queue = build_queue(&data, &grid, &queries, k, 0.0, 0.0, true);
 
         // play the GPU master: claim a dense head batch, "solve" half of
         // it, recirculate the other half as Q^Fail

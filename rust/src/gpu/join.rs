@@ -291,17 +291,23 @@ pub fn gpu_join_rs_into(
     let plans = (&plan_large, &plan_small);
 
     // ---- group queries by cell (shared candidate lists) ----
+    // Self-join (r_data IS the grid's dataset): O(1) id-keyed cell
+    // lookups; bipartite R queries take the coordinate-keyed path (one
+    // linearisation per query, no allocation). Candidates are collected
+    // through the CSR walk into an exact-capacity buffer per cell.
+    let native = std::ptr::eq(r_data, data);
     let mut by_cell: HashMap<u64, Vec<u32>> = HashMap::new();
     for &q in queries {
         by_cell
-            .entry(grid.cell_id_of(r_data.point(q as usize)))
+            .entry(grid.query_cell_id(native, r_data, q))
             .or_default()
             .push(q);
     }
     let mut cells: Vec<WorkCell> = by_cell
         .into_values()
         .map(|qs| {
-            let candidates = grid.candidates_of(r_data.point(qs[0] as usize));
+            let mut candidates = Vec::new();
+            grid.query_candidates_into(native, r_data, qs[0], &mut candidates);
             WorkCell { queries: qs, candidates }
         })
         .collect();
@@ -625,17 +631,21 @@ pub fn gpu_join_drain(
 /// may start or end mid-cell when clipped by the advancing tail; the
 /// partial remainder still shares its cell's candidate list). Appends
 /// each query's candidate count to `work_log` for the device model.
+/// `native` marks queue queries as ids into the grid's own dataset
+/// (self-join), enabling the O(1) id-keyed CSR walk.
 fn claim_cells(
     queue: &WorkQueue,
     grid: &GridIndex,
     r_data: &Dataset,
+    native: bool,
     range: std::ops::Range<usize>,
     work_log: &mut Vec<u64>,
 ) -> Vec<WorkCell> {
     let mut cells: Vec<WorkCell> = Vec::new();
     for r in queue.cell_ranges(range) {
         let qs = queue.query_slice(r).to_vec();
-        let candidates = grid.candidates_of(r_data.point(qs[0] as usize));
+        let mut candidates = Vec::new();
+        grid.query_candidates_into(native, r_data, qs[0], &mut candidates);
         for _ in &qs {
             work_log.push(candidates.len() as u64);
         }
@@ -678,10 +688,11 @@ fn drain_sync(
     let mut filter_time = 0f64;
     let mut work_done = 0u64;
 
+    let native = std::ptr::eq(r_data, data);
     let mut pending = Some(first);
     while let Some(range) = pending.take() {
         let t_claim = Instant::now();
-        let cells = claim_cells(queue, grid, r_data, range.clone(), &mut work_log);
+        let cells = claim_cells(queue, grid, r_data, native, range.clone(), &mut work_log);
         let (batch_queries, mut heaps, batch_pairs, transfer_secs, filter_secs) =
             exec_filter_cells(
                 engine,
@@ -1124,6 +1135,7 @@ fn pipelined_claim_loop(
     // the RAW params.k so the partition matches the synchronous drains
     // even for the degenerate k = 0
     let arena_k = params.k.max(1);
+    let native = std::ptr::eq(r_data, data);
     let depth = if transfer_handle.is_some() { 3 } else { 2 };
     let mut acc = DrainAcc::default();
     let mut stages: Vec<Arc<ClaimStage>> =
@@ -1144,8 +1156,9 @@ fn pipelined_claim_loop(
         }
         let lane = claim_idx as u64;
         let t_exec = Instant::now();
-        let cells =
-            claim_cells(queue, grid, r_data, range.clone(), &mut acc.work_log);
+        let cells = claim_cells(
+            queue, grid, r_data, native, range.clone(), &mut acc.work_log,
+        );
         let n_queries: usize = cells.iter().map(|c| c.queries.len()).sum();
         {
             // unique access: all of this set's rounds have retired
@@ -1268,24 +1281,14 @@ fn pipelined_claim_loop(
 /// Per-query candidate workload (distance calculations per query) under a
 /// given grid - the input to the device model. Used by the Table III
 /// granularity study to evaluate all ThreadAssign variants on one real
-/// workload without re-running the join.
-pub fn workload_vector(data: &Dataset, grid: &GridIndex, queries: &[u32]) -> Vec<u64> {
-    // queries index `data` here (self-join accounting)
-    let mut by_cell: HashMap<u64, (u64, u64)> = HashMap::new(); // cell -> (count, work)
-    for &q in queries {
-        let cell = grid.cell_id_of(data.point(q as usize));
-        let entry = by_cell.entry(cell).or_insert_with(|| {
-            let cands = grid.candidates_of(data.point(q as usize)).len() as u64;
-            (0, cands)
-        });
-        entry.0 += 1;
-    }
-    let mut out = Vec::with_capacity(queries.len());
-    for &q in queries {
-        let cell = grid.cell_id_of(data.point(q as usize));
-        out.push(by_cell[&cell].1);
-    }
-    out
+/// workload without re-running the join. `queries` index the dataset the
+/// grid was built over (self-join accounting): each query's candidate
+/// count is one O(1) read off the memoized CSR adjacent-population table.
+pub fn workload_vector(grid: &GridIndex, queries: &[u32]) -> Vec<u64> {
+    queries
+        .iter()
+        .map(|&q| grid.adjacent_population_of_id(q) as u64)
+        .collect()
 }
 
 /// Dense per-batch heap arena: one bounded heap per query *position* in
@@ -1980,7 +1983,7 @@ mod tests {
 
         let list = gpu_join(&engine, &data, &grid, &queries, &params).unwrap();
 
-        let queue = build_queue(&data, &grid, &queries, params.k, 0.0, 0.0);
+        let queue = build_queue(&data, &grid, &queries, params.k, 0.0, 0.0, true);
         let mut result = KnnResult::new(data.len(), params.k);
         let slots = result.slots();
         let out = gpu_join_drain(

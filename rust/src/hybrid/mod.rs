@@ -316,6 +316,7 @@ impl HybridKnnJoin {
         let queue = timers.time("build_queue", || {
             sched::build_queue(
                 r_data, grid, &query_ids, params.k, params.gamma, params.rho,
+                self_join, // self-join: O(1) id-keyed grouping and pricing
             )
         });
 
@@ -503,7 +504,9 @@ impl HybridKnnJoin {
     ) -> Result<HybridReport> {
         // 5. split work (queries = points of R, density from the S grid)
         let mut splitres: WorkSplit = timers.time("split_work", || {
-            split::split_work(r_data, grid, params.k, params.gamma, params.rho)
+            split::split_work(
+                r_data, grid, params.k, params.gamma, params.rho, self_join,
+            )
         });
 
         // Table VI: process only a fraction of the queries

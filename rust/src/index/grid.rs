@@ -1,25 +1,113 @@
-//! The GPU-JOIN grid index (paper Sec. IV-A).
+//! The GPU-JOIN grid index (paper Sec. IV-A), rebuilt as a CSR
+//! cell-adjacency engine.
 //!
 //! A grid of cell length ε over the first m ≤ n (REORDERed) dimensions.
-//! Only *non-empty* cells are materialised: sorted linearised ids in `B`
-//! (binary-searched during the walk), per-cell [min,max) ranges in `G`
-//! into the point lookup array `A` of point ids. Space O(|D|), matching
-//! the paper's requirement that the index be a small fraction of device
-//! memory.
+//! Only *non-empty* cells are materialised: sorted linearised ids in `B`,
+//! per-cell [min,max) ranges in `G` into the point lookup array `A` of
+//! point ids - the paper's layout, kept verbatim. On top of B/G/A the
+//! build precomputes what every hot path used to re-derive per query:
 //!
-//! A range query walks the 3^m adjacent-cell block of the query's cell
-//! (step (ii)-(vi) of the paper's search procedure) and hands candidate id
-//! ranges to the caller - the caller (gpu::join) does the distance work on
-//! the "device".
+//! * a **point→cell rank** map (`point_rank`): for each indexed point,
+//!   the rank of its cell in `B`. `cell_rank_of` / `cell_id_of_id` /
+//!   `cell_population_of_id` are O(1) array reads - no coordinate
+//!   recompute, no binary search, no allocation;
+//! * a **CSR cell-adjacency table** (`adj_off`/`adj_ranks`): for each
+//!   non-empty cell, the ranks of its non-empty 3^m neighbors, computed
+//!   exactly once (in parallel via `util::pool`) because every point in a
+//!   cell shares the same neighborhood - the precomputation the GPU
+//!   self-join literature applies per cell. The adjacent-block walk
+//!   (steps (ii)-(vi) of the paper's search procedure) becomes flat slice
+//!   iteration: zero binary searches, zero per-query allocation;
+//! * a memoized **adjacent population** per cell (`adj_pop`), so the
+//!   Sec. V-B per-query work estimate the scheduler prices queues with is
+//!   one array read instead of a 3^m walk.
+//!
+//! Space: B/G/A stay O(|D|) as the paper requires. The CSR table adds
+//! O(Σ_c |adjacent(c)|) ≤ O(|B|·3^m) - see DESIGN.md §8 for why this is
+//! bounded by one pricing pass's work and small in the join regime.
+//!
+//! Coordinate-keyed lookups (arbitrary points - the bipartite R side)
+//! clamp cell coordinates into the grid box per dimension. Clamping is
+//! monotone and non-expansive, so true in-ε neighbors (in the indexed
+//! projection) still land in the clamped cell's adjacent block: the walk
+//! stays a candidate *superset*, and linearised ids stay injective - the
+//! former unclamped ids could collide under `wrapping_mul` for points
+//! beyond the grid extent. Build-time validation degrades `m` (dropping
+//! trailing, lowest-variance dims) when the widths product would overflow
+//! `u64`, instead of silently corrupting ids.
+
+use std::cell::RefCell;
 
 use crate::core::Dataset;
+use crate::util::pool;
 
-/// Non-empty-cell grid over the first `m` dims.
+/// Per-dimension width cap: keeps a single dimension's cell count (and
+/// therefore any in-range coordinate) representable in `i64` arithmetic
+/// even before the cross-dimension product check. Clamping a width only
+/// merges far-apart coordinates into the boundary cell, which keeps the
+/// walk a candidate superset (see module docs).
+const MAX_WIDTH: u64 = 1 << 62;
+
+thread_local! {
+    /// Scratch (base coords, mixed-radix offsets) for the recompute walk
+    /// used when a query point's clamped cell is empty (no CSR row):
+    /// reused across calls so the fallback allocates nothing per query.
+    static WALK_SCRATCH: RefCell<(Vec<u64>, Vec<i64>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Visit the linearised ids of the in-range `{-1,0,1}^m` block around
+/// `base`, in ascending id order (the walk's order contract). `offs` is
+/// caller scratch of length `base.len()`; its prior contents are ignored.
+fn walk_block(base: &[u64], widths: &[u64], offs: &mut [i64], mut f: impl FnMut(u64)) {
+    debug_assert_eq!(base.len(), offs.len());
+    debug_assert_eq!(base.len(), widths.len());
+    for o in offs.iter_mut() {
+        *o = -1;
+    }
+    'outer: loop {
+        let mut id = 0u64;
+        let mut ok = true;
+        for j in 0..base.len() {
+            // base < MAX_WIDTH, so the i64 arithmetic cannot overflow
+            let c = base[j] as i64 + offs[j];
+            if c < 0 || (c as u64) >= widths[j] {
+                ok = false;
+                break;
+            }
+            id = id * widths[j] + c as u64;
+        }
+        if ok {
+            f(id);
+        }
+        // increment the mixed-radix counter over {-1,0,1}
+        for j in (0..offs.len()).rev() {
+            if offs[j] < 1 {
+                offs[j] += 1;
+                continue 'outer;
+            }
+            offs[j] = -1;
+        }
+        break;
+    }
+}
+
+/// Invert the row-major linearisation of an in-range cell id.
+fn delinearise(mut id: u64, widths: &[u64], out: &mut [u64]) {
+    for j in (0..widths.len()).rev() {
+        out[j] = id % widths[j];
+        id /= widths[j];
+    }
+}
+
+/// Non-empty-cell grid over the first `m` dims, with O(1) point→cell
+/// lookups and a precomputed CSR cell-adjacency table.
 #[derive(Debug, Clone)]
 pub struct GridIndex {
     /// cell edge length (= ε of the join)
     pub eps: f64,
-    /// number of indexed dims m ≤ n
+    /// number of indexed dims m ≤ n (may be lower than requested when
+    /// build-time validation degraded it - see module docs)
     pub m: usize,
     /// minimum coordinate per indexed dim (grid origin)
     mins: Vec<f64>,
@@ -31,21 +119,33 @@ pub struct GridIndex {
     ranges: Vec<(u32, u32)>,
     /// point ids grouped by cell (the paper's A)
     point_ids: Vec<u32>,
+    /// point id -> rank of its cell in `cell_ids` (O(1) point→cell map)
+    point_rank: Vec<u32>,
+    /// CSR offsets into `adj_ranks`, one slot per cell rank plus the tail
+    adj_off: Vec<usize>,
+    /// CSR payload: for each cell rank, the ranks of its non-empty 3^m
+    /// neighbors (itself included), ascending by cell id
+    adj_ranks: Vec<u32>,
+    /// memoized adjacent-block population per cell rank (≤ |D| each)
+    adj_pop: Vec<u32>,
 }
 
 impl GridIndex {
-    /// Build the index. `m` is clamped to the dataset dimensionality;
-    /// `eps` must be positive and finite.
+    /// Build the index. `m` is clamped to the dataset dimensionality and
+    /// may be *degraded* further (trailing dims dropped, with a warning
+    /// on stderr) when the per-dim cell counts would overflow the u64
+    /// linearisation; `eps` must be positive and finite. The CSR
+    /// adjacency table is computed here, in parallel over cells.
     pub fn build(d: &Dataset, m: usize, eps: f64) -> GridIndex {
         assert!(eps.is_finite() && eps > 0.0, "bad eps {eps}");
-        let m = m.clamp(1, d.dims());
+        let requested_m = m.clamp(1, d.dims());
         let n = d.len();
 
-        let mut mins = vec![f64::INFINITY; m];
-        let mut maxs = vec![f64::NEG_INFINITY; m];
+        let mut mins = vec![f64::INFINITY; requested_m];
+        let mut maxs = vec![f64::NEG_INFINITY; requested_m];
         for i in 0..n {
             let p = d.point(i);
-            for j in 0..m {
+            for j in 0..requested_m {
                 let x = p[j] as f64;
                 if x < mins[j] {
                     mins[j] = x;
@@ -59,18 +159,60 @@ impl GridIndex {
             mins.iter_mut().for_each(|x| *x = 0.0);
             maxs.iter_mut().for_each(|x| *x = 0.0);
         }
-        let widths: Vec<u64> = (0..m)
-            .map(|j| (((maxs[j] - mins[j]) / eps).floor() as u64 + 1).max(1))
+        // per-dim widths as f64 first: the f64->u64 cast saturates, and
+        // MAX_WIDTH caps any single dimension before the product check
+        let mut widths: Vec<u64> = (0..requested_m)
+            .map(|j| {
+                let w = ((maxs[j] - mins[j]) / eps).floor() + 1.0;
+                if w.is_finite() && w >= 1.0 {
+                    (w as u64).min(MAX_WIDTH)
+                } else {
+                    1
+                }
+            })
             .collect();
 
+        // Validate the linearisation: the widths product must fit u64 or
+        // ids would collide under wrapping arithmetic. Degrade m by
+        // dropping trailing dims (the lowest-variance ones after REORDER)
+        // until it fits - the grid over fewer dims is a coarser but still
+        // complete candidate filter.
+        let fits = |ws: &[u64]| {
+            ws.iter()
+                .try_fold(1u64, |acc, &w| acc.checked_mul(w))
+                .is_some()
+        };
+        let mut m = requested_m;
+        while m > 1 && !fits(&widths[..m]) {
+            m -= 1;
+        }
+        if m < requested_m {
+            eprintln!(
+                "[grid] widths product overflows u64 for m={requested_m} \
+                 (per-dim cell counts {:?}); degrading to m={m} indexed dims",
+                &widths[..requested_m]
+            );
+            widths.truncate(m);
+            mins.truncate(m);
+        }
+
         // (cell id, point id) pairs, sorted by cell -> B/G/A arrays.
+        let coord = |x: f32, j: usize| -> u64 {
+            let c = ((x as f64 - mins[j]) / eps).floor();
+            if c > 0.0 {
+                (c as u64).min(widths[j] - 1)
+            } else {
+                0 // negatives (sub-min rounding) and NaN clamp to cell 0
+            }
+        };
         let mut pairs: Vec<(u64, u32)> = (0..n)
             .map(|i| {
-                let cell = Self::linearise_coords(
-                    &Self::cell_coords_of(d.point(i), &mins, eps, m),
-                    &widths,
-                );
-                (cell, i as u32)
+                let p = d.point(i);
+                let mut id = 0u64;
+                for j in 0..m {
+                    id = id * widths[j] + coord(p[j], j);
+                }
+                (id, i as u32)
             })
             .collect();
         pairs.sort_unstable();
@@ -88,44 +230,362 @@ impl GridIndex {
             ranges.last_mut().unwrap().1 += 1;
         }
 
-        GridIndex { eps, m, mins, widths, cell_ids, ranges, point_ids }
+        // point -> cell rank (filled off the already-sorted layout)
+        let mut point_rank = vec![0u32; n];
+        for (rank, &(s, e)) in ranges.iter().enumerate() {
+            for idx in s..e {
+                point_rank[point_ids[idx as usize] as usize] = rank as u32;
+            }
+        }
+
+        // CSR cell adjacency, computed once per cell, in parallel: each
+        // worker takes a contiguous slab of cell ranks (deterministic
+        // stitching) and walks the 3^m block with one binary search per
+        // adjacent candidate - the last time anyone searches B for a
+        // neighborhood.
+        let n_cells = cell_ids.len();
+        let workers = std::thread::available_parallelism()
+            .map(|t| t.get())
+            .unwrap_or(1)
+            .clamp(1, n_cells.max(1));
+        let slab = n_cells.div_ceil(workers);
+        let parts: Vec<(Vec<u32>, Vec<u32>, Vec<u32>)> = {
+            let (cell_ids, ranges, widths) = (&cell_ids, &ranges, &widths);
+            pool::run_ranks(workers, move |r| {
+                let lo = (r * slab).min(n_cells);
+                let hi = ((r + 1) * slab).min(n_cells);
+                let mut counts: Vec<u32> = Vec::with_capacity(hi - lo);
+                let mut flat: Vec<u32> = Vec::new();
+                let mut pops: Vec<u32> = Vec::with_capacity(hi - lo);
+                let mut coords = vec![0u64; m];
+                let mut offs = vec![0i64; m];
+                for rank in lo..hi {
+                    delinearise(cell_ids[rank], widths, &mut coords);
+                    let start = flat.len();
+                    let mut pop = 0u32;
+                    walk_block(&coords, widths, &mut offs, |id| {
+                        if let Ok(nr) = cell_ids.binary_search(&id) {
+                            flat.push(nr as u32);
+                            let (s, e) = ranges[nr];
+                            pop += e - s;
+                        }
+                    });
+                    counts.push((flat.len() - start) as u32);
+                    pops.push(pop);
+                }
+                (counts, flat, pops)
+            })
+        };
+        let total_entries: usize = parts.iter().map(|p| p.1.len()).sum();
+        let mut adj_off = Vec::with_capacity(n_cells + 1);
+        adj_off.push(0usize);
+        let mut adj_ranks = Vec::with_capacity(total_entries);
+        let mut adj_pop = Vec::with_capacity(n_cells);
+        let mut running = 0usize;
+        for (counts, flat, pops) in parts {
+            for c in counts {
+                running += c as usize;
+                adj_off.push(running);
+            }
+            adj_ranks.extend_from_slice(&flat);
+            adj_pop.extend_from_slice(&pops);
+        }
+        debug_assert_eq!(adj_off.len(), n_cells + 1);
+        debug_assert_eq!(*adj_off.last().unwrap(), adj_ranks.len());
+
+        GridIndex {
+            eps,
+            m,
+            mins,
+            widths,
+            cell_ids,
+            ranges,
+            point_ids,
+            point_rank,
+            adj_off,
+            adj_ranks,
+            adj_pop,
+        }
     }
 
+    /// Clamped cell coordinate of `x` along indexed dim `j` (see module
+    /// docs for why clamping into the grid box is the safe superset
+    /// semantics for out-of-range points).
     #[inline]
-    fn cell_coords_of(p: &[f32], mins: &[f64], eps: f64, m: usize) -> Vec<u64> {
-        (0..m)
-            .map(|j| (((p[j] as f64 - mins[j]) / eps).floor().max(0.0)) as u64)
-            .collect()
+    fn coord_of(&self, x: f32, j: usize) -> u64 {
+        let c = ((x as f64 - self.mins[j]) / self.eps).floor();
+        if c > 0.0 {
+            (c as u64).min(self.widths[j] - 1)
+        } else {
+            0
+        }
     }
 
-    #[inline]
-    fn linearise_coords(coords: &[u64], widths: &[u64]) -> u64 {
-        // row-major linearisation; widths are small enough in practice
-        // (m <= 6 indexed dims) that this cannot overflow u64 for real data
+    // ---------------------------------------------------------------
+    // coordinate-keyed entry points (any point, incl. the bipartite R
+    // side) - allocation-free
+    // ---------------------------------------------------------------
+
+    /// Linearised (clamped) cell id of an arbitrary point. Injective over
+    /// clamped coordinates: distinct cells never collide.
+    pub fn cell_id_of(&self, p: &[f32]) -> u64 {
         let mut id = 0u64;
-        for (c, w) in coords.iter().zip(widths) {
-            id = id.wrapping_mul(*w).wrapping_add(*c);
+        for j in 0..self.m {
+            id = id * self.widths[j] + self.coord_of(p[j], j);
         }
         id
     }
 
-    /// Cell coordinates of a point.
-    pub fn cell_of(&self, p: &[f32]) -> Vec<u64> {
-        Self::cell_coords_of(p, &self.mins, self.eps, self.m)
+    /// Rank of a linearised cell id in the non-empty-cell table `B`, if
+    /// the cell is non-empty. One binary search - the only search left on
+    /// any coordinate-keyed path.
+    pub fn rank_of_cell_id(&self, cell_id: u64) -> Option<usize> {
+        self.cell_ids.binary_search(&cell_id).ok()
+    }
+
+    /// Rank of the (clamped) cell containing an arbitrary point, if that
+    /// cell is non-empty.
+    pub fn cell_rank_of_point(&self, p: &[f32]) -> Option<usize> {
+        self.rank_of_cell_id(self.cell_id_of(p))
     }
 
     /// Number of points in the cell containing `p` (0 if cell is empty).
     /// This is the |C| of the splitter predicate (paper Sec. V-D).
     pub fn cell_population(&self, p: &[f32]) -> usize {
-        let id = Self::linearise_coords(&self.cell_of(p), &self.widths);
-        match self.cell_ids.binary_search(&id) {
-            Ok(pos) => {
-                let (s, e) = self.ranges[pos];
-                (e - s) as usize
-            }
-            Err(_) => 0,
+        match self.cell_rank_of_point(p) {
+            Some(r) => self.rank_population(r),
+            None => 0,
         }
     }
+
+    /// Walk the adjacent-cell block of `p` (3^m neighborhood clipped to
+    /// the grid), invoking `visit` with each non-empty cell's point ids,
+    /// ascending by cell id. Non-empty query cells take the precomputed
+    /// CSR row (flat slice iteration, no searches, no allocation); empty
+    /// cells - possible only for points outside the indexed data, e.g.
+    /// bipartite R queries - fall back to the recompute walk over
+    /// thread-local scratch.
+    pub fn visit_adjacent(&self, p: &[f32], visit: impl FnMut(&[u32])) {
+        match self.cell_rank_of_point(p) {
+            Some(r) => self.visit_adjacent_of_rank(r, visit),
+            None => self.visit_adjacent_fallback(p, visit),
+        }
+    }
+
+    /// Collect the candidate ids of `p`'s adjacent block into `out`
+    /// (cleared first; reserved to the exact candidate count when the
+    /// query cell is non-empty). The scratch-buffer form of
+    /// [`GridIndex::candidates_of`].
+    pub fn candidates_into(&self, p: &[f32], out: &mut Vec<u32>) {
+        match self.cell_rank_of_point(p) {
+            Some(r) => self.candidates_into_rank(r, out),
+            None => {
+                out.clear();
+                self.visit_adjacent_fallback(p, |ids| out.extend_from_slice(ids));
+            }
+        }
+    }
+
+    /// All candidate ids within the adjacent block of `p` (allocating
+    /// convenience wrapper over [`GridIndex::candidates_into`]).
+    pub fn candidates_of(&self, p: &[f32]) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.candidates_into(p, &mut out);
+        out
+    }
+
+    /// Number of candidates the adjacent-block walk of `p` would scan -
+    /// the per-query work estimate of the Sec. V-B batch estimator. O(1)
+    /// off the memoized per-cell population when the query cell is
+    /// non-empty; the recompute walk otherwise.
+    pub fn adjacent_population(&self, p: &[f32]) -> usize {
+        match self.cell_rank_of_point(p) {
+            Some(r) => self.adj_pop[r] as usize,
+            None => {
+                let mut n = 0usize;
+                self.visit_adjacent_fallback(p, |ids| n += ids.len());
+                n
+            }
+        }
+    }
+
+    /// The recompute walk for query points whose clamped cell is empty:
+    /// enumerate the 3^m block and binary-search each member in `B`.
+    /// Coordinates and offsets live in thread-local scratch, so the walk
+    /// allocates nothing per query (a `visit` closure that re-enters the
+    /// grid degrades to a one-off local buffer instead of panicking).
+    fn visit_adjacent_fallback(&self, p: &[f32], mut visit: impl FnMut(&[u32])) {
+        WALK_SCRATCH.with(|s| {
+            let mut local = (Vec::new(), Vec::new());
+            let mut guard = s.try_borrow_mut().ok();
+            let (coords, offs) = match guard.as_deref_mut() {
+                Some(t) => (&mut t.0, &mut t.1),
+                None => (&mut local.0, &mut local.1),
+            };
+            coords.clear();
+            coords.extend((0..self.m).map(|j| self.coord_of(p[j], j)));
+            offs.resize(self.m, 0);
+            walk_block(coords, &self.widths, offs, |id| {
+                if let Ok(nr) = self.cell_ids.binary_search(&id) {
+                    let (s, e) = self.ranges[nr];
+                    visit(&self.point_ids[s as usize..e as usize]);
+                }
+            });
+        });
+    }
+
+    // ---------------------------------------------------------------
+    // id-keyed entry points: `point_id` indexes the dataset the grid was
+    // built over (the self-join hot paths) - O(1), no searches
+    // ---------------------------------------------------------------
+
+    /// Rank (index into the non-empty-cell table) of the cell holding an
+    /// indexed point. O(1) array read.
+    #[inline]
+    pub fn cell_rank_of(&self, point_id: u32) -> usize {
+        self.point_rank[point_id as usize] as usize
+    }
+
+    /// Linearised cell id of an indexed point. O(1).
+    #[inline]
+    pub fn cell_id_of_id(&self, point_id: u32) -> u64 {
+        self.cell_ids[self.cell_rank_of(point_id)]
+    }
+
+    /// Population of the cell holding an indexed point (≥ 1). O(1).
+    #[inline]
+    pub fn cell_population_of_id(&self, point_id: u32) -> usize {
+        self.rank_population(self.cell_rank_of(point_id))
+    }
+
+    /// Adjacent-block population of an indexed point's cell - the
+    /// Sec. V-B per-query work estimate. O(1) off the memoized table.
+    #[inline]
+    pub fn adjacent_population_of_id(&self, point_id: u32) -> usize {
+        self.adj_pop[self.cell_rank_of(point_id)] as usize
+    }
+
+    /// Walk the adjacent block of an indexed point's cell through the CSR
+    /// row: flat slice iteration, zero searches, zero allocation.
+    pub fn visit_adjacent_of_id(&self, point_id: u32, visit: impl FnMut(&[u32])) {
+        self.visit_adjacent_of_rank(self.cell_rank_of(point_id), visit);
+    }
+
+    /// Collect the candidates of an indexed point's adjacent block into
+    /// `out` (cleared, then reserved to the exact candidate count).
+    pub fn candidates_into_id(&self, point_id: u32, out: &mut Vec<u32>) {
+        self.candidates_into_rank(self.cell_rank_of(point_id), out);
+    }
+
+    // ---------------------------------------------------------------
+    // query-keyed entry points: one seam for consumers that process a
+    // query set which is EITHER the grid's own dataset (`native`, the
+    // self-join case - O(1) id-keyed) OR an arbitrary relation R against
+    // this S-grid (coordinate-keyed). Keeping the branch here means the
+    // grouping key and the candidate walk can never diverge per caller.
+    // ---------------------------------------------------------------
+
+    /// Cell id of query `q` (an id into `r_data`). `native` asserts that
+    /// the grid was built over `r_data` itself; debug builds verify that
+    /// claim against the coordinate recompute.
+    #[inline]
+    pub fn query_cell_id(&self, native: bool, r_data: &Dataset, q: u32) -> u64 {
+        if native {
+            let id = self.cell_id_of_id(q);
+            debug_assert_eq!(
+                id,
+                self.cell_id_of(r_data.point(q as usize)),
+                "native_ids misuse: query {q} does not index the grid's dataset"
+            );
+            id
+        } else {
+            self.cell_id_of(r_data.point(q as usize))
+        }
+    }
+
+    /// Candidate list of query `q` (an id into `r_data`) into `out` -
+    /// the query-keyed form of [`GridIndex::candidates_into`]; see
+    /// [`GridIndex::query_cell_id`] for the `native` contract.
+    pub fn query_candidates_into(
+        &self,
+        native: bool,
+        r_data: &Dataset,
+        q: u32,
+        out: &mut Vec<u32>,
+    ) {
+        if native {
+            debug_assert_eq!(
+                self.cell_id_of_id(q),
+                self.cell_id_of(r_data.point(q as usize)),
+                "native_ids misuse: query {q} does not index the grid's dataset"
+            );
+            self.candidates_into_id(q, out);
+        } else {
+            self.candidates_into(r_data.point(q as usize), out);
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // rank-keyed core (what both keyed forms resolve to)
+    // ---------------------------------------------------------------
+
+    /// Linearised cell id at a given rank.
+    #[inline]
+    pub fn rank_cell_id(&self, rank: usize) -> u64 {
+        self.cell_ids[rank]
+    }
+
+    /// Point ids of the cell at a given rank.
+    #[inline]
+    pub fn rank_points(&self, rank: usize) -> &[u32] {
+        let (s, e) = self.ranges[rank];
+        &self.point_ids[s as usize..e as usize]
+    }
+
+    /// Population of the cell at a given rank.
+    #[inline]
+    pub fn rank_population(&self, rank: usize) -> usize {
+        let (s, e) = self.ranges[rank];
+        (e - s) as usize
+    }
+
+    /// CSR row of a cell: the ranks of its non-empty 3^m neighbors
+    /// (itself included), ascending by cell id.
+    #[inline]
+    pub fn adjacent_ranks(&self, rank: usize) -> &[u32] {
+        &self.adj_ranks[self.adj_off[rank]..self.adj_off[rank + 1]]
+    }
+
+    /// Memoized adjacent-block population of the cell at a given rank.
+    #[inline]
+    pub fn adjacent_population_of_rank(&self, rank: usize) -> usize {
+        self.adj_pop[rank] as usize
+    }
+
+    /// Walk a cell's adjacent block through its CSR row, invoking `visit`
+    /// with each non-empty neighbor's point ids, ascending by cell id.
+    pub fn visit_adjacent_of_rank(&self, rank: usize, mut visit: impl FnMut(&[u32])) {
+        for &nr in self.adjacent_ranks(rank) {
+            let (s, e) = self.ranges[nr as usize];
+            visit(&self.point_ids[s as usize..e as usize]);
+        }
+    }
+
+    /// Collect a cell's adjacent-block candidates into `out`: cleared,
+    /// reserved to the exact (memoized) candidate count, then filled by
+    /// flat slice copies - one allocation at most, ever, per buffer.
+    pub fn candidates_into_rank(&self, rank: usize, out: &mut Vec<u32>) {
+        out.clear();
+        out.reserve(self.adj_pop[rank] as usize);
+        for &nr in self.adjacent_ranks(rank) {
+            let (s, e) = self.ranges[nr as usize];
+            out.extend_from_slice(&self.point_ids[s as usize..e as usize]);
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // inventory
+    // ---------------------------------------------------------------
 
     /// Number of non-empty cells.
     pub fn non_empty_cells(&self) -> usize {
@@ -143,77 +603,10 @@ impl GridIndex {
 
     /// Point ids in a given (linearised) cell.
     pub fn cell_points(&self, cell_id: u64) -> &[u32] {
-        match self.cell_ids.binary_search(&cell_id) {
-            Ok(pos) => {
-                let (s, e) = self.ranges[pos];
-                &self.point_ids[s as usize..e as usize]
-            }
-            Err(_) => &[],
+        match self.rank_of_cell_id(cell_id) {
+            Some(rank) => self.rank_points(rank),
+            None => &[],
         }
-    }
-
-    /// Linearised cell id of a point.
-    pub fn cell_id_of(&self, p: &[f32]) -> u64 {
-        Self::linearise_coords(&self.cell_of(p), &self.widths)
-    }
-
-    /// Walk the adjacent-cell block of `p` (3^m neighborhood clipped to the
-    /// grid), invoking `visit` with each non-empty cell's point ids. This
-    /// is steps (ii)-(iv) of the paper's range query: the linearised id of
-    /// each adjacent cell is binary-searched in B; non-empty hits yield
-    /// their A-ranges.
-    pub fn visit_adjacent(&self, p: &[f32], mut visit: impl FnMut(&[u32])) {
-        let base = self.cell_of(p);
-        // iterate the mixed-radix neighborhood {-1,0,1}^m
-        let m = self.m;
-        let mut offs = vec![-1i64; m];
-        'outer: loop {
-            // compute candidate cell coords, skip out-of-range
-            let mut coords = Vec::with_capacity(m);
-            let mut ok = true;
-            for j in 0..m {
-                let c = base[j] as i64 + offs[j];
-                if c < 0 || c >= self.widths[j] as i64 {
-                    ok = false;
-                    break;
-                }
-                coords.push(c as u64);
-            }
-            if ok {
-                let id = Self::linearise_coords(&coords, &self.widths);
-                if let Ok(pos) = self.cell_ids.binary_search(&id) {
-                    let (s, e) = self.ranges[pos];
-                    visit(&self.point_ids[s as usize..e as usize]);
-                }
-            }
-            // increment mixed-radix counter over {-1,0,1}
-            for j in (0..m).rev() {
-                if offs[j] < 1 {
-                    offs[j] += 1;
-                    continue 'outer;
-                }
-                offs[j] = -1;
-            }
-            break;
-        }
-    }
-
-    /// All candidate ids within the adjacent block of `p` (allocating
-    /// convenience wrapper over `visit_adjacent`).
-    pub fn candidates_of(&self, p: &[f32]) -> Vec<u32> {
-        let mut out = Vec::new();
-        self.visit_adjacent(p, |ids| out.extend_from_slice(ids));
-        out
-    }
-
-    /// Number of candidates the adjacent-block walk of `p` would scan -
-    /// the per-query work estimate of the Sec. V-B batch estimator,
-    /// computed without materialising the candidate list. This is what
-    /// the density-ordered work queue (`sched`) uses to price each cell.
-    pub fn adjacent_population(&self, p: &[f32]) -> usize {
-        let mut n = 0usize;
-        self.visit_adjacent(p, |ids| n += ids.len());
-        n
     }
 }
 
@@ -229,6 +622,22 @@ mod tests {
             .map(|_| rng.normal(0.0, scale) as f32)
             .collect();
         Dataset::new(data, dims)
+    }
+
+    /// The pre-refactor reference walk: recompute coordinates, enumerate
+    /// the {-1,0,1}^m block, binary-search each member cell. What the CSR
+    /// rows must be bit-equivalent to.
+    fn reference_candidates(g: &GridIndex, p: &[f32]) -> Vec<u32> {
+        let base: Vec<u64> = (0..g.m).map(|j| g.coord_of(p[j], j)).collect();
+        let mut offs = vec![0i64; g.m];
+        let mut out = Vec::new();
+        walk_block(&base, &g.widths, &mut offs, |id| {
+            if let Ok(nr) = g.cell_ids.binary_search(&id) {
+                let (s, e) = g.ranges[nr];
+                out.extend_from_slice(&g.point_ids[s as usize..e as usize]);
+            }
+        });
+        out
     }
 
     #[test]
@@ -303,6 +712,71 @@ mod tests {
     }
 
     #[test]
+    fn csr_walk_bit_equivalent_to_reference_walk() {
+        // The tentpole invariant: the precomputed CSR rows reproduce the
+        // recompute walk exactly - same candidate multiset, same order -
+        // for every point, across random data shapes, m and eps.
+        prop::cases(20, 0xC5A9, |rng| {
+            let n = 80 + rng.below(250);
+            let dims = 2 + rng.below(5);
+            let d = random_dataset(rng, n, dims, 2.0 + rng.f64() * 4.0);
+            let m = 1 + rng.below(d.dims());
+            let g = GridIndex::build(&d, m, 0.4 + rng.f64() * 2.5);
+            for i in 0..d.len() {
+                let want = reference_candidates(&g, d.point(i));
+                assert_eq!(
+                    g.candidates_of(d.point(i)),
+                    want,
+                    "coordinate-keyed walk, point {i}"
+                );
+                let mut got = Vec::new();
+                g.candidates_into_id(i as u32, &mut got);
+                assert_eq!(got, want, "id-keyed walk, point {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn id_keyed_lookups_match_coordinate_keyed_over_every_point() {
+        // O(1) array reads vs recompute: identical for every indexed point.
+        prop::cases(15, 0x01DA, |rng| {
+            let n = 100 + rng.below(300);
+            let dims = 2 + rng.below(5);
+            let d = random_dataset(rng, n, dims, 3.0);
+            let m = 1 + rng.below(d.dims());
+            let g = GridIndex::build(&d, m, 0.5 + rng.f64() * 2.0);
+            for i in 0..d.len() {
+                let p = d.point(i);
+                let rank = g.cell_rank_of_point(p).expect("own cell non-empty");
+                assert_eq!(g.cell_rank_of(i as u32), rank);
+                assert_eq!(g.cell_id_of_id(i as u32), g.cell_id_of(p));
+                assert_eq!(g.cell_population_of_id(i as u32), g.cell_population(p));
+                assert_eq!(
+                    g.adjacent_population_of_id(i as u32),
+                    g.adjacent_population(p)
+                );
+                assert!(g.rank_points(rank).contains(&(i as u32)));
+            }
+        });
+    }
+
+    #[test]
+    fn memoized_adjacent_population_matches_csr_rows() {
+        let d = chist_like(900).generate(17);
+        let g = GridIndex::build(&d, 6, 1.5);
+        for rank in 0..g.non_empty_cells() {
+            let from_rows: usize = g
+                .adjacent_ranks(rank)
+                .iter()
+                .map(|&nr| g.rank_population(nr as usize))
+                .sum();
+            assert_eq!(g.adjacent_population_of_rank(rank), from_rows);
+            // a cell is always its own neighbor
+            assert!(g.adjacent_ranks(rank).contains(&(rank as u32)));
+        }
+    }
+
+    #[test]
     fn adjacent_population_matches_candidate_list() {
         let d = susy_like(600).generate(12);
         let g = GridIndex::build(&d, 6, 2.0);
@@ -327,12 +801,100 @@ mod tests {
     }
 
     #[test]
+    fn out_of_range_points_get_superset_candidates_and_injective_ids() {
+        // The bipartite R side: query points outside the grid extent.
+        // Clamped coordinates must (a) never collide two distinct cells
+        // into one id - the wrapping_mul hazard - and (b) keep the walk a
+        // superset of the true in-eps neighbors in the indexed projection.
+        prop::cases(15, 0x0FFB, |rng| {
+            let s = random_dataset(rng, 150 + rng.below(150), 3, 2.0);
+            let m = 1 + rng.below(3);
+            let eps = 0.6 + rng.f64() * 1.5;
+            let g = GridIndex::build(&s, m, eps);
+            // R points on a much wilder extent, both sides of the S box
+            let r = random_dataset(rng, 60, 3, 25.0);
+            let mut by_id: std::collections::HashMap<u64, Vec<u32>> =
+                std::collections::HashMap::new();
+            for q in 0..r.len() {
+                let p = r.point(q);
+                by_id.entry(g.cell_id_of(p)).or_default().push(q as u32);
+                let cands: std::collections::HashSet<u32> =
+                    g.candidates_of(p).into_iter().collect();
+                for i in 0..s.len() {
+                    if sqdist_prefix(p, s.point(i), m) <= eps * eps {
+                        assert!(
+                            cands.contains(&(i as u32)),
+                            "R point {q}: S neighbor {i} missed"
+                        );
+                    }
+                }
+            }
+            // queries sharing a cell id must share the exact candidate
+            // list - the contract the join's cell grouping relies on
+            for qs in by_id.values() {
+                let first = g.candidates_of(r.point(qs[0] as usize));
+                for &q in &qs[1..] {
+                    assert_eq!(
+                        g.candidates_of(r.point(q as usize)),
+                        first,
+                        "cell-id collision broke candidate sharing"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn overflowing_extents_degrade_m_with_completeness_kept() {
+        // Adversarial extents: 4 dims x ~2^40 cells each would need a
+        // 2^160 id space. Build must degrade m (not wrap ids) and the
+        // degraded grid must still satisfy the superset invariant over
+        // its *own* (reduced) projection.
+        let mut rng = Rng::new(0xDE64);
+        let rows: Vec<Vec<f32>> = (0..120)
+            .map(|_| {
+                (0..4)
+                    .map(|_| (rng.f64() * 1.0e6) as f32)
+                    .collect::<Vec<f32>>()
+            })
+            .collect();
+        let d = Dataset::from_rows(&rows);
+        let eps = 1.0e-6; // ~1e12 cells per dim
+        let g = GridIndex::build(&d, 4, eps);
+        assert!(g.m < 4, "m must degrade, got m={}", g.m);
+        assert_eq!(g.m, 1, "only a single ~2^40 dim fits u64");
+        // index is still consistent over the degraded projection
+        let total: usize = g.cell_sizes().map(|(_, s)| s).sum();
+        assert_eq!(total, d.len());
+        for i in (0..d.len()).step_by(13) {
+            let cands: std::collections::HashSet<u32> =
+                g.candidates_of(d.point(i)).into_iter().collect();
+            for j in 0..d.len() {
+                if sqdist_prefix(d.point(i), d.point(j), g.m) <= eps * eps {
+                    assert!(cands.contains(&(j as u32)));
+                }
+            }
+        }
+
+        // benign extents must NOT degrade
+        let d2 = susy_like(200).generate(3);
+        let g2 = GridIndex::build(&d2, 6, 2.0);
+        assert_eq!(g2.m, 6);
+    }
+
+    #[test]
     fn space_linear_in_points() {
         let d = chist_like(2000).generate(4);
         let g = GridIndex::build(&d, 6, 1.0);
         assert!(g.non_empty_cells() <= d.len());
         let total: usize = g.cell_sizes().map(|(_, s)| s).sum();
         assert_eq!(total, d.len());
+        // CSR rows are clipped to non-empty cells: never wider than the
+        // full 3^m block or the cell inventory
+        let cap = 3usize.pow(g.m as u32).min(g.non_empty_cells());
+        for rank in 0..g.non_empty_cells() {
+            assert!(g.adjacent_ranks(rank).len() <= cap);
+        }
     }
 
     #[test]
@@ -341,9 +903,12 @@ mod tests {
         let g = GridIndex::build(&d1, 2, 1.0);
         assert_eq!(g.non_empty_cells(), 1);
         assert_eq!(g.candidates_of(d1.point(0)), vec![0]);
+        assert_eq!(g.cell_rank_of(0), 0);
+        assert_eq!(g.adjacent_population_of_id(0), 1);
 
         let d0 = Dataset::new(Vec::new(), 2);
         let g0 = GridIndex::build(&d0, 2, 1.0);
         assert_eq!(g0.non_empty_cells(), 0);
+        assert!(g0.candidates_of(&[0.5, 0.5]).is_empty());
     }
 }

@@ -29,6 +29,17 @@ pub use queue::{Arch, ClaimRecord, QueueCell, WorkQueue};
 /// `r_data`), with densities and candidate work taken from the S-side
 /// `grid`. γ seeds the dense prefix via n^thresh (Sec. V-D); ρ reserves
 /// the sparse tail for the CPU (Sec. V-F).
+///
+/// `native_ids` marks the self-join case where `queries` index the very
+/// dataset the grid was built over: grouping and pricing then run on the
+/// grid's O(1) point→cell-rank map (two array reads per query, no
+/// coordinate recompute, no searches). With `native_ids = false`
+/// (bipartite R against the S grid) each query pays one coordinate
+/// linearisation and each *cell* one binary search. Either way the
+/// pricing itself is O(1) per cell off the grid's memoized CSR
+/// adjacent-population table - the former per-cell 3^m recompute walk
+/// (O(3^m log|B|) with per-cell allocations) is gone, so queue
+/// construction costs O(|Q|) + O(cells), not O(|Q| x 3^m log|B|).
 pub fn build_queue(
     r_data: &Dataset,
     grid: &GridIndex,
@@ -36,18 +47,21 @@ pub fn build_queue(
     k: usize,
     gamma: f64,
     rho: f64,
+    native_ids: bool,
 ) -> WorkQueue {
     // group queries by their grid cell
     let mut by_cell: HashMap<u64, Vec<u32>> = HashMap::new();
     for &q in queries {
         by_cell
-            .entry(grid.cell_id_of(r_data.point(q as usize)))
+            .entry(grid.query_cell_id(native_ids, r_data, q))
             .or_default()
             .push(q);
     }
 
     // price each cell: population decides the order (densest first), the
-    // adjacent-block population is the per-query work estimate
+    // memoized adjacent-block population is the per-query work estimate.
+    // A rank-less cell (bipartite query in an empty S cell) has density 0
+    // and keeps the recompute-walk estimate as its work price.
     struct CellRec {
         pop: usize,
         cell: QueueCell,
@@ -55,12 +69,26 @@ pub fn build_queue(
     let mut cells: Vec<CellRec> = by_cell
         .into_iter()
         .map(|(id, qs)| {
-            let p0 = r_data.point(qs[0] as usize);
-            let pop = grid.cell_population(p0);
-            let per_q = grid.adjacent_population(p0).max(1) as u64;
+            // rank resolved once per cell: O(1) when the ids are native,
+            // one binary search otherwise
+            let rank = if native_ids {
+                Some(grid.cell_rank_of(qs[0]))
+            } else {
+                grid.rank_of_cell_id(id)
+            };
+            let (pop, per_q) = match rank {
+                Some(r) => (
+                    grid.rank_population(r),
+                    grid.adjacent_population_of_rank(r) as u64,
+                ),
+                None => {
+                    let p0 = r_data.point(qs[0] as usize);
+                    (0, grid.adjacent_population(p0) as u64)
+                }
+            };
             CellRec {
                 pop,
-                cell: QueueCell { cell_id: id, per_query_work: per_q, queries: qs },
+                cell: QueueCell { cell_id: id, per_query_work: per_q.max(1), queries: qs },
             }
         })
         .collect();
@@ -125,7 +153,7 @@ mod tests {
         let d = susy_like(2000).generate(7);
         let grid = GridIndex::build(&d, 6, 2.0);
         let queries: Vec<u32> = (0..d.len() as u32).collect();
-        let q = build_queue(&d, &grid, &queries, 5, 0.3, 0.0);
+        let q = build_queue(&d, &grid, &queries, 5, 0.3, 0.0, true);
         assert_eq!(q.len(), d.len());
         let mut all: Vec<u32> = q.query_slice(0..q.len()).to_vec();
         all.sort_unstable();
@@ -145,8 +173,8 @@ mod tests {
         let grid = GridIndex::build(&d, 6, 2.5);
         let queries: Vec<u32> = (0..d.len() as u32).collect();
         for gamma in [0.0, 0.4, 0.9] {
-            let q = build_queue(&d, &grid, &queries, 5, gamma, 0.0);
-            let s = split::split_work(&d, &grid, 5, gamma, 0.0);
+            let q = build_queue(&d, &grid, &queries, 5, gamma, 0.0, true);
+            let s = split::split_work(&d, &grid, 5, gamma, 0.0, true);
             assert_eq!(
                 q.dense_prefix(),
                 s.q_gpu.len(),
@@ -166,12 +194,34 @@ mod tests {
         let d = chist_like(900).generate(9);
         let grid = GridIndex::build(&d, 6, 1.5);
         let queries: Vec<u32> = (0..d.len() as u32).step_by(3).collect();
-        let q = build_queue(&d, &grid, &queries, 4, 0.2, 0.5);
+        let q = build_queue(&d, &grid, &queries, 4, 0.2, 0.5, true);
         assert_eq!(q.len(), queries.len());
         assert_eq!(q.reserve(), (queries.len() + 1) / 2);
         let mut all: Vec<u32> = q.query_slice(0..q.len()).to_vec();
         all.sort_unstable();
         assert_eq!(all, queries);
+    }
+
+    #[test]
+    fn native_and_coordinate_keyed_queues_are_identical() {
+        // self-join: the O(1) id-keyed grouping/pricing path must build
+        // exactly the queue the coordinate-keyed path builds
+        let d = chist_like(1200).generate(13);
+        let grid = GridIndex::build(&d, 6, 1.8);
+        let queries: Vec<u32> = (0..d.len() as u32).collect();
+        for (gamma, rho) in [(0.0, 0.0), (0.4, 0.2), (0.9, 0.5)] {
+            let a = build_queue(&d, &grid, &queries, 5, gamma, rho, true);
+            let b = build_queue(&d, &grid, &queries, 5, gamma, rho, false);
+            assert_eq!(a.len(), b.len());
+            assert_eq!(a.dense_prefix(), b.dense_prefix());
+            assert_eq!(a.reserve(), b.reserve());
+            assert_eq!(a.total_work(), b.total_work());
+            assert_eq!(
+                a.query_slice(0..a.len()),
+                b.query_slice(0..b.len()),
+                "queue order must not depend on the lookup path"
+            );
+        }
     }
 
     #[test]

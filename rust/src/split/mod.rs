@@ -46,19 +46,30 @@ pub struct WorkSplit {
 /// Assign every point to GPU iff its grid cell holds >= n^thresh points
 /// (Sec. V-D), then enforce the ρ floor |Q^CPU| >= ρ|D| by draining the
 /// *sparsest* GPU cells first (Sec. V-F).
+///
+/// `native_ids` marks the self-join case where the points of `d` are the
+/// points the grid indexes: the per-point density probe is then an O(1)
+/// read off the grid's point→cell-rank map. Bipartite callers (R queries
+/// against the S grid) pass `false` and pay one coordinate linearisation
+/// plus one binary search per point - still allocation-free.
 pub fn split_work(
     d: &Dataset,
     grid: &GridIndex,
     k: usize,
     gamma: f64,
     rho: f64,
+    native_ids: bool,
 ) -> WorkSplit {
     let thresh = n_thresh(k, grid.m, gamma);
     let mut q_gpu = Vec::new();
     let mut q_cpu = Vec::new();
     // cell population per point via the grid (already built for the join)
     for i in 0..d.len() {
-        let pop = grid.cell_population(d.point(i)) as f64;
+        let pop = if native_ids {
+            grid.cell_population_of_id(i as u32) as f64
+        } else {
+            grid.cell_population(d.point(i)) as f64
+        };
         if pop >= thresh {
             q_gpu.push(i as u32);
         } else {
@@ -76,7 +87,7 @@ pub fn split_work(
             std::collections::HashMap::new();
         for &q in &q_gpu {
             by_cell
-                .entry(grid.cell_id_of(d.point(q as usize)))
+                .entry(grid.query_cell_id(native_ids, d, q))
                 .or_default()
                 .push(q);
         }
@@ -152,7 +163,7 @@ mod tests {
     fn split_partitions_dataset() {
         let d = susy_like(2000).generate(1);
         let grid = GridIndex::build(&d, 6, 2.0);
-        let s = split_work(&d, &grid, 5, 0.0, 0.0);
+        let s = split_work(&d, &grid, 5, 0.0, 0.0, true);
         assert_eq!(s.q_gpu.len() + s.q_cpu.len(), d.len());
         let mut all: Vec<u32> = s.q_gpu.iter().chain(&s.q_cpu).cloned().collect();
         all.sort_unstable();
@@ -165,7 +176,7 @@ mod tests {
         let grid = GridIndex::build(&d, 6, 2.5);
         let mut last = usize::MAX;
         for gamma in [0.0, 0.4, 0.8, 1.0] {
-            let s = split_work(&d, &grid, 5, gamma, 0.0);
+            let s = split_work(&d, &grid, 5, gamma, 0.0, true);
             assert!(s.q_gpu.len() <= last, "gamma must shrink |Q_gpu|");
             last = s.q_gpu.len();
         }
@@ -175,7 +186,7 @@ mod tests {
     fn gpu_cells_denser_than_cpu_cells() {
         let d = susy_like(3000).generate(3);
         let grid = GridIndex::build(&d, 6, 2.5);
-        let s = split_work(&d, &grid, 5, 0.2, 0.0);
+        let s = split_work(&d, &grid, 5, 0.2, 0.0, true);
         if s.q_gpu.is_empty() || s.q_cpu.is_empty() {
             return; // degenerate split - nothing to compare
         }
@@ -199,7 +210,7 @@ mod tests {
             let d = susy_like(n).generate(rng.next_u64());
             let grid = GridIndex::build(&d, 6, 2.0 + rng.f64() * 2.0);
             let rho = rng.f64();
-            let s = split_work(&d, &grid, 5, 0.0, rho);
+            let s = split_work(&d, &grid, 5, 0.0, rho, true);
             let floor = (rho * d.len() as f64).ceil() as usize;
             // floor met unless the GPU side was exhausted entirely
             assert!(
@@ -226,9 +237,25 @@ mod tests {
     fn rho_one_forces_pure_cpu() {
         let d = susy_like(800).generate(5);
         let grid = GridIndex::build(&d, 6, 2.0);
-        let s = split_work(&d, &grid, 5, 0.0, 1.0);
+        let s = split_work(&d, &grid, 5, 0.0, 1.0, true);
         assert!(s.q_gpu.is_empty());
         assert_eq!(s.q_cpu.len(), d.len());
+    }
+
+    #[test]
+    fn native_and_coordinate_keyed_splits_agree() {
+        // self-join: the O(1) id-keyed density probe must reproduce the
+        // coordinate-keyed split exactly, ρ drain included
+        prop::cases(8, 0x5A11, |rng| {
+            let d = susy_like(800 + rng.below(1200)).generate(rng.next_u64());
+            let grid = GridIndex::build(&d, 6, 1.5 + rng.f64() * 2.0);
+            let (gamma, rho) = (rng.f64(), rng.f64() * 0.8);
+            let a = split_work(&d, &grid, 5, gamma, rho, true);
+            let b = split_work(&d, &grid, 5, gamma, rho, false);
+            assert_eq!(a.q_gpu, b.q_gpu);
+            assert_eq!(a.q_cpu, b.q_cpu);
+            assert_eq!(a.rho_moved, b.rho_moved);
+        });
     }
 
     #[test]

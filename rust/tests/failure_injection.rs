@@ -135,7 +135,7 @@ fn deferred_recirculation_never_loses_or_duplicates_queries() {
         let queries: Vec<u32> = (0..d.len() as u32).collect();
         let gamma = rng.f64();
         let rho = rng.f64() * 0.4;
-        let queue = build_queue(&d, &grid, &queries, 4, gamma, rho);
+        let queue = build_queue(&d, &grid, &queries, 4, gamma, rho, true);
         let ranks = 1 + rng.below(3);
         let chunk = 8 + rng.below(24);
         let fail_mod = 2 + rng.below(5); // fail every fail_mod-th query

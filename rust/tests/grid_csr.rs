@@ -1,0 +1,221 @@
+//! CSR grid-engine equivalence suite: the precomputed cell-adjacency
+//! walk (and every O(1) id-keyed lookup) must be *bit-equivalent* to an
+//! independent recompute-walk reference - same candidate multiset, same
+//! order - across uniform, skewed-Gaussian and bipartite workloads and
+//! random `m`/`eps`.
+//!
+//! The reference (`RefGrid`) deliberately shares no code with
+//! `index::grid`: cells are keyed by raw coordinate vectors in a
+//! `BTreeMap` (no linearisation at all, so it cannot inherit an id
+//! collision), and the 3^m block is enumerated lexicographically - the
+//! ascending-cell-id order the grid's walk contract promises.
+
+use std::collections::BTreeMap;
+
+use hybrid_knn_join::core::sqdist_prefix;
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::util::{prop, rng::Rng};
+
+/// Independent reference grid: coordinate-vector keyed, recompute walk.
+struct RefGrid {
+    eps: f64,
+    m: usize,
+    mins: Vec<f64>,
+    widths: Vec<u64>,
+    /// coord vector -> point ids, ascending (BTreeMap keys iterate in
+    /// lexicographic = ascending-linear-id order)
+    cells: BTreeMap<Vec<u64>, Vec<u32>>,
+}
+
+impl RefGrid {
+    fn build(d: &Dataset, m: usize, eps: f64) -> RefGrid {
+        let m = m.clamp(1, d.dims());
+        let mut mins = vec![f64::INFINITY; m];
+        let mut maxs = vec![f64::NEG_INFINITY; m];
+        for i in 0..d.len() {
+            let p = d.point(i);
+            for j in 0..m {
+                mins[j] = mins[j].min(p[j] as f64);
+                maxs[j] = maxs[j].max(p[j] as f64);
+            }
+        }
+        if d.is_empty() {
+            mins.iter_mut().for_each(|x| *x = 0.0);
+            maxs.iter_mut().for_each(|x| *x = 0.0);
+        }
+        let widths: Vec<u64> = (0..m)
+            .map(|j| (((maxs[j] - mins[j]) / eps).floor() as u64 + 1).max(1))
+            .collect();
+        let mut g = RefGrid { eps, m, mins, widths, cells: BTreeMap::new() };
+        for i in 0..d.len() {
+            let c = g.coords_of(d.point(i));
+            g.cells.entry(c).or_default().push(i as u32);
+        }
+        g
+    }
+
+    /// Clamped cell coordinates (same clamp semantics the engine uses for
+    /// arbitrary - e.g. bipartite R - points).
+    fn coords_of(&self, p: &[f32]) -> Vec<u64> {
+        (0..self.m)
+            .map(|j| {
+                let c = ((p[j] as f64 - self.mins[j]) / self.eps).floor();
+                if c > 0.0 {
+                    (c as u64).min(self.widths[j] - 1)
+                } else {
+                    0
+                }
+            })
+            .collect()
+    }
+
+    fn cell_population(&self, p: &[f32]) -> usize {
+        self.cells.get(&self.coords_of(p)).map_or(0, |v| v.len())
+    }
+
+    /// Recompute walk: enumerate the clipped {-1,0,1}^m block in
+    /// lexicographic (ascending cell id) order.
+    fn candidates(&self, p: &[f32]) -> Vec<u32> {
+        let base = self.coords_of(p);
+        let mut out = Vec::new();
+        let mut offs = vec![-1i64; self.m];
+        let mut key = vec![0u64; self.m];
+        'outer: loop {
+            let mut ok = true;
+            for j in 0..self.m {
+                let c = base[j] as i64 + offs[j];
+                if c < 0 || (c as u64) >= self.widths[j] {
+                    ok = false;
+                    break;
+                }
+                key[j] = c as u64;
+            }
+            if ok {
+                if let Some(ids) = self.cells.get(&key) {
+                    out.extend_from_slice(ids);
+                }
+            }
+            for j in (0..self.m).rev() {
+                if offs[j] < 1 {
+                    offs[j] += 1;
+                    continue 'outer;
+                }
+                offs[j] = -1;
+            }
+            break;
+        }
+        out
+    }
+}
+
+fn random_gauss(rng: &mut Rng, n: usize, dims: usize, scale: f64) -> Dataset {
+    let data: Vec<f32> = (0..n * dims)
+        .map(|_| rng.normal(0.0, scale) as f32)
+        .collect();
+    Dataset::new(data, dims)
+}
+
+/// Every id-keyed and coordinate-keyed access of a grid-native point
+/// must match the reference bit for bit.
+fn check_native(d: &Dataset, g: &GridIndex, r: &RefGrid) {
+    let mut buf: Vec<u32> = Vec::new();
+    for i in 0..d.len() {
+        let p = d.point(i);
+        let want = r.candidates(p);
+        assert_eq!(
+            g.candidates_of(p),
+            want,
+            "coordinate-keyed candidates, point {i}"
+        );
+        g.candidates_into_id(i as u32, &mut buf);
+        assert_eq!(buf, want, "id-keyed candidates, point {i}");
+        let mut visited: Vec<u32> = Vec::new();
+        g.visit_adjacent_of_id(i as u32, |ids| visited.extend_from_slice(ids));
+        assert_eq!(visited, want, "visit_adjacent_of_id order, point {i}");
+        assert_eq!(
+            g.adjacent_population_of_id(i as u32),
+            want.len(),
+            "memoized adjacent population, point {i}"
+        );
+        assert_eq!(
+            g.cell_population_of_id(i as u32),
+            r.cell_population(p),
+            "O(1) cell population, point {i}"
+        );
+        // the O(1) rank map agrees with the coordinate recompute
+        assert_eq!(g.cell_rank_of(i as u32), g.cell_rank_of_point(p).unwrap());
+        assert_eq!(g.cell_id_of_id(i as u32), g.cell_id_of(p));
+    }
+}
+
+#[test]
+fn csr_matches_reference_on_uniform_data() {
+    prop::cases(10, 0x6C51, |rng| {
+        let d = susy_like(200 + rng.below(400)).generate(rng.next_u64());
+        let m = 1 + rng.below(6);
+        let eps = 1.0 + rng.f64() * 3.0;
+        let g = GridIndex::build(&d, m, eps);
+        assert_eq!(g.m, m, "benign extents must not degrade m");
+        check_native(&d, &g, &RefGrid::build(&d, m, eps));
+    });
+}
+
+#[test]
+fn csr_matches_reference_on_skewed_gaussian() {
+    prop::cases(8, 0x6C52, |rng| {
+        let d = chist_like(150 + rng.below(350)).generate(rng.next_u64());
+        let m = 1 + rng.below(6);
+        let eps = 0.4 + rng.f64() * 1.6;
+        let g = GridIndex::build(&d, m, eps);
+        check_native(&d, &g, &RefGrid::build(&d, m, eps));
+    });
+}
+
+#[test]
+fn csr_matches_reference_on_random_clusters() {
+    prop::cases(10, 0x6C53, |rng| {
+        let dims = 2 + rng.below(5);
+        let d = random_gauss(rng, 150 + rng.below(250), dims, 3.0);
+        let m = 1 + rng.below(dims);
+        let eps = 0.5 + rng.f64() * 2.0;
+        let g = GridIndex::build(&d, m, eps);
+        check_native(&d, &g, &RefGrid::build(&d, m, eps));
+    });
+}
+
+#[test]
+fn csr_matches_reference_on_bipartite_queries() {
+    // R queries against an S grid: coordinate-keyed walks over points the
+    // grid does not index, including points far outside the S extent
+    // (empty clamped cells take the fallback recompute walk).
+    prop::cases(10, 0x6C54, |rng| {
+        let dims = 2 + rng.below(4);
+        let s = random_gauss(rng, 150 + rng.below(300), dims, 2.0);
+        let m = 1 + rng.below(dims);
+        let eps = 0.5 + rng.f64() * 1.5;
+        let g = GridIndex::build(&s, m, eps);
+        let r_ref = RefGrid::build(&s, m, eps);
+        // wilder extent than S on purpose
+        let r = random_gauss(rng, 80, dims, 2.0 + rng.f64() * 20.0);
+        let mut buf: Vec<u32> = Vec::new();
+        for q in 0..r.len() {
+            let p = r.point(q);
+            let want = r_ref.candidates(p);
+            assert_eq!(g.candidates_of(p), want, "R query {q}");
+            g.candidates_into(p, &mut buf);
+            assert_eq!(buf, want, "R query {q} (scratch form)");
+            assert_eq!(g.adjacent_population(p), want.len(), "R query {q}");
+            assert_eq!(g.cell_population(p), r_ref.cell_population(p));
+            // completeness: the walk is a superset of the true in-eps
+            // neighborhood in the indexed projection
+            for i in 0..s.len() {
+                if sqdist_prefix(p, s.point(i), m) <= eps * eps {
+                    assert!(
+                        want.contains(&(i as u32)),
+                        "R query {q}: S neighbor {i} missed"
+                    );
+                }
+            }
+        }
+    });
+}

@@ -40,7 +40,10 @@ fn drain(
 ) -> (KnnResult, Vec<u32>, usize) {
     let grid = GridIndex::build(data, 6, eps);
     let queries: Vec<u32> = (0..r_data.len() as u32).collect();
-    let queue = build_queue(r_data, &grid, &queries, k, 0.0, 0.0);
+    // id-keyed grouping only when the queries index the grid's dataset
+    let queue = build_queue(
+        r_data, &grid, &queries, k, 0.0, 0.0, std::ptr::eq(r_data, data),
+    );
     let mut params = GpuJoinParams::new(k, eps);
     params.streams = streams;
     params.buffer_pairs = buffer_pairs;
@@ -156,7 +159,7 @@ fn pipelined_drain_overlap_telemetry_is_consistent() {
     let grid = GridIndex::build(&data, 6, 2.0);
     let queries: Vec<u32> = (0..data.len() as u32).collect();
     for mode in [DrainMode::TwoStage, DrainMode::ThreeStage] {
-        let queue = build_queue(&data, &grid, &queries, 5, 0.0, 0.0);
+        let queue = build_queue(&data, &grid, &queries, 5, 0.0, 0.0, true);
         let mut params = GpuJoinParams::new(5, 2.0);
         params.buffer_pairs = 3_000; // many claims
         params.drain = mode;

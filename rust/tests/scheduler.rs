@@ -237,10 +237,11 @@ fn simulate_static(
     cpu_speed: f64,
     ranks: usize,
 ) -> Sim {
-    let s = split_work(d, grid, k, gamma, rho);
+    let s = split_work(d, grid, k, gamma, rho, true);
     let work_of = |qs: &[u32]| -> u64 {
+        // self-join accounting: O(1) memoized adjacent population per id
         qs.iter()
-            .map(|&q| grid.adjacent_population(d.point(q as usize)).max(1) as u64)
+            .map(|&q| grid.adjacent_population_of_id(q).max(1) as u64)
             .sum()
     };
     let (wg, wc) = (work_of(&s.q_gpu), work_of(&s.q_cpu));
@@ -280,7 +281,7 @@ fn dynamic_queue_shrinks_idle_tail_on_skewed_chist() {
     let mut dyn_at_worst = 0.0f64;
     for gamma in [0.0, 0.25, 0.5, 0.75, 1.0] {
         let stat = simulate_static(&d, &grid, k, gamma, 0.0, gpu_speed, cpu_speed, ranks);
-        let queue = build_queue(&d, &grid, &queries, k, gamma, 0.0);
+        let queue = build_queue(&d, &grid, &queries, k, gamma, 0.0, true);
         let dy = simulate_dynamic(&queue, gpu_speed, cpu_speed, ranks, chunk);
         // every query is computed exactly once under either schedule
         assert_eq!(dy.gpu_queries + dy.cpu_queries, d.len(), "γ={gamma}");
@@ -320,7 +321,7 @@ fn dynamic_queue_no_worse_on_uniform_susy() {
     let queries: Vec<u32> = (0..d.len() as u32).collect();
     for gamma in [0.0, 0.5] {
         let stat = simulate_static(&d, &grid, 5, gamma, 0.0, 2000.0, 1000.0, 2);
-        let queue = build_queue(&d, &grid, &queries, 5, gamma, 0.0);
+        let queue = build_queue(&d, &grid, &queries, 5, gamma, 0.0, true);
         let dy = simulate_dynamic(&queue, 2000.0, 1000.0, 2, 16);
         assert!(
             dy.idle_frac <= stat.idle_frac + 0.15,
@@ -347,11 +348,11 @@ fn pipelined_gpu_overlap_does_not_starve_cpu_tail() {
     let (gpu_speed, cpu_speed, filter_frac) = (3000.0, 1000.0, 0.8);
 
     for (gamma, rho) in [(0.0, 0.2), (0.5, 0.2)] {
-        let q_sync = build_queue(&d, &grid, &queries, k, gamma, rho);
+        let q_sync = build_queue(&d, &grid, &queries, k, gamma, rho, true);
         let sync = simulate_overlap(
             &q_sync, gpu_speed, 0.0, filter_frac, cpu_speed, ranks, chunk, 1,
         );
-        let q_pipe = build_queue(&d, &grid, &queries, k, gamma, rho);
+        let q_pipe = build_queue(&d, &grid, &queries, k, gamma, rho, true);
         let pipe = simulate_overlap(
             &q_pipe, gpu_speed, 0.0, filter_frac, cpu_speed, ranks, chunk, 2,
         );
@@ -389,9 +390,9 @@ fn pipelined_gpu_overlap_does_not_starve_cpu_tail() {
 
     // GPU-heavy regime (one slow CPU rank): the join is GPU-bound, so
     // hiding the filter stage must shorten the makespan materially
-    let q_sync = build_queue(&d, &grid, &queries, k, 0.0, 0.0);
+    let q_sync = build_queue(&d, &grid, &queries, k, 0.0, 0.0, true);
     let sync = simulate_overlap(&q_sync, 3000.0, 0.0, 0.9, 100.0, 1, 32, 1);
-    let q_pipe = build_queue(&d, &grid, &queries, k, 0.0, 0.0);
+    let q_pipe = build_queue(&d, &grid, &queries, k, 0.0, 0.0, true);
     let pipe = simulate_overlap(&q_pipe, 3000.0, 0.0, 0.9, 100.0, 1, 32, 2);
     assert!(
         pipe.makespan < sync.makespan * 0.8,
@@ -421,7 +422,7 @@ fn three_stage_hides_transfer_in_gpu_bound_regime() {
     let (transfer_frac, filter_frac) = (0.6, 0.3);
 
     let run = |depth: usize| {
-        let q = build_queue(&d, &grid, &queries, k, 0.0, 0.0);
+        let q = build_queue(&d, &grid, &queries, k, 0.0, 0.0, true);
         simulate_overlap(
             &q, gpu_speed, transfer_frac, filter_frac, cpu_speed, ranks, chunk,
             depth,
@@ -472,7 +473,7 @@ fn concurrent_drain_with_recirc_partitions_queries() {
         let queries: Vec<u32> = (0..d.len() as u32).collect();
         let gamma = rng.f64();
         let rho = rng.f64() * 0.5;
-        let queue = build_queue(&d, &grid, &queries, 4, gamma, rho);
+        let queue = build_queue(&d, &grid, &queries, 4, gamma, rho, true);
         let ranks = 1 + rng.below(3);
         let chunk = 8 + rng.below(32);
         let solved: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
@@ -557,7 +558,7 @@ fn gamma_and_rho_seed_the_queue_monotonically() {
     let queries: Vec<u32> = (0..d.len() as u32).collect();
     let mut last = usize::MAX;
     for gamma in [0.0, 0.3, 0.6, 1.0] {
-        let q = build_queue(&d, &grid, &queries, 5, gamma, 0.25);
+        let q = build_queue(&d, &grid, &queries, 5, gamma, 0.25, true);
         assert!(q.dense_prefix() <= last, "γ must shrink the dense prefix");
         last = q.dense_prefix();
         assert_eq!(q.reserve(), (0.25f64 * d.len() as f64).ceil() as usize);
