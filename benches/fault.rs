@@ -1,0 +1,178 @@
+//! Fault-tolerance overhead bench: what the always-on injection hooks and
+//! the claim-scoped recovery machinery cost when nothing fails, and what
+//! recovery itself costs when something does.
+//!
+//! Three scenarios per drain mode, all through the full hybrid join:
+//!
+//! * `nofault_secs` - `FaultPlan::none()`: the production hot path, hooks
+//!   compiled in and reduced to an is-empty branch per flush round;
+//! * `transient_secs` - one injected exec fault on (claim 0, round 0),
+//!   recovered by a synchronous in-place retry (backoff zeroed);
+//! * `degraded_secs` - a persistent exec fault from claim 0: the master
+//!   reclaims, demotes itself, and the CPU ranks finish the run;
+//! * `cpu_only_secs` - ρ = 1.0: the planned pure-CPU schedule the
+//!   degraded run is measured against.
+//!
+//! The tracked columns are same-run ratios (machine-portable, like the
+//! scheduler bench): `retry_recovery_ratio = nofault / transient` gates
+//! the cost of one recovery cycle, `degrade_recovery_ratio = cpu_only /
+//! degraded` gates graceful degradation against the planned CPU-only
+//! run. Emits `BENCH_fault.json`, regression-gated against
+//! `benches/baselines/BENCH_fault.json` in CI.
+//!
+//!   cargo bench --bench fault
+//!   HKNN_RANKS=8 cargo bench --bench fault
+
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::util::json::Json;
+
+fn base_params(k: usize, ranks: usize, drain: DrainMode) -> HybridParams {
+    let mut p = HybridParams::new(k);
+    p.cpu_ranks = ranks;
+    p.gamma = 0.1;
+    p.gpu_drain = drain;
+    p
+}
+
+fn main() {
+    let ranks: usize = std::env::var("HKNN_RANKS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let engine = Engine::load_default().expect("run `make artifacts` first");
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    // warm the executable cache so no scenario pays compilation
+    {
+        let warm = susy_like(400).generate(1);
+        let mut p = HybridParams::new(3);
+        p.cpu_ranks = ranks;
+        let _ = HybridKnnJoin::run(&engine, &warm, &p).expect("warmup");
+    }
+
+    let data = susy_like(2500).generate(0xFA);
+    let k = 6;
+    let drains = [
+        ("sync", DrainMode::Sync),
+        ("two_stage", DrainMode::TwoStage),
+        ("three_stage", DrainMode::ThreeStage),
+    ];
+
+    let mut rows = Vec::new();
+    println!(
+        "fault-tolerance overhead: no-fault hot path vs transient retry vs \
+         persistent-fault degradation (ranks={ranks}, hw={hw})"
+    );
+    println!(
+        "{:>14} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "drain", "nofault", "transient", "degraded", "cpu-only", "retry r",
+        "degr r"
+    );
+    for (name, drain) in drains {
+        // production hot path: empty plan, machinery armed but silent
+        let p0 = base_params(k, ranks, drain);
+        let nofault = HybridKnnJoin::run(&engine, &data, &p0).expect(name);
+        assert_eq!(nofault.gpu_faults, 0, "{name}: empty plan must be silent");
+        assert!(!nofault.degraded, "{name}");
+
+        // one transient exec fault, retried in place
+        let mut p1 = base_params(k, ranks, drain);
+        p1.fault =
+            FaultPlan::one(FaultSpec::transient(FaultKind::ExecError, 0, 0));
+        p1.recovery.backoff_base_secs = 0.0;
+        let transient = HybridKnnJoin::run(&engine, &data, &p1).expect(name);
+        assert!(!transient.degraded, "{name}: one transient must not demote");
+
+        // dead device from claim 0: reclaim, demote, finish CPU-only
+        let mut p2 = base_params(k, ranks, drain);
+        p2.fault =
+            FaultPlan::one(FaultSpec::persistent(FaultKind::ExecError, 0));
+        p2.recovery.retry_limit = 0;
+        p2.recovery.demote_after = 1;
+        p2.recovery.backoff_base_secs = 0.0;
+        let degraded = HybridKnnJoin::run(&engine, &data, &p2).expect(name);
+        assert!(degraded.degraded, "{name}: persistent fault must demote");
+        assert_eq!(degraded.solved_on_gpu, 0, "{name}");
+
+        // the planned pure-CPU schedule the degraded run chases
+        let mut p3 = base_params(k, ranks, drain);
+        p3.rho = 1.0;
+        let cpu_only = HybridKnnJoin::run(&engine, &data, &p3).expect(name);
+
+        // a fault plan can move work, never drop it
+        for (rep, tag) in [
+            (&nofault, "nofault"),
+            (&transient, "transient"),
+            (&degraded, "degraded"),
+            (&cpu_only, "cpu-only"),
+        ] {
+            assert_eq!(
+                rep.result.solved_count(k),
+                data.len(),
+                "{name} [{tag}]"
+            );
+        }
+
+        let retry_ratio =
+            nofault.response_time / transient.response_time.max(1e-12);
+        let degrade_ratio =
+            cpu_only.response_time / degraded.response_time.max(1e-12);
+        println!(
+            "{:>14} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>8.2}x {:>8.2}x",
+            name,
+            nofault.response_time,
+            transient.response_time,
+            degraded.response_time,
+            cpu_only.response_time,
+            retry_ratio,
+            degrade_ratio
+        );
+        rows.push(Json::obj(vec![
+            ("case", Json::Str(name.into())),
+            ("n", Json::Num(data.len() as f64)),
+            ("k", Json::Num(k as f64)),
+            ("nofault_secs", Json::Num(nofault.response_time)),
+            ("transient_secs", Json::Num(transient.response_time)),
+            ("degraded_secs", Json::Num(degraded.response_time)),
+            ("cpu_only_secs", Json::Num(cpu_only.response_time)),
+            ("retry_recovery_ratio", Json::Num(retry_ratio)),
+            ("degrade_recovery_ratio", Json::Num(degrade_ratio)),
+            ("transient_retries", Json::Num(transient.gpu_retries as f64)),
+            (
+                "degraded_reclaimed_cells",
+                Json::Num(degraded.reclaimed_cells as f64),
+            ),
+            ("degraded_q_fail", Json::Num(degraded.q_fail as f64)),
+            (
+                "degraded_fault_events",
+                Json::Num(degraded.fault_log.events.len() as f64),
+            ),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("fault".into())),
+        (
+            "baseline",
+            Json::Str("fault-free hybrid join (hooks armed, plan empty)".into()),
+        ),
+        (
+            "contender",
+            Json::Str(
+                "same join under injected exec faults: transient = one \
+                 in-place synchronous retry; degraded = persistent fault, \
+                 claim reclaimed through Q^Fail and the master demoted \
+                 (run completes CPU-only)"
+                    .into(),
+            ),
+        ),
+        ("ranks", Json::Num(ranks as f64)),
+        ("hw_threads", Json::Num(hw as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_fault.json", doc.to_string() + "\n")
+        .expect("write BENCH_fault.json");
+    println!("wrote BENCH_fault.json");
+}

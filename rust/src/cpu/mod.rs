@@ -241,6 +241,7 @@ pub fn exact_ann_drain(
                         transfer_secs: 0.0,
                         filter_secs: 0.0,
                         from_recirc: false,
+                        failed: false,
                     });
                     tail_q += qs.len();
                     continue;
@@ -265,6 +266,7 @@ pub fn exact_ann_drain(
                         transfer_secs: 0.0,
                         filter_secs: 0.0,
                         from_recirc: true,
+                        failed: false,
                     });
                     rec_q += ids.len();
                     continue;

@@ -1,0 +1,503 @@
+//! Deterministic fault injection and the GPU master's recovery policy.
+//!
+//! The hybrid drain treats a device fault as costing *one claim*, not the
+//! run: the shared queue's Q^Fail recirculation buffer is already the
+//! natural substrate for handing a failed claim's queries back to the CPU
+//! ranks (or to a retried GPU claim) with the exactly-once contract
+//! intact. This module holds the pieces that make that testable and
+//! tunable:
+//!
+//! * [`FaultPlan`] - a seeded, deterministic schedule of injected faults
+//!   (exec error, transfer error, stall, filter panic), threaded as
+//!   always-on hooks into the GPU drain's three stages. The hooks are
+//!   branch-on-empty no-ops under [`FaultPlan::none()`], so production
+//!   runs pay one `is_empty` check per round - there is no `cfg(test)`
+//!   fork between the tested and the shipped drain.
+//! * [`RecoveryPolicy`] - bounded exponential backoff for transient
+//!   faults, a consecutive-failure demotion threshold, and the watchdog
+//!   slack applied to the live ρ^Model rate (see
+//!   [`crate::sched::claim_deadline_secs`]).
+//! * [`FaultLog`] / [`FaultEvent`] - the per-event telemetry surfaced
+//!   through `GpuJoinStats` and `HybridReport`.
+//! * [`InjectedFault`] / [`WatchdogTimeout`] - typed, downcastable error
+//!   values so tests can distinguish an injected fault from a real one.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::util::rng::Rng;
+
+/// The failure mode a [`FaultSpec`] injects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The exec stage returns an error mid-claim (device kernel fault).
+    ExecError,
+    /// The device-to-host transfer stage fails for one round.
+    TransferError,
+    /// The exec stage hangs for `stall_secs`; detected by the per-claim
+    /// watchdog deadline, not by the injection itself (the hook sleeps
+    /// and then *succeeds* - only the deadline turns it into a fault).
+    StallTimeout,
+    /// A filter-stage worker panics while folding a round's tiles.
+    FilterPanic,
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            FaultKind::ExecError => "exec-error",
+            FaultKind::TransferError => "transfer-error",
+            FaultKind::StallTimeout => "stall-timeout",
+            FaultKind::FilterPanic => "filter-panic",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One scheduled fault. Transient specs fire exactly once, at the first
+/// attempt that reaches (`claim`, `round`); persistent specs fire on
+/// *every* attempt of every claim `>= claim` (broken-device semantics:
+/// retries of the faulted claim and all later claims fail too, which is
+/// what drives the master through its demotion path).
+#[derive(Debug)]
+pub struct FaultSpec {
+    /// failure mode to inject
+    pub kind: FaultKind,
+    /// claim index (in claim order off the queue head) that triggers it
+    pub claim: usize,
+    /// flush-round index within the claim that triggers it
+    pub round: usize,
+    /// false: fire once and disarm; true: fire on every claim `>= claim`
+    pub persistent: bool,
+    /// [`FaultKind::StallTimeout`] only: seconds the exec hook sleeps
+    pub stall_secs: f64,
+    fired: AtomicBool,
+}
+
+impl FaultSpec {
+    /// A transient fault: fires once at exactly (`claim`, `round`).
+    pub fn transient(kind: FaultKind, claim: usize, round: usize) -> Self {
+        FaultSpec {
+            kind,
+            claim,
+            round,
+            persistent: false,
+            stall_secs: 0.0,
+            fired: AtomicBool::new(false),
+        }
+    }
+
+    /// A persistent fault: fires on every attempt of every claim
+    /// `>= claim` (the device is broken from that point on).
+    pub fn persistent(kind: FaultKind, claim: usize) -> Self {
+        FaultSpec {
+            kind,
+            claim,
+            round: 0,
+            persistent: true,
+            stall_secs: 0.0,
+            fired: AtomicBool::new(false),
+        }
+    }
+
+    /// Whether this spec triggers for the given (claim, round) attempt.
+    /// Transient specs disarm themselves on their first match (atomic
+    /// swap - at most one trigger even when stages race).
+    fn triggers(&self, claim: usize, round: usize) -> bool {
+        if self.persistent {
+            return claim >= self.claim;
+        }
+        claim == self.claim
+            && round == self.round
+            && !self.fired.swap(true, Ordering::Relaxed)
+    }
+}
+
+impl Clone for FaultSpec {
+    fn clone(&self) -> Self {
+        FaultSpec {
+            kind: self.kind,
+            claim: self.claim,
+            round: self.round,
+            persistent: self.persistent,
+            stall_secs: self.stall_secs,
+            fired: AtomicBool::new(self.fired.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// A deterministic schedule of injected faults, shared by the drain's
+/// exec, transfer and filter stages. Empty (the default) in production.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// the scheduled faults; checked in order, first trigger wins
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// The production plan: no faults, hooks reduce to an `is_empty`
+    /// branch.
+    pub fn none() -> Self {
+        FaultPlan { specs: Vec::new() }
+    }
+
+    /// Plan with a single spec.
+    pub fn one(spec: FaultSpec) -> Self {
+        FaultPlan { specs: vec![spec] }
+    }
+
+    /// True when no spec can ever fire.
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// A seeded random plan for property tests: 1-3 *transient* faults
+    /// over the first few claims/rounds, mixing all four kinds. Stalls
+    /// sleep a few milliseconds - long enough to trip a test-tuned
+    /// watchdog, short enough for the default (5 s floor) to ignore.
+    pub fn random(rng: &mut Rng) -> Self {
+        let kinds = [
+            FaultKind::ExecError,
+            FaultKind::TransferError,
+            FaultKind::StallTimeout,
+            FaultKind::FilterPanic,
+        ];
+        let n = 1 + rng.below(3);
+        let specs = (0..n)
+            .map(|_| {
+                let kind = kinds[rng.below(4)];
+                let mut s = FaultSpec::transient(kind, rng.below(3), rng.below(2));
+                if kind == FaultKind::StallTimeout {
+                    s.stall_secs = 0.001 + rng.f64() * 0.003;
+                }
+                s
+            })
+            .collect();
+        FaultPlan { specs }
+    }
+
+    /// Exec-stage hook, called once per flush round on the master
+    /// thread. Sleeps through any matching stall spec (the watchdog, not
+    /// the hook, decides whether that was a fault), then errors on any
+    /// matching exec spec.
+    pub fn exec_round(&self, claim: usize, round: usize) -> anyhow::Result<()> {
+        if self.specs.is_empty() {
+            return Ok(());
+        }
+        for s in &self.specs {
+            if s.kind == FaultKind::StallTimeout && s.triggers(claim, round) {
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    s.stall_secs.max(0.0),
+                ));
+            }
+        }
+        for s in &self.specs {
+            if s.kind == FaultKind::ExecError && s.triggers(claim, round) {
+                return Err(InjectedFault::new(s.kind, claim, round).into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Transfer-stage hook, called once per round on the transfer worker
+    /// (three-stage drain) or the master (sync/two-stage).
+    pub fn transfer_fault(&self, claim: usize, round: usize) -> Option<anyhow::Error> {
+        if self.specs.is_empty() {
+            return None;
+        }
+        for s in &self.specs {
+            if s.kind == FaultKind::TransferError && s.triggers(claim, round) {
+                return Some(InjectedFault::new(s.kind, claim, round).into());
+            }
+        }
+        None
+    }
+
+    /// Filter-stage hook, called once per round on a filter worker; a
+    /// `true` return makes the worker panic (which the recoverable pool
+    /// catches and surfaces as that lane's claim failure).
+    pub fn filter_panic(&self, claim: usize, round: usize) -> bool {
+        if self.specs.is_empty() {
+            return false;
+        }
+        self.specs
+            .iter()
+            .any(|s| s.kind == FaultKind::FilterPanic && s.triggers(claim, round))
+    }
+}
+
+/// The typed error an injected exec/transfer fault surfaces as, so tests
+/// can `downcast_ref` it out of the `anyhow` chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedFault {
+    /// failure mode that was injected
+    pub kind: FaultKind,
+    /// claim index the fault fired on
+    pub claim: usize,
+    /// flush round the fault fired on
+    pub round: usize,
+}
+
+impl InjectedFault {
+    fn new(kind: FaultKind, claim: usize, round: usize) -> Self {
+        InjectedFault { kind, claim, round }
+    }
+}
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "injected {} fault (claim {}, round {})",
+            self.kind, self.claim, self.round
+        )
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// The typed error a tripped per-claim watchdog deadline surfaces as.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WatchdogTimeout {
+    /// claim index that overran its deadline
+    pub claim: usize,
+    /// seconds the claim had been running when the trip was detected
+    pub elapsed: f64,
+    /// the deadline it overran (see [`crate::sched::claim_deadline_secs`])
+    pub deadline: f64,
+}
+
+impl fmt::Display for WatchdogTimeout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "claim {} watchdog: {:.3}s elapsed > {:.3}s deadline",
+            self.claim, self.elapsed, self.deadline
+        )
+    }
+}
+
+impl std::error::Error for WatchdogTimeout {}
+
+/// How the GPU master reacts to claim failures: retry budget and backoff
+/// for transients, the demotion threshold, and the watchdog envelope.
+#[derive(Debug, Clone, Copy)]
+pub struct RecoveryPolicy {
+    /// synchronous retries per failed claim before it is reclaimed
+    pub retry_limit: usize,
+    /// backoff before retry `a` is `min(cap, base * 2^a)` seconds
+    pub backoff_base_secs: f64,
+    /// cap on the exponential backoff
+    pub backoff_cap_secs: f64,
+    /// consecutive claim *reclaims* (retries exhausted) after which the
+    /// master demotes itself and the run completes CPU-only
+    pub demote_after: usize,
+    /// watchdog deadline = `slack * est_work / live_rate` (see
+    /// [`crate::sched::claim_deadline_secs`])
+    pub watchdog_slack: f64,
+    /// floor on the watchdog deadline, so cold-start noise and tiny
+    /// claims never trip it
+    pub watchdog_min_secs: f64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            retry_limit: 2,
+            backoff_base_secs: 0.05,
+            backoff_cap_secs: 1.0,
+            demote_after: 3,
+            watchdog_slack: 8.0,
+            watchdog_min_secs: 5.0,
+        }
+    }
+}
+
+impl RecoveryPolicy {
+    /// Seconds to sleep before retry attempt `attempt` (0-based):
+    /// bounded exponential backoff, `min(cap, base * 2^attempt)`.
+    pub fn backoff_secs(&self, attempt: usize) -> f64 {
+        let exp = self.backoff_base_secs * (1u64 << attempt.min(32)) as f64;
+        exp.min(self.backoff_cap_secs)
+    }
+}
+
+/// What the master did about a fault event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// transient: the claim was retried synchronously after backoff
+    Retried,
+    /// retries exhausted: the claim's queries went back through Q^Fail
+    Reclaimed,
+    /// too many consecutive reclaims: the GPU master shut itself down
+    Demoted,
+}
+
+impl fmt::Display for FaultAction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            FaultAction::Retried => "retried",
+            FaultAction::Reclaimed => "reclaimed",
+            FaultAction::Demoted => "demoted",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One fault the master observed, with what it did about it.
+#[derive(Debug, Clone)]
+pub struct FaultEvent {
+    /// the failure mode observed (injected or real)
+    pub kind: FaultKind,
+    /// claim index (in head-claim order) the fault hit
+    pub claim: usize,
+    /// 0-based attempt number the failure occurred on
+    pub attempt: usize,
+    /// the recovery action taken
+    pub action: FaultAction,
+    /// human-readable error / panic message
+    pub detail: String,
+}
+
+/// The ordered log of fault events for one run, surfaced through
+/// `GpuJoinStats::fault_log` and `HybridReport::fault_log`.
+#[derive(Debug, Clone, Default)]
+pub struct FaultLog {
+    /// events in the order the master observed them
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultLog {
+    /// Record one event.
+    pub fn push(
+        &mut self,
+        kind: FaultKind,
+        claim: usize,
+        attempt: usize,
+        action: FaultAction,
+        detail: impl Into<String>,
+    ) {
+        self.events.push(FaultEvent { kind, claim, attempt, action, detail: detail.into() });
+    }
+
+    /// Number of events with the given action.
+    pub fn count(&self, action: FaultAction) -> usize {
+        self.events.iter().filter(|e| e.action == action).count()
+    }
+}
+
+/// Render a `catch_unwind` payload as a readable message (panics carry
+/// `&str` or `String` in practice; anything else gets a placeholder).
+pub fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked (non-string payload)".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn transient_fires_exactly_once_at_its_coordinates() {
+        let plan =
+            FaultPlan::one(FaultSpec::transient(FaultKind::ExecError, 2, 1));
+        assert!(plan.exec_round(0, 0).is_ok());
+        assert!(plan.exec_round(2, 0).is_ok());
+        let err = plan.exec_round(2, 1).unwrap_err();
+        let inj = err.downcast_ref::<InjectedFault>().unwrap();
+        assert_eq!(inj.kind, FaultKind::ExecError);
+        assert_eq!((inj.claim, inj.round), (2, 1));
+        // disarmed: the retry of the same (claim, round) succeeds
+        assert!(plan.exec_round(2, 1).is_ok());
+        assert!(plan.exec_round(3, 1).is_ok());
+    }
+
+    #[test]
+    fn persistent_fires_on_every_attempt_from_its_claim() {
+        let plan =
+            FaultPlan::one(FaultSpec::persistent(FaultKind::TransferError, 1));
+        assert!(plan.transfer_fault(0, 0).is_none());
+        for claim in 1..4 {
+            for round in 0..3 {
+                assert!(
+                    plan.transfer_fault(claim, round).is_some(),
+                    "persistent fault must fire at claim {claim} round {round}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn none_plan_is_inert() {
+        let plan = FaultPlan::none();
+        assert!(plan.is_empty());
+        for claim in 0..4 {
+            assert!(plan.exec_round(claim, 0).is_ok());
+            assert!(plan.transfer_fault(claim, 0).is_none());
+            assert!(!plan.filter_panic(claim, 0));
+        }
+    }
+
+    #[test]
+    fn filter_panic_is_transient_too() {
+        let plan =
+            FaultPlan::one(FaultSpec::transient(FaultKind::FilterPanic, 0, 0));
+        assert!(plan.filter_panic(0, 0));
+        assert!(!plan.filter_panic(0, 0), "disarmed after the first trigger");
+    }
+
+    #[test]
+    fn random_plans_are_reproducible_per_seed() {
+        prop::cases(16, 0xFA17, |rng| {
+            let seed = rng.next_u64();
+            let a = FaultPlan::random(&mut crate::util::rng::Rng::new(seed));
+            let b = FaultPlan::random(&mut crate::util::rng::Rng::new(seed));
+            assert_eq!(a.specs.len(), b.specs.len());
+            for (x, y) in a.specs.iter().zip(&b.specs) {
+                assert_eq!(x.kind, y.kind);
+                assert_eq!((x.claim, x.round), (y.claim, y.round));
+                assert_eq!(x.stall_secs, y.stall_secs);
+            }
+        });
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_monotone() {
+        let p = RecoveryPolicy::default();
+        let mut last = -1.0;
+        for a in 0..12 {
+            let b = p.backoff_secs(a);
+            assert!(b >= last, "backoff must be non-decreasing");
+            assert!(b <= p.backoff_cap_secs, "backoff must respect the cap");
+            last = b;
+        }
+        assert_eq!(p.backoff_secs(0), p.backoff_base_secs);
+        assert_eq!(p.backoff_secs(1), p.backoff_base_secs * 2.0);
+    }
+
+    #[test]
+    fn fault_log_counts_by_action() {
+        let mut log = FaultLog::default();
+        log.push(FaultKind::ExecError, 0, 0, FaultAction::Retried, "x");
+        log.push(FaultKind::ExecError, 0, 1, FaultAction::Reclaimed, "x");
+        log.push(FaultKind::ExecError, 1, 0, FaultAction::Demoted, "x");
+        assert_eq!(log.count(FaultAction::Retried), 1);
+        assert_eq!(log.count(FaultAction::Reclaimed), 1);
+        assert_eq!(log.count(FaultAction::Demoted), 1);
+        assert_eq!(log.events.len(), 3);
+    }
+
+    #[test]
+    fn panic_messages_render() {
+        let p = std::panic::catch_unwind(|| panic!("boom {}", 7)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "boom 7");
+        let p = std::panic::catch_unwind(|| panic!("static")).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "static");
+    }
+}

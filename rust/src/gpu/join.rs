@@ -47,10 +47,14 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::device::{DeviceEstimate, DeviceModel, ThreadAssign};
 use crate::core::{BoundedHeap, Dataset, KnnResult, Neighbor, SoaSlots};
+use crate::fault::{
+    panic_message, FaultAction, FaultKind, FaultLog, FaultPlan, InjectedFault,
+    RecoveryPolicy, WatchdogTimeout,
+};
 use crate::index::GridIndex;
 use crate::runtime::{tiles, tiles::TileClass, Engine};
 use crate::sched::{self, Arch, ClaimRecord, WorkQueue};
@@ -106,6 +110,15 @@ pub struct GpuJoinParams {
     /// list-driven form always pipelines its flush rounds through the
     /// stage pool within one batch and ignores this field).
     pub drain: DrainMode,
+    /// queue-driven drains only: the injected fault schedule. The exec /
+    /// transfer / filter hooks are branch-on-empty no-ops under the
+    /// default [`FaultPlan::none()`]; the list-driven form ignores the
+    /// plan entirely (it has no claim to scope recovery to).
+    pub fault: FaultPlan,
+    /// queue-driven drains only: claim-scoped recovery policy - retry
+    /// budget and backoff for transient faults, the per-claim watchdog
+    /// envelope, and the consecutive-failure demotion threshold.
+    pub recovery: RecoveryPolicy,
 }
 
 impl GpuJoinParams {
@@ -126,6 +139,8 @@ impl GpuJoinParams {
             estimator_frac: 0.01,
             exclude_self: true,
             drain: DrainMode::ThreeStage,
+            fault: FaultPlan::none(),
+            recovery: RecoveryPolicy::default(),
         }
     }
 }
@@ -203,6 +218,19 @@ pub struct GpuJoinStats {
     /// per-claim telemetry (queue-driven form only; empty for the list
     /// form)
     pub claims: Vec<ClaimRecord>,
+    /// fault events observed (failed attempts: retried + reclaimed;
+    /// queue-driven drains only, 0 elsewhere)
+    pub gpu_faults: usize,
+    /// synchronous claim retries performed after transient faults
+    pub gpu_retries: usize,
+    /// work-queue cells whose claims were reclaimed through Q^Fail after
+    /// retries were exhausted
+    pub reclaimed_cells: usize,
+    /// the master demoted itself after `recovery.demote_after`
+    /// consecutive claim failures; the rest of the run completed CPU-only
+    pub degraded: bool,
+    /// ordered log of the fault events behind the counters above
+    pub fault_log: FaultLog,
 }
 
 /// A unit of work: one grid cell's queries + the shared candidate list.
@@ -453,6 +481,11 @@ pub fn gpu_join_rs_into(
         transfer_time: acc.transfer_time,
         filter_time: acc.filter_time,
         claims: Vec::new(),
+        gpu_faults: 0,
+        gpu_retries: 0,
+        reclaimed_cells: 0,
+        degraded: false,
+        fault_log: FaultLog::default(),
     })
 }
 
@@ -515,7 +548,12 @@ fn exec_filter_batch_pooled(
                 transfer_secs += t0.elapsed().as_secs_f64();
                 let len = tiles.len();
                 handle.submit(
-                    FilterRound { stage: Arc::clone(stage_arc), tiles },
+                    FilterRound {
+                        stage: Arc::clone(stage_arc),
+                        tiles,
+                        claim: 0,
+                        round: 0,
+                    },
                     len,
                     lane,
                 );
@@ -600,6 +638,11 @@ pub fn gpu_join_drain(
             transfer_time: 0.0,
             filter_time: 0.0,
             claims: Vec::new(),
+            gpu_faults: 0,
+            gpu_retries: 0,
+            reclaimed_cells: 0,
+            degraded: false,
+            fault_log: FaultLog::default(),
         });
     };
 
@@ -658,6 +701,13 @@ fn claim_cells(
 /// alternate within each claim. Kept as the ablation baseline of the
 /// pipelined drain and as the single-core schedule (where the pipeline's
 /// extra concurrency would only thrash one core).
+///
+/// Fault handling is claim-scoped: a failed attempt (injected or real)
+/// enters [`recover_claim`] - synchronous retries with backoff, then
+/// reclamation through Q^Fail - and `demote_after` consecutive reclaims
+/// stop the claim loop entirely, leaving the rest of the queue to the
+/// CPU ranks (the caller's `gpu_done` release is what lets them finish
+/// the recirculated work).
 #[allow(clippy::too_many_arguments)]
 fn drain_sync(
     engine: &Engine,
@@ -674,78 +724,81 @@ fn drain_sync(
     t_start: Instant,
 ) -> Result<GpuJoinStats> {
     let buffer_cap = params.buffer_pairs.max(1);
-    let mut kernel_time = 0f64;
-    let mut claims: Vec<ClaimRecord> = Vec::new();
-    let mut failed_all: Vec<u32> = Vec::new();
-    let mut work_log: Vec<u64> = Vec::new();
-    let mut solved = 0usize;
-    let mut result_pairs = 0u64;
-    let mut max_batch_pairs = 0u64;
-    let mut batches = 0usize;
+    let policy = &params.recovery;
+    let mut acc = DrainAcc::default();
     let mut gpu_busy = 0f64;
-    let mut exec_time = 0f64;
-    let mut transfer_time = 0f64;
-    let mut filter_time = 0f64;
-    let mut work_done = 0u64;
+    let mut consecutive = 0usize;
+    let mut claim_idx = 0usize;
 
     let native = std::ptr::eq(r_data, data);
     let mut pending = Some(first);
     while let Some(range) = pending.take() {
+        // the watchdog envelope for this claim, from the live rates (the
+        // first claim has no evidence and gets an infinite deadline)
+        let est = queue.range_work(range.clone());
+        let gpu_rate =
+            if gpu_busy > 0.0 { acc.work_done as f64 / gpu_busy } else { 0.0 };
+        let deadline = sched::claim_deadline_secs(
+            est,
+            gpu_rate,
+            queue.cpu_work_rate(),
+            policy.watchdog_slack,
+            policy.watchdog_min_secs,
+        );
         let t_claim = Instant::now();
-        let cells = claim_cells(queue, grid, r_data, native, range.clone(), &mut work_log);
-        let (batch_queries, mut heaps, batch_pairs, transfer_secs, filter_secs) =
-            exec_filter_cells(
-                engine,
-                (r_data, data),
-                plans,
-                use_topk,
-                &cells,
-                params,
-                &mut kernel_time,
-            )?;
-        let mut failed_batch = Vec::new();
-        for (pos, &q) in batch_queries.iter().enumerate() {
-            let h = &mut heaps[pos];
-            if h.len() >= params.k {
-                // SAFETY: head claims are disjoint from all other writers.
-                unsafe { slots.slot(q as usize) }.write_heap(h);
-                solved += 1;
-            } else {
-                failed_batch.push(q);
+        let cells = claim_cells(
+            queue, grid, r_data, native, range.clone(), &mut acc.work_log,
+        );
+        let mut demote = false;
+        match sync_cells_attempt(
+            engine,
+            (r_data, data),
+            plans,
+            use_topk,
+            &cells,
+            params,
+            queue,
+            slots,
+            claim_idx,
+            range.clone(),
+            est,
+            deadline,
+            &mut acc,
+        ) {
+            Ok(()) => consecutive = 0,
+            Err(first_err) => {
+                demote = recover_claim(
+                    engine,
+                    (r_data, data),
+                    grid,
+                    queue,
+                    params,
+                    slots,
+                    plans,
+                    use_topk,
+                    claim_idx,
+                    range,
+                    est,
+                    deadline,
+                    first_err,
+                    &mut consecutive,
+                    &mut acc,
+                );
             }
         }
-        // recirculate Q^Fail into the live queue (step 7 of Alg. 1 gone)
-        queue.push_failed(&failed_batch);
-        failed_all.extend_from_slice(&failed_batch);
-
-        result_pairs += batch_pairs;
-        max_batch_pairs = max_batch_pairs.max(batch_pairs);
-        batches += 1;
-        let secs = t_claim.elapsed().as_secs_f64();
-        gpu_busy += secs;
-        let exec_secs = (secs - transfer_secs - filter_secs).max(0.0);
-        exec_time += exec_secs;
-        transfer_time += transfer_secs;
-        filter_time += filter_secs;
-        let est = queue.range_work(range.clone());
-        work_done += est;
-        claims.push(ClaimRecord {
-            arch: Arch::Gpu,
-            queries: range.len(),
-            est_work: est,
-            secs,
-            exec_secs,
-            transfer_secs,
-            filter_secs,
-            from_recirc: false,
-        });
+        gpu_busy += t_claim.elapsed().as_secs_f64();
+        claim_idx += 1;
+        if demote {
+            break;
+        }
 
         // Eq. 6 as feedback: size the next claim from live rates. The
         // sync drain really does pay exec + transfer + filter serially
         // per claim, so its honest throughput is work over *total* busy
         // seconds (unlike the pipelined drains, which size from the
         // kernel-only rate because their other stages overlap).
-        let gpu_rate = if gpu_busy > 0.0 { work_done as f64 / gpu_busy } else { 0.0 };
+        let gpu_rate =
+            if gpu_busy > 0.0 { acc.work_done as f64 / gpu_busy } else { 0.0 };
         let target = sched::next_batch_work(
             queue.head_work_remaining(pos_cap),
             gpu_rate,
@@ -755,22 +808,28 @@ fn drain_sync(
         pending = queue.claim_head_work(target, pos_cap);
     }
 
-    let device_model = DeviceModel::default().estimate(&work_log, params.assign);
-    failed_all.sort_unstable();
+    let device_model = DeviceModel::default().estimate(&acc.work_log, params.assign);
+    acc.failed.sort_unstable();
     Ok(GpuJoinStats {
-        failed: failed_all,
-        solved,
-        kernel_time,
+        failed: acc.failed,
+        solved: acc.solved,
+        kernel_time: acc.kernel_time,
         total_time: t_start.elapsed().as_secs_f64(),
         device_model,
-        batches,
-        estimated_pairs: work_done,
-        result_pairs,
-        max_batch_pairs,
-        exec_time,
-        transfer_time,
-        filter_time,
-        claims,
+        batches: acc.batches,
+        estimated_pairs: acc.work_done,
+        result_pairs: acc.result_pairs,
+        max_batch_pairs: acc.max_batch_pairs,
+        exec_time: acc.exec_time,
+        transfer_time: acc.transfer_time,
+        filter_time: acc.filter_time,
+        claims: acc.claims,
+        gpu_faults: acc.fault_log.count(FaultAction::Retried)
+            + acc.fault_log.count(FaultAction::Reclaimed),
+        gpu_retries: acc.retries,
+        reclaimed_cells: acc.reclaimed_cells,
+        degraded: acc.degraded,
+        fault_log: acc.fault_log,
     })
 }
 
@@ -823,6 +882,12 @@ impl ClaimStage {
 struct FilterRound {
     stage: Arc<ClaimStage>,
     tiles: Vec<TileOut>,
+    /// claim ordinal the round belongs to - the filter-stage fault hook's
+    /// trigger coordinate (0 on the list-driven path, which has no
+    /// claims and never consults the hook)
+    claim: usize,
+    /// flush-round ordinal within the claim (same caveat)
+    round: usize,
 }
 
 /// One raw flush round handed to the dedicated transfer stage
@@ -833,8 +898,11 @@ struct FilterRound {
 /// order.
 struct TransferRound {
     stage: Arc<ClaimStage>,
-    /// the claim lane the converted filter round is submitted on
+    /// the claim lane the converted filter round is submitted on (the
+    /// lane IS the claim ordinal - the transfer fault hook's coordinate)
     lane: u64,
+    /// flush-round ordinal within the claim (fault hook coordinate)
+    round: usize,
     /// consumed (once) by the transfer worker; `Mutex<Option<..>>` so the
     /// tiles can be moved out through the pool's shared job reference
     tiles: Mutex<Option<Vec<RawTile>>>,
@@ -871,6 +939,259 @@ struct DrainAcc {
     filter_time: f64,
     kernel_time: f64,
     work_done: u64,
+    fault_log: FaultLog,
+    retries: usize,
+    reclaimed_cells: usize,
+    degraded: bool,
+}
+
+/// Classify a claim-stage error for the fault log: injected faults carry
+/// their own kind, watchdog trips are stalls, caught worker panics read
+/// as filter faults, anything else is charged to the exec stage (the
+/// device call is the only remaining failure source).
+fn fault_kind_of(e: &anyhow::Error) -> FaultKind {
+    if let Some(inj) = e.downcast_ref::<InjectedFault>() {
+        return inj.kind;
+    }
+    if e.downcast_ref::<WatchdogTimeout>().is_some() {
+        return FaultKind::StallTimeout;
+    }
+    if format!("{e:#}").contains("panicked") {
+        return FaultKind::FilterPanic;
+    }
+    FaultKind::ExecError
+}
+
+/// Reclaim a failed claim: push its queries back through the queue's
+/// Q^Fail recirculation buffer for CPU ranks to absorb, and log a
+/// `failed` ClaimRecord so the accounting invariants (`claimed ==
+/// solved + q_fail` per architecture) keep closing. Exactly-once holds
+/// because a failed claim published nothing: every error path surfaces
+/// *before* any slot write or `push_failed` of the attempt, so each of
+/// the claim's queries is published here at most once. The claim's
+/// estimated work is deliberately NOT credited to `work_done` - a
+/// reclaimed claim produced nothing, and crediting it would inflate the
+/// GPU rate the next claim (and watchdog deadline) is sized from.
+fn reclaim_claim(
+    queue: &WorkQueue,
+    range: std::ops::Range<usize>,
+    est_work: u64,
+    acc: &mut DrainAcc,
+) {
+    let qs: Vec<u32> = queue.query_slice(range.clone()).to_vec();
+    queue.push_failed(&qs);
+    acc.failed.extend_from_slice(&qs);
+    acc.reclaimed_cells += queue.cell_ranges(range.clone()).count();
+    acc.batches += 1;
+    acc.claims.push(ClaimRecord {
+        arch: Arch::Gpu,
+        queries: range.len(),
+        est_work,
+        secs: 0.0,
+        exec_secs: 0.0,
+        transfer_secs: 0.0,
+        filter_secs: 0.0,
+        from_recirc: false,
+        failed: true,
+    });
+}
+
+/// One synchronous exec + filter + resolve attempt of one claim: the
+/// sync drain's per-claim body, and the retry body of claim recovery on
+/// *every* drain mode (a retried claim's staging rounds have been
+/// quiesced, so there is nothing left for a pipeline to overlap with).
+/// Runs the stage work under `catch_unwind` - on the synchronous path an
+/// injected filter panic unwinds the calling thread itself - and on
+/// success fully resolves the claim into slots / Q^Fail and logs it. On
+/// failure nothing was published (no slot write, no recirculation): the
+/// error surfaces before the resolve loop.
+#[allow(clippy::too_many_arguments)]
+fn sync_cells_attempt(
+    engine: &Engine,
+    (r_data, data): (&Dataset, &Dataset),
+    plans: (&tiles::TilePlan, &tiles::TilePlan),
+    use_topk: bool,
+    cells: &[WorkCell],
+    params: &GpuJoinParams,
+    queue: &WorkQueue,
+    slots: &SoaSlots<'_>,
+    claim: usize,
+    range: std::ops::Range<usize>,
+    est_work: u64,
+    deadline_secs: f64,
+    acc: &mut DrainAcc,
+) -> std::result::Result<(), (anyhow::Error, FaultKind)> {
+    let t_claim = Instant::now();
+    let mut kernel = 0f64;
+    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        exec_filter_cells(
+            engine,
+            (r_data, data),
+            plans,
+            use_topk,
+            cells,
+            params,
+            &mut kernel,
+            claim,
+            deadline_secs,
+        )
+    }));
+    acc.kernel_time += kernel;
+    let (batch_queries, mut heaps, batch_pairs, transfer_secs, filter_secs) =
+        match out {
+            Ok(Ok(t)) => t,
+            Ok(Err(e)) => {
+                let kind = fault_kind_of(&e);
+                return Err((e, kind));
+            }
+            Err(p) => {
+                return Err((
+                    anyhow!(
+                        "filter stage panicked: {}",
+                        panic_message(p.as_ref())
+                    ),
+                    FaultKind::FilterPanic,
+                ));
+            }
+        };
+    let mut failed_batch = Vec::new();
+    for (pos, &q) in batch_queries.iter().enumerate() {
+        let h = &mut heaps[pos];
+        if h.len() >= params.k {
+            // SAFETY: head claims are disjoint from all other writers.
+            unsafe { slots.slot(q as usize) }.write_heap(h);
+            acc.solved += 1;
+        } else {
+            failed_batch.push(q);
+        }
+    }
+    // recirculate Q^Fail into the live queue (step 7 of Alg. 1 gone)
+    queue.push_failed(&failed_batch);
+    acc.failed.extend_from_slice(&failed_batch);
+
+    acc.result_pairs += batch_pairs;
+    acc.max_batch_pairs = acc.max_batch_pairs.max(batch_pairs);
+    acc.batches += 1;
+    let secs = t_claim.elapsed().as_secs_f64();
+    let exec_secs = (secs - transfer_secs - filter_secs).max(0.0);
+    acc.exec_time += exec_secs;
+    acc.transfer_time += transfer_secs;
+    acc.filter_time += filter_secs;
+    acc.work_done += est_work;
+    acc.claims.push(ClaimRecord {
+        arch: Arch::Gpu,
+        queries: range.len(),
+        est_work,
+        secs,
+        exec_secs,
+        transfer_secs,
+        filter_secs,
+        from_recirc: false,
+        failed: false,
+    });
+    Ok(())
+}
+
+/// Claim-scoped recovery, entered after an attempt of claim `claim`
+/// failed with `first_err`: retry synchronously with bounded exponential
+/// backoff up to the policy's retry limit, then reclaim the claim
+/// through Q^Fail and count it toward demotion. Returns `true` when the
+/// master must demote itself (`demote_after` consecutive reclaims): the
+/// caller stops claiming and the run completes CPU-only. Persistent
+/// faults fail every retry and drive straight through reclaim to
+/// demotion; transient faults disarm after firing, so the first retry
+/// succeeds and resets the consecutive-failure count.
+#[allow(clippy::too_many_arguments)]
+fn recover_claim(
+    engine: &Engine,
+    (r_data, data): (&Dataset, &Dataset),
+    grid: &GridIndex,
+    queue: &WorkQueue,
+    params: &GpuJoinParams,
+    slots: &SoaSlots<'_>,
+    plans: (&tiles::TilePlan, &tiles::TilePlan),
+    use_topk: bool,
+    claim: usize,
+    range: std::ops::Range<usize>,
+    est_work: u64,
+    deadline_secs: f64,
+    first_err: (anyhow::Error, FaultKind),
+    consecutive: &mut usize,
+    acc: &mut DrainAcc,
+) -> bool {
+    let policy = &params.recovery;
+    let native = std::ptr::eq(r_data, data);
+    // retries work off a fresh cell materialisation (the failed
+    // attempt's cells may live inside a pipeline staging set) but must
+    // not re-log the claim's workload - the device model already saw it
+    // at claim time
+    let mut scratch_log = Vec::new();
+    let cells =
+        claim_cells(queue, grid, r_data, native, range.clone(), &mut scratch_log);
+    let (mut err, mut kind) = first_err;
+    let mut attempt = 0usize;
+    loop {
+        if attempt >= policy.retry_limit {
+            acc.fault_log.push(
+                kind,
+                claim,
+                attempt,
+                FaultAction::Reclaimed,
+                format!("{err:#}"),
+            );
+            reclaim_claim(queue, range, est_work, acc);
+            *consecutive += 1;
+            if *consecutive >= policy.demote_after {
+                acc.degraded = true;
+                acc.fault_log.push(
+                    kind,
+                    claim,
+                    attempt,
+                    FaultAction::Demoted,
+                    format!("{} consecutive claim failures", *consecutive),
+                );
+                return true;
+            }
+            return false;
+        }
+        acc.fault_log.push(
+            kind,
+            claim,
+            attempt,
+            FaultAction::Retried,
+            format!("{err:#}"),
+        );
+        acc.retries += 1;
+        let backoff = policy.backoff_secs(attempt);
+        if backoff > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(backoff));
+        }
+        attempt += 1;
+        match sync_cells_attempt(
+            engine,
+            (r_data, data),
+            plans,
+            use_topk,
+            &cells,
+            params,
+            queue,
+            slots,
+            claim,
+            range.clone(),
+            est_work,
+            deadline_secs,
+            acc,
+        ) {
+            Ok(()) => {
+                *consecutive = 0;
+                return false;
+            }
+            Err((e, k)) => {
+                err = e;
+                kind = k;
+            }
+        }
+    }
 }
 
 /// Wait out a claim's outstanding transfer and filter rounds, then
@@ -880,10 +1201,18 @@ struct DrainAcc {
 /// runs *after* later claims were already taken off the head, so a
 /// claim's Q^Fail may recirculate several claims behind its successor -
 /// the reordering the failure-injection suite pins down.
+///
+/// Every failure path of the claim surfaces here, *before* any slot
+/// write or recirculation - a worker panic recorded against the claim's
+/// lane (recoverable stage pool), a transfer-stage error parked in
+/// `transfer_err` - so a failed claim publishes nothing and recovery may
+/// retry or reclaim it without double-publishing a query. The panic /
+/// error records are drained even on the error path, so a retried lane
+/// starts clean.
 #[allow(clippy::too_many_arguments)]
 fn resolve_stage(
     stage: &mut Arc<ClaimStage>,
-    meta: ClaimMeta,
+    meta: &ClaimMeta,
     transfer_handle: Option<&pool::StageHandle<TransferRound>>,
     filter_handle: &pool::StageHandle<FilterRound>,
     queue: &WorkQueue,
@@ -899,9 +1228,22 @@ fn resolve_stage(
         th.wait_lane(meta.lane);
     }
     filter_handle.wait_lane(meta.lane);
+    if let Some(th) = transfer_handle {
+        if let Some(msg) = th.take_lane_panic(meta.lane) {
+            while th.take_lane_panic(meta.lane).is_some() {}
+            return Err(anyhow!("transfer stage panicked: {msg}"));
+        }
+    }
+    if let Some(msg) = filter_handle.take_lane_panic(meta.lane) {
+        while filter_handle.take_lane_panic(meta.lane).is_some() {}
+        return Err(anyhow!("filter stage panicked: {msg}"));
+    }
     let stage = Arc::get_mut(stage)
         .expect("claim rounds retired but stage still shared");
-    if let Some(e) = stage.transfer_err.lock().unwrap().take() {
+    // lock_unpoisoned: a filter worker that panicked while a sibling
+    // held this mutex must surface as the *first* error, not as a
+    // second opaque poisoning panic on the master
+    if let Some(e) = pool::lock_unpoisoned(&stage.transfer_err).take() {
         return Err(e);
     }
     let mut failed_batch = Vec::new();
@@ -938,8 +1280,32 @@ fn resolve_stage(
         transfer_secs,
         filter_secs,
         from_recirc: false,
+        failed: false,
     });
     Ok(())
+}
+
+/// Watchdog deadline for one pipelined claim, from the kernel-side rate
+/// (resolved claims' exec seconds plus the in-flight claims' - the same
+/// evidence claim-ahead sizing feeds on) against the live CPU rate.
+fn pipelined_deadline(
+    acc: &DrainAcc,
+    metas: &[Option<ClaimMeta>],
+    est_work: u64,
+    policy: &RecoveryPolicy,
+    cpu_rate: f64,
+) -> f64 {
+    let exec_busy = acc.exec_time
+        + metas.iter().flatten().map(|m| m.exec_secs).sum::<f64>();
+    let gpu_rate =
+        if exec_busy > 0.0 { acc.work_done as f64 / exec_busy } else { 0.0 };
+    sched::claim_deadline_secs(
+        est_work,
+        gpu_rate,
+        cpu_rate,
+        policy.watchdog_slack,
+        policy.watchdog_min_secs,
+    )
 }
 
 /// The pipelined queue drains: device execution of claim i+1 overlaps
@@ -990,6 +1356,7 @@ fn drain_pipelined(
 ) -> Result<GpuJoinStats> {
     let eps2 = params.eps * params.eps;
     let exclude_self = params.exclude_self;
+    let fault = &params.fault;
     let n_workers = params.streams.max(1);
     // Memory envelope: the sync drain buffers up to `streams * 8` device
     // chunks at a time. Divide that envelope by the number of rounds
@@ -1002,11 +1369,20 @@ fn drain_pipelined(
         ((n_workers * 8 / 2).max(1), 1)
     };
 
-    let (master_out, _worker_units) = pool::stage_scope(
+    // recoverable pools: a worker panic (injected or real) is caught,
+    // recorded against the round's lane, and surfaced as that *claim's*
+    // failure at resolve - it no longer kills the whole drain
+    let (master_out, _worker_units) = pool::stage_scope_recoverable(
         n_workers,
         filter_cap,
         |_w| (),
         |_s: &mut (), job: &FilterRound, i: usize| {
+            if i == 0 && fault.filter_panic(job.claim, job.round) {
+                panic!(
+                    "injected filter panic (claim {}, round {})",
+                    job.claim, job.round
+                );
+            }
             let mut pairs = 0u64;
             apply_tile(
                 &job.tiles[i],
@@ -1028,19 +1404,23 @@ fn drain_pipelined(
         |_s| (),
         |filter_handle| -> Result<DrainAcc> {
             if three_stage {
-                let (out, _transfer_units) = pool::stage_scope(
+                let (out, _transfer_units) = pool::stage_scope_recoverable(
                     1, // the dedicated transfer worker
                     1, // bounded hand-off: one raw round staged at a time
                     |_w| (),
                     |_s: &mut (), job: &TransferRound, _i: usize| {
-                        let raw = job
-                            .tiles
-                            .lock()
-                            .unwrap()
+                        // lock_unpoisoned (here and for transfer_err
+                        // below): a poisoned mutex must never turn one
+                        // caught fault into a second opaque panic - the
+                        // parked value is still valid, the poisoning
+                        // thread never left a half-written round
+                        let raw = pool::lock_unpoisoned(&job.tiles)
                             .take()
                             .expect("transfer round taken twice");
+                        let claim = job.lane as usize;
+                        let injected = fault.transfer_fault(claim, job.round);
                         let t0 = Instant::now();
-                        match convert_tiles(raw) {
+                        match injected.map_or_else(|| convert_tiles(raw), Err) {
                             Ok(tiles) => {
                                 job.stage.transfer_nanos.fetch_add(
                                     (t0.elapsed().as_secs_f64() * 1e9) as u64,
@@ -1051,6 +1431,8 @@ fn drain_pipelined(
                                     FilterRound {
                                         stage: Arc::clone(&job.stage),
                                         tiles,
+                                        claim,
+                                        round: job.round,
                                     },
                                     len,
                                     job.lane,
@@ -1060,8 +1442,9 @@ fn drain_pipelined(
                                 // surface at the claim's resolve; skipping
                                 // the filter submit is safe (lane waits
                                 // are emptiness-based, not count-based)
-                                let mut slot =
-                                    job.stage.transfer_err.lock().unwrap();
+                                let mut slot = pool::lock_unpoisoned(
+                                    &job.stage.transfer_err,
+                                );
                                 if slot.is_none() {
                                     *slot = Some(e);
                                 }
@@ -1105,6 +1488,12 @@ fn drain_pipelined(
         transfer_time: acc.transfer_time,
         filter_time: acc.filter_time,
         claims: acc.claims,
+        gpu_faults: acc.fault_log.count(FaultAction::Retried)
+            + acc.fault_log.count(FaultAction::Reclaimed),
+        gpu_retries: acc.retries,
+        reclaimed_cells: acc.reclaimed_cells,
+        degraded: acc.degraded,
+        fault_log: acc.fault_log,
     })
 }
 
@@ -1136,25 +1525,63 @@ fn pipelined_claim_loop(
     // even for the degenerate k = 0
     let arena_k = params.k.max(1);
     let native = std::ptr::eq(r_data, data);
+    let fault = &params.fault;
+    let policy = &params.recovery;
     let depth = if transfer_handle.is_some() { 3 } else { 2 };
     let mut acc = DrainAcc::default();
     let mut stages: Vec<Arc<ClaimStage>> =
         (0..depth).map(|_| Arc::new(ClaimStage::new(arena_k))).collect();
     let mut metas: Vec<Option<ClaimMeta>> = (0..depth).map(|_| None).collect();
     let mut claim_idx = 0usize;
+    let mut consecutive = 0usize;
     let mut pending = Some(first);
 
     while let Some(range) = pending.take() {
         let si = claim_idx % depth;
         // reclaim this staging set: the claim `depth` back must be fully
-        // transferred + filtered and resolved before its arena is reused
+        // transferred + filtered and resolved before its arena is reused.
+        // A resolve failure is that *claim's* failure: recovery retries
+        // it synchronously (its lane is quiesced, there is nothing left
+        // to overlap with); demotion also reclaims the current,
+        // not-yet-executed claim and stops the loop.
         if let Some(meta) = metas[si].take() {
-            resolve_stage(
-                &mut stages[si], meta, transfer_handle, filter_handle, queue,
+            if let Err(e) = resolve_stage(
+                &mut stages[si], &meta, transfer_handle, filter_handle, queue,
                 params.k, slots, &mut acc,
-            )?;
+            ) {
+                let kind = fault_kind_of(&e);
+                // un-credit the failed attempt's exec-time work credit;
+                // recovery re-earns it (retry) or forfeits it (reclaim)
+                acc.work_done = acc.work_done.saturating_sub(meta.est_work);
+                let deadline = pipelined_deadline(
+                    &acc, &metas, meta.est_work, policy, queue.cpu_work_rate(),
+                );
+                if recover_claim(
+                    engine, (r_data, data), grid, queue, params, slots, plans,
+                    use_topk, meta.lane as usize, meta.range.clone(),
+                    meta.est_work, deadline, (e, kind), &mut consecutive,
+                    &mut acc,
+                ) {
+                    reclaim_claim(
+                        queue,
+                        range.clone(),
+                        queue.range_work(range.clone()),
+                        &mut acc,
+                    );
+                    break;
+                }
+            } else {
+                consecutive = 0;
+            }
         }
         let lane = claim_idx as u64;
+        let est = queue.range_work(range.clone());
+        // the watchdog envelope is fixed before exec and checked at
+        // round boundaries inside the emit closure (`exec_lits` is
+        // uninterruptible - a stalled device surfaces when its round
+        // finally emits)
+        let deadline =
+            pipelined_deadline(&acc, &metas, est, policy, queue.cpu_work_rate());
         let t_exec = Instant::now();
         let cells = claim_cells(
             queue, grid, r_data, native, range.clone(), &mut acc.work_log,
@@ -1172,6 +1599,10 @@ fn pipelined_claim_loop(
             stage.pairs.store(0, Ordering::Relaxed);
             stage.filter_nanos.store(0, Ordering::Relaxed);
             stage.transfer_nanos.store(0, Ordering::Relaxed);
+            // a recovered claim may have parked a transfer error here
+            // after its resolve already gave up on the stage - it must
+            // not poison the next claim reusing this staging set
+            *pool::lock_unpoisoned(&stage.transfer_err) = None;
         }
         // execute this claim's tiles; earlier claims' rounds keep
         // transferring/filtering on their stages while the device runs.
@@ -1182,8 +1613,9 @@ fn pipelined_claim_loop(
         // kernel-side rate the claim sizing feeds on).
         let mut submit_wait = 0f64;
         let mut transfer_master = 0f64;
-        {
+        let exec_out = {
             let stage_arc = &stages[si];
+            let mut round = 0usize;
             exec_cells_into_rounds(
                 engine,
                 (r_data, data),
@@ -1194,6 +1626,7 @@ fn pipelined_claim_loop(
                 round_cap,
                 &mut acc.kernel_time,
                 &mut |raw: Vec<RawTile>| {
+                    fault.exec_round(claim_idx, round)?;
                     debug_assert!(
                         raw.iter().all(|t| t.pos.end <= n_queries),
                         "round tile positions exceed the claim arena"
@@ -1205,6 +1638,7 @@ fn pipelined_claim_loop(
                             TransferRound {
                                 stage: Arc::clone(stage_arc),
                                 lane,
+                                round,
                                 tiles: Mutex::new(Some(raw)),
                             },
                             1,
@@ -1213,35 +1647,80 @@ fn pipelined_claim_loop(
                         submit_wait += t_submit.elapsed().as_secs_f64();
                     } else {
                         // two-stage: convert here, filter on the pool
+                        if let Some(e) = fault.transfer_fault(claim_idx, round)
+                        {
+                            return Err(e);
+                        }
                         let t_conv = Instant::now();
                         let tiles = convert_tiles(raw)?;
                         transfer_master += t_conv.elapsed().as_secs_f64();
                         let len = tiles.len();
                         let t_submit = Instant::now();
                         filter_handle.submit(
-                            FilterRound { stage: Arc::clone(stage_arc), tiles },
+                            FilterRound {
+                                stage: Arc::clone(stage_arc),
+                                tiles,
+                                claim: claim_idx,
+                                round,
+                            },
                             len,
                             lane,
                         );
                         submit_wait += t_submit.elapsed().as_secs_f64();
                     }
+                    round += 1;
+                    let elapsed = t_exec.elapsed().as_secs_f64();
+                    if elapsed > deadline {
+                        return Err(WatchdogTimeout {
+                            claim: claim_idx,
+                            elapsed,
+                            deadline,
+                        }
+                        .into());
+                    }
                     Ok(())
                 },
-            )?;
+            )
+        };
+        match exec_out {
+            Ok(()) => {
+                let exec_secs = (t_exec.elapsed().as_secs_f64()
+                    - submit_wait
+                    - transfer_master)
+                    .max(0.0);
+                acc.work_done += est;
+                metas[si] = Some(ClaimMeta {
+                    range,
+                    est_work: est,
+                    exec_secs,
+                    transfer_secs: transfer_master,
+                    lane,
+                });
+            }
+            Err(e) => {
+                // quiesce the claim's lane before retrying on the sync
+                // path: rounds already submitted must retire, and any
+                // worker panic they suffered folds into this same claim
+                // failure (drained here, never surfaced twice). The
+                // partially-written staging arena is simply abandoned -
+                // metas[si] stays None, so resolve never reads it, and
+                // the next refill resets it.
+                if let Some(th) = transfer_handle {
+                    th.wait_lane(lane);
+                    while th.take_lane_panic(lane).is_some() {}
+                }
+                filter_handle.wait_lane(lane);
+                while filter_handle.take_lane_panic(lane).is_some() {}
+                let kind = fault_kind_of(&e);
+                if recover_claim(
+                    engine, (r_data, data), grid, queue, params, slots, plans,
+                    use_topk, claim_idx, range, est, deadline, (e, kind),
+                    &mut consecutive, &mut acc,
+                ) {
+                    break;
+                }
+            }
         }
-        let est = queue.range_work(range.clone());
-        let exec_secs = (t_exec.elapsed().as_secs_f64()
-            - submit_wait
-            - transfer_master)
-            .max(0.0);
-        acc.work_done += est;
-        metas[si] = Some(ClaimMeta {
-            range,
-            est_work: est,
-            exec_secs,
-            transfer_secs: transfer_master,
-            lane,
-        });
         claim_idx += 1;
 
         // claim-ahead sizing from the KERNEL-side rate: exec_secs is
@@ -1264,15 +1743,49 @@ fn pipelined_claim_loop(
         pending = queue.claim_head_work(target, pos_cap);
     }
 
-    // head exhausted: drain the (≤ depth) in-flight claims in claim
-    // order - oldest staging set first
-    for off in 0..depth {
-        let si = (claim_idx + off) % depth;
-        if let Some(meta) = metas[si].take() {
-            resolve_stage(
-                &mut stages[si], meta, transfer_handle, filter_handle, queue,
-                params.k, slots, &mut acc,
-            )?;
+    // head exhausted (or the master demoted itself): drain the in-flight
+    // claims oldest-first (minimum lane). Under degradation resolves are
+    // not retried - a claim that fails now is reclaimed directly, the
+    // device has already been written off.
+    while let Some(i) = metas
+        .iter()
+        .enumerate()
+        .filter_map(|(i, m)| m.as_ref().map(|m| (m.lane, i)))
+        .min()
+        .map(|(_, i)| i)
+    {
+        let meta = metas[i].take().expect("in-flight meta vanished");
+        if let Err(e) = resolve_stage(
+            &mut stages[i], &meta, transfer_handle, filter_handle, queue,
+            params.k, slots, &mut acc,
+        ) {
+            let kind = fault_kind_of(&e);
+            acc.work_done = acc.work_done.saturating_sub(meta.est_work);
+            if acc.degraded {
+                acc.fault_log.push(
+                    kind,
+                    meta.lane as usize,
+                    0,
+                    FaultAction::Reclaimed,
+                    format!("{e:#}"),
+                );
+                reclaim_claim(queue, meta.range.clone(), meta.est_work, &mut acc);
+            } else {
+                let deadline = pipelined_deadline(
+                    &acc, &metas, meta.est_work, policy, queue.cpu_work_rate(),
+                );
+                // a demotion verdict here has nothing further to stop:
+                // the remaining in-flight claims reclaim through the
+                // degraded branch on later iterations
+                recover_claim(
+                    engine, (r_data, data), grid, queue, params, slots, plans,
+                    use_topk, meta.lane as usize, meta.range.clone(),
+                    meta.est_work, deadline, (e, kind), &mut consecutive,
+                    &mut acc,
+                );
+            }
+        } else {
+            consecutive = 0;
         }
     }
     Ok(acc)
@@ -1655,9 +2168,20 @@ fn exec_cells_into_rounds(
 /// stages alternate within the batch. This is the synchronous queue
 /// drain's path - the ablation baseline of the pipelined drains, which
 /// instead overlap the stages across claims (`drain_pipelined` /
-/// DESIGN.md §5). Returns the batch's flat query list (cell by cell),
-/// one heap per position, the in-ε pair count, and the transfer / filter
-/// wall seconds (the exec/transfer/filter telemetry split).
+/// DESIGN.md §5) - and the retry path of claim recovery (every retry is
+/// synchronous, whatever drain mode failed). Returns the batch's flat
+/// query list (cell by cell), one heap per position, the in-ε pair
+/// count, and the transfer / filter wall seconds (the
+/// exec/transfer/filter telemetry split).
+///
+/// `claim` scopes the fault hooks: all three stage hooks fire here per
+/// flush round, on the master thread (the sync drain has no worker to
+/// panic, so an injected filter panic unwinds the master - the sync
+/// attempt runs under `catch_unwind` in [`sync_cells_attempt`]). The
+/// watchdog deadline is checked at round boundaries only - `exec_lits`
+/// is uninterruptible, so a stalled device is detected when its round
+/// finally emits, never mid-kernel.
+#[allow(clippy::too_many_arguments)]
 fn exec_filter_cells(
     engine: &Engine,
     (r_data, data): (&Dataset, &Dataset),
@@ -1666,6 +2190,8 @@ fn exec_filter_cells(
     cells: &[WorkCell],
     params: &GpuJoinParams,
     kernel_time: &mut f64,
+    claim: usize,
+    deadline_secs: f64,
 ) -> Result<(Vec<u32>, Vec<BoundedHeap>, u64, f64, f64)> {
     let n_queries: usize = cells.iter().map(|c| c.queries.len()).sum();
     let batch_queries: Vec<u32> = cells
@@ -1681,6 +2207,9 @@ fn exec_filter_cells(
     // former sync_channel depth (4/worker) bounded.
     let chunk_cap = n_workers * 8;
 
+    let fault = &params.fault;
+    let t_attempt = Instant::now();
+    let mut round = 0usize;
     let mut pairs_total = 0u64;
     let mut transfer_secs = 0f64;
     let mut filter_secs = 0f64;
@@ -1694,6 +2223,13 @@ fn exec_filter_cells(
         chunk_cap,
         kernel_time,
         &mut |raw: Vec<RawTile>| {
+            fault.exec_round(claim, round)?;
+            if let Some(e) = fault.transfer_fault(claim, round) {
+                return Err(e);
+            }
+            if fault.filter_panic(claim, round) {
+                panic!("injected filter panic (claim {claim}, round {round})");
+            }
             let t = Instant::now();
             let tiles = convert_tiles(raw)?;
             transfer_secs += t.elapsed().as_secs_f64();
@@ -1707,6 +2243,16 @@ fn exec_filter_cells(
                 n_workers,
             );
             filter_secs += t.elapsed().as_secs_f64();
+            round += 1;
+            let elapsed = t_attempt.elapsed().as_secs_f64();
+            if elapsed > deadline_secs {
+                return Err(WatchdogTimeout {
+                    claim,
+                    elapsed,
+                    deadline: deadline_secs,
+                }
+                .into());
+            }
             Ok(())
         },
     )?;

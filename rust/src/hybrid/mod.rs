@@ -41,6 +41,7 @@ use crate::core::{Dataset, KnnResult};
 use crate::cpu;
 use crate::data::variance::reorder_by_variance;
 use crate::epsilon::{EpsilonSelection, EpsilonSelector};
+use crate::fault::{FaultLog, FaultPlan, RecoveryPolicy};
 use crate::gpu::{self, DrainMode, GpuJoinParams, GpuJoinStats, ThreadAssign};
 use crate::index::{GridIndex, KdTree};
 use crate::runtime::{tiles::TileClass, Engine};
@@ -109,6 +110,13 @@ pub struct HybridParams {
     pub scheduler: Scheduler,
     /// seed for the sampled phases (ε selection)
     pub seed: u64,
+    /// deterministic fault-injection plan threaded into the GPU master's
+    /// drain stages (dynamic queue only; `FaultPlan::none()` - the
+    /// default - makes every hook a no-op branch on the hot path)
+    pub fault: FaultPlan,
+    /// claim-scoped recovery policy: retry/backoff bounds, the demotion
+    /// threshold, and the watchdog deadline shape (DESIGN.md §9)
+    pub recovery: RecoveryPolicy,
 }
 
 impl HybridParams {
@@ -134,6 +142,8 @@ impl HybridParams {
             query_fraction: 1.0,
             scheduler: Scheduler::DynamicQueue,
             seed: 0x4B1D,
+            fault: FaultPlan::none(),
+            recovery: RecoveryPolicy::default(),
         }
     }
 }
@@ -202,6 +212,22 @@ pub struct HybridReport {
     /// per-claim scheduling telemetry (dynamic queue only; empty under
     /// the static split)
     pub claims: Vec<ClaimRecord>,
+    /// GPU claim attempts that failed (injected or real): every retried
+    /// or reclaimed attempt counts once
+    pub gpu_faults: usize,
+    /// failed GPU claim attempts that were retried in place (bounded
+    /// exponential backoff, synchronous re-execution)
+    pub gpu_retries: usize,
+    /// grid cells whose claims exhausted their retries and were pushed
+    /// back through the Q^Fail recirculation buffer for the CPU ranks
+    pub reclaimed_cells: usize,
+    /// true when the GPU master demoted itself after
+    /// `RecoveryPolicy::demote_after` consecutive claim failures and the
+    /// run completed CPU-only from that point on
+    pub degraded: bool,
+    /// ordered per-fault recovery journal (what fired, on which claim,
+    /// which action the policy took)
+    pub fault_log: FaultLog,
 }
 
 /// The hybrid join engine.
@@ -343,6 +369,8 @@ impl HybridKnnJoin {
             estimator_frac: 0.01,
             exclude_self: self_join,
             drain: if hw > 1 { params.gpu_drain } else { DrainMode::Sync },
+            fault: params.fault.clone(),
+            recovery: params.recovery,
         };
         let mut result = KnnResult::new(r_data.len(), params.k);
         let slots = result.slots();
@@ -399,6 +427,10 @@ impl HybridKnnJoin {
         let (mut gpu_filter_overlap, mut gpu_transfer_overlap) = (0.0f64, 0.0f64);
         let mut claims: Vec<ClaimRecord> = Vec::new();
         let mut q_fail = 0usize;
+        let (mut gpu_faults, mut gpu_retries, mut reclaimed_cells) =
+            (0usize, 0usize, 0usize);
+        let mut degraded = false;
+        let mut fault_log = FaultLog::default();
         if let Some(g) = gpu_stats {
             gpu_kernel_time = g.kernel_time;
             gpu_batches = g.batches;
@@ -419,6 +451,11 @@ impl HybridKnnJoin {
                 .max(0.0);
             gpu_transfer_overlap = (total_overlap - gpu_filter_overlap).max(0.0);
             q_fail = g.failed.len();
+            gpu_faults = g.gpu_faults;
+            gpu_retries = g.gpu_retries;
+            reclaimed_cells = g.reclaimed_cells;
+            degraded = g.degraded;
+            fault_log = g.fault_log;
             claims.extend(g.claims);
         }
         let cpu_busy: f64 = cpu_out.claims.iter().map(|c| c.secs).sum();
@@ -485,6 +522,11 @@ impl HybridKnnJoin {
             gpu_filter_overlap,
             gpu_transfer_overlap,
             claims,
+            gpu_faults,
+            gpu_retries,
+            reclaimed_cells,
+            degraded,
+            fault_log,
         })
     }
 
@@ -537,8 +579,12 @@ impl HybridKnnJoin {
             exclude_self: self_join,
             // the static split uses the list-driven form, which ignores
             // the queue-drain mode - the static split is the
-            // whole-pipeline ablation baseline
+            // whole-pipeline ablation baseline; the claim-scoped fault
+            // machinery only exists for queue drains, so no plan is
+            // threaded here
             drain: DrainMode::Sync,
+            fault: FaultPlan::none(),
+            recovery: RecoveryPolicy::default(),
         };
         let mut result = KnnResult::new(r_data.len(), params.k);
         let slots = result.slots();
@@ -667,6 +713,11 @@ impl HybridKnnJoin {
             gpu_filter_overlap: 0.0,
             gpu_transfer_overlap: 0.0,
             claims: Vec::new(),
+            gpu_faults: 0,
+            gpu_retries: 0,
+            reclaimed_cells: 0,
+            degraded: false,
+            fault_log: FaultLog::default(),
         })
     }
 }

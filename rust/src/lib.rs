@@ -28,6 +28,8 @@ pub mod cpu;
 pub mod data;
 /// Empirical ε selection on the device (Sec. V-C).
 pub mod epsilon;
+/// Deterministic fault injection and the GPU master's recovery policy.
+pub mod fault;
 /// The GPU component: grid join, brute-force bound, device model.
 pub mod gpu;
 /// HYBRIDKNN-JOIN - Algorithm 1 end to end.
@@ -54,6 +56,10 @@ pub mod prelude {
         by_name, chist_like, fma_like, songs_like, susy_like, DatasetSpec,
     };
     pub use crate::epsilon::{EpsilonSelection, EpsilonSelector};
+    pub use crate::fault::{
+        FaultAction, FaultEvent, FaultKind, FaultLog, FaultPlan, FaultSpec,
+        InjectedFault, RecoveryPolicy, WatchdogTimeout,
+    };
     pub use crate::gpu::{
         brute_join_linear, gpu_join, join::gpu_join_rs, DrainMode, GpuJoinParams,
         ThreadAssign,

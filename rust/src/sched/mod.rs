@@ -143,6 +143,29 @@ pub fn next_batch_work(remaining_work: u64, gpu_rate: f64, cpu_rate: f64) -> u64
         .max(1)
 }
 
+/// Watchdog deadline for one GPU claim, in seconds: how long the master
+/// waits for a claim of `est_work` before declaring the device hung.
+/// The deadline is the live ρ^Model expectation (`est_work / rate`)
+/// inflated by `slack`, floored at `floor_secs` so cold-start noise and
+/// tiny claims never trip it. The rate is the GPU's own measured
+/// throughput when available, falling back to the CPU's (a device slower
+/// than the kd-tree ranks is as good as hung); with *no* rate evidence at
+/// all the deadline is infinite - the first claim can never time out on a
+/// misprediction, it has nothing to be mispredicted against.
+pub fn claim_deadline_secs(
+    est_work: u64,
+    gpu_rate: f64,
+    cpu_rate: f64,
+    slack: f64,
+    floor_secs: f64,
+) -> f64 {
+    let rate = if gpu_rate > 0.0 { gpu_rate } else { cpu_rate };
+    if rate <= 0.0 {
+        return f64::INFINITY;
+    }
+    (slack * est_work as f64 / rate).max(floor_secs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,5 +263,20 @@ mod tests {
         // floors: a vanishing share still claims the 1/64 slice (here 1)
         assert_eq!(next_batch_work(64, 1.0, 1e9), 1);
         assert_eq!(next_batch_work(0, 1.0, 1.0), 1);
+    }
+
+    #[test]
+    fn watchdog_deadline_scales_floors_and_defers() {
+        // live GPU rate: slack * est_work / rate
+        assert_eq!(claim_deadline_secs(1000, 100.0, 50.0, 8.0, 0.01), 80.0);
+        // no GPU evidence yet: fall back to the CPU rate
+        assert_eq!(claim_deadline_secs(1000, 0.0, 50.0, 8.0, 0.01), 160.0);
+        // no evidence at all: never trip on the very first claim
+        assert_eq!(
+            claim_deadline_secs(1000, 0.0, 0.0, 8.0, 0.01),
+            f64::INFINITY
+        );
+        // the floor absorbs tiny claims and cold-start noise
+        assert_eq!(claim_deadline_secs(1, 1e9, 0.0, 8.0, 5.0), 5.0);
     }
 }

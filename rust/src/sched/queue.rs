@@ -74,6 +74,12 @@ pub struct ClaimRecord {
     pub filter_secs: f64,
     /// true when the claim drained recirculated Q^Fail queries
     pub from_recirc: bool,
+    /// true when the claim failed on the GPU and its queries were pushed
+    /// back through Q^Fail (claim-scoped recovery): `queries` then counts
+    /// the *reclaimed* queries, which some CPU rank (or a later GPU
+    /// recirc claim) re-solves under its own record. Always false for
+    /// CPU claims.
+    pub failed: bool,
 }
 
 /// One grid cell's entry into the queue, pre-sorted by the builder

@@ -35,6 +35,21 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
+/// Lock a mutex, recovering the guard from a poisoned lock. Poisoning
+/// means some thread panicked while holding the guard - on the paths
+/// that use this, the panic is *already* being surfaced through its own
+/// channel (the pool's fail/recover machinery, a stage's error slot), so
+/// propagating the poison would only bury the first failure under a
+/// second opaque panic. Callers must tolerate the protected value being
+/// mid-update; the drains only guard Option slots, which are always
+/// structurally whole.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
 /// Run `ranks` workers; worker `k` receives its rank id. Results are
 /// returned in rank order. Panics propagate.
 pub fn run_ranks<T, F>(ranks: usize, f: F) -> Vec<T>
@@ -164,6 +179,10 @@ struct StageQueue<J> {
     /// a worker panicked: some round may never complete, so the blocking
     /// master entry points panic instead of waiting forever
     failed: bool,
+    /// recoverable mode only ([`stage_scope_recoverable`]): panics caught
+    /// in `process`, recorded as (lane, message) for the master to drain
+    /// via [`StageHandle::take_lane_panic`] at its per-lane resolve point
+    panics: Vec<(u64, String)>,
 }
 
 /// Hand-off between the master thread and the stage workers of a
@@ -199,6 +218,7 @@ impl<J: Send> StageHandle<J> {
                 retired: 0,
                 closed: false,
                 failed: false,
+                panics: Vec::new(),
             }),
             cv_space: Condvar::new(),
             cv_work: Condvar::new(),
@@ -280,10 +300,33 @@ impl<J: Send> StageHandle<J> {
     /// still run while another thread is unwinding (close, finish), so
     /// a panic stays a panic instead of becoming a deadlock or abort.
     fn lock_recover(&self) -> std::sync::MutexGuard<'_, StageQueue<J>> {
-        match self.shared.lock() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        }
+        lock_unpoisoned(&self.shared)
+    }
+
+    /// Recoverable mode: record a panic caught while processing an item
+    /// of round `uid`, keyed by the round's lane so the master can map it
+    /// back to a claim. Called while the item hold is still live, so the
+    /// round is guaranteed to still be queued.
+    fn note_panic(&self, uid: usize, msg: String) {
+        let mut g = self.lock_recover();
+        let lane = g
+            .rounds
+            .iter()
+            .find(|r| r.uid == uid)
+            .map(|r| r.lane)
+            .expect("note_panic: round already retired");
+        g.panics.push((lane, msg));
+    }
+
+    /// Recoverable mode: drain the first recorded panic of `lane`, if
+    /// any. The master calls this at its per-lane resolve point (after
+    /// [`wait_lane`](Self::wait_lane), so every round of the lane has
+    /// retired and any panic it suffered is visible) and turns a `Some`
+    /// into that lane's claim failure.
+    pub fn take_lane_panic(&self, lane: u64) -> Option<String> {
+        let mut g = self.lock_recover();
+        let i = g.panics.iter().position(|(l, _)| *l == lane)?;
+        Some(g.panics.remove(i).1)
     }
 
     /// Mark the pool closed and wake every worker; workers exit once the
@@ -449,6 +492,64 @@ pub fn stage_scope<J, S, W, T, I, P, R, G, M>(
     master: M,
 ) -> (T, Vec<W>)
 where
+    J: Send + Sync,
+    W: Send,
+    I: Fn(usize) -> S + Sync,
+    P: Fn(&mut S, &J, usize) + Sync,
+    R: Fn(&J, f64) + Sync,
+    G: Fn(S) -> W + Sync,
+    M: FnOnce(&StageHandle<J>) -> T,
+{
+    stage_scope_impl(workers, capacity, false, init, process, retire, fini, master)
+}
+
+/// [`stage_scope`] in *recoverable* mode: a panic inside `process` is
+/// caught (`catch_unwind`) instead of failing the pool. The item still
+/// counts as finished (the round retires normally, nothing deadlocks),
+/// the worker keeps drawing work, and the panic is recorded against the
+/// round's lane for the master to drain with
+/// [`StageHandle::take_lane_panic`] at its per-lane resolve point - the
+/// GPU drains turn it into that lane's claim failure instead of an
+/// aborted run. Any state the panicking item half-wrote (worker-local or
+/// in the round's job) is only reachable through the lane's claim, which
+/// the caller must discard once it sees the panic.
+///
+/// Panics in `init`, `retire`, `fini` and the master are NOT caught -
+/// those are harness bugs, not claim-scoped work.
+#[allow(clippy::too_many_arguments)]
+pub fn stage_scope_recoverable<J, S, W, T, I, P, R, G, M>(
+    workers: usize,
+    capacity: usize,
+    init: I,
+    process: P,
+    retire: R,
+    fini: G,
+    master: M,
+) -> (T, Vec<W>)
+where
+    J: Send + Sync,
+    W: Send,
+    I: Fn(usize) -> S + Sync,
+    P: Fn(&mut S, &J, usize) + Sync,
+    R: Fn(&J, f64) + Sync,
+    G: Fn(S) -> W + Sync,
+    M: FnOnce(&StageHandle<J>) -> T,
+{
+    stage_scope_impl(workers, capacity, true, init, process, retire, fini, master)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn stage_scope_impl<J, S, W, T, I, P, R, G, M>(
+    workers: usize,
+    capacity: usize,
+    recover: bool,
+    init: I,
+    process: P,
+    retire: R,
+    fini: G,
+    master: M,
+) -> (T, Vec<W>)
+where
     // Sync because items of one round fan out across workers: several
     // threads hold `&J` at once (through the pool's raw pointer).
     J: Send + Sync,
@@ -492,7 +593,25 @@ where
                         let _fin = FinishGuard(handle, retire, uid);
                         // SAFETY: `take` hands out a pointer that stays
                         // valid until the matching `finish` (see `take`).
-                        process(&mut state, unsafe { &*job }, item);
+                        if recover {
+                            // note_panic runs while `_fin` still holds the
+                            // item, so the round (and its lane) is still
+                            // queued; `_fin` then finishes the item on a
+                            // non-panicking thread - the pool stays alive.
+                            let r = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    process(&mut state, unsafe { &*job }, item)
+                                }),
+                            );
+                            if let Err(e) = r {
+                                handle.note_panic(
+                                    uid,
+                                    crate::fault::panic_message(e.as_ref()),
+                                );
+                            }
+                        } else {
+                            process(&mut state, unsafe { &*job }, item);
+                        }
                     }
                     fini(state)
                 })
@@ -899,6 +1018,86 @@ mod tests {
             );
         }));
         assert!(result.is_err(), "worker panic must propagate to the caller");
+    }
+
+    #[test]
+    fn recoverable_stage_pool_surfaces_panics_per_lane() {
+        // A worker panic in recoverable mode must NOT abort: the round
+        // retires, later rounds still run, and the panic is drained by
+        // lane at the master's resolve point.
+        let seen = AtomicUsize::new(0);
+        let ((), _) = stage_scope_recoverable(
+            2,
+            4,
+            |_w| (),
+            |_s, job: &u64, i| {
+                if *job == 1 && i == 1 {
+                    panic!("injected filter panic (lane {job})");
+                }
+                seen.fetch_add(1, Ordering::Relaxed);
+            },
+            |_job, _wall| {},
+            |_s| (),
+            |h| {
+                h.submit(0u64, 3, 0);
+                h.submit(1u64, 3, 1);
+                h.submit(1u64, 2, 1); // lane 1 keeps running after the panic
+                h.wait_lane(0);
+                h.wait_lane(1);
+                assert!(h.take_lane_panic(0).is_none(), "lane 0 was clean");
+                let msg = h.take_lane_panic(1).expect("lane 1 panic recorded");
+                assert!(msg.contains("injected filter panic"), "{msg}");
+                assert!(h.take_lane_panic(1).is_none(), "drained exactly once");
+            },
+        );
+        // 3 + 3 + 2 items, one of which panicked instead of counting
+        assert_eq!(seen.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn recoverable_stage_pool_completes_all_rounds() {
+        // every round retires even when several items panic across lanes
+        let ((), _) = stage_scope_recoverable(
+            3,
+            2,
+            |_w| (),
+            |_s, job: &u64, _i| {
+                if *job % 2 == 0 {
+                    panic!("boom");
+                }
+            },
+            |_job, _wall| {},
+            |_s| (),
+            |h| {
+                for lane in 0..6u64 {
+                    h.submit(lane, 2, lane);
+                }
+                h.drain();
+                assert_eq!(h.retired(), 6);
+                for lane in [0u64, 2, 4] {
+                    // two panicking items per even lane, drained in order
+                    assert!(h.take_lane_panic(lane).is_some());
+                    assert!(h.take_lane_panic(lane).is_some());
+                    assert!(h.take_lane_panic(lane).is_none());
+                }
+                for lane in [1u64, 3, 5] {
+                    assert!(h.take_lane_panic(lane).is_none());
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn lock_unpoisoned_recovers_the_value() {
+        let m = std::sync::Mutex::new(41);
+        let m = &m;
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(m.lock().is_err(), "lock must actually be poisoned");
+        *lock_unpoisoned(m) += 1;
+        assert_eq!(*lock_unpoisoned(m), 42);
     }
 
     #[test]

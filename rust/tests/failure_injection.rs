@@ -1,8 +1,10 @@
 //! Failure injection: the runtime must fail loudly and cleanly on broken
-//! artifact trees, the engines must behave on degenerate inputs, and the
+//! artifact trees, the engines must behave on degenerate inputs, the
 //! queue's Q^Fail recirculation contract must survive the pipelined
 //! master's interleaving (claim i's failures published only after claim
-//! i+1 was taken).
+//! i+1 was taken), and the fault subsystem's claim-scoped recovery must
+//! keep the join's answer and its exactly-once accounting intact under
+//! injected exec/transfer/filter/stall faults (DESIGN.md §9).
 
 use std::fs;
 use std::path::PathBuf;
@@ -16,6 +18,19 @@ fn tmp_dir(name: &str) -> PathBuf {
     let p = std::env::temp_dir().join(format!("hknn_fi_{}_{name}", std::process::id()));
     fs::create_dir_all(&p).unwrap();
     p
+}
+
+/// CI's chaos matrix pins the GPU drain's pipeline depth via
+/// `HKNN_FAULT_DEPTH` (1 = sync, 2 = two-stage, 3 = three-stage) so the
+/// recovery paths run under every drain's interleaving; unset, the fault
+/// tests pick their own drains.
+fn pinned_drain() -> Option<DrainMode> {
+    match std::env::var("HKNN_FAULT_DEPTH").ok().as_deref() {
+        Some("1") => Some(DrainMode::Sync),
+        Some("2") => Some(DrainMode::TwoStage),
+        Some("3") => Some(DrainMode::ThreeStage),
+        _ => None,
+    }
 }
 
 #[test]
@@ -237,6 +252,197 @@ fn deferred_recirculation_never_loses_or_duplicates_queries() {
         );
         assert!(queue.claimed_tail() >= reserve, "ρ reserve stays CPU-owned");
     });
+}
+
+#[test]
+fn persistent_gpu_fault_claim0_completes_cpu_only_bit_identical() {
+    // The acceptance scenario: a device that errors on every attempt of
+    // every claim. The master reclaims claim 0, demotes itself, and the
+    // CPU ranks absorb the abandoned head plus the recirculated queries -
+    // the run completes, reports the faults, and the KNN table is
+    // BIT-identical to a forced-CPU-only run (degradation changes who
+    // computes, never what: both paths end in the same kd-tree search).
+    let engine = Engine::load_default().unwrap();
+    let data = susy_like(600).generate(0xDE6);
+    let mut base = HybridParams::new(4);
+    base.cpu_ranks = 2;
+    if let Some(d) = pinned_drain() {
+        base.gpu_drain = d;
+    }
+
+    // the reference: ρ = 1.0 schedules the pure-CPU run up front
+    let mut p_cpu = base.clone();
+    p_cpu.rho = 1.0;
+    let want = HybridKnnJoin::run(&engine, &data, &p_cpu).unwrap();
+
+    let mut p = base.clone();
+    p.fault = FaultPlan::one(FaultSpec::persistent(FaultKind::ExecError, 0));
+    p.recovery.retry_limit = 0; // a dead device earns no retries
+    p.recovery.demote_after = 1; // demote on the first reclaim
+    p.recovery.backoff_base_secs = 0.0;
+    let rep = HybridKnnJoin::run(&engine, &data, &p).unwrap();
+
+    assert!(rep.degraded, "persistent fault must demote the GPU master");
+    assert_eq!(rep.solved_on_gpu, 0, "a dead device solves nothing");
+    assert!(rep.gpu_faults >= 1, "the fault must be visible in the report");
+    assert_eq!(rep.gpu_retries, 0);
+    assert!(rep.reclaimed_cells >= 1, "the failed claim's cells recirculated");
+    assert_eq!(rep.fault_log.count(FaultAction::Demoted), 1);
+    assert!(rep.fault_log.count(FaultAction::Reclaimed) >= 1);
+    assert!(
+        rep.fault_log.events.iter().all(|e| e.kind == FaultKind::ExecError),
+        "only the injected kind may appear: {:?}",
+        rep.fault_log.events
+    );
+    assert_eq!(rep.q_fail + rep.solved_on_gpu, rep.q_gpu, "accounting closed");
+    assert_eq!(rep.result.solved_count(4), data.len());
+    for q in 0..data.len() {
+        let (a, b) = (rep.result.get(q), want.result.get(q));
+        assert_eq!(a.len(), b.len(), "q={q}");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.id, y.id, "q={q}");
+            assert_eq!(
+                x.dist2.to_bits(),
+                y.dist2.to_bits(),
+                "q={q}: degraded run must be bit-identical to CPU-only"
+            );
+        }
+    }
+}
+
+#[test]
+fn transient_faults_are_retried_in_place() {
+    // One transient fault per stage kind: the master retries the claim
+    // synchronously (spec disarmed, retry clean), nothing recirculates,
+    // no demotion, and the output matches the fault-free run.
+    let engine = Engine::load_default().unwrap();
+    let data = susy_like(500).generate(0x7E57);
+    let mut base = HybridParams::new(3);
+    base.cpu_ranks = 2;
+    if let Some(d) = pinned_drain() {
+        base.gpu_drain = d;
+    }
+    let want = HybridKnnJoin::run(&engine, &data, &base).unwrap();
+
+    for kind in [
+        FaultKind::ExecError,
+        FaultKind::TransferError,
+        FaultKind::FilterPanic,
+    ] {
+        let mut p = base.clone();
+        p.fault = FaultPlan::one(FaultSpec::transient(kind, 0, 0));
+        p.recovery.backoff_base_secs = 0.0; // no point sleeping in tests
+        let rep = HybridKnnJoin::run(&engine, &data, &p).unwrap();
+        assert!(!rep.degraded, "{kind}: one transient must not demote");
+        assert_eq!(rep.gpu_retries, 1, "{kind}: exactly one retry");
+        assert_eq!(rep.gpu_faults, 1, "{kind}");
+        assert_eq!(rep.fault_log.count(FaultAction::Retried), 1, "{kind}");
+        assert_eq!(rep.fault_log.count(FaultAction::Reclaimed), 0, "{kind}");
+        assert_eq!(rep.reclaimed_cells, 0, "{kind}");
+        assert_eq!(rep.result.solved_count(3), data.len(), "{kind}");
+        for q in (0..data.len()).step_by(17) {
+            let (a, b) = (rep.result.get(q), want.result.get(q));
+            assert_eq!(a.len(), b.len(), "{kind} q={q}");
+            for (x, y) in a.iter().zip(b) {
+                assert!(
+                    (x.dist2 - y.dist2).abs() < 1e-4 * (1.0 + y.dist2),
+                    "{kind} q={q}: retried run diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn randomized_fault_plans_preserve_results_and_accounting() {
+    // The recovery property: under ANY seeded mix of transient faults
+    // (kinds x claims x rounds, all three drain modes) the join completes
+    // with the fault-free answer and the exactly-once accounting intact -
+    // solved and recirculated queries partition the claims, nothing lost,
+    // nothing double-counted.
+    let engine = Engine::load_default().unwrap();
+    let drains = [DrainMode::Sync, DrainMode::TwoStage, DrainMode::ThreeStage];
+    prop::cases(6, 0xFA17, |rng| {
+        let n = 300 + rng.below(400);
+        let data = susy_like(n).generate(rng.next_u64());
+        let mut base = HybridParams::new(3);
+        base.cpu_ranks = 1 + rng.below(2);
+        base.gamma = rng.f64() * 0.5;
+        base.rho = rng.f64() * 0.3;
+        base.gpu_drain = pinned_drain().unwrap_or(drains[rng.below(3)]);
+        let want = HybridKnnJoin::run(&engine, &data, &base).unwrap();
+
+        let mut p = base.clone();
+        p.fault = FaultPlan::random(rng);
+        p.recovery.backoff_base_secs = 0.0;
+        let rep = HybridKnnJoin::run(&engine, &data, &p).unwrap();
+
+        // exactly-once accounting under injected faults
+        assert_eq!(rep.q_gpu + rep.q_cpu, n, "head/tail partition");
+        assert_eq!(rep.solved_on_gpu + rep.q_fail, rep.q_gpu, "gpu side closed");
+        assert_eq!(rep.result.solved_count(3), n, "every query solved");
+        let claimed: usize = rep.claims.iter().map(|c| c.queries).sum();
+        assert_eq!(claimed, n + rep.q_fail, "claims + recirculated");
+        assert_eq!(
+            rep.gpu_faults,
+            rep.fault_log.count(FaultAction::Retried)
+                + rep.fault_log.count(FaultAction::Reclaimed),
+            "fault counter mirrors the log"
+        );
+        // results match the fault-free run
+        for q in (0..n).step_by(7) {
+            let (a, b) = (rep.result.get(q), want.result.get(q));
+            assert_eq!(a.len(), b.len(), "q={q}");
+            for (x, y) in a.iter().zip(b) {
+                assert!(
+                    (x.dist2 - y.dist2).abs() < 1e-4 * (1.0 + y.dist2),
+                    "q={q}: faulted run diverged (drain {:?})",
+                    base.gpu_drain
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn stalled_exec_trips_watchdog_and_degrades() {
+    // A device that hangs mid-claim: the exec hook sleeps 0.5 s per
+    // round from claim 1 on. With the deadline floored at 0.2 s (and
+    // slack zeroed so the floor IS the deadline once rate evidence
+    // exists), the round-boundary watchdog trips, the claim reclaims
+    // (retry budget 0), and one reclaim demotes the master. Claim 0 is
+    // deliberately clean: the first claim has no rate evidence and so -
+    // by design - can never time out.
+    let engine = Engine::load_default().unwrap();
+    let data = susy_like(700).generate(0x57A1);
+    let mut p = HybridParams::new(3);
+    p.cpu_ranks = 1;
+    if let Some(d) = pinned_drain() {
+        p.gpu_drain = d;
+    }
+    let mut spec = FaultSpec::persistent(FaultKind::StallTimeout, 1);
+    spec.stall_secs = 0.5;
+    p.fault = FaultPlan::one(spec);
+    p.recovery.retry_limit = 0;
+    p.recovery.demote_after = 1;
+    p.recovery.backoff_base_secs = 0.0;
+    p.recovery.watchdog_slack = 0.0;
+    p.recovery.watchdog_min_secs = 0.2;
+    let rep = HybridKnnJoin::run(&engine, &data, &p).unwrap();
+
+    assert!(rep.degraded, "a stalled device must demote the master");
+    assert!(
+        rep.fault_log
+            .events
+            .iter()
+            .any(|e| e.kind == FaultKind::StallTimeout),
+        "the watchdog trip must be logged as a stall: {:?}",
+        rep.fault_log.events
+    );
+    assert_eq!(rep.fault_log.count(FaultAction::Demoted), 1);
+    assert_eq!(rep.result.solved_count(3), data.len(), "run still completes");
+    assert_eq!(rep.q_gpu + rep.q_cpu, data.len());
+    assert_eq!(rep.solved_on_gpu + rep.q_fail, rep.q_gpu);
 }
 
 #[test]

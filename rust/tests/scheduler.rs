@@ -549,6 +549,125 @@ fn concurrent_drain_with_recirc_partitions_queries() {
     });
 }
 
+/// The retry backoff is a bounded exponential: doubling per attempt from
+/// the base, clamped at the cap, and degenerate (zero) bases stay zero -
+/// the shape the GPU master sleeps on between claim retries.
+#[test]
+fn retry_backoff_is_bounded_exponential() {
+    let p = RecoveryPolicy::default();
+    assert_eq!(p.backoff_secs(0), p.backoff_base_secs);
+    assert_eq!(p.backoff_secs(1), p.backoff_base_secs * 2.0);
+    assert_eq!(p.backoff_secs(2), p.backoff_base_secs * 4.0);
+    // monotone non-decreasing up to the cap, then flat
+    let mut last = 0.0;
+    for a in 0..40 {
+        let b = p.backoff_secs(a);
+        assert!(b >= last, "attempt {a}: backoff must not shrink");
+        assert!(b <= p.backoff_cap_secs, "attempt {a}: cap violated");
+        last = b;
+    }
+    assert_eq!(p.backoff_secs(30), p.backoff_cap_secs);
+    // a zeroed base (the test configuration) never sleeps
+    let mut q = p;
+    q.backoff_base_secs = 0.0;
+    assert_eq!(q.backoff_secs(7), 0.0);
+}
+
+/// Graceful degradation at the scheduling layer, deterministically: a GPU
+/// master that reclaims its current claim and stops mid-head (the demoted
+/// master's exit) leaves a queue the CPU ranks fully absorb - abandoned
+/// head work via tail claims, the reclaimed queries via recirculation -
+/// with the exactly-once partition intact.
+#[test]
+fn demoted_master_leaves_a_drainable_queue() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    prop::cases(6, 0xDE6A, |rng| {
+        let n = 500 + rng.below(1000);
+        let d = susy_like(n).generate(rng.next_u64());
+        let grid = GridIndex::build(&d, 6, 1.5 + rng.f64() * 2.0);
+        let queries: Vec<u32> = (0..d.len() as u32).collect();
+        let queue =
+            build_queue(&d, &grid, &queries, 4, rng.f64(), rng.f64() * 0.3, true);
+        let ranks = 1 + rng.below(3);
+        let chunk = 8 + rng.below(24);
+        // the master survives 0..3 claims before its "device" dies
+        let good_claims = rng.below(4);
+        let solved: Vec<AtomicUsize> =
+            (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let mut reclaimed = 0usize;
+
+        std::thread::scope(|scope| {
+            {
+                let (queue, solved) = (&queue, &solved);
+                let reclaimed = &mut reclaimed;
+                scope.spawn(move || {
+                    let mut target = first_batch_work(
+                        queue.head_work_remaining(queue.len()),
+                        queue.dense_work(),
+                    );
+                    let mut done = 0usize;
+                    while let Some(r) = queue.claim_head_work(target, queue.len())
+                    {
+                        if done == good_claims {
+                            // the demotion path: the failed claim's queries
+                            // recirculate, the master abandons the head
+                            let qs = queue.query_slice(r.clone()).to_vec();
+                            *reclaimed = qs.len();
+                            queue.push_failed(&qs);
+                            break;
+                        }
+                        for &q in queue.query_slice(r.clone()) {
+                            solved[q as usize].fetch_add(1, Ordering::Relaxed);
+                        }
+                        done += 1;
+                        target = next_batch_work(
+                            queue.head_work_remaining(queue.len()),
+                            1.0,
+                            queue.cpu_work_rate(),
+                        );
+                    }
+                    queue.set_gpu_done();
+                });
+            }
+            for _ in 0..ranks {
+                let (queue, solved) = (&queue, &solved);
+                scope.spawn(move || loop {
+                    let done = queue.gpu_done();
+                    if let Some(r) = queue.claim_tail(chunk) {
+                        for &q in queue.query_slice(r) {
+                            solved[q as usize].fetch_add(1, Ordering::Relaxed);
+                        }
+                        continue;
+                    }
+                    if let Some(ids) = queue.claim_recirc(chunk) {
+                        for q in ids {
+                            solved[q as usize].fetch_add(1, Ordering::Relaxed);
+                        }
+                        continue;
+                    }
+                    if done {
+                        break;
+                    }
+                    std::thread::yield_now();
+                });
+            }
+        });
+
+        for (q, s) in solved.iter().enumerate() {
+            assert_eq!(
+                s.load(Ordering::Relaxed),
+                1,
+                "query {q} resolved {} times after demotion (n={n} \
+                 good_claims={good_claims})",
+                s.load(Ordering::Relaxed)
+            );
+        }
+        assert_eq!(queue.claimed_head() + queue.claimed_tail(), n);
+        assert_eq!(queue.recirc_pushed(), reclaimed, "reclaim published once");
+    });
+}
+
 /// γ/ρ reinterpretation sanity: the dense prefix shrinks monotonically in
 /// γ (it is the static Q^GPU) and the reserve is exactly the ρ floor.
 #[test]
