@@ -1,0 +1,224 @@
+//! Backend-crossover bench: the grid-hybrid GPU tier vs the tiled
+//! brute-force tier vs the Auto router, swept over the indexed
+//! dimensionality m at fixed |D| and K (the router's other two inputs).
+//!
+//! The grid tier's cost grows with m - 3^m adjacent-cell walks, more and
+//! smaller cells, more per-tile fixed cost - while the brute tier's
+//! corpus scan is m-independent, so past some m the brute tier wins and
+//! the per-claim router is supposed to find that crossover on its own.
+//! All three runs drive the same queue through `gpu_join_drain` (GPU
+//! only: no CPU ranks, so the tiers are timed in isolation) over the
+//! same grid and tile plans; only `params.backend` differs.
+//!
+//! Result verification is baked in and gated (`verified` column):
+//!
+//! * within a workload, the forced-Brute table is checksum-identical
+//!   across every m (the corpus scan never consults the grid, so m may
+//!   only reorder claims, never change a slot);
+//! * grid-solved queries match the brute table bit for bit (both tiers
+//!   compute the same f32 device distances), grid-failed slots are
+//!   empty, and the Auto run satisfies the same split per query.
+//!
+//! The tracked ratio column `auto_vs_best = min(grid, brute) / auto` is
+//! same-run relative (machine-portable): ~1.0 when the router matches
+//! the better forced backend on both sides of the crossover. Emits
+//! `BENCH_backend.json`, regression-gated against
+//! `benches/baselines/BENCH_backend.json` in CI.
+//!
+//!   cargo bench --bench backend
+
+use std::time::Instant;
+
+use hybrid_knn_join::gpu::join::gpu_join_drain;
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::util::json::Json;
+
+const K: usize = 8;
+
+/// One timed GPU-only drain of the given queue with a forced backend.
+fn run_drain(
+    engine: &Engine,
+    data: &Dataset,
+    grid: &GridIndex,
+    queue: &WorkQueue,
+    eps: f64,
+    backend: BackendMode,
+) -> (KnnResult, hybrid_knn_join::gpu::GpuJoinStats, f64) {
+    let mut params = GpuJoinParams::new(K, eps);
+    params.backend = backend;
+    // several claims per run, so the router decides more than once
+    params.buffer_pairs = 100_000;
+    let mut result = KnnResult::new(data.len(), K);
+    let slots = result.slots();
+    let t = Instant::now();
+    let stats = gpu_join_drain(
+        engine, data, data, grid, queue, &params, &slots,
+        queue.len(),
+    )
+    .expect("drain");
+    let secs = t.elapsed().as_secs_f64();
+    drop(slots);
+    assert_eq!(
+        stats.solved + stats.failed.len(),
+        data.len(),
+        "{backend:?}: exactly-once accounting"
+    );
+    (result, stats, secs)
+}
+
+/// Grid-solved slots must equal the brute table bit for bit; failed
+/// slots must be untouched (the brute tier has no ε gate, so its table
+/// is the full-K reference for every query).
+fn verify_against_brute(
+    res: &KnnResult,
+    failed: &[u32],
+    brute: &KnnResult,
+    ctx: &str,
+) {
+    let failed: std::collections::HashSet<u32> = failed.iter().copied().collect();
+    for q in 0..res.len() {
+        let (a, b) = (res.get(q), brute.get(q));
+        if failed.contains(&(q as u32)) {
+            assert_eq!(a.len(), 0, "{ctx}: q={q} failed slot written");
+        } else {
+            assert_eq!(a.ids(), b.ids(), "{ctx}: q={q} id lane");
+            assert_eq!(a.dist2s(), b.dist2s(), "{ctx}: q={q} dist2 lane");
+        }
+    }
+}
+
+fn main() {
+    let engine = Engine::load_default().expect("run `make artifacts` first");
+
+    // fixed |D| and K; only m (the third router input) sweeps
+    let susy = susy_like(2_400).generate(0xBE01);
+    let chist = chist_like(2_000).generate(0xBE02);
+    let susy_eps = EpsilonSelector::default().select_host(&susy, K, 0.0).eps;
+    let chist_eps = EpsilonSelector::default().select_host(&chist, K, 0.2).eps;
+    let workloads: Vec<(&str, &Dataset, f64)> = vec![
+        ("susy_uniform", &susy, susy_eps),
+        ("chist_skewed", &chist, chist_eps),
+    ];
+    let ms = [2usize, 4, 6, 8];
+
+    // warm the executable cache so no timed run pays compilation
+    {
+        let warm = susy_like(300).generate(1);
+        let grid = GridIndex::build(&warm, 2, susy_eps);
+        let queries: Vec<u32> = (0..warm.len() as u32).collect();
+        let queue = build_queue(&warm, &grid, &queries, K, 0.0, 0.0, true);
+        for backend in [BackendMode::Grid, BackendMode::Brute] {
+            let _ = run_drain(&engine, &warm, &grid, &queue, susy_eps, backend);
+        }
+    }
+
+    let mut rows = Vec::new();
+    println!(
+        "backend crossover: grid tier vs brute tier vs Auto router, m sweep \
+         at fixed |D| and K={K}"
+    );
+    println!(
+        "{:>14} {:>3} {:>9} {:>9} {:>9} {:>8} {:>9} {:>11}",
+        "workload", "m", "grid s", "brute s", "auto s", "brute x",
+        "auto/best", "auto g/b"
+    );
+    for &(name, data, eps) in &workloads {
+        let queries: Vec<u32> = (0..data.len() as u32).collect();
+        let mut brute_sum: Option<u64> = None;
+        let mut crossover_m: Option<usize> = None;
+        for &m in &ms {
+            let ctx = format!("{name} m={m}");
+            let grid = GridIndex::build(data, m, eps);
+            let queue = build_queue(data, &grid, &queries, K, 0.0, 0.0, true);
+
+            let (grid_res, grid_stats, grid_secs) =
+                run_drain(&engine, data, &grid, &queue, eps, BackendMode::Grid);
+            let (brute_res, brute_stats, brute_secs) =
+                run_drain(&engine, data, &grid, &queue, eps, BackendMode::Brute);
+            let (auto_res, auto_stats, auto_secs) =
+                run_drain(&engine, data, &grid, &queue, eps, BackendMode::Auto);
+
+            // -- verification (the `verified` column is gated in CI) --
+            assert_eq!(grid_stats.brute_claims, 0, "{ctx}");
+            assert_eq!(brute_stats.grid_claims, 0, "{ctx}");
+            assert!(brute_stats.failed.is_empty(), "{ctx}: no ε gate");
+            assert_eq!(brute_res.solved_count(K), data.len(), "{ctx}");
+            let sum = brute_res.checksum();
+            match brute_sum {
+                None => brute_sum = Some(sum),
+                Some(s) => assert_eq!(
+                    s, sum,
+                    "{ctx}: brute table must not depend on m"
+                ),
+            }
+            verify_against_brute(&grid_res, &grid_stats.failed, &brute_res, &ctx);
+            verify_against_brute(&auto_res, &auto_stats.failed, &brute_res, &ctx);
+
+            let brute_speedup = grid_secs / brute_secs.max(1e-12);
+            if crossover_m.is_none() && brute_speedup > 1.0 {
+                crossover_m = Some(m);
+            }
+            let best = grid_secs.min(brute_secs);
+            let auto_vs_best = best / auto_secs.max(1e-12);
+            println!(
+                "{:>14} {:>3} {:>9.4} {:>9.4} {:>9.4} {:>7.2}x {:>9.2} {:>5}/{:<5}",
+                name, m, grid_secs, brute_secs, auto_secs, brute_speedup,
+                auto_vs_best, auto_stats.grid_claims, auto_stats.brute_claims
+            );
+            rows.push(Json::obj(vec![
+                ("workload", Json::Str(name.into())),
+                ("m", Json::Num(m as f64)),
+                ("n", Json::Num(data.len() as f64)),
+                ("k", Json::Num(K as f64)),
+                ("eps", Json::Num(eps)),
+                ("grid_secs", Json::Num(grid_secs)),
+                ("brute_secs", Json::Num(brute_secs)),
+                ("auto_secs", Json::Num(auto_secs)),
+                // >1.0: the brute tier beat the grid tier at this m
+                ("brute_speedup", Json::Num(brute_speedup)),
+                // tracked: ~1.0 when Auto matches the better backend
+                ("auto_vs_best", Json::Num(auto_vs_best)),
+                // 1.0 iff every in-memory cross-check above passed (the
+                // asserts abort the bench otherwise, so a row that
+                // reaches the JSON is verified by construction)
+                ("verified", Json::Num(1.0)),
+                ("grid_q_fail", Json::Num(grid_stats.failed.len() as f64)),
+                ("brute_tiles", Json::Num(brute_stats.brute_tiles as f64)),
+                ("auto_grid_claims", Json::Num(auto_stats.grid_claims as f64)),
+                ("auto_brute_claims", Json::Num(auto_stats.brute_claims as f64)),
+                (
+                    "brute_checksum",
+                    Json::Str(format!("{:016x}", sum)),
+                ),
+            ]));
+        }
+        match crossover_m {
+            Some(m) => println!("  {name}: brute tier wins from m={m}"),
+            None => println!("  {name}: grid tier won at every swept m"),
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("backend".into())),
+        (
+            "baseline",
+            Json::Str(
+                "forced single-tier drains (backend=grid / backend=brute) \
+                 over the identical queue, grid and tile plans"
+                    .into(),
+            ),
+        ),
+        (
+            "contender",
+            Json::Str(
+                "backend=auto: the per-claim router picking a tier from \
+                 (m, K, claimed candidate density) at claim time"
+                    .into(),
+            ),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_backend.json", doc.to_string() + "\n")
+        .expect("write BENCH_backend.json");
+    println!("wrote BENCH_backend.json");
+}

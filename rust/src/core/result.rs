@@ -262,6 +262,36 @@ impl KnnResult {
         self.counts.iter().map(|&c| c as usize).sum()
     }
 
+    /// Order-sensitive FNV-1a checksum over the whole table: per-query
+    /// counts, id lanes and dist² bit patterns, in query order. Two
+    /// tables compare equal iff their checksums do (up to hash
+    /// collisions), which lets the benches assert result equivalence
+    /// across runs without shipping full tables into the JSON. Note
+    /// dist² enters as raw bits: results that agree only up to
+    /// float-rounding (e.g. CPU f64 vs GPU f32 solves of the same
+    /// query) hash differently by design.
+    pub fn checksum(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn eat(mut h: u64, word: u64) -> u64 {
+            for i in 0..8 {
+                h ^= (word >> (8 * i)) & 0xff;
+                h = h.wrapping_mul(PRIME);
+            }
+            h
+        }
+        let mut h = eat(eat(OFFSET, self.counts.len() as u64), self.k as u64);
+        for (q, &c) in self.counts.iter().enumerate() {
+            h = eat(h, c as u64);
+            let base = q * self.k;
+            for i in base..base + c as usize {
+                h = eat(h, self.ids[i] as u64);
+                h = eat(h, self.dist2[i].to_bits());
+            }
+        }
+        h
+    }
+
     /// Disjoint-slot writer factory for concurrent in-place result
     /// emission. Holds the table mutably borrowed until dropped.
     pub fn slots(&mut self) -> SoaSlots<'_> {
@@ -572,6 +602,25 @@ mod tests {
         }
         assert_eq!(by_for, vec![1.0, 2.0, 3.0]);
         assert_eq!(v.to_vec().len(), 3);
+    }
+
+    #[test]
+    fn checksum_distinguishes_and_matches() {
+        let mut a = KnnResult::new(3, 2);
+        let mut b = KnnResult::new(3, 2);
+        for r in [&mut a, &mut b] {
+            r.set(0, &[nb(1, 1.0)]);
+            r.set(2, &[nb(5, 0.5), nb(6, 2.5)]);
+        }
+        assert_eq!(a.checksum(), b.checksum(), "equal tables, equal sums");
+        b.set(1, &[nb(9, 9.0)]);
+        assert_ne!(a.checksum(), b.checksum(), "extra solve changes the sum");
+        b.set(1, &[]);
+        // count-0 lanes are excluded, so clearing restores equality even
+        // though the id/dist lanes still hold the stale entries
+        assert_eq!(a.checksum(), b.checksum());
+        b.set(2, &[nb(5, 0.5), nb(6, 2.5 + 1e-12)]);
+        assert_ne!(a.checksum(), b.checksum(), "dist bits are significant");
     }
 
     #[test]

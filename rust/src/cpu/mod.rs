@@ -241,6 +241,7 @@ pub fn exact_ann_drain(
                         transfer_secs: 0.0,
                         filter_secs: 0.0,
                         from_recirc: false,
+                        brute: false,
                         failed: false,
                     });
                     tail_q += qs.len();
@@ -266,6 +267,7 @@ pub fn exact_ann_drain(
                         transfer_secs: 0.0,
                         filter_secs: 0.0,
                         from_recirc: true,
+                        brute: false,
                         failed: false,
                     });
                     rec_q += ids.len();

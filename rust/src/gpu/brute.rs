@@ -1,13 +1,119 @@
-//! GPU-JOINLINEAR (paper Sec. VI-D): the brute-force O(|D|^2) self-join
-//! lower bound. Every query scans every point; no index. Used to show
-//! where index pruning wins (Fig. 7 - flat in ε - and Fig. 11).
+//! Brute-force GPU tier: the O(|D|^2) all-scan join of paper Sec. VI-D,
+//! in two forms.
+//!
+//! [`brute_join_linear`] is the standalone measurement loop - every query
+//! scans every point, no index, kernel work independent of ε (Fig. 7's
+//! flat curve, the lower bound of Fig. 11).
+//!
+//! [`BruteCache`] + [`brute_join_tiled`] are the *production* form: the
+//! drain in [`super::join`] routes whole claims onto the brute tier (high
+//! m / high k, where grid candidate lists approach the corpus anyway -
+//! DESIGN.md §10), and those claims execute through the same tiled,
+//! pipelined three-stage machinery as grid claims. The cache packs the
+//! corpus into candidate tiles once per drain and shares the uploaded
+//! literals across every brute claim, so the tier's per-claim cost is
+//! query packing + kernels only.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::core::{BoundedHeap, Dataset, KnnResult, Neighbor};
+use crate::index::GridIndex;
 use crate::runtime::{tiles, tiles::TileClass, Engine};
+use crate::sched::{self, BackendMode};
+
+/// Lazily packed, device-resident candidate tiles covering the whole
+/// corpus, shared by every brute-routed claim of one drain.
+///
+/// The corpus never changes within a drain, so the tiles are built once
+/// (on the first brute claim - grid-only drains pay nothing) and the
+/// uploaded literals are reused by every subsequent brute tile. Chunk
+/// ids are the contiguous ranges `start..start+len`, packed via
+/// [`tiles::pack_candidate_range`] without materialising an id list.
+pub(crate) struct BruteCache {
+    ct: usize,
+    d_pad: usize,
+    chunks: Vec<(Vec<u32>, xla::Literal)>,
+    built: bool,
+}
+
+impl BruteCache {
+    /// Empty cache; nothing is packed until [`Self::ensure`].
+    pub(crate) fn new() -> Self {
+        BruteCache { ct: 0, d_pad: 0, chunks: Vec::new(), built: false }
+    }
+
+    /// Return the corpus candidate tiles for tile shape `(ct, d_pad)`,
+    /// packing and uploading them on first use. The tile plan is a
+    /// function of the dataset dimensionality alone, so one drain only
+    /// ever asks for one shape (debug-asserted).
+    pub(crate) fn ensure(
+        &mut self,
+        data: &Dataset,
+        ct: usize,
+        d_pad: usize,
+    ) -> Result<&[(Vec<u32>, xla::Literal)]> {
+        if self.built {
+            debug_assert_eq!(
+                (self.ct, self.d_pad),
+                (ct, d_pad),
+                "tile plan changed mid-drain"
+            );
+            return Ok(&self.chunks);
+        }
+        let n = data.len();
+        let mut buf: Vec<f32> = Vec::new();
+        let mut start = 0usize;
+        while start < n {
+            let len = ct.min(n - start);
+            tiles::pack_candidate_range(&mut buf, data, start as u32, len, ct, d_pad);
+            let lit = Engine::literal(&buf, &[ct as i64, d_pad as i64])?;
+            let ids: Vec<u32> = (start as u32..(start + len) as u32).collect();
+            self.chunks.push((ids, lit));
+            start += len;
+        }
+        self.ct = ct;
+        self.d_pad = d_pad;
+        self.built = true;
+        Ok(&self.chunks)
+    }
+}
+
+/// Exact k-NN over `queries` on the tiled, pipelined brute tier: builds a
+/// degenerate single-cell grid (the drain needs an index for claim
+/// bookkeeping, not for pruning) and runs the queue drain with the
+/// backend forced to [`BackendMode::Brute`], so every claim takes the
+/// corpus-scan path through the cache. This is the standalone entry the
+/// backend benches and equivalence tests drive; the hybrid engine reaches
+/// the same code through per-claim routing instead.
+pub fn brute_join_tiled(
+    engine: &Engine,
+    data: &Dataset,
+    queries: &[u32],
+    params: &super::join::GpuJoinParams,
+) -> Result<(KnnResult, super::join::GpuJoinStats)> {
+    // One cell spanning everything: side length >= the data extent makes
+    // every point land in cell (0,..,0) of an m=1 grid.
+    let grid = GridIndex::build(data, 1, f64::MAX / 4.0);
+    let queue = sched::build_queue(data, &grid, queries, params.k, 0.0, 0.0, true);
+    let mut forced = params.clone();
+    forced.backend = BackendMode::Brute;
+    let mut result = KnnResult::new(data.len(), params.k.max(1));
+    let slots = result.slots();
+    let stats = super::join::gpu_join_drain(
+        engine,
+        data,
+        data,
+        &grid,
+        &queue,
+        &forced,
+        &slots,
+        queue.len(),
+    )?;
+    drop(slots);
+    Ok((result, stats))
+}
 
 /// Outcome of the brute-force pass.
 #[derive(Debug)]

@@ -40,6 +40,16 @@
 //! A query with >= K neighbors within ε is *exactly* solved: its true K
 //! nearest all lie within ε, and the grid walk provably visits every point
 //! within ε of the query in the indexed projection (see index::grid).
+//!
+//! The queue drain hosts a second *backend* behind the same claim loop:
+//! the tiled brute-force tier (`sched::BackendMode` / DESIGN.md §10). A
+//! claim routed to the brute tier collapses to one work cell whose
+//! candidate set is the whole corpus, executed from a per-drain cache of
+//! pre-packed candidate tiles ([`BruteCache`]) with no ε gate - every
+//! brute query with |D| - 1 >= K candidates resolves to its exact
+//! K nearest (the same answer the CPU's Q^Fail pass would compute), so
+//! the dense head cells whose grid candidate lists degenerate toward
+//! O(|D|) stop paying the grid walk and stop recirculating failures.
 
 use std::cell::UnsafeCell;
 use std::collections::HashMap;
@@ -49,6 +59,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use super::brute::BruteCache;
 use super::device::{DeviceEstimate, DeviceModel, ThreadAssign};
 use crate::core::{BoundedHeap, Dataset, KnnResult, Neighbor, SoaSlots};
 use crate::fault::{
@@ -57,7 +68,7 @@ use crate::fault::{
 };
 use crate::index::GridIndex;
 use crate::runtime::{tiles, tiles::TileClass, Engine};
-use crate::sched::{self, Arch, ClaimRecord, WorkQueue};
+use crate::sched::{self, Arch, BackendMode, ClaimRecord, WorkQueue};
 use crate::util::pool;
 
 /// How the queue-driven GPU master (`gpu_join_drain`) overlaps its
@@ -119,6 +130,12 @@ pub struct GpuJoinParams {
     /// budget and backoff for transient faults, the per-claim watchdog
     /// envelope, and the consecutive-failure demotion threshold.
     pub recovery: RecoveryPolicy,
+    /// queue-driven drains only: backend routing between the grid tier
+    /// and the tiled brute-force tier. [`BackendMode::Auto`] consults
+    /// [`sched::route_brute`] per claim on the claim's mean candidate
+    /// population; `Grid`/`Brute` force one tier for the whole drain.
+    /// The list-driven form is grid-only and ignores this field.
+    pub backend: BackendMode,
 }
 
 impl GpuJoinParams {
@@ -141,6 +158,7 @@ impl GpuJoinParams {
             drain: DrainMode::ThreeStage,
             fault: FaultPlan::none(),
             recovery: RecoveryPolicy::default(),
+            backend: BackendMode::Auto,
         }
     }
 }
@@ -231,13 +249,24 @@ pub struct GpuJoinStats {
     pub degraded: bool,
     /// ordered log of the fault events behind the counters above
     pub fault_log: FaultLog,
+    /// device chunk executions on the brute tier (queue-driven drains
+    /// only; one query tile x candidate chunk = one artifact execution)
+    pub brute_tiles: u64,
+    /// claims routed to the tiled brute-force backend (queue form only)
+    pub brute_claims: usize,
+    /// claims routed to the grid backend (queue form only)
+    pub grid_claims: usize,
 }
 
 /// A unit of work: one grid cell's queries + the shared candidate list.
+/// A brute-routed claim collapses to a single cell with an empty
+/// candidate list: the exec loop sources its candidate tiles from the
+/// drain's [`BruteCache`] (the whole corpus) instead.
 #[derive(Debug, Clone)]
 struct WorkCell {
     queries: Vec<u32>,
     candidates: Vec<u32>,
+    brute: bool,
 }
 
 /// Run GPU-JOIN for `queries` (ids into `data`) over the given grid
@@ -336,7 +365,7 @@ pub fn gpu_join_rs_into(
         .map(|qs| {
             let mut candidates = Vec::new();
             grid.query_candidates_into(native, r_data, qs[0], &mut candidates);
-            WorkCell { queries: qs, candidates }
+            WorkCell { queries: qs, candidates, brute: false }
         })
         .collect();
     // deterministic order (largest first helps batch balance)
@@ -402,12 +431,15 @@ pub fn gpu_join_rs_into(
         |handle| -> Result<(DrainAcc, u64)> {
             let mut acc = DrainAcc::default();
             let mut stage = Arc::new(ClaimStage::new(arena_k));
+            // list-form cells are never brute-routed; the cache stays empty
+            let mut brute_cache = BruteCache::new();
 
             // batch estimator: run the sample through the pool and scale
             // the in-ε pair count to the full query set
             let sample_pairs = exec_filter_batch_pooled(
                 engine, (r_data, data), plans, use_topk, &sample, params,
-                round_cap, handle, overlap_rounds, &mut stage, &mut acc,
+                round_cap, handle, overlap_rounds, &mut stage,
+                &mut brute_cache, &mut acc,
             )?;
             let estimated_pairs = if sampled_queries > 0 {
                 (sample_pairs as f64 * n_queries_total as f64
@@ -437,7 +469,8 @@ pub fn gpu_join_rs_into(
                 }
                 let batch_pairs = exec_filter_batch_pooled(
                     engine, (r_data, data), plans, use_topk, batch, params,
-                    round_cap, handle, overlap_rounds, &mut stage, &mut acc,
+                    round_cap, handle, overlap_rounds, &mut stage,
+                    &mut brute_cache, &mut acc,
                 )?;
                 // the lane is drained: the stage is unique again and its
                 // arena holds the batch's filtered heaps
@@ -486,6 +519,9 @@ pub fn gpu_join_rs_into(
         reclaimed_cells: 0,
         degraded: false,
         fault_log: FaultLog::default(),
+        brute_tiles: 0,
+        brute_claims: 0,
+        grid_claims: 0,
     })
 }
 
@@ -514,6 +550,7 @@ fn exec_filter_batch_pooled(
     handle: &pool::StageHandle<FilterRound>,
     overlap_rounds: bool,
     stage: &mut Arc<ClaimStage>,
+    brute_cache: &mut BruteCache,
     acc: &mut DrainAcc,
 ) -> Result<u64> {
     // the list form's single lane: one arena, sequential batches
@@ -541,7 +578,9 @@ fn exec_filter_batch_pooled(
             cells,
             params,
             round_cap,
+            brute_cache,
             &mut acc.kernel_time,
+            &mut acc.brute_tiles,
             &mut |raw: Vec<RawTile>| {
                 let t0 = Instant::now();
                 let tiles = convert_tiles(raw)?;
@@ -643,6 +682,9 @@ pub fn gpu_join_drain(
             reclaimed_cells: 0,
             degraded: false,
             fault_log: FaultLog::default(),
+            brute_tiles: 0,
+            brute_claims: 0,
+            grid_claims: 0,
         });
     };
 
@@ -670,12 +712,43 @@ pub fn gpu_join_drain(
     }
 }
 
+/// The per-claim backend decision: `Auto` consults [`sched::route_brute`]
+/// on the claim's *mean* candidate population (the queue's memoized
+/// CSR adjacent populations aggregated over the range - an O(1) read, no
+/// candidate materialisation) against the corpus size; `Grid`/`Brute`
+/// force one tier. Deterministic in the range alone, so a recovery
+/// retry or reclaim of the same range always re-derives the same tier.
+fn route_claim(
+    queue: &WorkQueue,
+    grid: &GridIndex,
+    params: &GpuJoinParams,
+    n_data: usize,
+    range: &std::ops::Range<usize>,
+) -> bool {
+    match params.backend {
+        BackendMode::Grid => false,
+        BackendMode::Brute => true,
+        BackendMode::Auto => {
+            let mean = queue.range_work(range.clone()) as f64
+                / range.len().max(1) as f64;
+            sched::route_brute(mean, n_data, grid.m, params.k)
+        }
+    }
+}
+
 /// Materialise a claimed position range as per-cell work units (a claim
 /// may start or end mid-cell when clipped by the advancing tail; the
 /// partial remainder still shares its cell's candidate list). Appends
 /// each query's candidate count to `work_log` for the device model.
 /// `native` marks queue queries as ids into the grid's own dataset
 /// (self-join), enabling the O(1) id-keyed CSR walk.
+///
+/// A claim routed to the brute tier ([`route_claim`]) collapses to one
+/// [`WorkCell`] spanning the claim's whole query slice with an empty
+/// candidate list - the exec loop substitutes the corpus-wide
+/// [`BruteCache`] tiles - and logs |D| candidates per query (the true
+/// brute workload) for the device model.
+#[allow(clippy::too_many_arguments)]
 fn claim_cells(
     queue: &WorkQueue,
     grid: &GridIndex,
@@ -683,7 +756,16 @@ fn claim_cells(
     native: bool,
     range: std::ops::Range<usize>,
     work_log: &mut Vec<u64>,
+    params: &GpuJoinParams,
+    n_data: usize,
 ) -> Vec<WorkCell> {
+    if route_claim(queue, grid, params, n_data, &range) {
+        let queries = queue.query_slice(range).to_vec();
+        for _ in &queries {
+            work_log.push(n_data as u64);
+        }
+        return vec![WorkCell { queries, candidates: Vec::new(), brute: true }];
+    }
     let mut cells: Vec<WorkCell> = Vec::new();
     for r in queue.cell_ranges(range) {
         let qs = queue.query_slice(r).to_vec();
@@ -692,7 +774,7 @@ fn claim_cells(
         for _ in &qs {
             work_log.push(candidates.len() as u64);
         }
-        cells.push(WorkCell { queries: qs, candidates });
+        cells.push(WorkCell { queries: qs, candidates, brute: false });
     }
     cells
 }
@@ -726,6 +808,7 @@ fn drain_sync(
     let buffer_cap = params.buffer_pairs.max(1);
     let policy = &params.recovery;
     let mut acc = DrainAcc::default();
+    let mut brute_cache = BruteCache::new();
     let mut gpu_busy = 0f64;
     let mut consecutive = 0usize;
     let mut claim_idx = 0usize;
@@ -748,6 +831,7 @@ fn drain_sync(
         let t_claim = Instant::now();
         let cells = claim_cells(
             queue, grid, r_data, native, range.clone(), &mut acc.work_log,
+            params, data.len(),
         );
         let mut demote = false;
         match sync_cells_attempt(
@@ -763,6 +847,7 @@ fn drain_sync(
             range.clone(),
             est,
             deadline,
+            &mut brute_cache,
             &mut acc,
         ) {
             Ok(()) => consecutive = 0,
@@ -782,6 +867,7 @@ fn drain_sync(
                     deadline,
                     first_err,
                     &mut consecutive,
+                    &mut brute_cache,
                     &mut acc,
                 );
             }
@@ -810,6 +896,8 @@ fn drain_sync(
 
     let device_model = DeviceModel::default().estimate(&acc.work_log, params.assign);
     acc.failed.sort_unstable();
+    let brute_claims = acc.claims.iter().filter(|c| c.brute).count();
+    let grid_claims = acc.claims.len() - brute_claims;
     Ok(GpuJoinStats {
         failed: acc.failed,
         solved: acc.solved,
@@ -830,6 +918,9 @@ fn drain_sync(
         reclaimed_cells: acc.reclaimed_cells,
         degraded: acc.degraded,
         fault_log: acc.fault_log,
+        brute_tiles: acc.brute_tiles,
+        brute_claims,
+        grid_claims,
     })
 }
 
@@ -873,12 +964,31 @@ impl ClaimStage {
     }
 }
 
+/// Filter sublanes per claim on the pipelined drains: the transfer stage
+/// (three-stage) or the master (two-stage) converts device output *per
+/// tile* and submits each converted tile as its own single-tile filter
+/// round, fanned over this many pool lanes so tiles of one claim filter
+/// concurrently. The sublane is keyed by the tile's first queue position
+/// ([`filter_sublane`]): a tile split across flush rounds re-appears
+/// with the same position start, lands on the same sublane, and the
+/// pool's per-lane FIFO keeps its parts ordered - the position-
+/// disjointness that makes the heap arena race-free. The synchronous
+/// drain and the list form keep whole-round hand-off on one lane.
+const FILTER_SUBLANES: u64 = 8;
+
+/// The filter-pool lane of one converted tile of claim `claim_lane`.
+fn filter_sublane(claim_lane: u64, pos_start: usize) -> u64 {
+    claim_lane * FILTER_SUBLANES + pos_start as u64 % FILTER_SUBLANES
+}
+
 /// One converted flush round handed to the filter pool: a set of
 /// position-disjoint tiles targeting `stage`'s arena (a tile split
 /// across rounds re-appears in the lane's next round; the pool's
 /// per-lane round ordering keeps that safe, and rounds of different
 /// lanes target different stages' arenas, so cross-lane overlap cannot
-/// alias a position).
+/// alias a position). The pipelined drains submit single-tile rounds on
+/// per-claim sublanes ([`FILTER_SUBLANES`]); the list form and the
+/// synchronous retry path submit whole rounds on one lane.
 struct FilterRound {
     stage: Arc<ClaimStage>,
     tiles: Vec<TileOut>,
@@ -921,6 +1031,8 @@ struct ClaimMeta {
     transfer_secs: f64,
     /// the claim's stage-pool lane (claim ordinal)
     lane: u64,
+    /// the claim ran on the tiled brute-force tier
+    brute: bool,
 }
 
 /// Accumulators of the pipelined drains and the list-form batch loop,
@@ -943,6 +1055,7 @@ struct DrainAcc {
     retries: usize,
     reclaimed_cells: usize,
     degraded: bool,
+    brute_tiles: u64,
 }
 
 /// Classify a claim-stage error for the fault log: injected faults carry
@@ -976,6 +1089,7 @@ fn reclaim_claim(
     queue: &WorkQueue,
     range: std::ops::Range<usize>,
     est_work: u64,
+    brute: bool,
     acc: &mut DrainAcc,
 ) {
     let qs: Vec<u32> = queue.query_slice(range.clone()).to_vec();
@@ -993,6 +1107,7 @@ fn reclaim_claim(
         filter_secs: 0.0,
         from_recirc: false,
         failed: true,
+        brute,
     });
 }
 
@@ -1019,10 +1134,15 @@ fn sync_cells_attempt(
     range: std::ops::Range<usize>,
     est_work: u64,
     deadline_secs: f64,
+    brute_cache: &mut BruteCache,
     acc: &mut DrainAcc,
 ) -> std::result::Result<(), (anyhow::Error, FaultKind)> {
+    // the backend decision is claim-wide: a brute claim is exactly one
+    // brute cell, a grid claim holds only grid cells
+    let claim_brute = cells.first().is_some_and(|c| c.brute);
     let t_claim = Instant::now();
     let mut kernel = 0f64;
+    let mut btiles = 0u64;
     let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         exec_filter_cells(
             engine,
@@ -1031,12 +1151,15 @@ fn sync_cells_attempt(
             use_topk,
             cells,
             params,
+            brute_cache,
             &mut kernel,
+            &mut btiles,
             claim,
             deadline_secs,
         )
     }));
     acc.kernel_time += kernel;
+    acc.brute_tiles += btiles;
     let (batch_queries, mut heaps, batch_pairs, transfer_secs, filter_secs) =
         match out {
             Ok(Ok(t)) => t,
@@ -1088,6 +1211,7 @@ fn sync_cells_attempt(
         filter_secs,
         from_recirc: false,
         failed: false,
+        brute: claim_brute,
     });
     Ok(())
 }
@@ -1117,6 +1241,7 @@ fn recover_claim(
     deadline_secs: f64,
     first_err: (anyhow::Error, FaultKind),
     consecutive: &mut usize,
+    brute_cache: &mut BruteCache,
     acc: &mut DrainAcc,
 ) -> bool {
     let policy = &params.recovery;
@@ -1124,10 +1249,14 @@ fn recover_claim(
     // retries work off a fresh cell materialisation (the failed
     // attempt's cells may live inside a pipeline staging set) but must
     // not re-log the claim's workload - the device model already saw it
-    // at claim time
+    // at claim time. Routing is deterministic in the range, so the retry
+    // lands on the same backend tier as the failed attempt.
     let mut scratch_log = Vec::new();
-    let cells =
-        claim_cells(queue, grid, r_data, native, range.clone(), &mut scratch_log);
+    let cells = claim_cells(
+        queue, grid, r_data, native, range.clone(), &mut scratch_log, params,
+        data.len(),
+    );
+    let claim_brute = cells.first().is_some_and(|c| c.brute);
     let (mut err, mut kind) = first_err;
     let mut attempt = 0usize;
     loop {
@@ -1139,7 +1268,7 @@ fn recover_claim(
                 FaultAction::Reclaimed,
                 format!("{err:#}"),
             );
-            reclaim_claim(queue, range, est_work, acc);
+            reclaim_claim(queue, range, est_work, claim_brute, acc);
             *consecutive += 1;
             if *consecutive >= policy.demote_after {
                 acc.degraded = true;
@@ -1180,6 +1309,7 @@ fn recover_claim(
             range.clone(),
             est_work,
             deadline_secs,
+            brute_cache,
             acc,
         ) {
             Ok(()) => {
@@ -1222,20 +1352,28 @@ fn resolve_stage(
 ) -> Result<()> {
     // dependency order: once the transfer lane is empty, every filter
     // round of the claim has been submitted (the transfer worker submits
-    // before its round retires); once the filter lane is empty, the
-    // arena is quiescent and the Arc is unique again
+    // before its round retires); once all of the claim's filter sublanes
+    // are empty, the arena is quiescent and the Arc is unique again
     if let Some(th) = transfer_handle {
         th.wait_lane(meta.lane);
     }
-    filter_handle.wait_lane(meta.lane);
+    for s in 0..FILTER_SUBLANES {
+        filter_handle.wait_lane(meta.lane * FILTER_SUBLANES + s);
+    }
     if let Some(th) = transfer_handle {
         if let Some(msg) = th.take_lane_panic(meta.lane) {
             while th.take_lane_panic(meta.lane).is_some() {}
             return Err(anyhow!("transfer stage panicked: {msg}"));
         }
     }
-    if let Some(msg) = filter_handle.take_lane_panic(meta.lane) {
-        while filter_handle.take_lane_panic(meta.lane).is_some() {}
+    let mut filter_panic = None;
+    for s in 0..FILTER_SUBLANES {
+        let lane = meta.lane * FILTER_SUBLANES + s;
+        while let Some(msg) = filter_handle.take_lane_panic(lane) {
+            filter_panic.get_or_insert(msg);
+        }
+    }
+    if let Some(msg) = filter_panic {
         return Err(anyhow!("filter stage panicked: {msg}"));
     }
     let stage = Arc::get_mut(stage)
@@ -1281,6 +1419,7 @@ fn resolve_stage(
         filter_secs,
         from_recirc: false,
         failed: false,
+        brute: meta.brute,
     });
     Ok(())
 }
@@ -1363,11 +1502,21 @@ fn drain_pipelined(
     // that can be buffered at once: two-stage = one in flight + one
     // filling; three-stage = one filling + one staged for transfer + two
     // in the filter pool.
-    let (round_cap, filter_cap) = if three_stage {
-        ((n_workers * 8 / 4).max(1), 2)
+    let (round_cap, filter_rounds) = if three_stage {
+        ((n_workers * 8 / 4).max(1), 2usize)
     } else {
         ((n_workers * 8 / 2).max(1), 1)
     };
+    // The filter pool's capacity counts its rounds, and a pipelined
+    // filter round is ONE converted tile (per-tile hand-off over the
+    // claim's sublanes): the former whole-round budget of `filter_rounds`
+    // rounds of <= round_cap chunks each becomes `filter_rounds *
+    // round_cap` single-tile rounds - the same buffered-output envelope,
+    // handed off at tile granularity so filtering starts as soon as the
+    // first tile of a round is converted. Actual occupancy stays bounded
+    // upstream: the transfer stage holds one raw round at a time, so
+    // exec can run at most one round ahead.
+    let filter_cap = (filter_rounds * round_cap).max(1);
 
     // recoverable pools: a worker panic (injected or real) is caught,
     // recorded against the round's lane, and surfaced as that *claim's*
@@ -1418,36 +1567,58 @@ fn drain_pipelined(
                             .take()
                             .expect("transfer round taken twice");
                         let claim = job.lane as usize;
-                        let injected = fault.transfer_fault(claim, job.round);
-                        let t0 = Instant::now();
-                        match injected.map_or_else(|| convert_tiles(raw), Err) {
-                            Ok(tiles) => {
-                                job.stage.transfer_nanos.fetch_add(
-                                    (t0.elapsed().as_secs_f64() * 1e9) as u64,
-                                    Ordering::Relaxed,
-                                );
-                                let len = tiles.len();
-                                filter_handle.submit(
-                                    FilterRound {
-                                        stage: Arc::clone(&job.stage),
-                                        tiles,
-                                        claim,
-                                        round: job.round,
-                                    },
-                                    len,
-                                    job.lane,
-                                );
-                            }
-                            Err(e) => {
-                                // surface at the claim's resolve; skipping
-                                // the filter submit is safe (lane waits
-                                // are emptiness-based, not count-based)
-                                let mut slot = pool::lock_unpoisoned(
-                                    &job.stage.transfer_err,
-                                );
-                                if slot.is_none() {
-                                    *slot = Some(e);
+                        let mut err = fault.transfer_fault(claim, job.round);
+                        // per-TILE conversion: each converted tile is
+                        // submitted immediately as its own single-tile
+                        // filter round on the claim's sublane, so
+                        // filtering starts before the round's remaining
+                        // tiles are converted. Submit backpressure is
+                        // excluded from the transfer clock.
+                        let mut conv_nanos = 0u64;
+                        if err.is_none() {
+                            for t in raw {
+                                let t0 = Instant::now();
+                                let converted = convert_tile(t);
+                                conv_nanos +=
+                                    (t0.elapsed().as_secs_f64() * 1e9) as u64;
+                                match converted {
+                                    Ok(tile) => {
+                                        let lane = filter_sublane(
+                                            job.lane,
+                                            tile.pos.start,
+                                        );
+                                        filter_handle.submit(
+                                            FilterRound {
+                                                stage: Arc::clone(&job.stage),
+                                                tiles: vec![tile],
+                                                claim,
+                                                round: job.round,
+                                            },
+                                            1,
+                                            lane,
+                                        );
+                                    }
+                                    Err(e) => {
+                                        // the claim is already lost: stop
+                                        // converting its remaining tiles
+                                        err = Some(e);
+                                        break;
+                                    }
                                 }
+                            }
+                            job.stage
+                                .transfer_nanos
+                                .fetch_add(conv_nanos, Ordering::Relaxed);
+                        }
+                        if let Some(e) = err {
+                            // surface at the claim's resolve; skipping
+                            // the filter submit is safe (lane waits
+                            // are emptiness-based, not count-based)
+                            let mut slot = pool::lock_unpoisoned(
+                                &job.stage.transfer_err,
+                            );
+                            if slot.is_none() {
+                                *slot = Some(e);
                             }
                         }
                     },
@@ -1474,6 +1645,8 @@ fn drain_pipelined(
     let mut acc = master_out?;
     let device_model = DeviceModel::default().estimate(&acc.work_log, params.assign);
     acc.failed.sort_unstable();
+    let brute_claims = acc.claims.iter().filter(|c| c.brute).count();
+    let grid_claims = acc.claims.len() - brute_claims;
     Ok(GpuJoinStats {
         failed: acc.failed,
         solved: acc.solved,
@@ -1494,6 +1667,9 @@ fn drain_pipelined(
         reclaimed_cells: acc.reclaimed_cells,
         degraded: acc.degraded,
         fault_log: acc.fault_log,
+        brute_tiles: acc.brute_tiles,
+        brute_claims,
+        grid_claims,
     })
 }
 
@@ -1529,6 +1705,7 @@ fn pipelined_claim_loop(
     let policy = &params.recovery;
     let depth = if transfer_handle.is_some() { 3 } else { 2 };
     let mut acc = DrainAcc::default();
+    let mut brute_cache = BruteCache::new();
     let mut stages: Vec<Arc<ClaimStage>> =
         (0..depth).map(|_| Arc::new(ClaimStage::new(arena_k))).collect();
     let mut metas: Vec<Option<ClaimMeta>> = (0..depth).map(|_| None).collect();
@@ -1560,12 +1737,15 @@ fn pipelined_claim_loop(
                     engine, (r_data, data), grid, queue, params, slots, plans,
                     use_topk, meta.lane as usize, meta.range.clone(),
                     meta.est_work, deadline, (e, kind), &mut consecutive,
-                    &mut acc,
+                    &mut brute_cache, &mut acc,
                 ) {
+                    let brute =
+                        route_claim(queue, grid, params, data.len(), &range);
                     reclaim_claim(
                         queue,
                         range.clone(),
                         queue.range_work(range.clone()),
+                        brute,
                         &mut acc,
                     );
                     break;
@@ -1585,7 +1765,9 @@ fn pipelined_claim_loop(
         let t_exec = Instant::now();
         let cells = claim_cells(
             queue, grid, r_data, native, range.clone(), &mut acc.work_log,
+            params, data.len(),
         );
+        let claim_brute = cells.first().is_some_and(|c| c.brute);
         let n_queries: usize = cells.iter().map(|c| c.queries.len()).sum();
         {
             // unique access: all of this set's rounds have retired
@@ -1624,7 +1806,9 @@ fn pipelined_claim_loop(
                 &cells,
                 params,
                 round_cap,
+                &mut brute_cache,
                 &mut acc.kernel_time,
+                &mut acc.brute_tiles,
                 &mut |raw: Vec<RawTile>| {
                     fault.exec_round(claim_idx, round)?;
                     debug_assert!(
@@ -1646,27 +1830,31 @@ fn pipelined_claim_loop(
                         );
                         submit_wait += t_submit.elapsed().as_secs_f64();
                     } else {
-                        // two-stage: convert here, filter on the pool
+                        // two-stage: convert per tile here, filter on the
+                        // pool over the claim's sublanes - each converted
+                        // tile is handed off before the next is converted
                         if let Some(e) = fault.transfer_fault(claim_idx, round)
                         {
                             return Err(e);
                         }
-                        let t_conv = Instant::now();
-                        let tiles = convert_tiles(raw)?;
-                        transfer_master += t_conv.elapsed().as_secs_f64();
-                        let len = tiles.len();
-                        let t_submit = Instant::now();
-                        filter_handle.submit(
-                            FilterRound {
-                                stage: Arc::clone(stage_arc),
-                                tiles,
-                                claim: claim_idx,
-                                round,
-                            },
-                            len,
-                            lane,
-                        );
-                        submit_wait += t_submit.elapsed().as_secs_f64();
+                        for t in raw {
+                            let t_conv = Instant::now();
+                            let tile = convert_tile(t)?;
+                            transfer_master += t_conv.elapsed().as_secs_f64();
+                            let sublane = filter_sublane(lane, tile.pos.start);
+                            let t_submit = Instant::now();
+                            filter_handle.submit(
+                                FilterRound {
+                                    stage: Arc::clone(stage_arc),
+                                    tiles: vec![tile],
+                                    claim: claim_idx,
+                                    round,
+                                },
+                                1,
+                                sublane,
+                            );
+                            submit_wait += t_submit.elapsed().as_secs_f64();
+                        }
                     }
                     round += 1;
                     let elapsed = t_exec.elapsed().as_secs_f64();
@@ -1695,6 +1883,7 @@ fn pipelined_claim_loop(
                     exec_secs,
                     transfer_secs: transfer_master,
                     lane,
+                    brute: claim_brute,
                 });
             }
             Err(e) => {
@@ -1709,13 +1898,16 @@ fn pipelined_claim_loop(
                     th.wait_lane(lane);
                     while th.take_lane_panic(lane).is_some() {}
                 }
-                filter_handle.wait_lane(lane);
-                while filter_handle.take_lane_panic(lane).is_some() {}
+                for s in 0..FILTER_SUBLANES {
+                    let sublane = lane * FILTER_SUBLANES + s;
+                    filter_handle.wait_lane(sublane);
+                    while filter_handle.take_lane_panic(sublane).is_some() {}
+                }
                 let kind = fault_kind_of(&e);
                 if recover_claim(
                     engine, (r_data, data), grid, queue, params, slots, plans,
                     use_topk, claim_idx, range, est, deadline, (e, kind),
-                    &mut consecutive, &mut acc,
+                    &mut consecutive, &mut brute_cache, &mut acc,
                 ) {
                     break;
                 }
@@ -1769,7 +1961,13 @@ fn pipelined_claim_loop(
                     FaultAction::Reclaimed,
                     format!("{e:#}"),
                 );
-                reclaim_claim(queue, meta.range.clone(), meta.est_work, &mut acc);
+                reclaim_claim(
+                    queue,
+                    meta.range.clone(),
+                    meta.est_work,
+                    meta.brute,
+                    &mut acc,
+                );
             } else {
                 let deadline = pipelined_deadline(
                     &acc, &metas, meta.est_work, policy, queue.cpu_work_rate(),
@@ -1781,7 +1979,7 @@ fn pipelined_claim_loop(
                     engine, (r_data, data), grid, queue, params, slots, plans,
                     use_topk, meta.lane as usize, meta.range.clone(),
                     meta.est_work, deadline, (e, kind), &mut consecutive,
-                    &mut acc,
+                    &mut brute_cache, &mut acc,
                 );
             }
         } else {
@@ -1886,6 +2084,8 @@ struct ChunkOut {
 struct TileOut {
     pos: std::ops::Range<usize>,
     chunks: Vec<ChunkOut>,
+    /// brute-tier tile: no ε gate, `pairs` counts heap insertions
+    brute: bool,
 }
 
 /// A device output literal that may be moved to the transfer stage.
@@ -1920,40 +2120,49 @@ struct RawChunk {
 struct RawTile {
     pos: std::ops::Range<usize>,
     chunks: Vec<RawChunk>,
+    /// brute-tier tile (carried through to [`TileOut`])
+    brute: bool,
+}
+
+/// The device-to-host transfer of ONE query tile: convert its literals
+/// into the flat host buffers the filter stage scans. The pipelined
+/// drains hand each converted tile to the filter pool individually (the
+/// per-tile hand-off over the claim's sublanes); the synchronous paths
+/// batch whole rounds through [`convert_tiles`].
+fn convert_tile(t: RawTile) -> Result<TileOut> {
+    Ok(TileOut {
+        pos: t.pos,
+        brute: t.brute,
+        chunks: t
+            .chunks
+            .into_iter()
+            .map(|c| {
+                Ok(ChunkOut {
+                    cand_ids: c.cand_ids,
+                    payload: match c.payload {
+                        RawPayload::Dist { lit, ct } => Payload::Dist {
+                            d2: Engine::to_f32(&lit.0)?,
+                            ct,
+                        },
+                        RawPayload::TopK { vals, idx, k } => Payload::TopK {
+                            vals: Engine::to_f32(&vals.0)?,
+                            idx: Engine::to_i32(&idx.0)?,
+                            k,
+                        },
+                    },
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+    })
 }
 
 /// The device-to-host transfer: convert a flush round's literals into
 /// the flat host buffers the filter stage scans. This is the copy that
-/// used to hide inside `exec_secs` on the master thread; the three-stage
-/// drain runs it on a dedicated transfer worker instead.
+/// used to hide inside `exec_secs` on the master thread; the pipelined
+/// drains instead convert tile by tile ([`convert_tile`]) off the
+/// master or on the dedicated transfer worker.
 fn convert_tiles(raw: Vec<RawTile>) -> Result<Vec<TileOut>> {
-    raw.into_iter()
-        .map(|t| {
-            Ok(TileOut {
-                pos: t.pos,
-                chunks: t
-                    .chunks
-                    .into_iter()
-                    .map(|c| {
-                        Ok(ChunkOut {
-                            cand_ids: c.cand_ids,
-                            payload: match c.payload {
-                                RawPayload::Dist { lit, ct } => Payload::Dist {
-                                    d2: Engine::to_f32(&lit.0)?,
-                                    ct,
-                                },
-                                RawPayload::TopK { vals, idx, k } => Payload::TopK {
-                                    vals: Engine::to_f32(&vals.0)?,
-                                    idx: Engine::to_i32(&idx.0)?,
-                                    k,
-                                },
-                            },
-                        })
-                    })
-                    .collect::<Result<Vec<_>>>()?,
-            })
-        })
-        .collect()
+    raw.into_iter().map(convert_tile).collect()
 }
 
 /// Filter a buffered set of tiles into the arena on `workers` threads via
@@ -1987,6 +2196,12 @@ fn filter_tiles(
 
 /// Merge one tile's device output into the arena heaps (the paper's
 /// host-side stream filter).
+///
+/// Brute-tier tiles scan the whole corpus with no ε semantics: the ε
+/// gate is vacuous (infinite - every candidate is heap-eligible), and
+/// `pairs` counts actual heap *insertions* instead of in-ε candidates -
+/// the per-candidate count would inflate quadratically (|Q| x |D|) and
+/// wreck the buffer-bound telemetry it feeds.
 fn apply_tile(
     t: &TileOut,
     batch_queries: &[u32],
@@ -1995,6 +2210,8 @@ fn apply_tile(
     exclude_self: bool,
     pairs: &mut u64,
 ) {
+    let (eps_gate, count_in_eps) =
+        if t.brute { (f64::INFINITY, false) } else { (eps2, true) };
     for chunk in &t.chunks {
         match &chunk.payload {
             Payload::Dist { d2, ct } => {
@@ -2009,20 +2226,28 @@ fn apply_tile(
                     // bound as an f32 so the hot compare stays branchy-
                     // cheap and pushes become rare (EXPERIMENTS.md Perf#1).
                     // next_up: f64->f32 rounding must never exclude a
-                    // candidate exactly at the bound
-                    let mut gate = ((heap.bound().min(eps2)) as f32).next_up();
+                    // candidate exactly at the bound (next_up of INF is
+                    // INF, so the brute gate stays vacuous until the
+                    // heap fills)
+                    let mut gate =
+                        ((heap.bound().min(eps_gate)) as f32).next_up();
                     for (c, &dd) in row.iter().enumerate() {
-                        if dd as f64 <= eps2 {
+                        if count_in_eps && dd as f64 <= eps2 {
                             *pairs += 1;
                         }
                         if dd <= gate {
                             let id = chunk.cand_ids[c];
                             if !(exclude_self && id == q) {
-                                heap.push(Neighbor {
-                                    id,
-                                    dist2: (dd as f64).max(0.0),
-                                });
-                                gate = ((heap.bound().min(eps2)) as f32).next_up();
+                                let dist2 = (dd as f64).max(0.0);
+                                // brute: count exactly the insertions
+                                // (bound is INF while filling, then the
+                                // heap's strict replace-below-bound test)
+                                if !count_in_eps && dist2 < heap.bound() {
+                                    *pairs += 1;
+                                }
+                                heap.push(Neighbor { id, dist2 });
+                                gate = ((heap.bound().min(eps_gate)) as f32)
+                                    .next_up();
                             }
                         }
                     }
@@ -2035,7 +2260,7 @@ fn apply_tile(
                     let heap = unsafe { arena.heap(pos) };
                     for s in 0..*k {
                         let dd = vals[r * k + s] as f64;
-                        if dd > eps2 {
+                        if dd > eps_gate {
                             break; // ascending: rest of the row is farther
                         }
                         let ci = idx[r * k + s] as usize;
@@ -2044,8 +2269,11 @@ fn apply_tile(
                         }
                         let id = chunk.cand_ids[ci];
                         if !(exclude_self && id == q) {
-                            *pairs += 1;
-                            heap.push(Neighbor { id, dist2: dd.max(0.0) });
+                            let dist2 = dd.max(0.0);
+                            if count_in_eps || dist2 < heap.bound() {
+                                *pairs += 1;
+                            }
+                            heap.push(Neighbor { id, dist2 });
                         }
                     }
                 }
@@ -2078,7 +2306,9 @@ fn exec_cells_into_rounds(
     cells: &[WorkCell],
     params: &GpuJoinParams,
     round_cap: usize,
+    brute_cache: &mut BruteCache,
     kernel_time: &mut f64,
+    brute_tiles: &mut u64,
     emit: &mut dyn FnMut(Vec<RawTile>) -> Result<()>,
 ) -> Result<()> {
     let round_cap = round_cap.max(1);
@@ -2090,31 +2320,42 @@ fn exec_cells_into_rounds(
     for cell in cells {
         // One plan per cell: thin cells run on the small tile (less
         // padding); the small plan has no top-k variant, so it always
-        // takes the dist path.
-        let (plan, cell_topk) = if cell.queries.len() <= plan_small.qt {
+        // takes the dist path. Brute cells scan the whole corpus and
+        // always saturate the large tile.
+        let (plan, cell_topk) = if cell.brute {
+            (plan_large, use_topk)
+        } else if cell.queries.len() <= plan_small.qt {
             (plan_small, use_topk && plan_small.topk_name.is_some())
         } else {
             (plan_large, use_topk)
         };
         let (qt, ct, d_pad) = (plan.qt, plan.ct, plan.d);
         // Candidate tiles are shared by every query chunk of the cell:
-        // pack + upload once (Perf#2).
-        let c_lits: Vec<(&[u32], xla::Literal)> = cell
-            .candidates
-            .chunks(ct)
-            .map(|c_chunk| {
-                tiles::pack_candidates(&mut c_buf, data, c_chunk, ct, d_pad);
-                Ok((
-                    c_chunk,
-                    Engine::literal(&c_buf, &[ct as i64, d_pad as i64])?,
-                ))
-            })
-            .collect::<Result<_>>()?;
+        // pack + upload once (Perf#2). Brute cells go further - their
+        // candidate set IS the corpus, so the packed tiles are shared
+        // across every brute claim of the drain through the cache.
+        let local_lits: Vec<(Vec<u32>, xla::Literal)>;
+        let c_lits: &[(Vec<u32>, xla::Literal)] = if cell.brute {
+            brute_cache.ensure(data, ct, d_pad)?
+        } else {
+            local_lits = cell
+                .candidates
+                .chunks(ct)
+                .map(|c_chunk| {
+                    tiles::pack_candidates(&mut c_buf, data, c_chunk, ct, d_pad);
+                    Ok((
+                        c_chunk.to_vec(),
+                        Engine::literal(&c_buf, &[ct as i64, d_pad as i64])?,
+                    ))
+                })
+                .collect::<Result<_>>()?;
+            &local_lits
+        };
         for q_chunk in cell.queries.chunks(qt) {
             tiles::pack(&mut q_buf, r_data, q_chunk, qt, d_pad, 0.0);
             let q_lit = Engine::literal(&q_buf, &[qt as i64, d_pad as i64])?;
             let mut chunks: Vec<RawChunk> = Vec::new();
-            for (c_chunk, c_lit) in &c_lits {
+            for (c_chunk, c_lit) in c_lits {
                 let t0 = Instant::now();
                 let payload = if cell_topk {
                     let out = engine.exec_lits(
@@ -2137,21 +2378,29 @@ fn exec_cells_into_rounds(
                         out.into_iter().next().expect("dist artifact tuple arity");
                     RawPayload::Dist { lit: SendLit(lit), ct }
                 };
-                chunks.push(RawChunk { cand_ids: c_chunk.to_vec(), payload });
+                chunks.push(RawChunk { cand_ids: c_chunk.clone(), payload });
                 chunks_buffered += 1;
+                if cell.brute {
+                    *brute_tiles += 1;
+                }
                 if chunks_buffered >= round_cap {
                     // emit the tile's chunks so far and close the round;
                     // the next round may revisit this tile's positions
                     tiles_buf.push(RawTile {
                         pos: base..base + q_chunk.len(),
                         chunks: std::mem::take(&mut chunks),
+                        brute: cell.brute,
                     });
                     emit(std::mem::take(&mut tiles_buf))?;
                     chunks_buffered = 0;
                 }
             }
             if !chunks.is_empty() {
-                tiles_buf.push(RawTile { pos: base..base + q_chunk.len(), chunks });
+                tiles_buf.push(RawTile {
+                    pos: base..base + q_chunk.len(),
+                    chunks,
+                    brute: cell.brute,
+                });
             }
             base += q_chunk.len();
         }
@@ -2189,7 +2438,9 @@ fn exec_filter_cells(
     use_topk: bool,
     cells: &[WorkCell],
     params: &GpuJoinParams,
+    brute_cache: &mut BruteCache,
     kernel_time: &mut f64,
+    brute_tiles: &mut u64,
     claim: usize,
     deadline_secs: f64,
 ) -> Result<(Vec<u32>, Vec<BoundedHeap>, u64, f64, f64)> {
@@ -2221,7 +2472,9 @@ fn exec_filter_cells(
         cells,
         params,
         chunk_cap,
+        brute_cache,
         kernel_time,
+        brute_tiles,
         &mut |raw: Vec<RawTile>| {
             fault.exec_round(claim, round)?;
             if let Some(e) = fault.transfer_fault(claim, round) {

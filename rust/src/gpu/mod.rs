@@ -1,15 +1,17 @@
 //! The GPU component of HYBRIDKNN-JOIN: the grid range-query join
-//! (join), the brute-force lower bound (brute), and the warp-level
-//! device model for the task-granularity study (device).
+//! (join), the brute-force tier (brute - both the standalone lower
+//! bound and the tiled production path the claim router targets), and
+//! the warp-level device model for the task-granularity study (device).
 
-/// GPU-JOINLINEAR: the brute-force lower bound (Sec. VI-D).
+/// The brute-force tier: GPU-JOINLINEAR (Sec. VI-D) and the tiled,
+/// pipelined corpus-scan path behind per-claim backend routing.
 pub mod brute;
 /// Analytic warp model for the thread-granularity study (Sec. V-G).
 pub mod device;
 /// GPU-JOIN over the ε-grid, with the pipelined queue drains.
 pub mod join;
 
-pub use brute::{brute_join_linear, BruteOutcome};
+pub use brute::{brute_join_linear, brute_join_tiled, BruteOutcome};
 pub use device::{DeviceEstimate, DeviceModel, ThreadAssign};
 pub use join::{
     gpu_join, gpu_join_drain, gpu_join_rs, gpu_join_rs_into, DrainMode,

@@ -43,9 +43,9 @@ use crate::data::variance::reorder_by_variance;
 use crate::epsilon::{EpsilonSelection, EpsilonSelector};
 use crate::fault::{FaultLog, FaultPlan, RecoveryPolicy};
 use crate::gpu::{self, DrainMode, GpuJoinParams, GpuJoinStats, ThreadAssign};
-use crate::index::{GridIndex, KdTree};
+use crate::index::{GridIndex, KdTree, QueryKey};
 use crate::runtime::{tiles::TileClass, Engine};
-use crate::sched::{self, ClaimRecord};
+use crate::sched::{self, BackendMode, ClaimRecord};
 use crate::split::{self, WorkSplit};
 use crate::util::timer::PhaseTimer;
 
@@ -101,6 +101,16 @@ pub struct HybridParams {
     /// used instead, which ignores this field. Results are bit-identical
     /// across all modes.
     pub gpu_drain: DrainMode,
+    /// GPU backend routing (dynamic queue only): `Auto` (the default)
+    /// consults [`sched::route_brute`] per claim - claims whose mean
+    /// per-query candidate population exceeds the m/k-dependent crossover
+    /// fraction of |D| take the tiled brute-force tier, the rest the
+    /// grid-hybrid candidate path; `Grid`/`Brute` force every claim onto
+    /// one tier (the crossover-bench endpoints). The static split's
+    /// list-driven join is grid-only and ignores this field. Routing
+    /// never changes results - both tiers are exact for the queries they
+    /// solve, and brute-solved queries cannot land in Q^Fail.
+    pub backend: BackendMode,
     /// ε-selection tuning knobs (Sec. V-C)
     pub selector: EpsilonSelector,
     /// process only a fraction f of the queries (Table VI parameter
@@ -138,6 +148,7 @@ impl HybridParams {
             buffer_pairs: 10_000_000,
             streams: 3,
             gpu_drain: DrainMode::ThreeStage,
+            backend: BackendMode::Auto,
             selector: EpsilonSelector::default(),
             query_fraction: 1.0,
             scheduler: Scheduler::DynamicQueue,
@@ -209,6 +220,23 @@ pub struct HybridReport {
     /// sync/two-stage drains, where the copy serialises with exec on the
     /// master thread.
     pub gpu_transfer_overlap: f64,
+    /// device tiles executed by the brute tier (each one query-chunk x
+    /// one corpus-chunk kernel launch)
+    pub brute_tiles: u64,
+    /// GPU claims routed to the tiled brute-force tier (forced or by the
+    /// `sched::route_brute` heuristic)
+    pub brute_claims: usize,
+    /// GPU claims that took the grid-hybrid candidate path
+    pub grid_claims: usize,
+    /// exec-lane seconds of brute-routed claims (subset of
+    /// `gpu_exec_time`; the grid tier's share is the difference)
+    pub brute_exec_time: f64,
+    /// transfer-lane seconds of brute-routed claims (subset of
+    /// `gpu_transfer_time`)
+    pub brute_transfer_time: f64,
+    /// filter-lane seconds of brute-routed claims (subset of
+    /// `gpu_filter_time`)
+    pub brute_filter_time: f64,
     /// per-claim scheduling telemetry (dynamic queue only; empty under
     /// the static split)
     pub claims: Vec<ClaimRecord>,
@@ -339,10 +367,20 @@ impl HybridKnnJoin {
             let stride = (1.0 / params.query_fraction.max(1e-6)).round() as usize;
             query_ids = query_ids.into_iter().step_by(stride.max(1)).collect();
         }
+        // Bipartite R side: pay one coordinate linearisation + binary
+        // search per R point ONCE (timed), after which queue grouping and
+        // pricing are O(1) per query - the same complexity the self-join
+        // gets from the grid's native point-rank map.
+        let rank_cache = (!self_join)
+            .then(|| timers.time("build_rank_cache", || grid.build_query_ranks(r_data)));
         let queue = timers.time("build_queue", || {
-            sched::build_queue(
+            let key = match &rank_cache {
+                None => QueryKey::Native, // self-join: O(1) id-keyed path
+                Some(cache) => QueryKey::Cached(cache),
+            };
+            sched::build_queue_keyed(
                 r_data, grid, &query_ids, params.k, params.gamma, params.rho,
-                self_join, // self-join: O(1) id-keyed grouping and pricing
+                key,
             )
         });
 
@@ -371,6 +409,7 @@ impl HybridKnnJoin {
             drain: if hw > 1 { params.gpu_drain } else { DrainMode::Sync },
             fault: params.fault.clone(),
             recovery: params.recovery,
+            backend: params.backend,
         };
         let mut result = KnnResult::new(r_data.len(), params.k);
         let slots = result.slots();
@@ -429,6 +468,10 @@ impl HybridKnnJoin {
         let mut q_fail = 0usize;
         let (mut gpu_faults, mut gpu_retries, mut reclaimed_cells) =
             (0usize, 0usize, 0usize);
+        let (mut brute_tiles, mut brute_claims, mut grid_claims) =
+            (0u64, 0usize, 0usize);
+        let (mut brute_exec_time, mut brute_transfer_time, mut brute_filter_time) =
+            (0.0f64, 0.0f64, 0.0f64);
         let mut degraded = false;
         let mut fault_log = FaultLog::default();
         if let Some(g) = gpu_stats {
@@ -456,6 +499,15 @@ impl HybridKnnJoin {
             reclaimed_cells = g.reclaimed_cells;
             degraded = g.degraded;
             fault_log = g.fault_log;
+            brute_tiles = g.brute_tiles;
+            brute_claims = g.brute_claims;
+            grid_claims = g.grid_claims;
+            // per-backend stage lanes, split off the per-claim telemetry
+            for c in g.claims.iter().filter(|c| c.brute) {
+                brute_exec_time += c.exec_secs;
+                brute_transfer_time += c.transfer_secs;
+                brute_filter_time += c.filter_secs;
+            }
             claims.extend(g.claims);
         }
         let cpu_busy: f64 = cpu_out.claims.iter().map(|c| c.secs).sum();
@@ -521,6 +573,12 @@ impl HybridKnnJoin {
             gpu_filter_time,
             gpu_filter_overlap,
             gpu_transfer_overlap,
+            brute_tiles,
+            brute_claims,
+            grid_claims,
+            brute_exec_time,
+            brute_transfer_time,
+            brute_filter_time,
             claims,
             gpu_faults,
             gpu_retries,
@@ -585,6 +643,8 @@ impl HybridKnnJoin {
             drain: DrainMode::Sync,
             fault: FaultPlan::none(),
             recovery: RecoveryPolicy::default(),
+            // the list-driven join routes nothing - grid tier only
+            backend: BackendMode::Grid,
         };
         let mut result = KnnResult::new(r_data.len(), params.k);
         let slots = result.slots();
@@ -712,6 +772,12 @@ impl HybridKnnJoin {
             // so overlap is identically 0 by construction here
             gpu_filter_overlap: 0.0,
             gpu_transfer_overlap: 0.0,
+            brute_tiles: 0,
+            brute_claims: 0,
+            grid_claims: 0,
+            brute_exec_time: 0.0,
+            brute_transfer_time: 0.0,
+            brute_filter_time: 0.0,
             claims: Vec::new(),
             gpu_faults: 0,
             gpu_retries: 0,

@@ -100,6 +100,71 @@ fn delinearise(mut id: u64, widths: &[u64], out: &mut [u64]) {
     }
 }
 
+/// Sentinel rank for query points whose clamped cell holds no indexed
+/// point (possible only for bipartite R queries outside the S extent).
+const NO_RANK: u32 = u32::MAX;
+
+/// Precomputed R-side cell lookups for a bipartite join against an
+/// S-grid (ROADMAP carried item (n)): for every point of a query
+/// relation R, its clamped cell id and that cell's rank in the
+/// non-empty-cell table `B` (or a sentinel when the cell is empty),
+/// resolved exactly once. With the cache in hand, `build_queue`
+/// grouping, queue pricing and claim-time candidate walks are O(1) per
+/// R query - the same complexity the native id-keyed self-join path
+/// enjoys - instead of one coordinate recompute plus binary search per
+/// touch.
+#[derive(Debug, Clone)]
+pub struct QueryRankCache {
+    /// clamped linearised cell id per R point
+    cell_ids: Vec<u64>,
+    /// rank of that cell in `B`, or [`NO_RANK`] when the cell is empty
+    ranks: Vec<u32>,
+}
+
+impl QueryRankCache {
+    /// Number of cached query points (= |R| at build time).
+    pub fn len(&self) -> usize {
+        self.cell_ids.len()
+    }
+
+    /// True when the cache covers zero query points.
+    pub fn is_empty(&self) -> bool {
+        self.cell_ids.is_empty()
+    }
+
+    /// Cached cell id of query `q`.
+    #[inline]
+    pub fn cell_id(&self, q: u32) -> u64 {
+        self.cell_ids[q as usize]
+    }
+
+    /// Cached cell rank of query `q`, if its clamped cell is non-empty.
+    #[inline]
+    pub fn rank(&self, q: u32) -> Option<usize> {
+        match self.ranks[q as usize] {
+            NO_RANK => None,
+            r => Some(r as usize),
+        }
+    }
+}
+
+/// How a consumer keys per-query lookups into a grid - the one seam
+/// shared by queue building, claim grouping and candidate walks, so the
+/// grouping key and the walk can never diverge per caller.
+#[derive(Debug, Clone, Copy)]
+pub enum QueryKey<'a> {
+    /// Queries index the grid's own dataset (the self-join case):
+    /// O(1) id-keyed reads off `point_rank`.
+    Native,
+    /// Bipartite R side with a precomputed [`QueryRankCache`]: O(1)
+    /// cached reads, no coordinate recompute, no binary search.
+    Cached(&'a QueryRankCache),
+    /// Coordinate recompute per lookup (one binary search each) - the
+    /// cache-free fallback and the ablation baseline the cached path is
+    /// property-tested against.
+    Coords,
+}
+
 /// Non-empty-cell grid over the first `m` dims, with O(1) point→cell
 /// lookups and a precomputed CSR cell-adjacency table.
 #[derive(Debug, Clone)]
@@ -485,27 +550,115 @@ impl GridIndex {
     // grouping key and the candidate walk can never diverge per caller.
     // ---------------------------------------------------------------
 
-    /// Cell id of query `q` (an id into `r_data`). `native` asserts that
-    /// the grid was built over `r_data` itself; debug builds verify that
-    /// claim against the coordinate recompute.
+    /// Build a [`QueryRankCache`] over an arbitrary query relation: one
+    /// coordinate linearisation plus one binary search per R point,
+    /// paid once, after which every keyed lookup below is O(1).
+    pub fn build_query_ranks(&self, r_data: &Dataset) -> QueryRankCache {
+        let n = r_data.len();
+        let mut cell_ids = Vec::with_capacity(n);
+        let mut ranks = Vec::with_capacity(n);
+        for q in 0..n {
+            let id = self.cell_id_of(r_data.point(q));
+            cell_ids.push(id);
+            ranks.push(match self.rank_of_cell_id(id) {
+                Some(r) => r as u32,
+                None => NO_RANK,
+            });
+        }
+        QueryRankCache { cell_ids, ranks }
+    }
+
+    /// Cell id of query `q` (an id into `r_data`) under a [`QueryKey`].
+    /// `Native` asserts that the grid was built over `r_data` itself and
+    /// `Cached` that the cache was built over `r_data` against this
+    /// grid; debug builds verify both claims against the coordinate
+    /// recompute.
     #[inline]
-    pub fn query_cell_id(&self, native: bool, r_data: &Dataset, q: u32) -> u64 {
-        if native {
-            let id = self.cell_id_of_id(q);
-            debug_assert_eq!(
-                id,
-                self.cell_id_of(r_data.point(q as usize)),
-                "native_ids misuse: query {q} does not index the grid's dataset"
-            );
-            id
-        } else {
-            self.cell_id_of(r_data.point(q as usize))
+    pub fn query_cell_id_keyed(&self, key: QueryKey, r_data: &Dataset, q: u32) -> u64 {
+        match key {
+            QueryKey::Native => {
+                let id = self.cell_id_of_id(q);
+                debug_assert_eq!(
+                    id,
+                    self.cell_id_of(r_data.point(q as usize)),
+                    "native key misuse: query {q} does not index the grid's dataset"
+                );
+                id
+            }
+            QueryKey::Cached(c) => {
+                let id = c.cell_id(q);
+                debug_assert_eq!(
+                    id,
+                    self.cell_id_of(r_data.point(q as usize)),
+                    "stale rank cache: query {q} cell id diverges from recompute"
+                );
+                id
+            }
+            QueryKey::Coords => self.cell_id_of(r_data.point(q as usize)),
+        }
+    }
+
+    /// Rank of query `q`'s (clamped) cell, if non-empty, under a
+    /// [`QueryKey`]: O(1) for `Native` and `Cached`, one binary search
+    /// for `Coords`.
+    #[inline]
+    pub fn query_rank_keyed(&self, key: QueryKey, r_data: &Dataset, q: u32) -> Option<usize> {
+        match key {
+            QueryKey::Native => Some(self.cell_rank_of(q)),
+            QueryKey::Cached(c) => c.rank(q),
+            QueryKey::Coords => self.rank_of_cell_id(self.cell_id_of(r_data.point(q as usize))),
+        }
+    }
+
+    /// Adjacent-block population of query `q` - the Sec. V-B per-query
+    /// work estimate - under a [`QueryKey`]. O(1) off the memoized table
+    /// whenever the rank resolves.
+    pub fn query_adjacent_population_keyed(&self, key: QueryKey, r_data: &Dataset, q: u32) -> usize {
+        match self.query_rank_keyed(key, r_data, q) {
+            Some(r) => self.adj_pop[r] as usize,
+            None => {
+                let mut n = 0usize;
+                self.visit_adjacent_fallback(r_data.point(q as usize), |ids| n += ids.len());
+                n
+            }
         }
     }
 
     /// Candidate list of query `q` (an id into `r_data`) into `out` -
     /// the query-keyed form of [`GridIndex::candidates_into`]; see
-    /// [`GridIndex::query_cell_id`] for the `native` contract.
+    /// [`GridIndex::query_cell_id_keyed`] for the key contracts.
+    pub fn query_candidates_into_keyed(
+        &self,
+        key: QueryKey,
+        r_data: &Dataset,
+        q: u32,
+        out: &mut Vec<u32>,
+    ) {
+        match self.query_rank_keyed(key, r_data, q) {
+            Some(r) => self.candidates_into_rank(r, out),
+            None => {
+                out.clear();
+                self.visit_adjacent_fallback(r_data.point(q as usize), |ids| {
+                    out.extend_from_slice(ids)
+                });
+            }
+        }
+    }
+
+    /// Bool-keyed wrapper over [`GridIndex::query_cell_id_keyed`] kept
+    /// for call sites that only distinguish self-join (`native`) from
+    /// coordinate recompute.
+    #[inline]
+    pub fn query_cell_id(&self, native: bool, r_data: &Dataset, q: u32) -> u64 {
+        let key = if native {
+            QueryKey::Native
+        } else {
+            QueryKey::Coords
+        };
+        self.query_cell_id_keyed(key, r_data, q)
+    }
+
+    /// Bool-keyed wrapper over [`GridIndex::query_candidates_into_keyed`].
     pub fn query_candidates_into(
         &self,
         native: bool,
@@ -513,16 +666,12 @@ impl GridIndex {
         q: u32,
         out: &mut Vec<u32>,
     ) {
-        if native {
-            debug_assert_eq!(
-                self.cell_id_of_id(q),
-                self.cell_id_of(r_data.point(q as usize)),
-                "native_ids misuse: query {q} does not index the grid's dataset"
-            );
-            self.candidates_into_id(q, out);
+        let key = if native {
+            QueryKey::Native
         } else {
-            self.candidates_into(r_data.point(q as usize), out);
-        }
+            QueryKey::Coords
+        };
+        self.query_candidates_into_keyed(key, r_data, q, out);
     }
 
     // ---------------------------------------------------------------
@@ -840,6 +989,57 @@ mod tests {
                         "cell-id collision broke candidate sharing"
                     );
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn cached_query_key_matches_coordinate_path() {
+        // Carried item (n): the R-side rank cache must reproduce the
+        // coordinate-keyed path exactly - same cell ids, same ranks,
+        // same candidate lists, same population estimates - including
+        // for R points far outside the S extent (empty clamped cells).
+        prop::cases(15, 0xCAC8E, |rng| {
+            let s = random_dataset(rng, 120 + rng.below(200), 4, 2.0);
+            let m = 1 + rng.below(4);
+            let g = GridIndex::build(&s, m, 0.5 + rng.f64() * 2.0);
+            let r = random_dataset(rng, 80, 4, 1.0 + rng.f64() * 20.0);
+            let cache = g.build_query_ranks(&r);
+            assert_eq!(cache.len(), r.len());
+            let (mut got, mut want) = (Vec::new(), Vec::new());
+            for q in 0..r.len() as u32 {
+                let (ck, xk) = (QueryKey::Cached(&cache), QueryKey::Coords);
+                assert_eq!(
+                    g.query_cell_id_keyed(ck, &r, q),
+                    g.query_cell_id_keyed(xk, &r, q),
+                    "cell id diverged for query {q}"
+                );
+                assert_eq!(
+                    g.query_rank_keyed(ck, &r, q),
+                    g.query_rank_keyed(xk, &r, q),
+                    "rank diverged for query {q}"
+                );
+                assert_eq!(
+                    g.query_adjacent_population_keyed(ck, &r, q),
+                    g.query_adjacent_population_keyed(xk, &r, q),
+                    "population diverged for query {q}"
+                );
+                g.query_candidates_into_keyed(ck, &r, q, &mut got);
+                g.query_candidates_into_keyed(xk, &r, q, &mut want);
+                assert_eq!(got, want, "candidate list diverged for query {q}");
+            }
+            // native self-join queries agree with the cache built over
+            // the grid's own dataset
+            let own = g.build_query_ranks(&s);
+            for q in (0..s.len() as u32).step_by(17) {
+                assert_eq!(
+                    g.query_cell_id_keyed(QueryKey::Native, &s, q),
+                    g.query_cell_id_keyed(QueryKey::Cached(&own), &s, q)
+                );
+                assert_eq!(
+                    g.query_rank_keyed(QueryKey::Native, &s, q),
+                    g.query_rank_keyed(QueryKey::Cached(&own), &s, q)
+                );
             }
         });
     }

@@ -6,5 +6,5 @@ pub mod grid;
 /// Sliding-midpoint kd-tree, the EXACT-ANN substrate (Sec. V-B).
 pub mod kdtree;
 
-pub use grid::GridIndex;
+pub use grid::{GridIndex, QueryKey, QueryRankCache};
 pub use kdtree::{KdTree, KnnScratch};

@@ -61,12 +61,12 @@ pub mod prelude {
         InjectedFault, RecoveryPolicy, WatchdogTimeout,
     };
     pub use crate::gpu::{
-        brute_join_linear, gpu_join, join::gpu_join_rs, DrainMode, GpuJoinParams,
-        ThreadAssign,
+        brute_join_linear, brute_join_tiled, gpu_join, join::gpu_join_rs,
+        DrainMode, GpuJoinParams, ThreadAssign,
     };
     pub use crate::hybrid::{HybridKnnJoin, HybridParams, HybridReport, Scheduler};
     pub use crate::index::{GridIndex, KdTree, KnnScratch};
     pub use crate::runtime::{tiles::TileClass, Engine};
-    pub use crate::sched::{build_queue, Arch, ClaimRecord, WorkQueue};
+    pub use crate::sched::{build_queue, Arch, BackendMode, ClaimRecord, WorkQueue};
     pub use crate::split::{rho_model, split_work};
 }

@@ -59,6 +59,8 @@ options for run:
   --gamma <0..1>  (default 0)                   --rho <0..1>    (default 0)
   --ranks <p>     EXACT-ANN ranks (default 3)   --no-reorder    disable REORDER
   --no-topk       disable the on-device top-k path
+  --backend <auto|grid|brute>  GPU tier routing (default auto: per-claim
+                  crossover heuristic over m, k and candidate density)
 options for experiments:
   positional: fig2 fig6 fig7 fig8 fig9 fig10 fig11 table3 table4 table5 table6 all
   --quick         use the small smoke-test workloads
@@ -90,6 +92,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     p.cpu_ranks = args.usize_or("ranks", 3);
     p.reorder = !args.flag("no-reorder");
     p.use_topk = args.flag("topk");
+    p.backend = match args.str_or("backend", "auto").as_str() {
+        "auto" => hybrid_knn_join::sched::BackendMode::Auto,
+        "grid" => hybrid_knn_join::sched::BackendMode::Grid,
+        "brute" => hybrid_knn_join::sched::BackendMode::Brute,
+        other => bail!("unknown backend {other:?} (auto|grid|brute)"),
+    };
     println!(
         "HYBRIDKNN-JOIN |D|={} n={} k={} m={} beta={} gamma={} rho={}",
         data.len(), data.dims(), p.k, p.m, p.beta, p.gamma, p.rho
@@ -107,6 +115,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         "gpu: kernel={:.4}s batches={} pairs={} modeled_device={:.4}s",
         rep.gpu_kernel_time, rep.gpu_batches, rep.gpu_result_pairs,
         rep.device_model_seconds
+    );
+    println!(
+        "backend: grid_claims={} brute_claims={} brute_tiles={} \
+         brute exec/transfer/filter = {:.4}/{:.4}/{:.4}s",
+        rep.grid_claims, rep.brute_claims, rep.brute_tiles,
+        rep.brute_exec_time, rep.brute_transfer_time, rep.brute_filter_time
     );
     println!(
         "T1={:.3e} s/q  T2={:.3e} s/q  rho_model={:.3}",

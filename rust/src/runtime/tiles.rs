@@ -112,6 +112,34 @@ pub fn pack_candidates(
     pack(out, data, ids, rows, d_pad, PAD_SENTINEL);
 }
 
+/// Pack the contiguous candidate id range `start..start+len` into a
+/// `rows x d_pad` tile with sentinel fill, without materialising an id
+/// list. The brute tier's packer: its candidate chunks are always
+/// contiguous corpus ranges, so the `Vec<u32>` id buffer of
+/// [`pack_candidates`] would be pure overhead.
+pub fn pack_candidate_range(
+    out: &mut Vec<f32>,
+    data: &Dataset,
+    start: u32,
+    len: usize,
+    rows: usize,
+    d_pad: usize,
+) {
+    debug_assert!(len <= rows);
+    debug_assert!(start as usize + len <= data.len());
+    let dims = data.dims().min(d_pad);
+    out.clear();
+    out.resize(rows * d_pad, 0.0);
+    for r in 0..len {
+        let src = data.point(start as usize + r);
+        out[r * d_pad..r * d_pad + dims].copy_from_slice(&src[..dims]);
+        // dims..d_pad remain zero (distance-preserving)
+    }
+    for r in len..rows {
+        out[r * d_pad..(r + 1) * d_pad].fill(PAD_SENTINEL);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +182,18 @@ mod tests {
         assert!(buf[18..24].iter().all(|&x| x == 0.0));
         // padded rows are sentinel
         assert!(buf[3 * 24..5 * 24].iter().all(|&x| x == PAD_SENTINEL));
+    }
+
+    #[test]
+    fn pack_range_matches_pack_with_explicit_ids() {
+        let d = susy_like(64).generate(3);
+        let (mut by_ids, mut by_range) = (Vec::new(), Vec::new());
+        for (start, len, rows) in [(0u32, 8usize, 8usize), (17, 5, 12), (60, 4, 16)] {
+            let ids: Vec<u32> = (start..start + len as u32).collect();
+            pack_candidates(&mut by_ids, &d, &ids, rows, 24);
+            pack_candidate_range(&mut by_range, &d, start, len, rows, 24);
+            assert_eq!(by_ids, by_range, "range packer diverged at start={start}");
+        }
     }
 
     #[test]

@@ -20,40 +20,92 @@ pub mod queue;
 use std::collections::HashMap;
 
 use crate::core::Dataset;
-use crate::index::GridIndex;
+use crate::index::{GridIndex, QueryKey};
 use crate::split;
 
 pub use queue::{Arch, ClaimRecord, QueueCell, WorkQueue};
+
+/// Which GPU execution tier the engine uses for dense claims.
+///
+/// The grid-hybrid tier prunes candidates through the ε-grid's 3^m
+/// adjacent-block walk - unbeatable while candidate sets are small
+/// fractions of |D|, but the walk degenerates as m (and with it cell
+/// adjacency fan-out and per-cell population) grows: candidate sets
+/// approach |D| while still paying grouping, packing and gating
+/// overhead per cell. The brute tier skips pruning entirely and streams
+/// dense claims through tiled all-corpus distance kernels with an exact
+/// host top-k - the Garcia et al. (arxiv 0804.1448) regime. `Auto`
+/// routes per *claim* with [`route_brute`]; the forced modes pin every
+/// GPU claim to one tier (ablation and the crossover bench).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendMode {
+    /// Route each GPU claim by the [`route_brute`] heuristic.
+    Auto,
+    /// Every GPU claim takes the grid-hybrid candidate path.
+    Grid,
+    /// Every GPU claim takes the tiled brute-force path.
+    Brute,
+}
+
+/// Candidate-population fraction of |D| beyond which a claim routes to
+/// the brute tier, as a function of m and k.
+///
+/// Shape: brute pays O(|D|) distance work per query regardless of
+/// density, so it wins exactly when the grid's candidate walk would
+/// scan a comparable fraction of |D| anyway *after* paying its own
+/// per-cell overheads (grouping, packing, ε-gating). Those overheads
+/// grow with m (3^m adjacency fan-out → more, smaller packed cells)
+/// and with k (deeper heaps make the ε-gate less selective), so the
+/// break-even fraction *falls* as either grows. 0.9 at the origin
+/// (grid must be nearly pruning-free before brute wins at low m/k),
+/// decaying with m/8 and k/128 — at (m=8, k=32) a claim scanning ~40%
+/// of |D| already routes brute. Clamped to [0.05, 0.95] so neither
+/// tier is ever unreachable by heuristic alone.
+pub fn brute_crossover_frac(m: usize, k: usize) -> f64 {
+    (0.9 / (1.0 + m as f64 / 8.0 + k as f64 / 128.0)).clamp(0.05, 0.95)
+}
+
+/// The per-claim routing predicate: route to the brute tier when the
+/// mean per-query candidate population of the claim *strictly* exceeds
+/// the crossover fraction of |D|. Ties (and everything below) route to
+/// the grid tier - the pruning path keeps the benefit of the doubt at
+/// the boundary, where its candidate work equals brute's but its
+/// transfer volume is lower.
+pub fn route_brute(mean_candidates: f64, n_data: usize, m: usize, k: usize) -> bool {
+    mean_candidates > brute_crossover_frac(m, k) * n_data as f64
+}
 
 /// Build the density-ordered work queue for `queries` (ids into
 /// `r_data`), with densities and candidate work taken from the S-side
 /// `grid`. γ seeds the dense prefix via n^thresh (Sec. V-D); ρ reserves
 /// the sparse tail for the CPU (Sec. V-F).
 ///
-/// `native_ids` marks the self-join case where `queries` index the very
-/// dataset the grid was built over: grouping and pricing then run on the
-/// grid's O(1) point→cell-rank map (two array reads per query, no
-/// coordinate recompute, no searches). With `native_ids = false`
-/// (bipartite R against the S grid) each query pays one coordinate
-/// linearisation and each *cell* one binary search. Either way the
-/// pricing itself is O(1) per cell off the grid's memoized CSR
+/// `key` selects the per-query lookup path (see [`QueryKey`]):
+/// `Native` marks the self-join case where `queries` index the very
+/// dataset the grid was built over - grouping and pricing then run on
+/// the grid's O(1) point→cell-rank map (two array reads per query, no
+/// coordinate recompute, no searches). `Cached` gives the bipartite R
+/// side the same O(1) complexity off a precomputed
+/// [`crate::index::QueryRankCache`]. With `Coords` each query pays one
+/// coordinate linearisation and each *cell* one binary search. Either
+/// way the pricing itself is O(1) per cell off the grid's memoized CSR
 /// adjacent-population table - the former per-cell 3^m recompute walk
 /// (O(3^m log|B|) with per-cell allocations) is gone, so queue
 /// construction costs O(|Q|) + O(cells), not O(|Q| x 3^m log|B|).
-pub fn build_queue(
+pub fn build_queue_keyed(
     r_data: &Dataset,
     grid: &GridIndex,
     queries: &[u32],
     k: usize,
     gamma: f64,
     rho: f64,
-    native_ids: bool,
+    key: QueryKey,
 ) -> WorkQueue {
     // group queries by their grid cell
     let mut by_cell: HashMap<u64, Vec<u32>> = HashMap::new();
     for &q in queries {
         by_cell
-            .entry(grid.query_cell_id(native_ids, r_data, q))
+            .entry(grid.query_cell_id_keyed(key, r_data, q))
             .or_default()
             .push(q);
     }
@@ -69,13 +121,9 @@ pub fn build_queue(
     let mut cells: Vec<CellRec> = by_cell
         .into_iter()
         .map(|(id, qs)| {
-            // rank resolved once per cell: O(1) when the ids are native,
-            // one binary search otherwise
-            let rank = if native_ids {
-                Some(grid.cell_rank_of(qs[0]))
-            } else {
-                grid.rank_of_cell_id(id)
-            };
+            // rank resolved once per cell: O(1) for native or cached
+            // keys, one binary search for the coordinate path
+            let rank = grid.query_rank_keyed(key, r_data, qs[0]);
             let (pop, per_q) = match rank {
                 Some(r) => (
                     grid.rank_population(r),
@@ -114,6 +162,25 @@ pub fn build_queue(
         reserve,
         thresh,
     )
+}
+
+/// Bool-keyed wrapper over [`build_queue_keyed`] for call sites that
+/// only distinguish self-join (`native_ids`) from coordinate recompute.
+pub fn build_queue(
+    r_data: &Dataset,
+    grid: &GridIndex,
+    queries: &[u32],
+    k: usize,
+    gamma: f64,
+    rho: f64,
+    native_ids: bool,
+) -> WorkQueue {
+    let key = if native_ids {
+        QueryKey::Native
+    } else {
+        QueryKey::Coords
+    };
+    build_queue_keyed(r_data, grid, queries, k, gamma, rho, key)
 }
 
 /// Size of the GPU's *first* head claim, in estimated work: a third of
@@ -245,6 +312,53 @@ mod tests {
                 "queue order must not depend on the lookup path"
             );
         }
+    }
+
+    #[test]
+    fn cached_key_queue_identical_to_coordinate_queue() {
+        // carried item (n): the R-side rank cache must build exactly the
+        // queue the coordinate path builds, including for R points whose
+        // clamped cell is empty (they price via the recompute walk)
+        use crate::index::QueryKey;
+        let s = chist_like(1000).generate(21);
+        let r = susy_like(700).generate(22);
+        let grid = GridIndex::build(&s, 6, 1.8);
+        let cache = grid.build_query_ranks(&r);
+        let queries: Vec<u32> = (0..r.len() as u32).collect();
+        for (gamma, rho) in [(0.0, 0.0), (0.5, 0.25)] {
+            let a = build_queue_keyed(&r, &grid, &queries, 5, gamma, rho, QueryKey::Coords);
+            let b =
+                build_queue_keyed(&r, &grid, &queries, 5, gamma, rho, QueryKey::Cached(&cache));
+            assert_eq!(a.len(), b.len());
+            assert_eq!(a.dense_prefix(), b.dense_prefix());
+            assert_eq!(a.reserve(), b.reserve());
+            assert_eq!(a.total_work(), b.total_work());
+            assert_eq!(
+                a.query_slice(0..a.len()),
+                b.query_slice(0..b.len()),
+                "queue order must not depend on the lookup path"
+            );
+        }
+    }
+
+    #[test]
+    fn routing_boundary_ties_go_to_grid() {
+        // the forced-routing unit test for the heuristic boundary: a mean
+        // candidate population exactly AT the crossover fraction stays on
+        // the grid tier (strict inequality); one unit above routes brute
+        let (m, k, n) = (4, 8, 10_000usize);
+        let frac = brute_crossover_frac(m, k);
+        let boundary = frac * n as f64;
+        assert!(!route_brute(boundary, n, m, k), "tie must route to grid");
+        assert!(route_brute(boundary + 1.0, n, m, k));
+        assert!(!route_brute(boundary - 1.0, n, m, k));
+        // the crossover falls as m and k grow (brute wins earlier in
+        // exactly the regimes where the 3^m walk degenerates) ...
+        assert!(brute_crossover_frac(2, 4) > brute_crossover_frac(8, 4));
+        assert!(brute_crossover_frac(4, 4) > brute_crossover_frac(4, 64));
+        // ... and stays clamped so neither tier is unreachable
+        assert!(brute_crossover_frac(1, 1) <= 0.95);
+        assert!(brute_crossover_frac(1 << 20, 1 << 20) >= 0.05);
     }
 
     #[test]

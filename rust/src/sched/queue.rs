@@ -74,6 +74,10 @@ pub struct ClaimRecord {
     pub filter_secs: f64,
     /// true when the claim drained recirculated Q^Fail queries
     pub from_recirc: bool,
+    /// true when the claim ran on the GPU's tiled brute-force tier (the
+    /// `sched::route_brute` decision, or a forced `BackendMode`); false
+    /// for grid-tier GPU claims and always false for CPU claims
+    pub brute: bool,
     /// true when the claim failed on the GPU and its queries were pushed
     /// back through Q^Fail (claim-scoped recovery): `queries` then counts
     /// the *reclaimed* queries, which some CPU rank (or a later GPU

@@ -1,0 +1,416 @@
+//! Backend equivalence: the dimension-adaptive router must be invisible
+//! in the output. Whatever tier a claim lands on - the grid-hybrid
+//! candidate path, the tiled brute-force corpus scan, or the CPU ranks -
+//! every query's K nearest neighbors are the same, and the exactly-once
+//! claim accounting closes.
+//!
+//! Two levels of comparison:
+//! * drain level (`gpu_join_drain`, GPU only): within one backend the
+//!   three drain modes are BIT-identical (checksummed); across backends,
+//!   grid-solved queries match the brute tier bit for bit (both tiers
+//!   compute the same f32 device distances for the same (q, c) pair),
+//!   and grid-failed queries are exactly the ones brute solves that grid
+//!   left empty - the brute tier has no ε gate, so a brute claim can
+//!   never land in Q^Fail.
+//! * hybrid level (`HybridKnnJoin::run`): forced-Grid, forced-Brute and
+//!   Auto runs agree with a CPU-only run (ρ = 1) within float tolerance
+//!   (Q^Fail re-solves and the CPU reference compute in f64; the device
+//!   computes in f32, so cross-path lanes are tolerance-equal, not
+//!   bit-equal).
+
+use hybrid_knn_join::gpu::join::gpu_join_drain;
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::sched::{self, BackendMode};
+
+/// CI's chaos matrix pins the GPU drain's pipeline depth via
+/// `HKNN_FAULT_DEPTH` (1 = sync, 2 = two-stage, 3 = three-stage) so the
+/// recovery paths run under every drain's interleaving; unset, the
+/// backend fault test exercises the default three-stage drain.
+fn pinned_drain() -> Option<DrainMode> {
+    match std::env::var("HKNN_FAULT_DEPTH").ok().as_deref() {
+        Some("1") => Some(DrainMode::Sync),
+        Some("2") => Some(DrainMode::TwoStage),
+        Some("3") => Some(DrainMode::ThreeStage),
+        _ => None,
+    }
+}
+
+/// GPU-only queue drain over all points of `data` (self-join) with a
+/// forced backend and drain mode. Returns the table, failed set, stats.
+fn drain_backend(
+    engine: &Engine,
+    data: &Dataset,
+    m: usize,
+    eps: f64,
+    k: usize,
+    backend: BackendMode,
+    mode: DrainMode,
+    fault: FaultPlan,
+) -> (KnnResult, Vec<u32>, hybrid_knn_join::gpu::GpuJoinStats) {
+    let grid = GridIndex::build(data, m, eps);
+    let queries: Vec<u32> = (0..data.len() as u32).collect();
+    let queue = build_queue(data, &grid, &queries, k, 0.0, 0.0, true);
+    let mut params = GpuJoinParams::new(k, eps);
+    params.streams = 2;
+    params.buffer_pairs = 4_000;
+    params.drain = mode;
+    params.backend = backend;
+    params.fault = fault;
+    let mut result = KnnResult::new(data.len(), k);
+    let slots = result.slots();
+    let stats = gpu_join_drain(
+        engine, data, data, &grid, &queue, &params, &slots,
+        queue.len(),
+    )
+    .unwrap();
+    drop(slots);
+    assert_eq!(
+        stats.solved + stats.failed.len(),
+        queries.len(),
+        "every claimed query resolved exactly once"
+    );
+    (result, stats.failed, stats)
+}
+
+/// Tolerance-equality of two result tables: same neighbor counts, dist²
+/// lanes within relative float tolerance, ids equal except inside tie
+/// bands (distances closer than the tolerance can legally swap order
+/// between the f32 device path and the f64 host path).
+fn assert_equivalent(a: &KnnResult, b: &KnnResult, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: table sizes");
+    for q in 0..a.len() {
+        let (x, y) = (a.get(q), b.get(q));
+        assert_eq!(x.len(), y.len(), "{ctx}: q={q} neighbor count");
+        let (xd, yd) = (x.dist2s(), y.dist2s());
+        let (xi, yi) = (x.ids(), y.ids());
+        for i in 0..xd.len() {
+            let tol = 1e-3 * (1.0 + yd[i]);
+            assert!(
+                (xd[i] - yd[i]).abs() < tol,
+                "{ctx}: q={q} i={i} dist² {} vs {}",
+                xd[i],
+                yd[i]
+            );
+            if xi[i] != yi[i] {
+                let tied = |d: &[f64], j: usize| {
+                    (j > 0 && (d[j] - d[j - 1]).abs() < tol)
+                        || (j + 1 < d.len() && (d[j + 1] - d[j]).abs() < tol)
+                };
+                assert!(
+                    tied(xd, i) || tied(yd, i),
+                    "{ctx}: q={q} i={i} ids {} vs {} differ outside a tie band",
+                    xi[i],
+                    yi[i]
+                );
+            }
+        }
+    }
+}
+
+/// The accounting invariants every hybrid run must close, plus the
+/// routing-count bookkeeping the backend layer adds.
+fn check_accounting(rep: &HybridReport, n: usize, ctx: &str) {
+    assert_eq!(rep.q_gpu + rep.q_cpu, n, "{ctx}: split covers the queries");
+    assert_eq!(
+        rep.solved_on_gpu + rep.q_fail,
+        rep.q_gpu,
+        "{ctx}: gpu side resolves exactly once"
+    );
+    let claimed: usize = rep.claims.iter().map(|c| c.queries).sum();
+    assert_eq!(claimed, n + rep.q_fail, "{ctx}: claims + recirculated");
+    let gpu_recs = rep
+        .claims
+        .iter()
+        .filter(|c| matches!(c.arch, Arch::Gpu))
+        .count();
+    assert_eq!(
+        rep.brute_claims + rep.grid_claims,
+        gpu_recs,
+        "{ctx}: every GPU claim routed to exactly one tier"
+    );
+    assert!(
+        rep.claims
+            .iter()
+            .all(|c| !(c.brute && matches!(c.arch, Arch::Cpu))),
+        "{ctx}: CPU claims are never brute-routed"
+    );
+    if rep.brute_claims == 0 {
+        assert_eq!(rep.brute_tiles, 0, "{ctx}: no brute tiles without claims");
+        assert_eq!(rep.brute_exec_time, 0.0, "{ctx}: no brute exec lane");
+    }
+    assert!(
+        rep.brute_exec_time <= rep.gpu_exec_time + 1e-9,
+        "{ctx}: brute lane is a subset of the GPU lane"
+    );
+}
+
+fn hybrid_params(k: usize, m: usize, backend: BackendMode) -> HybridParams {
+    let mut p = HybridParams::new(k);
+    p.m = m;
+    p.cpu_ranks = 2;
+    p.backend = backend;
+    p
+}
+
+#[test]
+fn forced_backends_match_cpu_reference_uniform() {
+    // m x k sweep on uniform data: forced-Grid, forced-Brute and Auto
+    // all equal the CPU-only reference (ρ=1 ⇒ exact kd-tree KNN).
+    let e = Engine::load_default().unwrap();
+    let data = susy_like(450).generate(0xBAC0);
+    for k in [4usize, 32] {
+        let mut cpu_ref = hybrid_params(k, 6, BackendMode::Grid);
+        cpu_ref.rho = 1.0;
+        let cpu = HybridKnnJoin::run(&e, &data, &cpu_ref).unwrap();
+        assert_eq!(cpu.q_gpu, 0);
+        assert_eq!(cpu.brute_claims + cpu.grid_claims, 0);
+        for m in [2usize, 4, 8] {
+            if k == 32 && m == 4 {
+                continue; // trim the cross product; (4, 4) covers m=4
+            }
+            for backend in
+                [BackendMode::Grid, BackendMode::Brute, BackendMode::Auto]
+            {
+                let ctx = format!("m={m} k={k} backend={backend:?}");
+                let p = hybrid_params(k, m, backend);
+                let rep = HybridKnnJoin::run(&e, &data, &p).unwrap();
+                check_accounting(&rep, data.len(), &ctx);
+                assert_equivalent(&rep.result, &cpu.result, &ctx);
+                match backend {
+                    BackendMode::Brute => {
+                        assert_eq!(rep.grid_claims, 0, "{ctx}");
+                        assert_eq!(
+                            rep.q_fail, 0,
+                            "{ctx}: brute has no ε gate, so no Q^Fail"
+                        );
+                        if rep.q_gpu > 0 {
+                            assert!(rep.brute_tiles > 0, "{ctx}");
+                        }
+                    }
+                    BackendMode::Grid => {
+                        assert_eq!(rep.brute_claims, 0, "{ctx}");
+                        assert_eq!(rep.brute_tiles, 0, "{ctx}");
+                    }
+                    BackendMode::Auto => {} // either tier is legal
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_backends_match_cpu_reference_skewed() {
+    // chist-like clustered Gaussians: dense head cells (big, many-round
+    // claims) plus a sparse tail - the shape where routing decisions
+    // actually differ per claim.
+    let e = Engine::load_default().unwrap();
+    let data = chist_like(400).generate(0xBAC1);
+    let mut cpu_ref = hybrid_params(4, 6, BackendMode::Grid);
+    cpu_ref.rho = 1.0;
+    cpu_ref.beta = 0.3;
+    let cpu = HybridKnnJoin::run(&e, &data, &cpu_ref).unwrap();
+    for m in [2usize, 8] {
+        for backend in [BackendMode::Grid, BackendMode::Brute, BackendMode::Auto]
+        {
+            let ctx = format!("chist m={m} backend={backend:?}");
+            let mut p = hybrid_params(4, m, backend);
+            p.beta = 0.3;
+            let rep = HybridKnnJoin::run(&e, &data, &p).unwrap();
+            check_accounting(&rep, data.len(), &ctx);
+            assert_equivalent(&rep.result, &cpu.result, &ctx);
+        }
+    }
+}
+
+#[test]
+fn forced_backends_match_on_bipartite_join() {
+    // R ⋈ S with |R| ≠ |S|: exercises the R-side rank cache the keyed
+    // queue build uses, and brute's corpus tiles covering S (not R).
+    let e = Engine::load_default().unwrap();
+    let r = susy_like(240).generate(0xBAC2);
+    let s = susy_like(480).generate(0xBAC3);
+    let mut cpu_ref = hybrid_params(4, 4, BackendMode::Grid);
+    cpu_ref.rho = 1.0;
+    let cpu = HybridKnnJoin::run_rs(&e, &r, &s, &cpu_ref).unwrap();
+    for backend in [BackendMode::Grid, BackendMode::Brute, BackendMode::Auto] {
+        let ctx = format!("bipartite backend={backend:?}");
+        let p = hybrid_params(4, 4, backend);
+        let rep = HybridKnnJoin::run_rs(&e, &r, &s, &p).unwrap();
+        check_accounting(&rep, r.len(), &ctx);
+        assert_equivalent(&rep.result, &cpu.result, &ctx);
+        if backend == BackendMode::Brute {
+            assert_eq!(rep.q_fail, 0, "{ctx}");
+        }
+    }
+}
+
+#[test]
+fn drain_modes_and_backends_bit_identical() {
+    // Drain level, GPU only. Within a backend: all three drain modes are
+    // bit-identical (checksummed - the satellite `KnnResult::checksum`).
+    // Across backends: grid-solved queries match brute bit for bit (same
+    // f32 device distances), and grid's failed set is exactly the slots
+    // brute fills that grid left empty.
+    let e = Engine::load_default().unwrap();
+    let data = susy_like(600).generate(0x51DE);
+    let modes = [DrainMode::Sync, DrainMode::TwoStage, DrainMode::ThreeStage];
+    let mut by_backend = Vec::new();
+    for backend in [BackendMode::Grid, BackendMode::Brute] {
+        let (res0, failed0, _) = drain_backend(
+            &e, &data, 4, 2.0, 6, backend, modes[0], FaultPlan::none(),
+        );
+        let sum0 = res0.checksum();
+        for &mode in &modes[1..] {
+            let (res, failed, _) = drain_backend(
+                &e, &data, 4, 2.0, 6, backend, mode, FaultPlan::none(),
+            );
+            assert_eq!(failed0, failed, "{backend:?} {mode:?}: Q^Fail partition");
+            assert_eq!(
+                sum0,
+                res.checksum(),
+                "{backend:?} {mode:?}: drain mode visible in the bits"
+            );
+        }
+        by_backend.push((res0, failed0));
+    }
+    let (grid_res, grid_failed) = &by_backend[0];
+    let (brute_res, brute_failed) = &by_backend[1];
+    assert!(brute_failed.is_empty(), "brute has no ε gate, so no failures");
+    let failed: std::collections::HashSet<u32> =
+        grid_failed.iter().copied().collect();
+    for q in 0..data.len() {
+        let (g, b) = (grid_res.get(q), brute_res.get(q));
+        if failed.contains(&(q as u32)) {
+            assert_eq!(g.len(), 0, "q={q}: failed slot must be untouched");
+            assert_eq!(b.len(), 6, "q={q}: brute fills every slot");
+        } else {
+            // both tiers computed these on the same device f32 path
+            assert_eq!(g.ids(), b.ids(), "q={q}: id lane");
+            assert_eq!(g.dist2s(), b.dist2s(), "q={q}: dist² lane");
+        }
+    }
+}
+
+#[test]
+fn routing_boundary_ties_go_to_grid() {
+    // The heuristic boundary is strict: a claim whose mean candidate
+    // population sits exactly ON the crossover routes to the grid tier.
+    for (m, k) in [(2usize, 4usize), (6, 16), (8, 32)] {
+        let n = 10_000usize;
+        let frac = sched::brute_crossover_frac(m, k);
+        let at = frac * n as f64;
+        assert!(!sched::route_brute(at, n, m, k), "tie must route to grid");
+        assert!(sched::route_brute(at + 1.0, n, m, k), "above must route brute");
+        assert!(!sched::route_brute(at - 1.0, n, m, k));
+    }
+    // crossover falls as m and k grow, and stays in its clamp band
+    assert!(
+        sched::brute_crossover_frac(2, 4) > sched::brute_crossover_frac(8, 32)
+    );
+    for m in [1usize, 6, 18] {
+        for k in [1usize, 64, 1024] {
+            let f = sched::brute_crossover_frac(m, k);
+            assert!((0.05..=0.95).contains(&f), "clamp band: {f}");
+        }
+    }
+}
+
+#[test]
+fn auto_routes_by_candidate_density() {
+    let e = Engine::load_default().unwrap();
+    let data = susy_like(500).generate(0xBAC4);
+    // Degenerate 1-cell grid: every claim's mean candidate population is
+    // |D| > crossover·|D| for any crossover < 1, so Auto must route every
+    // claim onto the brute tier...
+    let (res, failed, stats) = drain_backend(
+        &e,
+        &data,
+        1,
+        1.0e12,
+        5,
+        BackendMode::Auto,
+        DrainMode::ThreeStage,
+        FaultPlan::none(),
+    );
+    assert!(failed.is_empty());
+    assert_eq!(stats.grid_claims, 0, "dense claims must route brute");
+    assert!(stats.brute_claims > 0);
+    assert!(stats.brute_tiles > 0);
+    assert_eq!(res.solved_count(5), data.len());
+    // ...while a fine grid (m=6, small ε: adjacent populations far below
+    // the crossover fraction) keeps Auto entirely on the grid tier.
+    let (_, _, stats) = drain_backend(
+        &e,
+        &data,
+        6,
+        2.0,
+        5,
+        BackendMode::Auto,
+        DrainMode::ThreeStage,
+        FaultPlan::none(),
+    );
+    assert_eq!(stats.brute_claims, 0, "sparse claims must route grid");
+    assert_eq!(stats.brute_tiles, 0);
+    assert!(stats.grid_claims > 0);
+}
+
+#[test]
+fn standalone_tiled_brute_matches_kdtree() {
+    // The `brute_join_tiled` wrapper (degenerate grid + forced backend)
+    // must agree with the host kd-tree - the entry the benches drive.
+    let e = Engine::load_default().unwrap();
+    let data = susy_like(500).generate(0xBAC5);
+    let params = GpuJoinParams::new(5, 1.0);
+    let (res, stats) =
+        hybrid_knn_join::gpu::brute::brute_join_tiled(&e, &data, &(0..data.len() as u32).collect::<Vec<_>>(), &params)
+            .unwrap();
+    assert_eq!(stats.grid_claims, 0);
+    assert!(stats.brute_tiles > 0);
+    assert_eq!(res.solved_count(5), data.len());
+    let tree = KdTree::build(&data);
+    for q in (0..data.len()).step_by(29) {
+        let got = res.get(q);
+        let want = tree.knn(&data, data.point(q), 5, q as u32);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g.dist2 - w.dist2).abs() < 1e-3 * (1.0 + w.dist2),
+                "q={q}: {g:?} vs {w:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn faults_fire_inside_brute_tiles() {
+    // The chaos hooks must reach the brute tier's rounds: a transient
+    // fault of each kind on a forced-Brute drain recovers in place and
+    // leaves the result bit-identical to the fault-free run.
+    let e = Engine::load_default().unwrap();
+    let data = susy_like(400).generate(0xBAC6);
+    let mode = pinned_drain().unwrap_or(DrainMode::ThreeStage);
+    let (clean, clean_failed, _) = drain_backend(
+        &e, &data, 3, 2.0, 4, BackendMode::Brute, mode, FaultPlan::none(),
+    );
+    assert!(clean_failed.is_empty());
+    let sum = clean.checksum();
+    for kind in [
+        FaultKind::ExecError,
+        FaultKind::TransferError,
+        FaultKind::FilterPanic,
+    ] {
+        let plan = FaultPlan::one(FaultSpec::transient(kind, 0, 0));
+        let (res, failed, stats) = drain_backend(
+            &e, &data, 3, 2.0, 4, BackendMode::Brute, mode, plan,
+        );
+        assert!(failed.is_empty(), "{kind:?}: recovery must re-solve");
+        assert_eq!(
+            sum,
+            res.checksum(),
+            "{kind:?}: recovered brute run diverged"
+        );
+        assert!(stats.gpu_faults >= 1, "{kind:?}: fault not observed");
+        assert!(stats.gpu_retries >= 1, "{kind:?}: no in-place retry");
+        assert!(stats.brute_claims > 0, "{kind:?}: claims must stay brute");
+    }
+}
