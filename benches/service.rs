@@ -1,0 +1,253 @@
+//! Online-service bench: resident-engine streaming micro-batches vs the
+//! one-shot batch flush, with per-request latency percentiles
+//! (DESIGN.md §11).
+//!
+//! One resident [`KnnEngine`] serves every scenario, so arenas, the
+//! brute-tier tile cache, and the PJRT executable cache stay warm - the
+//! production shape:
+//!
+//! * `batch` - the whole query pool in a single flush (the amortization
+//!   ceiling every streaming case is measured against);
+//! * `clients_{1,2,4}` - closed-loop streaming: each client submits its
+//!   next batch the moment the previous reply lands, so the ingress
+//!   coalesces under maximum pressure;
+//! * `open_loop` - clients submit on a timer at ~60% of the measured
+//!   closed-loop throughput: the controlled-load tail-latency view.
+//!
+//! Tracked columns are same-run ratios (machine-portable):
+//! `stream_vs_batch` = streaming throughput / batch-flush throughput
+//! (floors how much the ingress+flush cycle may cost over one giant
+//! batch) and `p99_fairness` = wall / (requests-per-client x p99)
+//! (floors the tail: ~1.0 when request latencies are uniform, collapsing
+//! toward 1/requests when one straggler dominates the run). Before any
+//! JSON is written, a deterministic-mode spot check asserts streamed
+//! results are bit-identical to the one-shot batch flush on the same
+//! queries. Emits `BENCH_service.json`, regression-gated against
+//! `benches/baselines/BENCH_service.json` in CI.
+//!
+//!   cargo bench --bench service
+//!   HKNN_RANKS=8 cargo bench --bench service
+
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::util::json::Json;
+
+const REQUESTS: usize = 6;
+const BATCH: usize = 64;
+
+/// Closed-loop (interval = 0) or open-loop streaming of contiguous
+/// request slices of `pool` through the resident session.
+fn run_case(
+    session: &mut KnnEngine,
+    pool: &Dataset,
+    clients: usize,
+    interval: f64,
+) -> ServiceReport {
+    let ingress = Ingress::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let client = ingress.client();
+                s.spawn(move || {
+                    for r in 0..REQUESTS {
+                        if interval > 0.0 {
+                            std::thread::sleep(
+                                std::time::Duration::from_secs_f64(interval),
+                            );
+                        }
+                        let start = (c * REQUESTS + r) * BATCH;
+                        let rows: Vec<usize> =
+                            (start..start + BATCH).collect();
+                        if client.query(&pool.gather(&rows)).is_err() {
+                            break;
+                        }
+                    }
+                })
+            })
+            .collect();
+        let rep = session.serve(&ingress).expect("serve loop");
+        for h in handles {
+            h.join().expect("client thread panicked");
+        }
+        rep
+    })
+}
+
+/// Deterministic-replay spot check: two streamed chunks must be
+/// bit-identical to the one-shot flush of the same queries.
+fn verify_stream_equals_batch(engine: &Engine, corpus: &Dataset, pool: &Dataset) {
+    let mut p = HybridParams::new(6);
+    p.cpu_ranks = 0;
+    let sub = pool.gather(&(0..128).collect::<Vec<_>>());
+    let mut one_shot = KnnEngine::build(engine, corpus, p.clone()).unwrap();
+    let (want, _) = one_shot.flush(&sub).unwrap();
+    let mut streamed = KnnEngine::build(engine, corpus, p).unwrap();
+    let ingress = Ingress::new();
+    let replies = std::thread::scope(|s| {
+        let client = ingress.client();
+        let sub = &sub;
+        let h = s.spawn(move || {
+            let a = client
+                .query(&sub.gather(&(0..50).collect::<Vec<_>>()))
+                .unwrap();
+            let b = client
+                .query(&sub.gather(&(50..128).collect::<Vec<_>>()))
+                .unwrap();
+            (a, b)
+        });
+        streamed.serve(&ingress).expect("serve loop");
+        h.join().expect("client thread panicked")
+    });
+    let got: Vec<QueryResult> = replies
+        .0
+        .results
+        .into_iter()
+        .chain(replies.1.results)
+        .collect();
+    assert_eq!(got.len(), sub.len());
+    for (q, g) in got.iter().enumerate() {
+        let w = want.get(q);
+        assert_eq!(g.ids.as_slice(), w.ids(), "q={q}: id lane");
+        assert_eq!(g.dist2.as_slice(), w.dist2s(), "q={q}: dist² lane");
+    }
+    println!("verified: streamed == one-shot batch, bit for bit (128 queries)");
+}
+
+fn main() {
+    let ranks: usize = std::env::var("HKNN_RANKS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let engine = Engine::load_default().expect("run `make artifacts` first");
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    let corpus = susy_like(2500).generate(0xFA);
+    let pool = susy_like(2048).generate(0x5EED);
+    let k = 6;
+
+    verify_stream_equals_batch(&engine, &corpus, &pool);
+
+    let mut p = HybridParams::new(k);
+    p.cpu_ranks = ranks;
+    let mut session =
+        KnnEngine::build(&engine, &corpus, p).expect("resident engine");
+    // warm: compiles executables, allocates the first drain arenas
+    let warm = pool.gather(&(0..64).collect::<Vec<_>>());
+    let _ = session.flush(&warm).expect("warmup flush");
+
+    // amortization ceiling: the whole pool as one flush
+    let (batch_res, batch_rep) = session.flush(&pool).expect("batch flush");
+    assert_eq!(batch_res.solved_count(k), pool.len(), "batch flush complete");
+    let batch_qps = pool.len() as f64 / batch_rep.secs.max(1e-12);
+    println!(
+        "batch flush: {} queries in {:.4}s = {:.1} q/s (ranks={ranks}, hw={hw})",
+        pool.len(),
+        batch_rep.secs,
+        batch_qps
+    );
+
+    let mut rows = vec![Json::obj(vec![
+        ("case", Json::Str("batch".into())),
+        ("queries", Json::Num(pool.len() as f64)),
+        ("secs", Json::Num(batch_rep.secs)),
+        ("throughput_qps", Json::Num(batch_qps)),
+    ])];
+    println!(
+        "{:>10} {:>8} {:>9} {:>9} {:>9} {:>9} {:>8} {:>8}",
+        "case", "queries", "qps", "p50 ms", "p99 ms", "flushes", "str r",
+        "p99 f"
+    );
+    let mut closed4_qps = batch_qps;
+    let cases: [(&str, usize, f64); 3] = [
+        ("clients_1", 1, 0.0),
+        ("clients_2", 2, 0.0),
+        ("clients_4", 4, 0.0),
+    ];
+    let mut emit = |name: &str,
+                    clients: usize,
+                    rep: &ServiceReport,
+                    rows: &mut Vec<Json>| {
+        let stream_vs_batch = rep.throughput_qps / batch_qps.max(1e-12);
+        let p99_fairness = rep.wall_secs
+            / (REQUESTS as f64 * rep.latency_p99.max(1e-12));
+        println!(
+            "{:>10} {:>8} {:>9.1} {:>9.2} {:>9.2} {:>9} {:>7.2}x {:>7.2}x",
+            name,
+            rep.queries,
+            rep.throughput_qps,
+            rep.latency_p50 * 1e3,
+            rep.latency_p99 * 1e3,
+            rep.flushes,
+            stream_vs_batch,
+            p99_fairness
+        );
+        rows.push(Json::obj(vec![
+            ("case", Json::Str(name.into())),
+            ("clients", Json::Num(clients as f64)),
+            ("queries", Json::Num(rep.queries as f64)),
+            ("requests", Json::Num(rep.requests as f64)),
+            ("flushes", Json::Num(rep.flushes as f64)),
+            ("mean_flush_queries", Json::Num(rep.mean_flush_queries)),
+            ("wall_secs", Json::Num(rep.wall_secs)),
+            ("throughput_qps", Json::Num(rep.throughput_qps)),
+            ("p50_ms", Json::Num(rep.latency_p50 * 1e3)),
+            ("p99_ms", Json::Num(rep.latency_p99 * 1e3)),
+            ("mean_ms", Json::Num(rep.latency_mean * 1e3)),
+            ("q_fail", Json::Num(rep.q_fail as f64)),
+            ("stream_vs_batch", Json::Num(stream_vs_batch)),
+            ("p99_fairness", Json::Num(p99_fairness)),
+        ]));
+    };
+    for (name, clients, interval) in cases {
+        let rep = run_case(&mut session, &pool, clients, interval);
+        assert_eq!(
+            rep.queries,
+            clients * REQUESTS * BATCH,
+            "{name}: every submitted query served"
+        );
+        assert_eq!(rep.q_gpu + rep.q_cpu, rep.queries, "{name}: exactly-once");
+        if clients == 4 {
+            closed4_qps = rep.throughput_qps;
+        }
+        emit(name, clients, &rep, &mut rows);
+    }
+
+    // open loop at ~60% of the measured closed-loop saturation rate
+    let open_clients = 4usize;
+    let rate = (0.6 * closed4_qps).max(1.0);
+    let interval = open_clients as f64 * BATCH as f64 / rate;
+    let rep = run_case(&mut session, &pool, open_clients, interval);
+    assert_eq!(rep.queries, open_clients * REQUESTS * BATCH);
+    emit("open_loop", open_clients, &rep, &mut rows);
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("service".into())),
+        (
+            "baseline",
+            Json::Str(
+                "one-shot batch flush of the whole query pool through the \
+                 same resident engine"
+                    .into(),
+            ),
+        ),
+        (
+            "contender",
+            Json::Str(
+                "concurrent clients streaming query micro-batches through \
+                 the ingress coalescer (closed loop at 1/2/4 clients, open \
+                 loop at ~60% of closed-loop throughput), per-request \
+                 p50/p99 latency"
+                    .into(),
+            ),
+        ),
+        ("ranks", Json::Num(ranks as f64)),
+        ("hw_threads", Json::Num(hw as f64)),
+        ("requests_per_client", Json::Num(REQUESTS as f64)),
+        ("batch_per_request", Json::Num(BATCH as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_service.json", doc.to_string() + "\n")
+        .expect("write BENCH_service.json");
+    println!("wrote BENCH_service.json");
+}

@@ -186,6 +186,13 @@ pub struct GpuJoinOutcome {
     pub result_pairs: u64,
     /// max pairs observed in one batch (must stay <= buffer_pairs)
     pub max_batch_pairs: u64,
+    /// byte-accurate buffered-device-output envelope actually scheduled:
+    /// the largest per-batch result-pair *capacity* (Σ |queries| x
+    /// |candidates| over the batch's cells; claim est-work in the queue
+    /// form). `max_batch_pairs <= batch_envelope_pairs`, and the packer
+    /// keeps this within `buffer_pairs` unless a single indivisible cell
+    /// exceeds it.
+    pub batch_envelope_pairs: u64,
 }
 
 /// Accounting of an in-place GPU-JOIN (`gpu_join_rs_into` /
@@ -212,6 +219,10 @@ pub struct GpuJoinStats {
     pub result_pairs: u64,
     /// max pairs observed in one batch (must stay <= buffer_pairs)
     pub max_batch_pairs: u64,
+    /// largest per-batch/per-claim result-pair capacity scheduled (the
+    /// byte-accurate `buffer_pairs` envelope; see
+    /// [`GpuJoinOutcome::batch_envelope_pairs`])
+    pub batch_envelope_pairs: u64,
     /// master-thread seconds materialising, packing and executing tiles
     /// on the device (claim resolution included; the literal-to-host
     /// conversion excluded - see `transfer_time`). `exec_time +
@@ -307,6 +318,7 @@ pub fn gpu_join_rs(
         estimated_pairs: s.estimated_pairs,
         result_pairs: s.result_pairs,
         max_batch_pairs: s.max_batch_pairs,
+        batch_envelope_pairs: s.batch_envelope_pairs,
     })
 }
 
@@ -449,18 +461,53 @@ pub fn gpu_join_rs_into(
                 0
             };
 
-            // number of batches: >= 3 (stream overlap), 1.5x estimator slack
-            let n_batches = ((estimated_pairs as f64 * 1.5
-                / params.buffer_pairs as f64)
-                .ceil() as usize)
-                .max(3)
-                .min(cells.len().max(3));
-
-            // ---- partition cells into batches (round-robin by size rank) ----
-            let mut batches: Vec<Vec<WorkCell>> = vec![Vec::new(); n_batches];
-            for (i, c) in cells.into_iter().enumerate() {
-                batches[i % n_batches].push(c);
+            // ---- partition cells into batches (byte-accurate envelope) ----
+            // `buffer_pairs` bounds the device output buffered per batch.
+            // A cell's realized in-ε pairs can never exceed its
+            // |queries| x |candidates| distance matrix, so packing cells
+            // first-fit (keeping the largest-first order) against that
+            // exact per-cell capacity keeps every batch's buffered
+            // output within `buffer_pairs` - no estimator slack, no
+            // chunk-count heuristic. A single cell larger than the
+            // budget gets its own batch: its matrix is indivisible at
+            // this layer, so the envelope is `buffer_pairs` or the
+            // largest cell, whichever is bigger. The budget additionally
+            // shrinks so the packing yields >= 3 batches (stream
+            // overlap), matching the historical minimum.
+            let cell_cap =
+                |c: &WorkCell| (c.queries.len() * c.candidates.len()) as u64;
+            let total_capacity: u64 = cells.iter().map(cell_cap).sum();
+            let mut budget = params.buffer_pairs.max(1);
+            if cells.len() >= 3 {
+                budget = budget.min((total_capacity / 3).max(1));
             }
+            let mut batches: Vec<Vec<WorkCell>> = Vec::new();
+            let mut loads: Vec<u64> = Vec::new();
+            for c in cells {
+                let cap = cell_cap(&c);
+                match loads.iter().position(|&l| l + cap <= budget) {
+                    Some(i) => {
+                        loads[i] += cap;
+                        batches[i].push(c);
+                    }
+                    None => {
+                        loads.push(cap);
+                        batches.push(vec![c]);
+                    }
+                }
+            }
+            // oversized cells can leave fewer than 3 bins: split the
+            // fullest multi-cell bins until the minimum is restored
+            while batches.len() < 3 && batches.iter().any(|b| b.len() > 1) {
+                let i = (0..batches.len())
+                    .max_by_key(|&i| batches[i].len())
+                    .expect("non-empty bins");
+                let tail = batches[i].split_off(batches[i].len() / 2);
+                loads[i] = batches[i].iter().map(cell_cap).sum();
+                loads.push(tail.iter().map(cell_cap).sum());
+                batches.push(tail);
+            }
+            acc.batch_envelope_pairs = loads.iter().copied().max().unwrap_or(0);
 
             // ---- execute batches, resolving each into slots / Q^Fail ----
             for batch in &batches {
@@ -508,6 +555,7 @@ pub fn gpu_join_rs_into(
         estimated_pairs,
         result_pairs: acc.result_pairs,
         max_batch_pairs: acc.max_batch_pairs,
+        batch_envelope_pairs: acc.batch_envelope_pairs,
         // list form: master time is not separately clocked - exec is the
         // wall minus the measured transfer/filter components
         exec_time: (total_time - acc.transfer_time - acc.filter_time).max(0.0),
@@ -651,6 +699,90 @@ pub fn gpu_join_drain(
     slots: &SoaSlots<'_>,
     pos_cap: usize,
 ) -> Result<GpuJoinStats> {
+    gpu_join_drain_with(
+        engine,
+        r_data,
+        data,
+        grid,
+        queue,
+        params,
+        slots,
+        pos_cap,
+        &mut DrainState::new(),
+    )
+}
+
+/// Session-owned reusable state of the queue-driven GPU drains: the
+/// brute tier's packed corpus tile cache and the pipelined drains'
+/// rotating staging sets (query lists + heap arenas). A one-shot join
+/// builds a fresh one per call ([`gpu_join_drain`]); a resident
+/// streaming session keeps one across flushes
+/// ([`gpu_join_drain_with`]) so corpus tiles stay packed and arena heap
+/// storage is reused instead of reallocated on every micro-batch.
+pub(crate) struct DrainState {
+    brute_cache: BruteCache,
+    stages: Vec<Arc<ClaimStage>>,
+    /// arena stride the stored stages were built for; a flush with a
+    /// different k drops them
+    stage_k: usize,
+}
+
+impl DrainState {
+    /// Empty state: nothing cached yet.
+    pub(crate) fn new() -> Self {
+        DrainState {
+            brute_cache: BruteCache::new(),
+            stages: Vec::new(),
+            stage_k: 0,
+        }
+    }
+
+    /// Take `depth` staging sets for a drain, reusing stored ones when
+    /// the arena stride matches and topping up with fresh allocations.
+    fn take_stages(
+        &mut self,
+        depth: usize,
+        arena_k: usize,
+    ) -> Vec<Arc<ClaimStage>> {
+        if self.stage_k != arena_k {
+            self.stages.clear();
+            self.stage_k = arena_k;
+        }
+        let mut out = std::mem::take(&mut self.stages);
+        out.truncate(depth);
+        while out.len() < depth {
+            out.push(Arc::new(ClaimStage::new(arena_k)));
+        }
+        out
+    }
+
+    /// Store staging sets back after a drain for the next flush. Only
+    /// uniquely-owned sets are kept: an abandoned error path may leave
+    /// one shared with a parked round, and such a set must not be
+    /// handed to a later flush (it is simply dropped instead).
+    fn store_stages(&mut self, stages: Vec<Arc<ClaimStage>>) {
+        self.stages = stages
+            .into_iter()
+            .filter(|s| Arc::strong_count(s) == 1)
+            .collect();
+    }
+}
+
+/// [`gpu_join_drain`] over caller-owned [`DrainState`] - the re-entrant
+/// form the streaming session uses, where one `DrainState` outlives
+/// many flushes.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gpu_join_drain_with(
+    engine: &Engine,
+    r_data: &Dataset,
+    data: &Dataset,
+    grid: &GridIndex,
+    queue: &WorkQueue,
+    params: &GpuJoinParams,
+    slots: &SoaSlots<'_>,
+    pos_cap: usize,
+    state: &mut DrainState,
+) -> Result<GpuJoinStats> {
     let t_start = Instant::now();
     assert!(params.k <= slots.k(), "result stride {} < k {}", slots.k(), params.k);
     let buffer_cap = params.buffer_pairs.max(1);
@@ -673,6 +805,7 @@ pub fn gpu_join_drain(
             estimated_pairs: 0,
             result_pairs: 0,
             max_batch_pairs: 0,
+            batch_envelope_pairs: 0,
             exec_time: 0.0,
             transfer_time: 0.0,
             filter_time: 0.0,
@@ -699,15 +832,15 @@ pub fn gpu_join_drain(
     match params.drain {
         DrainMode::Sync => drain_sync(
             engine, r_data, data, grid, queue, params, slots, pos_cap, plans,
-            use_topk, first, t_start,
+            use_topk, first, t_start, state,
         ),
         DrainMode::TwoStage => drain_pipelined(
             engine, r_data, data, grid, queue, params, slots, pos_cap, plans,
-            use_topk, first, t_start, false,
+            use_topk, first, t_start, false, state,
         ),
         DrainMode::ThreeStage => drain_pipelined(
             engine, r_data, data, grid, queue, params, slots, pos_cap, plans,
-            use_topk, first, t_start, true,
+            use_topk, first, t_start, true, state,
         ),
     }
 }
@@ -804,11 +937,12 @@ fn drain_sync(
     use_topk: bool,
     first: std::ops::Range<usize>,
     t_start: Instant,
+    state: &mut DrainState,
 ) -> Result<GpuJoinStats> {
     let buffer_cap = params.buffer_pairs.max(1);
     let policy = &params.recovery;
     let mut acc = DrainAcc::default();
-    let mut brute_cache = BruteCache::new();
+    let brute_cache = &mut state.brute_cache;
     let mut gpu_busy = 0f64;
     let mut consecutive = 0usize;
     let mut claim_idx = 0usize;
@@ -847,7 +981,7 @@ fn drain_sync(
             range.clone(),
             est,
             deadline,
-            &mut brute_cache,
+            brute_cache,
             &mut acc,
         ) {
             Ok(()) => consecutive = 0,
@@ -867,7 +1001,7 @@ fn drain_sync(
                     deadline,
                     first_err,
                     &mut consecutive,
-                    &mut brute_cache,
+                    brute_cache,
                     &mut acc,
                 );
             }
@@ -908,6 +1042,7 @@ fn drain_sync(
         estimated_pairs: acc.work_done,
         result_pairs: acc.result_pairs,
         max_batch_pairs: acc.max_batch_pairs,
+        batch_envelope_pairs: acc.batch_envelope_pairs,
         exec_time: acc.exec_time,
         transfer_time: acc.transfer_time,
         filter_time: acc.filter_time,
@@ -1045,6 +1180,7 @@ struct DrainAcc {
     solved: usize,
     result_pairs: u64,
     max_batch_pairs: u64,
+    batch_envelope_pairs: u64,
     batches: usize,
     exec_time: f64,
     transfer_time: f64,
@@ -1194,6 +1330,10 @@ fn sync_cells_attempt(
 
     acc.result_pairs += batch_pairs;
     acc.max_batch_pairs = acc.max_batch_pairs.max(batch_pairs);
+    // queue claims are sized by est-work = exact adjacent-candidate
+    // counts, an upper bound on the claim's realised pairs - the claim
+    // form of the byte-accurate envelope
+    acc.batch_envelope_pairs = acc.batch_envelope_pairs.max(est_work);
     acc.batches += 1;
     let secs = t_claim.elapsed().as_secs_f64();
     let exec_secs = (secs - transfer_secs - filter_secs).max(0.0);
@@ -1405,6 +1545,7 @@ fn resolve_stage(
     let filter_secs = stage.filter_nanos.load(Ordering::Relaxed) as f64 / 1e9;
     acc.result_pairs += batch_pairs;
     acc.max_batch_pairs = acc.max_batch_pairs.max(batch_pairs);
+    acc.batch_envelope_pairs = acc.batch_envelope_pairs.max(meta.est_work);
     acc.batches += 1;
     acc.exec_time += meta.exec_secs;
     acc.transfer_time += transfer_secs;
@@ -1462,8 +1603,9 @@ fn pipelined_deadline(
 ///   thread and re-submits the converted round to the filter pool on the
 ///   same lane - exec of claim i+1, transfer of claim i and filtering of
 ///   claim i-1 all overlap through three rotating staging sets, and the
-///   filter pool (capacity 2, per-lane ordering) may interleave rounds
-///   of adjacent claims for extra tail parallelism;
+///   filter pool (adaptive cross-claim capacity, per-lane ordering - see
+///   [`filter_pool_capacity`]) may interleave rounds of adjacent claims
+///   for extra tail parallelism;
 /// * before staging set i mod depth is refilled for claim i, claim
 ///   i-depth is waited out and resolved - at most `depth` claims are
 ///   live, and their arenas can never alias a queue position because
@@ -1477,6 +1619,37 @@ fn pipelined_deadline(
 ///   rate (`exec_secs` excludes transfer and backpressure) against the
 ///   live CPU rate - the telemetry split that makes claim-ahead sizing
 ///   honest under overlap.
+/// Cross-claim capacity of the pipelined filter pool, in single-tile
+/// rounds.
+///
+/// Steady state keeps the historical bounded hand-off:
+/// `filter_rounds * round_cap` tiles, i.e. the sync drain's buffered-
+/// device-output envelope divided across the pipeline depth. That count
+/// assumes claims actually fill their rounds - under a streaming
+/// session's micro-batch flushes the whole head may be a handful of
+/// queries, every claim emits one partial round of one or two tiles,
+/// and a rounds-counted cap computed from `round_cap` can drop below
+/// one in-flight tile per filter worker, serialising the pool exactly
+/// when cross-claim interleaving is the only parallelism left. When the
+/// head's query volume cannot fill one tile row per worker
+/// (`head_queries <= n_workers * tile_qt`), widen the cap to the sync
+/// envelope of `n_workers * 8` tiles: tiny tiles make the byte bound
+/// moot and occupancy is what matters.
+fn filter_pool_capacity(
+    n_workers: usize,
+    round_cap: usize,
+    filter_rounds: usize,
+    head_queries: usize,
+    tile_qt: usize,
+) -> usize {
+    let steady = (filter_rounds * round_cap).max(1);
+    if head_queries <= n_workers * tile_qt.max(1) {
+        steady.max(n_workers * 8)
+    } else {
+        steady
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn drain_pipelined(
     engine: &Engine,
@@ -1492,6 +1665,7 @@ fn drain_pipelined(
     first: std::ops::Range<usize>,
     t_start: Instant,
     three_stage: bool,
+    state: &mut DrainState,
 ) -> Result<GpuJoinStats> {
     let eps2 = params.eps * params.eps;
     let exclude_self = params.exclude_self;
@@ -1515,8 +1689,16 @@ fn drain_pipelined(
     // handed off at tile granularity so filtering starts as soon as the
     // first tile of a round is converted. Actual occupancy stays bounded
     // upstream: the transfer stage holds one raw round at a time, so
-    // exec can run at most one round ahead.
-    let filter_cap = (filter_rounds * round_cap).max(1);
+    // exec can run at most one round ahead. Micro-batch flushes (a
+    // streaming session's small head) widen this to the sync envelope -
+    // see `filter_pool_capacity`.
+    let filter_cap = filter_pool_capacity(
+        n_workers,
+        round_cap,
+        filter_rounds,
+        queue.len().min(pos_cap),
+        plans.0.qt,
+    );
 
     // recoverable pools: a worker panic (injected or real) is caught,
     // recorded against the round's lane, and surfaced as that *claim's*
@@ -1628,7 +1810,7 @@ fn drain_pipelined(
                         pipelined_claim_loop(
                             engine, r_data, data, grid, queue, params, slots,
                             pos_cap, plans, use_topk, first, round_cap,
-                            Some(transfer_handle), filter_handle,
+                            Some(transfer_handle), filter_handle, state,
                         )
                     },
                 );
@@ -1637,6 +1819,7 @@ fn drain_pipelined(
                 pipelined_claim_loop(
                     engine, r_data, data, grid, queue, params, slots, pos_cap,
                     plans, use_topk, first, round_cap, None, filter_handle,
+                    state,
                 )
             }
         },
@@ -1657,6 +1840,7 @@ fn drain_pipelined(
         estimated_pairs: acc.work_done,
         result_pairs: acc.result_pairs,
         max_batch_pairs: acc.max_batch_pairs,
+        batch_envelope_pairs: acc.batch_envelope_pairs,
         exec_time: acc.exec_time,
         transfer_time: acc.transfer_time,
         filter_time: acc.filter_time,
@@ -1694,6 +1878,7 @@ fn pipelined_claim_loop(
     round_cap: usize,
     transfer_handle: Option<&pool::StageHandle<TransferRound>>,
     filter_handle: &pool::StageHandle<FilterRound>,
+    state: &mut DrainState,
 ) -> Result<DrainAcc> {
     let buffer_cap = params.buffer_pairs.max(1);
     // heap bound for the staging arenas; the solved test at resolve uses
@@ -1705,9 +1890,8 @@ fn pipelined_claim_loop(
     let policy = &params.recovery;
     let depth = if transfer_handle.is_some() { 3 } else { 2 };
     let mut acc = DrainAcc::default();
-    let mut brute_cache = BruteCache::new();
-    let mut stages: Vec<Arc<ClaimStage>> =
-        (0..depth).map(|_| Arc::new(ClaimStage::new(arena_k))).collect();
+    let mut stages: Vec<Arc<ClaimStage>> = state.take_stages(depth, arena_k);
+    let brute_cache = &mut state.brute_cache;
     let mut metas: Vec<Option<ClaimMeta>> = (0..depth).map(|_| None).collect();
     let mut claim_idx = 0usize;
     let mut consecutive = 0usize;
@@ -1737,7 +1921,7 @@ fn pipelined_claim_loop(
                     engine, (r_data, data), grid, queue, params, slots, plans,
                     use_topk, meta.lane as usize, meta.range.clone(),
                     meta.est_work, deadline, (e, kind), &mut consecutive,
-                    &mut brute_cache, &mut acc,
+                    brute_cache, &mut acc,
                 ) {
                     let brute =
                         route_claim(queue, grid, params, data.len(), &range);
@@ -1806,7 +1990,7 @@ fn pipelined_claim_loop(
                 &cells,
                 params,
                 round_cap,
-                &mut brute_cache,
+                brute_cache,
                 &mut acc.kernel_time,
                 &mut acc.brute_tiles,
                 &mut |raw: Vec<RawTile>| {
@@ -1907,7 +2091,7 @@ fn pipelined_claim_loop(
                 if recover_claim(
                     engine, (r_data, data), grid, queue, params, slots, plans,
                     use_topk, claim_idx, range, est, deadline, (e, kind),
-                    &mut consecutive, &mut brute_cache, &mut acc,
+                    &mut consecutive, brute_cache, &mut acc,
                 ) {
                     break;
                 }
@@ -1979,13 +2163,16 @@ fn pipelined_claim_loop(
                     engine, (r_data, data), grid, queue, params, slots, plans,
                     use_topk, meta.lane as usize, meta.range.clone(),
                     meta.est_work, deadline, (e, kind), &mut consecutive,
-                    &mut brute_cache, &mut acc,
+                    brute_cache, &mut acc,
                 );
             }
         } else {
             consecutive = 0;
         }
     }
+    // hand the (now quiescent) staging sets back for the next flush;
+    // any set an abandoned error path still shares is dropped inside
+    state.store_stages(stages);
     Ok(acc)
 }
 
@@ -2608,13 +2795,59 @@ mod tests {
         params.buffer_pairs = 2_000; // force many batches
         let out = gpu_join(&engine, &data, &grid, &queries, &params).unwrap();
         assert!(out.batches >= 3, "minimum 3 batches (stream overlap)");
+        // byte-accurate envelope: realised pairs never exceed the
+        // scheduled per-batch capacity ...
         assert!(
-            out.max_batch_pairs <= params.buffer_pairs * 4,
-            "batch result {} wildly exceeds buffer {}",
+            out.max_batch_pairs <= out.batch_envelope_pairs,
+            "realised {} exceeds scheduled envelope {}",
             out.max_batch_pairs,
-            params.buffer_pairs
+            out.batch_envelope_pairs
+        );
+        // ... and the scheduled capacity stays within buffer_pairs
+        // unless a single indivisible cell exceeds it (recompute the
+        // largest cell's |queries| x |candidates| straight off the grid)
+        let mut by_cell: std::collections::HashMap<u64, (u64, u32)> =
+            std::collections::HashMap::new();
+        for q in 0..data.len() as u32 {
+            by_cell
+                .entry(grid.query_cell_id(true, &data, q))
+                .or_insert((0, q))
+                .0 += 1;
+        }
+        let mut cands = Vec::new();
+        let max_cell_capacity = by_cell
+            .values()
+            .map(|&(nq, rep)| {
+                cands.clear();
+                grid.query_candidates_into(true, &data, rep, &mut cands);
+                nq * cands.len() as u64
+            })
+            .max()
+            .unwrap_or(0);
+        assert!(
+            out.batch_envelope_pairs
+                <= params.buffer_pairs.max(max_cell_capacity),
+            "envelope {} exceeds buffer {} (largest cell {})",
+            out.batch_envelope_pairs,
+            params.buffer_pairs,
+            max_cell_capacity
         );
         assert!(out.estimated_pairs > 0);
+    }
+
+    #[test]
+    fn filter_pool_capacity_adapts_to_micro_batches() {
+        // steady state: the historical rounds-counted envelope survives
+        assert_eq!(filter_pool_capacity(3, 6, 2, 10_000, 128), 12);
+        assert_eq!(filter_pool_capacity(3, 12, 1, 10_000, 128), 12);
+        // micro-batch regime: a head smaller than one tile row per
+        // worker widens the cap to the sync envelope (n_workers * 8)
+        assert_eq!(filter_pool_capacity(3, 6, 2, 64, 128), 24);
+        assert_eq!(filter_pool_capacity(1, 4, 1, 1, 32), 8);
+        // widening never shrinks an already-larger steady envelope
+        assert_eq!(filter_pool_capacity(4, 32, 2, 2, 128), 64);
+        // degenerate inputs still yield a usable capacity
+        assert!(filter_pool_capacity(1, 0, 0, 0, 0) >= 1);
     }
 
     #[test]

@@ -35,6 +35,8 @@
 //! index construction (Sec. VI-B); `HybridReport::response_time` follows
 //! the same convention, with the raw phase times kept in `timers`.
 
+pub mod service;
+
 use anyhow::Result;
 
 use crate::core::{Dataset, KnnResult};

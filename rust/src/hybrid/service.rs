@@ -1,0 +1,649 @@
+//! Online KNN service: a resident engine serving streaming query
+//! micro-batches (ROADMAP direction 1, DESIGN.md §11).
+//!
+//! The one-shot joins ([`super::HybridKnnJoin`]) rebuild everything per
+//! call: grid, kd-tree, ε selection, GPU tile plans, drain arenas. The
+//! north-star workload is the opposite shape - a long-lived process
+//! holding one corpus resident while query *streams* arrive from many
+//! concurrent clients. This module separates "engine" from "run once":
+//!
+//! * [`KnnEngine`] owns the resident state - the (dimension-reordered)
+//!   corpus, its `GridIndex` + `KdTree`, the ε selection, the PJRT
+//!   [`Engine`] handle with its compiled-executable cache, and a
+//!   [`DrainState`](crate::gpu::join) of reusable GPU drain arenas
+//!   (staging sets + packed brute-tier corpus tiles) that survive
+//!   across flushes instead of being reallocated per join.
+//! * [`Ingress`] is the admission layer: clients ([`Client::query`])
+//!   park query batches in a shared pending queue; the serve loop
+//!   coalesces *everything pending* into one micro-batch per flush -
+//!   the buffered-batching design of Bigger Buffer k-d Trees (arxiv
+//!   1512.02831) applied to the hybrid queue - so per-flush costs
+//!   (rank cache, queue pricing, claim setup) amortize over every
+//!   in-flight client.
+//! * [`KnnEngine::flush`] prices one micro-batch with the same
+//!   machinery as the batch path (`GridIndex::build_query_ranks` +
+//!   `sched::build_queue_keyed`, densest cells first) and drains it
+//!   through the session-owned three-stage GPU pipeline, with CPU
+//!   ranks chunking the sparse tail - dense micro-batches go to the
+//!   device, sparse singletons resolve on the host.
+//! * [`KnnEngine::serve`] runs the flush loop until every client has
+//!   disconnected and returns a [`ServiceReport`] with per-request
+//!   p50/p99 latency next to the throughput numbers.
+//!
+//! # Determinism
+//!
+//! `cpu_ranks == 0` selects the *deterministic replay* mode: the GPU
+//! master drains the entire micro-batch queue through the grid tier
+//! (backend routing pinned to [`BackendMode::Grid`], ρ pinned to 0),
+//! and a single CPU rank re-solves the recirculated Q^Fail afterwards.
+//! In that mode each query's result is a pure function of (corpus, ε,
+//! k) - which side computes it, and every distance bit, is independent
+//! of how the stream was chopped into flushes - so any interleaving of
+//! client submissions is bit-identical to the one-shot batch join on
+//! the union of the queries (property-tested in
+//! `rust/tests/service.rs` across all three `DrainMode`s). With
+//! `cpu_ranks > 0` the dense/sparse split is discovered per flush at
+//! run time and results are exact but carry the usual f32-device vs
+//! f64-host rounding difference per query.
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::core::{Dataset, KnnResult};
+use crate::cpu;
+use crate::data::variance::reorder_by_variance;
+use crate::epsilon::EpsilonSelection;
+use crate::gpu::join::{gpu_join_drain_with, DrainState};
+use crate::gpu::{DrainMode, GpuJoinParams, GpuJoinStats};
+use crate::index::{GridIndex, KdTree, QueryKey};
+use crate::runtime::Engine;
+use crate::sched::{self, BackendMode};
+use crate::util::pool::lock_unpoisoned;
+
+use super::HybridParams;
+
+/// A resident KNN engine: one corpus, indexed once, served many times.
+///
+/// Construction ([`KnnEngine::build`]) pays the one-shot costs - the
+/// variance REORDER, device ε selection over the corpus alone (so the
+/// grid geometry never depends on which queries later arrive), grid and
+/// kd-tree builds - and every subsequent [`flush`](KnnEngine::flush)
+/// reuses them plus the session-owned GPU drain arenas and the PJRT
+/// executable cache.
+pub struct KnnEngine<'e> {
+    engine: &'e Engine,
+    params: HybridParams,
+    /// the corpus after the variance REORDER (dimension permutation)
+    corpus: Dataset,
+    /// dimension permutation applied to the corpus; incoming query
+    /// batches are permuted the same way so distances are preserved
+    perm: Option<Vec<usize>>,
+    eps: EpsilonSelection,
+    grid: GridIndex,
+    tree: KdTree,
+    /// reusable GPU drain state: pipeline staging sets + brute-tier
+    /// corpus tile cache, alive across flushes
+    drain: DrainState,
+    hw: usize,
+    flushes: usize,
+}
+
+/// Telemetry of one [`KnnEngine::flush`].
+#[derive(Debug, Clone, Default)]
+pub struct FlushReport {
+    /// queries in this micro-batch
+    pub queries: usize,
+    /// queries claimed off the dense head by the GPU master
+    pub q_gpu: usize,
+    /// queries claimed off the sparse tail by the CPU ranks
+    pub q_cpu: usize,
+    /// GPU claims with < K in-ε neighbors, re-solved on the CPU via
+    /// recirculation
+    pub q_fail: usize,
+    /// queries the GPU solved exactly
+    pub solved_on_gpu: usize,
+    /// GPU claims executed
+    pub gpu_claims: usize,
+    /// failed GPU claim attempts (injected or real)
+    pub gpu_faults: usize,
+    /// true when the GPU master demoted itself and this flush finished
+    /// CPU-only
+    pub degraded: bool,
+    /// wall seconds of the flush (queue build + drain)
+    pub secs: f64,
+}
+
+impl<'e> KnnEngine<'e> {
+    /// Build the resident engine over `corpus` with `params`.
+    ///
+    /// ε is selected from the corpus alone (self-estimator), not from
+    /// any query stream - a resident index cannot re-derive its grid
+    /// per arrival, and corpus-only selection is what makes flush
+    /// results independent of batch composition (see module docs).
+    pub fn build(
+        engine: &'e Engine,
+        corpus: &Dataset,
+        params: HybridParams,
+    ) -> Result<KnnEngine<'e>> {
+        let (corpus_re, perm) = if params.reorder {
+            let (c, p) = reorder_by_variance(corpus);
+            (c, Some(p))
+        } else {
+            (corpus.clone(), None)
+        };
+        let eps = params
+            .selector
+            .select(engine, &corpus_re, params.k, params.beta)?;
+        let grid = GridIndex::build(&corpus_re, params.m, eps.eps);
+        let tree = KdTree::build(&corpus_re);
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Ok(KnnEngine {
+            engine,
+            params,
+            corpus: corpus_re,
+            perm,
+            eps,
+            grid,
+            tree,
+            drain: DrainState::new(),
+            hw,
+            flushes: 0,
+        })
+    }
+
+    /// The ε selection driving the resident grid.
+    pub fn eps(&self) -> &EpsilonSelection {
+        &self.eps
+    }
+
+    /// The parameters the engine was built with.
+    pub fn params(&self) -> &HybridParams {
+        &self.params
+    }
+
+    /// Corpus size (points of the resident relation S).
+    pub fn corpus_len(&self) -> usize {
+        self.corpus.len()
+    }
+
+    /// Corpus dimensionality; every query batch must match it.
+    pub fn dims(&self) -> usize {
+        self.corpus.dims()
+    }
+
+    /// Micro-batches flushed so far.
+    pub fn flushes(&self) -> usize {
+        self.flushes
+    }
+
+    /// Join one query micro-batch against the resident corpus: price it
+    /// into a density-ordered work queue, drain the dense head through
+    /// the session-owned GPU pipeline and the sparse tail through CPU
+    /// ranks, and return the per-query neighbor table (row i of the
+    /// result is query i of `queries`; neighbor ids index the corpus).
+    ///
+    /// This is the bipartite join form (no self-exclusion): queries are
+    /// their own relation, never part of the corpus.
+    pub fn flush(
+        &mut self,
+        queries: &Dataset,
+    ) -> Result<(KnnResult, FlushReport)> {
+        anyhow::ensure!(
+            queries.dims() == self.corpus.dims(),
+            "query dims {} != corpus dims {}",
+            queries.dims(),
+            self.corpus.dims()
+        );
+        let t0 = Instant::now();
+        let mut result = KnnResult::new(queries.len(), self.params.k);
+        if queries.is_empty() {
+            self.flushes += 1;
+            return Ok((
+                result,
+                FlushReport {
+                    secs: t0.elapsed().as_secs_f64(),
+                    ..FlushReport::default()
+                },
+            ));
+        }
+        let q_re = match &self.perm {
+            Some(p) => queries.permute_dims(p),
+            None => queries.clone(),
+        };
+        // deterministic replay mode: see module docs
+        let deterministic = self.params.cpu_ranks == 0;
+        let query_ids: Vec<u32> = (0..q_re.len() as u32).collect();
+        // one rank-cache pass per flush: O(1) pricing per query after it
+        let cache = self.grid.build_query_ranks(&q_re);
+        let rho = if deterministic { 0.0 } else { self.params.rho };
+        let queue = sched::build_queue_keyed(
+            &q_re,
+            &self.grid,
+            &query_ids,
+            self.params.k,
+            self.params.gamma,
+            rho,
+            QueryKey::Cached(&cache),
+        );
+
+        // split borrows: the GPU master mutates the session drain state
+        // on this thread while the CPU ranks read the index structures
+        let engine = self.engine;
+        let params = &self.params;
+        let corpus = &self.corpus;
+        let grid = &self.grid;
+        let tree = &self.tree;
+        let drain = &mut self.drain;
+        let hw = self.hw;
+        let eps = self.eps.eps;
+
+        let gpu_params = GpuJoinParams {
+            k: params.k,
+            eps,
+            tile_class: params.tile_class,
+            use_topk: params.use_topk,
+            buffer_pairs: params.buffer_pairs,
+            streams: params.streams,
+            assign: params.assign,
+            estimator_frac: 0.01,
+            exclude_self: false,
+            drain: if hw > 1 { params.gpu_drain } else { DrainMode::Sync },
+            fault: params.fault.clone(),
+            recovery: params.recovery,
+            // pinning the grid tier is part of the deterministic replay
+            // contract: brute routing depends on claim composition, and
+            // a brute claim would solve its < K-in-ε queries with f32
+            // device distances where the grid tier recirculates them to
+            // the f64 host path
+            backend: if deterministic {
+                BackendMode::Grid
+            } else {
+                params.backend
+            },
+        };
+        let slots = result.slots();
+        // deterministic mode drains the whole queue through the GPU
+        // master; otherwise mirror the one-shot dynamic join's gating
+        let pos_cap = if deterministic || hw > 1 {
+            queue.len()
+        } else {
+            queue.dense_prefix()
+        };
+        // release the CPU ranks on every GPU exit path - normal, error,
+        // or panic - so the scope join cannot hang
+        struct GpuDoneGuard<'a>(&'a sched::WorkQueue);
+        impl Drop for GpuDoneGuard<'_> {
+            fn drop(&mut self) {
+                self.0.set_gpu_done();
+            }
+        }
+        let run_gpu =
+            |drain: &mut DrainState| -> Option<Result<GpuJoinStats>> {
+                let _done = GpuDoneGuard(&queue);
+                if queue.head_open(pos_cap) {
+                    Some(gpu_join_drain_with(
+                        engine, &q_re, corpus, grid, &queue, &gpu_params,
+                        &slots, pos_cap, drain,
+                    ))
+                } else {
+                    None
+                }
+            };
+        let run_cpu = |ranks: usize| {
+            cpu::exact_ann_drain(
+                corpus, tree, &q_re, &queue, params.k, ranks, false, &slots,
+            )
+        };
+        let cpu_ranks = params.cpu_ranks;
+        let (gpu_out, cpu_out) = if deterministic {
+            // sequential: GPU first over everything, then one CPU rank
+            // absorbs the recirculated Q^Fail (and any ρ'd tail)
+            let g = run_gpu(drain);
+            let c = run_cpu(1);
+            (g, c)
+        } else if hw > 1 {
+            std::thread::scope(|scope| {
+                let cpu_handle = scope.spawn(|| run_cpu(cpu_ranks));
+                let gpu_out = run_gpu(drain);
+                (gpu_out, cpu_handle.join().expect("cpu ranks panicked"))
+            })
+        } else {
+            let g = run_gpu(drain);
+            let c = run_cpu(cpu_ranks);
+            (g, c)
+        };
+        let gpu_stats = gpu_out.transpose()?;
+        drop(slots); // all writers done; `result` is complete in place
+
+        let mut rep = FlushReport {
+            queries: queries.len(),
+            q_gpu: queue.claimed_head(),
+            q_cpu: queue.claimed_tail(),
+            secs: t0.elapsed().as_secs_f64(),
+            ..FlushReport::default()
+        };
+        if let Some(g) = &gpu_stats {
+            rep.q_fail = g.failed.len();
+            rep.solved_on_gpu = g.solved;
+            rep.gpu_claims = g.batches;
+            rep.gpu_faults = g.gpu_faults;
+            rep.degraded = g.degraded;
+        }
+        let _ = cpu_out; // claim telemetry not aggregated per flush
+        debug_assert_eq!(
+            rep.q_gpu + rep.q_cpu,
+            rep.queries,
+            "exactly-once: head + tail claims must partition the batch"
+        );
+        self.flushes += 1;
+        Ok((result, rep))
+    }
+
+    /// Run the serving loop on this thread (the engine holds the PJRT
+    /// client, which is not `Send` - the GPU-master rank of the paper):
+    /// wait for pending requests, coalesce *all* of them into one
+    /// micro-batch, flush, reply to each client with its result rows
+    /// and request latency, and repeat until every [`Client`] handle
+    /// has been dropped and the pending queue is empty.
+    pub fn serve(&mut self, ingress: &Ingress) -> Result<ServiceReport> {
+        let t0 = Instant::now();
+        let mut lat: Vec<f64> = Vec::new();
+        let mut rep = ServiceReport::default();
+        loop {
+            let batch: Vec<Pending> = {
+                let mut st = lock_unpoisoned(&ingress.state);
+                while st.pending.is_empty() && st.open_clients > 0 {
+                    st = match ingress.cv.wait(st) {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                }
+                st.pending.drain(..).collect()
+            };
+            if batch.is_empty() {
+                break; // all clients disconnected, nothing queued
+            }
+            // coalesce every pending request into one micro-batch
+            let dims = self.corpus.dims();
+            let mut flat: Vec<f32> = Vec::new();
+            for p in &batch {
+                anyhow::ensure!(
+                    p.dims == dims && p.points.len() == p.n * dims,
+                    "request dims {} != corpus dims {dims}",
+                    p.dims
+                );
+                flat.extend_from_slice(&p.points);
+            }
+            let queries = Dataset::new(flat, dims);
+            let (result, frep) = self.flush(&queries)?;
+            // slice the flush result back into per-request replies
+            let mut start = 0usize;
+            for p in batch {
+                let mut results = Vec::with_capacity(p.n);
+                for q in start..start + p.n {
+                    let ns = result.get(q);
+                    results.push(QueryResult {
+                        ids: ns.ids().to_vec(),
+                        dist2: ns.dist2s().to_vec(),
+                    });
+                }
+                start += p.n;
+                let latency_secs = p.submitted.elapsed().as_secs_f64();
+                lat.push(latency_secs);
+                rep.requests += 1;
+                // a client that gave up is not a service error
+                let _ = p.reply.send(BatchReply { results, latency_secs });
+            }
+            rep.queries += frep.queries;
+            rep.flushes += 1;
+            rep.q_gpu += frep.q_gpu;
+            rep.q_cpu += frep.q_cpu;
+            rep.q_fail += frep.q_fail;
+            rep.gpu_faults += frep.gpu_faults;
+            rep.degraded_flushes += usize::from(frep.degraded);
+        }
+        rep.wall_secs = t0.elapsed().as_secs_f64();
+        rep.throughput_qps = if rep.wall_secs > 0.0 {
+            rep.queries as f64 / rep.wall_secs
+        } else {
+            0.0
+        };
+        lat.sort_by(|a, b| a.total_cmp(b));
+        rep.latency_p50 = percentile(&lat, 0.50);
+        rep.latency_p99 = percentile(&lat, 0.99);
+        rep.latency_mean = if lat.is_empty() {
+            0.0
+        } else {
+            lat.iter().sum::<f64>() / lat.len() as f64
+        };
+        rep.mean_flush_queries = if rep.flushes > 0 {
+            rep.queries as f64 / rep.flushes as f64
+        } else {
+            0.0
+        };
+        Ok(rep)
+    }
+}
+
+/// One client's queued query batch awaiting a flush.
+struct Pending {
+    points: Vec<f32>,
+    n: usize,
+    dims: usize,
+    submitted: Instant,
+    reply: mpsc::Sender<BatchReply>,
+}
+
+struct IngressState {
+    pending: VecDeque<Pending>,
+    open_clients: usize,
+}
+
+/// The admission layer between concurrent clients and the serving
+/// loop: a shared pending queue plus client bookkeeping. Clients park
+/// query batches here ([`Client::query`]); [`KnnEngine::serve`]
+/// coalesces everything pending into one micro-batch per flush and
+/// exits once every client handle has been dropped.
+///
+/// All locking recovers from poisoning (`lock_unpoisoned`): a panicked
+/// client thread must not brick the resident service.
+pub struct Ingress {
+    state: Mutex<IngressState>,
+    cv: Condvar,
+}
+
+impl Default for Ingress {
+    fn default() -> Self {
+        Ingress::new()
+    }
+}
+
+impl Ingress {
+    /// An empty ingress with no registered clients.
+    pub fn new() -> Self {
+        Ingress {
+            state: Mutex::new(IngressState {
+                pending: VecDeque::new(),
+                open_clients: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Register a client session. The serving loop runs until every
+    /// handle returned here has been dropped - register all clients
+    /// *before* starting [`KnnEngine::serve`], or the loop may observe
+    /// zero clients and exit immediately.
+    pub fn client(&self) -> Client<'_> {
+        lock_unpoisoned(&self.state).open_clients += 1;
+        Client { ingress: self }
+    }
+
+    /// Registered clients that have not yet disconnected.
+    pub fn open_clients(&self) -> usize {
+        lock_unpoisoned(&self.state).open_clients
+    }
+}
+
+/// One client session handle. Dropping it disconnects the client;
+/// when the last client disconnects the serving loop drains what is
+/// pending and returns.
+pub struct Client<'i> {
+    ingress: &'i Ingress,
+}
+
+impl Client<'_> {
+    /// Submit one query batch and block until its results arrive from
+    /// the serving loop. Rows of `batch` map 1:1 onto
+    /// [`BatchReply::results`]; neighbor ids index the served corpus.
+    ///
+    /// Errors only if the service terminated without replying (serve
+    /// loop returned or its thread died).
+    pub fn query(&self, batch: &Dataset) -> Result<BatchReply> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = lock_unpoisoned(&self.ingress.state);
+            st.pending.push_back(Pending {
+                points: batch.raw().to_vec(),
+                n: batch.len(),
+                dims: batch.dims(),
+                submitted: Instant::now(),
+                reply: tx,
+            });
+        }
+        self.ingress.cv.notify_all();
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("service terminated before replying"))
+    }
+}
+
+impl Drop for Client<'_> {
+    fn drop(&mut self) {
+        lock_unpoisoned(&self.ingress.state).open_clients -= 1;
+        self.ingress.cv.notify_all();
+    }
+}
+
+/// Neighbors of one query, as returned to a client: parallel id /
+/// squared-distance lanes, ascending by distance, ids indexing the
+/// served corpus.
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    /// corpus ids of the (up to) K nearest neighbors
+    pub ids: Vec<u32>,
+    /// squared distances, matching `ids` positionally
+    pub dist2: Vec<f64>,
+}
+
+/// Reply to one [`Client::query`] call.
+#[derive(Debug, Clone)]
+pub struct BatchReply {
+    /// one entry per submitted query row, in submission order
+    pub results: Vec<QueryResult>,
+    /// seconds from submission to reply (queueing + flush), as measured
+    /// by the serving loop
+    pub latency_secs: f64,
+}
+
+/// Aggregate telemetry of one [`KnnEngine::serve`] run.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceReport {
+    /// total queries served
+    pub queries: usize,
+    /// client requests (query batches) answered
+    pub requests: usize,
+    /// micro-batch flushes executed
+    pub flushes: usize,
+    /// wall seconds of the serving loop
+    pub wall_secs: f64,
+    /// queries per second over the loop's wall time
+    pub throughput_qps: f64,
+    /// median request latency, seconds (submission to reply)
+    pub latency_p50: f64,
+    /// 99th-percentile request latency, seconds
+    pub latency_p99: f64,
+    /// mean request latency, seconds
+    pub latency_mean: f64,
+    /// mean coalesced micro-batch size (queries per flush)
+    pub mean_flush_queries: f64,
+    /// queries drained by the GPU master across all flushes
+    pub q_gpu: usize,
+    /// queries drained by the CPU ranks across all flushes
+    pub q_cpu: usize,
+    /// recirculated Q^Fail queries across all flushes
+    pub q_fail: usize,
+    /// failed GPU claim attempts across all flushes
+    pub gpu_faults: usize,
+    /// flushes that finished with a demoted (CPU-only) GPU master
+    pub degraded_flushes: usize,
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample: `q` in
+/// [0, 1], 0 on an empty sample. Used for the service latency
+/// telemetry and reusable by the benches.
+pub fn percentile(sorted_ascending: &[f64], q: f64) -> f64 {
+    if sorted_ascending.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ascending.len() - 1) as f64 * q.clamp(0.0, 1.0))
+        .round() as usize;
+    sorted_ascending[idx.min(sorted_ascending.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.0), 7.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 51.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+    }
+
+    #[test]
+    fn ingress_client_bookkeeping() {
+        let ingress = Ingress::new();
+        assert_eq!(ingress.open_clients(), 0);
+        let a = ingress.client();
+        let b = ingress.client();
+        assert_eq!(ingress.open_clients(), 2);
+        drop(a);
+        assert_eq!(ingress.open_clients(), 1);
+        drop(b);
+        assert_eq!(ingress.open_clients(), 0);
+    }
+
+    #[test]
+    fn dropped_client_wakes_empty_serve() {
+        // a serve loop parked on an empty pending queue must observe
+        // the last disconnect and exit rather than wait forever; here
+        // we model just the ingress side of that contract
+        let ingress = std::sync::Arc::new(Ingress::new());
+        let c = ingress.client();
+        let ing = ingress.clone();
+        let waiter = std::thread::spawn(move || {
+            let mut st = lock_unpoisoned(&ing.state);
+            while st.pending.is_empty() && st.open_clients > 0 {
+                st = match ing.cv.wait(st) {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+            }
+            st.open_clients
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(c);
+        assert_eq!(waiter.join().unwrap(), 0);
+    }
+}

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run          run HYBRIDKNN-JOIN on a (surrogate or file) dataset
+//!   serve        resident engine + streaming load generator (open/closed loop)
 //!   refimpl      run the CPU-only parallel reference implementation
 //!   linear       run the GPU-JOINLINEAR brute-force lower bound
 //!   gen          generate a surrogate dataset to CSV/bin
@@ -32,6 +33,7 @@ fn main() {
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("run") => cmd_run(args),
+        Some("serve") => cmd_serve(args),
         Some("refimpl") => cmd_refimpl(args),
         Some("linear") => cmd_linear(args),
         Some("gen") => cmd_gen(args),
@@ -47,7 +49,7 @@ fn dispatch(args: &Args) -> Result<()> {
 const USAGE: &str = "\
 hybrid-knn-join - hybrid CPU/GPU KNN self-join (Gowanlock 2018 reproduction)
 
-usage: hybrid-knn-join <run|refimpl|linear|gen|experiments|artifacts> [options]
+usage: hybrid-knn-join <run|serve|refimpl|linear|gen|experiments|artifacts> [options]
 
 common options:
   --dataset <susy|chist|songs|fma>   surrogate workload (default susy)
@@ -61,6 +63,14 @@ options for run:
   --no-topk       disable the on-device top-k path
   --backend <auto|grid|brute>  GPU tier routing (default auto: per-claim
                   crossover heuristic over m, k and candidate density)
+options for serve (resident engine + streaming load generator):
+  --clients <c>   concurrent client sessions (default 4)
+  --requests <r>  query batches per client (default 8)
+  --batch <q>     queries per batch (default 64)
+  --mode <closed|open>  closed loop (back-to-back) or open loop (default closed)
+  --rate <qps>    open-loop total arrival rate in queries/sec
+  --ranks <p>     CPU ranks; 0 = deterministic replay mode (default 3)
+  --qseed <s>     query-stream sampling seed
 options for experiments:
   positional: fig2 fig6 fig7 fig8 fig9 fig10 fig11 table3 table4 table5 table6 all
   --quick         use the small smoke-test workloads
@@ -147,6 +157,100 @@ fn cmd_run(args: &Args) -> Result<()> {
         rep.response_time,
         rep.result.solved_count(p.k.min(data.len().saturating_sub(1))),
         rep.q_gpu + rep.q_cpu
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = Engine::load_default()?;
+    let corpus = load_dataset(args)?;
+    let mut p = HybridParams::new(args.usize_or("k", 5));
+    p.m = args.usize_or("m", 6);
+    p.beta = args.f64_or("beta", 0.0);
+    p.gamma = args.f64_or("gamma", 0.0);
+    p.rho = args.f64_or("rho", 0.0);
+    p.cpu_ranks = args.usize_or("ranks", 3);
+    p.reorder = !args.flag("no-reorder");
+    let clients = args.usize_or("clients", 4).max(1);
+    let requests = args.usize_or("requests", 8).max(1);
+    let batch = args.usize_or("batch", 64).max(1);
+    let mode = args.str_or("mode", "closed");
+    let rate = args.f64_or("rate", 0.0);
+    let interval = match mode.as_str() {
+        "closed" => 0.0,
+        "open" => {
+            anyhow::ensure!(rate > 0.0, "open loop needs --rate <qps>");
+            // total arrival rate split across the client sessions
+            clients as f64 * batch as f64 / rate
+        }
+        other => bail!("unknown mode {other:?} (closed|open)"),
+    };
+
+    // query stream: rows sampled (with replacement) from the corpus -
+    // works for surrogate and file datasets alike
+    let mut rng =
+        hybrid_knn_join::util::rng::Rng::new(args.u64_or("qseed", 0x5EED));
+    let total_q = clients * requests * batch;
+    let ids: Vec<usize> =
+        (0..total_q).map(|_| rng.below(corpus.len())).collect();
+    let pool = corpus.gather(&ids);
+
+    let mut session = KnnEngine::build(&engine, &corpus, p)?;
+    println!(
+        "SERVE |S|={} dims={} k={} ranks={} | {clients} clients x \
+         {requests} requests x {batch} queries, {mode} loop",
+        session.corpus_len(),
+        session.dims(),
+        session.params().k,
+        session.params().cpu_ranks,
+    );
+    let ingress = Ingress::new();
+    let report = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let client = ingress.client();
+                let pool = &pool;
+                s.spawn(move || {
+                    for r in 0..requests {
+                        if interval > 0.0 {
+                            std::thread::sleep(
+                                std::time::Duration::from_secs_f64(interval),
+                            );
+                        }
+                        let start = (c * requests + r) * batch;
+                        let rows: Vec<usize> =
+                            (start..start + batch).collect();
+                        if client.query(&pool.gather(&rows)).is_err() {
+                            break; // service terminated early
+                        }
+                    }
+                })
+            })
+            .collect();
+        let rep = session.serve(&ingress);
+        for h in handles {
+            h.join().expect("client thread panicked");
+        }
+        rep
+    })?;
+    println!(
+        "served {} queries in {} requests over {} flushes \
+         (mean {:.1} queries/flush)",
+        report.queries, report.requests, report.flushes,
+        report.mean_flush_queries
+    );
+    println!(
+        "throughput: {:.1} q/s   latency p50={:.2}ms p99={:.2}ms \
+         mean={:.2}ms",
+        report.throughput_qps,
+        report.latency_p50 * 1e3,
+        report.latency_p99 * 1e3,
+        report.latency_mean * 1e3
+    );
+    println!(
+        "split: q_gpu={} q_cpu={} q_fail={}  gpu_faults={} degraded_flushes={}",
+        report.q_gpu, report.q_cpu, report.q_fail, report.gpu_faults,
+        report.degraded_flushes
     );
     Ok(())
 }

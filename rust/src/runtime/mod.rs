@@ -16,6 +16,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
+use crate::util::pool::lock_unpoisoned;
 
 /// Sentinel coordinate for padded rows (mirrors kernels/dist_tile.py).
 /// Padded-vs-real pair distances are ~1e30, failing every eps test.
@@ -141,7 +142,11 @@ impl Engine {
     }
 
     fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
+        // lock_unpoisoned: the cache outlives any one join (a resident
+        // engine serves many flushes), so a worker that panicked near a
+        // cache access must not poison compilation for every later
+        // session - the executables are Arc-shared and always whole.
+        if let Some(e) = lock_unpoisoned(&self.cache).get(name) {
             return Ok(e.clone());
         }
         let info = self
@@ -157,10 +162,7 @@ impl Engine {
             .compile(&comp)
             .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
         let exe = Arc::new(exe);
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), exe.clone());
+        lock_unpoisoned(&self.cache).insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 

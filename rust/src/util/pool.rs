@@ -50,6 +50,21 @@ pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     }
 }
 
+/// [`Condvar::wait`] that recovers the guard from a poisoned lock, the
+/// condvar companion of [`lock_unpoisoned`]: a resident engine parks in
+/// these waits between flushes, and a panic elsewhere must surface
+/// through the pool's failed flag / panic notes, not as a second opaque
+/// poison panic out of a wait.
+fn wait_unpoisoned<'a, T>(
+    cv: &Condvar,
+    g: std::sync::MutexGuard<'a, T>,
+) -> std::sync::MutexGuard<'a, T> {
+    match cv.wait(g) {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
 /// Run `ranks` workers; worker `k` receives its rank id. Results are
 /// returned in rank order. Panics propagate.
 pub fn run_ranks<T, F>(ranks: usize, f: F) -> Vec<T>
@@ -230,9 +245,9 @@ impl<J: Send> StageHandle<J> {
     /// rounds are in flight (queued or processing, across all lanes).
     /// Returns the round's uid (1-based, monotone across lanes).
     pub fn submit(&self, job: J, len: usize, lane: u64) -> usize {
-        let mut g = self.shared.lock().unwrap();
+        let mut g = self.lock_recover();
         while g.rounds.len() >= self.capacity && !g.failed {
-            g = self.cv_space.wait(g).unwrap();
+            g = wait_unpoisoned(&self.cv_space, g);
         }
         assert!(!g.failed, "stage pool failed: a worker panicked");
         g.submitted += 1;
@@ -255,11 +270,11 @@ impl<J: Send> StageHandle<J> {
     /// retired (a global barrier over the submission prefix, regardless
     /// of lane).
     pub fn wait(&self, uid: usize) {
-        let mut g = self.shared.lock().unwrap();
+        let mut g = self.lock_recover();
         // the queue is in uid order, so "no round with uid <= target
         // remains" is exactly "the oldest remaining round is younger"
         while g.rounds.front().is_some_and(|r| r.uid <= uid) && !g.failed {
-            g = self.cv_space.wait(g).unwrap();
+            g = wait_unpoisoned(&self.cv_space, g);
         }
         assert!(!g.failed, "stage pool failed: a worker panicked");
     }
@@ -269,36 +284,40 @@ impl<J: Send> StageHandle<J> {
     /// lane so far is fully done - the per-claim resolve barrier of the
     /// pipelined GPU drains.
     pub fn wait_lane(&self, lane: u64) {
-        let mut g = self.shared.lock().unwrap();
+        let mut g = self.lock_recover();
         while g.rounds.iter().any(|r| r.lane == lane) && !g.failed {
-            g = self.cv_space.wait(g).unwrap();
+            g = wait_unpoisoned(&self.cv_space, g);
         }
         assert!(!g.failed, "stage pool failed: a worker panicked");
     }
 
     /// Block until every round submitted so far has retired.
     pub fn drain(&self) {
-        let mut g = self.shared.lock().unwrap();
+        let mut g = self.lock_recover();
         let target = g.submitted;
         while g.rounds.front().is_some_and(|r| r.uid <= target) && !g.failed {
-            g = self.cv_space.wait(g).unwrap();
+            g = wait_unpoisoned(&self.cv_space, g);
         }
         assert!(!g.failed, "stage pool failed: a worker panicked");
     }
 
     /// Rounds submitted so far.
     pub fn submitted(&self) -> usize {
-        self.shared.lock().unwrap().submitted
+        self.lock_recover().submitted
     }
 
     /// Rounds fully processed so far.
     pub fn retired(&self) -> usize {
-        self.shared.lock().unwrap().retired
+        self.lock_recover().retired
     }
 
-    /// Lock, recovering from poisoning - used on the paths that must
-    /// still run while another thread is unwinding (close, finish), so
-    /// a panic stays a panic instead of becoming a deadlock or abort.
+    /// Lock, recovering from poisoning. Every entry point of the handle
+    /// locks through here: a long-lived engine keeps this pool's state
+    /// across many flushes, and one thread panicking while it holds the
+    /// guard (a failed assert in a master wait, an unwinding worker in
+    /// close/finish) must not turn every later lock into an opaque
+    /// poison panic - the pool's `failed` flag and panic notes are the
+    /// error channel, not the mutex.
     fn lock_recover(&self) -> std::sync::MutexGuard<'_, StageQueue<J>> {
         lock_unpoisoned(&self.shared)
     }
@@ -384,7 +403,7 @@ impl<J: Send> StageHandle<J> {
         &self,
         retire: &(impl Fn(&J, f64) + Sync),
     ) -> Option<(*const J, usize, usize)> {
-        let mut g = self.shared.lock().unwrap();
+        let mut g = self.lock_recover();
         loop {
             if g.failed {
                 // a sibling worker is unwinding: results are no longer
@@ -430,13 +449,13 @@ impl<J: Send> StageHandle<J> {
                 drop(g);
                 self.cv_space.notify_all();
                 self.cv_work.notify_all();
-                g = self.shared.lock().unwrap();
+                g = self.lock_recover();
                 continue;
             }
             if g.closed && g.rounds.is_empty() {
                 return None;
             }
-            g = self.cv_work.wait(g).unwrap();
+            g = wait_unpoisoned(&self.cv_work, g);
         }
     }
 

@@ -1,0 +1,239 @@
+//! Streaming-service equivalence and resilience suite (DESIGN.md §11).
+//!
+//! The load-bearing property: in deterministic replay mode
+//! (`cpu_ranks == 0`) a resident [`KnnEngine`] serving N concurrent
+//! client sessions over an *arbitrary* interleaving of query
+//! micro-batches is bit-identical to the one-shot batch join on the
+//! union of their queries, across all three `DrainMode`s - each query's
+//! result is a pure function of (corpus, ε, k), independent of how the
+//! stream was chopped into flushes. Exactly-once accounting is checked
+//! alongside: every submitted query is answered once, and head/tail
+//! claims partition every flush.
+//!
+//! Also here: the production-config (concurrent CPU ranks) streaming
+//! path checked exact against the kd-tree, and the lock-poisoning
+//! regression - a caught filter panic inside one flush must not brick
+//! the session's later flushes (recovered pools, unpoisoned engine
+//! cache, reusable drain arenas).
+
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::util::rng::Rng;
+
+/// Drive `queries` through a fresh resident engine with `n_clients`
+/// concurrent client sessions: client c owns the strided slice
+/// {c, c+n, c+2n, ...} of the query set, chopped into seeded-random
+/// request chunks, so coalesced micro-batch composition varies with
+/// thread interleaving while the union stays fixed. Returns every
+/// (global query ids, reply) pair plus the service report.
+fn run_streamed(
+    engine: &Engine,
+    corpus: &Dataset,
+    queries: &Dataset,
+    params: &HybridParams,
+    n_clients: usize,
+    seed: u64,
+) -> (Vec<(Vec<usize>, BatchReply)>, ServiceReport) {
+    let mut session =
+        KnnEngine::build(engine, corpus, params.clone()).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut plans: Vec<Vec<Vec<usize>>> = Vec::new();
+    for c in 0..n_clients {
+        let ids: Vec<usize> = (c..queries.len()).step_by(n_clients).collect();
+        let mut chunks = Vec::new();
+        let mut i = 0usize;
+        while i < ids.len() {
+            let take = (1 + rng.below(17)).min(ids.len() - i);
+            chunks.push(ids[i..i + take].to_vec());
+            i += take;
+        }
+        plans.push(chunks);
+    }
+    let ingress = Ingress::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = plans
+            .iter()
+            .map(|chunks| {
+                let client = ingress.client();
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    for chunk in chunks {
+                        let reply = client
+                            .query(&queries.gather(chunk))
+                            .expect("service replied");
+                        out.push((chunk.clone(), reply));
+                    }
+                    out
+                })
+            })
+            .collect();
+        let report = session.serve(&ingress).unwrap();
+        let mut replies = Vec::new();
+        for h in handles {
+            replies.extend(h.join().expect("client thread panicked"));
+        }
+        (replies, report)
+    })
+}
+
+#[test]
+fn streaming_bit_identical_to_batch_union_across_drain_modes() {
+    let engine = Engine::load_default().unwrap();
+    let corpus = susy_like(900).generate(0x31);
+    let queries = susy_like(360).generate(0x77);
+    for (i, mode) in [DrainMode::Sync, DrainMode::TwoStage, DrainMode::ThreeStage]
+        .into_iter()
+        .enumerate()
+    {
+        let mut p = HybridParams::new(4);
+        p.cpu_ranks = 0; // deterministic replay mode
+        p.gpu_drain = mode;
+        p.streams = 2;
+        p.buffer_pairs = 50_000; // several claims per non-trivial flush
+        // one-shot batch reference: the whole union in a single flush
+        let mut ref_session =
+            KnnEngine::build(&engine, &corpus, p.clone()).unwrap();
+        let (ref_result, ref_rep) = ref_session.flush(&queries).unwrap();
+        assert_eq!(
+            ref_rep.q_gpu,
+            queries.len(),
+            "deterministic mode drains everything through the GPU head"
+        );
+        assert_eq!(ref_rep.solved_on_gpu + ref_rep.q_fail, ref_rep.q_gpu);
+
+        let (replies, report) = run_streamed(
+            &engine, &corpus, &queries, &p, 3, 0xC0FFEE ^ (i as u64) << 8,
+        );
+        // exactly-once accounting over the whole stream
+        assert_eq!(report.queries, queries.len(), "{mode:?}: queries served");
+        assert_eq!(
+            report.q_gpu + report.q_cpu,
+            queries.len(),
+            "{mode:?}: head/tail claims partition the stream"
+        );
+        assert_eq!(report.q_gpu, queries.len(), "{mode:?}: GPU-first replay");
+        assert_eq!(report.requests, replies.len());
+        assert!(report.flushes >= 1);
+        assert!(report.latency_p99 >= report.latency_p50);
+        assert!(report.throughput_qps > 0.0);
+
+        let mut seen = vec![false; queries.len()];
+        for (ids, reply) in &replies {
+            assert_eq!(ids.len(), reply.results.len(), "{mode:?}: reply shape");
+            for (j, &g) in ids.iter().enumerate() {
+                assert!(!seen[g], "{mode:?}: q={g} answered twice");
+                seen[g] = true;
+                let want = ref_result.get(g);
+                let got = &reply.results[j];
+                assert_eq!(
+                    got.ids.as_slice(),
+                    want.ids(),
+                    "{mode:?} q={g}: id lane"
+                );
+                assert_eq!(
+                    got.dist2.as_slice(),
+                    want.dist2s(),
+                    "{mode:?} q={g}: dist² lane"
+                );
+            }
+        }
+        assert!(
+            seen.iter().all(|&b| b),
+            "{mode:?}: every query answered exactly once"
+        );
+    }
+}
+
+#[test]
+fn production_streaming_config_is_exact() {
+    // concurrent CPU ranks + live dense/sparse split per flush: results
+    // are exact (vs the kd-tree) though which side computes each query -
+    // and hence the f32-device vs f64-host rounding - varies per run
+    let engine = Engine::load_default().unwrap();
+    let corpus = susy_like(800).generate(0x41);
+    let queries = susy_like(240).generate(0x42);
+    let mut p = HybridParams::new(5);
+    p.cpu_ranks = 2;
+    let (replies, report) =
+        run_streamed(&engine, &corpus, &queries, &p, 2, 0xFEED);
+    assert_eq!(report.queries, queries.len());
+    assert_eq!(report.q_gpu + report.q_cpu, queries.len());
+    let tree = KdTree::build(&corpus);
+    let mut answered = 0usize;
+    for (ids, reply) in &replies {
+        for (j, &g) in ids.iter().enumerate() {
+            answered += 1;
+            let want = tree.knn(&corpus, queries.point(g), 5, u32::MAX);
+            let got = &reply.results[j];
+            assert_eq!(got.ids.len(), want.len(), "q={g}: neighbor count");
+            for (d, w) in got.dist2.iter().zip(&want) {
+                // the session's variance REORDER permutes summation
+                // order, so exactness is up to relative f64 rounding
+                assert!(
+                    (d - w.dist2).abs() < 1e-3 * (1.0 + w.dist2),
+                    "q={g}: {d} vs {}",
+                    w.dist2
+                );
+            }
+        }
+    }
+    assert_eq!(answered, queries.len());
+}
+
+#[test]
+fn caught_filter_panic_does_not_brick_the_resident_session() {
+    // the lock-poisoning regression: a filter worker panic in flush 1 is
+    // caught and recovered claim-scoped; the same session's pools,
+    // engine executable cache, and drain arenas must then serve flush 2
+    // as if nothing happened (no poisoned-mutex panics anywhere)
+    let engine = Engine::load_default().unwrap();
+    let corpus = susy_like(700).generate(0x21);
+    let mut p = HybridParams::new(4);
+    p.cpu_ranks = 0; // route every query through the GPU master
+    p.fault =
+        FaultPlan::one(FaultSpec::transient(FaultKind::FilterPanic, 0, 0));
+    p.recovery.backoff_base_secs = 0.0;
+    let mut session = KnnEngine::build(&engine, &corpus, p).unwrap();
+    let q1 = susy_like(160).generate(0x22);
+    let (r1, rep1) = session.flush(&q1).unwrap();
+    assert_eq!(
+        r1.solved_count(4),
+        q1.len(),
+        "flush 1 completes despite the injected panic"
+    );
+    assert!(rep1.gpu_faults >= 1, "the injected filter panic was observed");
+    let q2 = susy_like(160).generate(0x23);
+    let (r2, rep2) = session.flush(&q2).unwrap();
+    assert_eq!(r2.solved_count(4), q2.len(), "flush 2 not bricked");
+    assert_eq!(rep2.queries, q2.len());
+    assert_eq!(session.flushes(), 2);
+}
+
+#[test]
+fn empty_and_tiny_requests_are_served() {
+    let engine = Engine::load_default().unwrap();
+    let corpus = susy_like(500).generate(0x61);
+    let mut p = HybridParams::new(3);
+    p.cpu_ranks = 0;
+    let mut session = KnnEngine::build(&engine, &corpus, p).unwrap();
+    let dims = session.dims();
+    let queries = susy_like(8).generate(0x62);
+    let ingress = Ingress::new();
+    std::thread::scope(|s| {
+        let client = ingress.client();
+        let h = s.spawn(move || {
+            let empty = Dataset::new(Vec::new(), dims);
+            let r0 = client.query(&empty).unwrap();
+            assert!(r0.results.is_empty());
+            let r1 = client.query(&queries.gather(&[0])).unwrap();
+            assert_eq!(r1.results.len(), 1);
+            assert_eq!(r1.results[0].ids.len(), 3);
+            assert_eq!(r1.results[0].dist2.len(), 3);
+            assert!(r1.latency_secs >= 0.0);
+        });
+        let rep = session.serve(&ingress).unwrap();
+        h.join().expect("client thread panicked");
+        assert_eq!(rep.queries, 1);
+        assert_eq!(rep.requests, 2);
+        assert!(rep.flushes >= 1);
+    });
+}
