@@ -1,0 +1,188 @@
+//! Churn microbench: incremental index maintenance (CSR row patches on
+//! the grid + the kd-tree's buffered delta set, with threshold re-sorts)
+//! vs the eager policy that rebuilds both indexes from scratch after
+//! every mutation batch.
+//!
+//! One seeded schedule of interleaved inserts (fresh rows) and removes
+//! (random live ids) is replayed twice over the same corpus, in batches
+//! of 64:
+//!
+//! * **patch** - `GridIndex::{insert,remove}` / `KdTree::{insert,remove}`
+//!   per op, then `maybe_rebuild` / `maybe_merge` per batch (the
+//!   dirty-fraction-threshold amortisation the resident engine uses);
+//! * **rebuild** - the same splices followed by an unconditional
+//!   `rebuilt()` of both indexes per batch (the splice cost is shared by
+//!   both sides, so the delta is the rebuild work itself).
+//!
+//! Both sides must converge to the *same* canonical index - asserted via
+//! `assert_same_layout` + live-id equality before anything is written -
+//! so the tracked ratio compares two implementations of one result.
+//!
+//! Emits `BENCH_churn.json` (tracked `patch_vs_rebuild` column per
+//! churn-fraction case), gated against `benches/baselines/BENCH_churn.json`
+//! in CI.
+//!
+//!   cargo bench --bench churn
+
+use std::time::Instant;
+
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::util::json::Json;
+use hybrid_knn_join::util::rng::Rng;
+
+/// One step of the pre-simulated mutation schedule: `Insert` consumes
+/// the next spare row (ids are append-only, so both replays assign the
+/// same id), `Remove` names a corpus id that is live at that point.
+#[derive(Clone, Copy)]
+enum Op {
+    Insert,
+    Remove(u32),
+}
+
+fn schedule(n: usize, muts: usize, seed: u64) -> Vec<Op> {
+    let mut rng = Rng::new(seed);
+    let mut live: Vec<u32> = (0..n as u32).collect();
+    let mut next_id = n as u32;
+    let mut ops = Vec::with_capacity(muts);
+    for i in 0..muts {
+        if i % 2 == 0 {
+            live.push(next_id);
+            next_id += 1;
+            ops.push(Op::Insert);
+        } else {
+            let victim = live.swap_remove(rng.below(live.len()));
+            ops.push(Op::Remove(victim));
+        }
+    }
+    ops
+}
+
+fn main() {
+    const N: usize = 20_000;
+    const BATCH: usize = 64;
+    const M: usize = 6;
+    const EPS: f64 = 2.0;
+    let base = susy_like(N).generate(0xBE4C);
+    let spare = susy_like(N / 2 + 1).generate(0xF00D);
+
+    let cases = [
+        ("churn_1pct", 0.01f64),
+        ("churn_10pct", 0.10),
+        ("churn_50pct", 0.50),
+    ];
+
+    let mut rows = Vec::new();
+    println!("index churn: threshold-patched maintenance vs per-batch rebuild");
+    println!(
+        "{:>12} {:>9} {:>12} {:>12} {:>8} {:>16}",
+        "case", "muts", "patch ops/s", "rebuild ops/s", "resorts", "patch_vs_rebuild"
+    );
+    for &(case, frac) in &cases {
+        let muts = ((N as f64) * frac) as usize;
+        let ops = schedule(N, muts, 0x5C4E ^ muts as u64);
+
+        // ---- patch side: splices + threshold re-sorts ----
+        let mut d = base.clone();
+        let mut g = GridIndex::build(&d, M, EPS);
+        let mut t = KdTree::build(&d);
+        let mut next = 0usize;
+        let mut resorts = 0usize;
+        let t0 = Instant::now();
+        for batch in ops.chunks(BATCH) {
+            for op in batch {
+                match *op {
+                    Op::Insert => {
+                        let id = d.push_row(spare.point(next));
+                        next += 1;
+                        g.insert(&d, id);
+                        t.insert(&d, id);
+                    }
+                    Op::Remove(id) => {
+                        assert!(g.remove(id) && t.remove(id));
+                    }
+                }
+            }
+            resorts += usize::from(g.maybe_rebuild(&d));
+            t.maybe_merge(&d);
+        }
+        let patch_secs = t0.elapsed().as_secs_f64();
+        let (g_patch, t_patch) = (g, t);
+
+        // ---- rebuild side: same splices, unconditional per-batch rebuild ----
+        let mut d = base.clone();
+        let mut g = GridIndex::build(&d, M, EPS);
+        let mut t = KdTree::build(&d);
+        let mut next = 0usize;
+        let t0 = Instant::now();
+        for batch in ops.chunks(BATCH) {
+            for op in batch {
+                match *op {
+                    Op::Insert => {
+                        let id = d.push_row(spare.point(next));
+                        next += 1;
+                        g.insert(&d, id);
+                        t.insert(&d, id);
+                    }
+                    Op::Remove(id) => {
+                        assert!(g.remove(id) && t.remove(id));
+                    }
+                }
+            }
+            g = g.rebuilt(&d);
+            t = t.rebuilt(&d);
+        }
+        let rebuild_secs = t0.elapsed().as_secs_f64();
+
+        // both policies are implementations of the same canonical index
+        g_patch.assert_same_layout(&g);
+        let (mut a, mut b) = (t_patch.live_ids(), t.live_ids());
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "{case}: kd-tree live sets diverged");
+
+        let patch_ops_s = muts as f64 / patch_secs.max(1e-12);
+        let rebuild_ops_s = muts as f64 / rebuild_secs.max(1e-12);
+        let ratio = rebuild_secs / patch_secs.max(1e-12);
+        println!(
+            "{:>12} {:>9} {:>12.0} {:>12.0} {:>8} {:>15.2}x",
+            case, muts, patch_ops_s, rebuild_ops_s, resorts, ratio
+        );
+        rows.push(Json::obj(vec![
+            ("case", Json::Str(case.into())),
+            ("dataset", Json::Str("susy_like".into())),
+            ("corpus", Json::Num(N as f64)),
+            ("mutations", Json::Num(muts as f64)),
+            ("batch", Json::Num(BATCH as f64)),
+            ("patch_secs", Json::Num(patch_secs)),
+            ("rebuild_secs", Json::Num(rebuild_secs)),
+            ("patch_ops_s", Json::Num(patch_ops_s)),
+            ("rebuild_ops_s", Json::Num(rebuild_ops_s)),
+            ("patch_resorts", Json::Num(resorts as f64)),
+            ("patch_vs_rebuild", Json::Num(ratio)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("churn".into())),
+        (
+            "engine",
+            Json::Str(
+                "threshold-patched maintenance: canonical CSR row splices \
+                 + kd-tree delta buffer, dirty-fraction re-sorts"
+                    .into(),
+            ),
+        ),
+        (
+            "baseline",
+            Json::Str(
+                "eager policy: identical splices + unconditional per-batch \
+                 index rebuild (grid assemble + kd-tree rebuild)"
+                    .into(),
+            ),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_churn.json", doc.to_string() + "\n")
+        .expect("write BENCH_churn.json");
+    println!("wrote BENCH_churn.json");
+}

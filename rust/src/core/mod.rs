@@ -100,31 +100,52 @@ impl Dataset {
         }
         Dataset::new(data, self.dims)
     }
+
+    /// Append one point, returning its id (= the previous length). The
+    /// churn path grows the resident corpus in place: ids are append-only,
+    /// so every existing id, index entry and result row stays valid.
+    pub fn push_row(&mut self, row: &[f32]) -> u32 {
+        assert_eq!(row.len(), self.dims, "row dimensionality mismatch");
+        let id = self.len() as u32;
+        self.data.extend_from_slice(row);
+        id
+    }
 }
 
-/// Full squared Euclidean distance. The `chunks_exact(8)` body keeps one
-/// partial sum per lane, so the compiler may widen/multiply/accumulate all
-/// 8 lanes as vectors without reassociating a single serial accumulator
-/// (strict FP semantics forbid that rewrite on the naive loop).
+/// Full squared Euclidean distance. The `chunks_exact(8)` body computes
+/// each 8-wide block's lanes independently and pairwise-reduces them
+/// (bounds-check free, autovectorizable without reassociating a serial
+/// accumulator - strict FP semantics forbid that rewrite on the naive
+/// loop).
+///
+/// The accumulation order is *bit-identical* to
+/// [`sqdist_short_circuit`]'s (same per-block pairwise reduction into one
+/// serial accumulator, same serial remainder): for any pair, whichever
+/// kernel a caller happens to use - the choice depends on transient heap
+/// state in `KdTree::knn_into` - the returned f64 has the same bits. The
+/// churn rebuild-equivalence harness (rust/tests/churn.rs) relies on
+/// this.
 #[inline]
 pub fn sqdist(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let ca = a.chunks_exact(8);
     let cb = b.chunks_exact(8);
     let (ra, rb) = (ca.remainder(), cb.remainder());
-    let mut lanes = [0f64; 8];
+    let mut acc = 0f64;
     for (xa, xb) in ca.zip(cb) {
+        let mut lanes = [0f64; 8];
         for j in 0..8 {
             let d = (xa[j] - xb[j]) as f64;
-            lanes[j] += d * d;
+            lanes[j] = d * d;
         }
+        acc += ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
     }
-    let mut acc = 0f64;
     for (&x, &y) in ra.iter().zip(rb) {
         let d = (x - y) as f64;
         acc += d * d;
     }
-    acc + lanes.iter().sum::<f64>()
+    acc
 }
 
 /// SHORTC (paper Sec. IV-E): abort the accumulation as soon as the running
@@ -266,6 +287,34 @@ mod tests {
                 check_short_circuit_case(&a, &b, rng.range(0.0, 4.0 * n as f64));
             }
         });
+    }
+
+    #[test]
+    fn short_circuit_bit_identical_to_full() {
+        // The churn harness's foundation: when the short-circuit kernel
+        // returns a distance at all, its bits equal the full kernel's -
+        // the two share one accumulation order, so which kernel ran
+        // (a transient-heap-state decision) can never show in results.
+        prop::cases(300, 0xB17E, |rng| {
+            let n = 1 + rng.below(40);
+            let a: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+            let full = sqdist(&a, &b);
+            if let Some(d) = sqdist_short_circuit(&a, &b, full) {
+                assert_eq!(d.to_bits(), full.to_bits());
+            } else {
+                panic!("cut == full distance must not short-circuit");
+            }
+        });
+    }
+
+    #[test]
+    fn push_row_appends() {
+        let mut d = Dataset::from_rows(&[vec![1.0, 2.0]]);
+        let id = d.push_row(&[3.0, 4.0]);
+        assert_eq!(id, 1);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.point(1), &[3.0, 4.0]);
     }
 
     #[test]

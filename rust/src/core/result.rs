@@ -95,7 +95,13 @@ impl BoundedHeap {
         }
     }
 
-    /// Offer a neighbor; keeps only the K nearest.
+    /// Offer a neighbor; keeps only the K nearest *under the total
+    /// `(dist², id)` order* - on an exact distance tie with the current
+    /// worst, the smaller id wins. That makes the kept k-set canonical
+    /// (the k smallest pairs of everything offered), independent of the
+    /// order candidates arrive in - the property the churn harness's
+    /// delta-vs-rebuild bit-equivalence rests on, since a buffered delta
+    /// scan visits candidates in a different order than a rebuilt tree.
     #[inline]
     pub fn push(&mut self, n: Neighbor) {
         if self.heap.len() < self.k {
@@ -111,7 +117,7 @@ impl BoundedHeap {
                     break;
                 }
             }
-        } else if n.dist2 < self.heap[0].dist2 {
+        } else if n < self.heap[0] {
             self.heap[0] = n;
             // sift down
             let mut i = 0;
@@ -533,6 +539,36 @@ mod tests {
             want.sort();
             want.truncate(k);
             assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn heap_tie_break_is_order_independent() {
+        // Exact distance ties resolve by id no matter the arrival order:
+        // the kept set is the k smallest (dist², id) pairs, full stop.
+        prop::cases(100, 0x71E5, |rng| {
+            let k = 1 + rng.below(6);
+            let n = k + rng.below(24);
+            // few distinct distances -> ties are common
+            let mut items: Vec<Neighbor> = (0..n)
+                .map(|i| nb(i as u32, rng.below(4) as f64))
+                .collect();
+            let mut want = items.clone();
+            want.sort();
+            want.truncate(k);
+            // forward order
+            let mut h = BoundedHeap::new(k);
+            for &it in &items {
+                h.push(it);
+            }
+            assert_eq!(h.into_sorted(), want);
+            // reversed order must keep the identical set
+            items.reverse();
+            let mut h = BoundedHeap::new(k);
+            for &it in &items {
+                h.push(it);
+            }
+            assert_eq!(h.into_sorted(), want);
         });
     }
 

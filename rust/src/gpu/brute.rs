@@ -28,20 +28,51 @@ use crate::sched::{self, BackendMode};
 ///
 /// The corpus never changes within a drain, so the tiles are built once
 /// (on the first brute claim - grid-only drains pay nothing) and the
-/// uploaded literals are reused by every subsequent brute tile. Chunk
-/// ids are the contiguous ranges `start..start+len`, packed via
-/// [`tiles::pack_candidate_range`] without materialising an id list.
+/// uploaded literals are reused by every subsequent brute tile. Without
+/// churn, chunk ids are the contiguous ranges `start..start+len`,
+/// packed via [`tiles::pack_candidate_range`] without materialising an
+/// id list; under churn ([`Self::set_live`]) only the live subset is
+/// packed, in ascending id order, via [`tiles::pack_candidates`] - a
+/// removed point must never reappear as a brute-tier neighbor. The
+/// resident drain state invalidates the cache whenever the index epoch
+/// (queue generation stamp) moves, so cross-flush reuse always reads a
+/// consistent snapshot.
 pub(crate) struct BruteCache {
     ct: usize,
     d_pad: usize,
     chunks: Vec<(Vec<u32>, xla::Literal)>,
     built: bool,
+    /// live-id subset to pack (ascending); None = whole corpus
+    live: Option<Vec<u32>>,
 }
 
 impl BruteCache {
     /// Empty cache; nothing is packed until [`Self::ensure`].
     pub(crate) fn new() -> Self {
-        BruteCache { ct: 0, d_pad: 0, chunks: Vec::new(), built: false }
+        BruteCache {
+            ct: 0,
+            d_pad: 0,
+            chunks: Vec::new(),
+            built: false,
+            live: None,
+        }
+    }
+
+    /// Drop the packed tiles; the next [`Self::ensure`] repacks. Called
+    /// on every index-epoch change.
+    pub(crate) fn invalidate(&mut self) {
+        self.chunks.clear();
+        self.built = false;
+    }
+
+    /// Restrict packing to a live-id subset (ascending; `None` restores
+    /// whole-corpus packing). Invalidates the packed tiles when the set
+    /// actually changes.
+    pub(crate) fn set_live(&mut self, live: Option<Vec<u32>>) {
+        if self.live != live {
+            self.invalidate();
+            self.live = live;
+        }
     }
 
     /// Return the corpus candidate tiles for tile shape `(ct, d_pad)`,
@@ -62,16 +93,27 @@ impl BruteCache {
             );
             return Ok(&self.chunks);
         }
-        let n = data.len();
         let mut buf: Vec<f32> = Vec::new();
-        let mut start = 0usize;
-        while start < n {
-            let len = ct.min(n - start);
-            tiles::pack_candidate_range(&mut buf, data, start as u32, len, ct, d_pad);
-            let lit = Engine::literal(&buf, &[ct as i64, d_pad as i64])?;
-            let ids: Vec<u32> = (start as u32..(start + len) as u32).collect();
-            self.chunks.push((ids, lit));
-            start += len;
+        match &self.live {
+            Some(live) => {
+                for chunk in live.chunks(ct.max(1)) {
+                    tiles::pack_candidates(&mut buf, data, chunk, ct, d_pad);
+                    let lit = Engine::literal(&buf, &[ct as i64, d_pad as i64])?;
+                    self.chunks.push((chunk.to_vec(), lit));
+                }
+            }
+            None => {
+                let n = data.len();
+                let mut start = 0usize;
+                while start < n {
+                    let len = ct.min(n - start);
+                    tiles::pack_candidate_range(&mut buf, data, start as u32, len, ct, d_pad);
+                    let lit = Engine::literal(&buf, &[ct as i64, d_pad as i64])?;
+                    let ids: Vec<u32> = (start as u32..(start + len) as u32).collect();
+                    self.chunks.push((ids, lit));
+                    start += len;
+                }
+            }
         }
         self.ct = ct;
         self.d_pad = d_pad;

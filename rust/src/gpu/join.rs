@@ -725,6 +725,9 @@ pub(crate) struct DrainState {
     /// arena stride the stored stages were built for; a flush with a
     /// different k drops them
     stage_k: usize,
+    /// index epoch (queue generation stamp) the cached corpus tiles
+    /// were packed against; a drain over a newer stamp invalidates
+    generation: u64,
 }
 
 impl DrainState {
@@ -734,7 +737,22 @@ impl DrainState {
             brute_cache: BruteCache::new(),
             stages: Vec::new(),
             stage_k: 0,
+            generation: 0,
         }
+    }
+
+    /// Align the resident caches with the index snapshot a drain is
+    /// about to read: on a generation (index epoch) change the brute
+    /// tile cache is dropped and repacked over `live` - the churn
+    /// path's consistent-snapshot guarantee. `live` is the ascending
+    /// live-id set when the corpus holds removed (tombstoned) points,
+    /// `None` for the static whole-corpus case.
+    pub(crate) fn sync_generation(&mut self, generation: u64, live: Option<Vec<u32>>) {
+        if self.generation != generation {
+            self.brute_cache.invalidate();
+            self.generation = generation;
+        }
+        self.brute_cache.set_live(live);
     }
 
     /// Take `depth` staging sets for a drain, reusing stored ones when
@@ -786,6 +804,17 @@ pub(crate) fn gpu_join_drain_with(
     let t_start = Instant::now();
     assert!(params.k <= slots.k(), "result stride {} < k {}", slots.k(), params.k);
     let buffer_cap = params.buffer_pairs.max(1);
+
+    // Churn snapshot alignment: invalidate the cross-flush brute tile
+    // cache when the index epoch (queue generation stamp) moved, and
+    // pack only the live ids whenever the corpus holds tombstoned
+    // points - a removed point must never resurface as a neighbor.
+    let live = if grid.indexed_points() == data.len() {
+        None
+    } else {
+        Some(grid.indexed_ids())
+    };
+    state.sync_generation(queue.generation(), live);
 
     // seed claim first: a fast CPU must not drain the queue while we
     // compile tile plans

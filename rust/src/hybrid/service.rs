@@ -30,21 +30,47 @@
 //!   disconnected and returns a [`ServiceReport`] with per-request
 //!   p50/p99 latency next to the throughput numbers.
 //!
+//! # Churn
+//!
+//! The resident corpus is mutable: [`Client::insert`] appends points
+//! (ids are append-only - every id a client ever received stays
+//! valid), [`Client::remove`] un-indexes them, and the serve loop
+//! serializes mutations against query flushes in strict FIFO order.
+//! Under the hood [`KnnEngine::insert`] / [`KnnEngine::remove`] patch
+//! the resident `GridIndex` in place (canonical CSR row patches) and
+//! buffer deltas on the `KdTree` (brute-scanned at query time, merged
+//! at a threshold - the Bigger Buffer k-d Trees design), while the
+//! grid's mutation epoch flows through the queue generation stamp into
+//! the GPU drain state, invalidating the packed brute corpus tiles so
+//! every flush reads one consistent snapshot.
+//! [`KnnEngine::rebuilt`] derives a rebuild-from-scratch twin over the
+//! same live set - the oracle the churn harness (rust/tests/churn.rs)
+//! asserts bit-equivalence against at every flush boundary.
+//!
+//! The serve loop additionally bounds each coalesced micro-batch by a
+//! query-count cap ([`KnnEngine::set_flush_cap`]): a deep backlog is
+//! chopped into capped flushes instead of one giant join, so a late
+//! client's request lands within a bounded number of flushes
+//! (regression-tested in `rust/tests/service.rs`).
+//!
 //! # Determinism
 //!
 //! `cpu_ranks == 0` selects the *deterministic replay* mode: the GPU
-//! master drains the entire micro-batch queue through the grid tier
-//! (backend routing pinned to [`BackendMode::Grid`], ρ pinned to 0),
-//! and a single CPU rank re-solves the recirculated Q^Fail afterwards.
-//! In that mode each query's result is a pure function of (corpus, ε,
-//! k) - which side computes it, and every distance bit, is independent
-//! of how the stream was chopped into flushes - so any interleaving of
-//! client submissions is bit-identical to the one-shot batch join on
-//! the union of the queries (property-tested in
-//! `rust/tests/service.rs` across all three `DrainMode`s). With
-//! `cpu_ranks > 0` the dense/sparse split is discovered per flush at
-//! run time and results are exact but carry the usual f32-device vs
-//! f64-host rounding difference per query.
+//! master drains the entire micro-batch queue through one pinned
+//! backend tier (ρ pinned to 0; `Auto` routing - whose per-claim
+//! decisions depend on batch composition - is pinned to
+//! [`BackendMode::Grid`], while an explicitly forced `Grid` or `Brute`
+//! backend is kept, both being per-query deterministic), and a single
+//! CPU rank re-solves the recirculated Q^Fail afterwards. In that mode
+//! each query's result is a pure function of (corpus, ε, k) - which
+//! side computes it, and every distance bit, is independent of how the
+//! stream was chopped into flushes - so any interleaving of client
+//! submissions is bit-identical to the one-shot batch join on the
+//! union of the queries (property-tested in `rust/tests/service.rs`
+//! across all three `DrainMode`s). With `cpu_ranks > 0` the
+//! dense/sparse split is discovered per flush at run time and results
+//! are exact but carry the usual f32-device vs f64-host rounding
+//! difference per query.
 
 use std::collections::VecDeque;
 use std::sync::{mpsc, Condvar, Mutex};
@@ -89,6 +115,9 @@ pub struct KnnEngine<'e> {
     drain: DrainState,
     hw: usize,
     flushes: usize,
+    /// serve-loop micro-batch bound, in queries (see
+    /// [`KnnEngine::set_flush_cap`])
+    flush_cap: usize,
 }
 
 /// Telemetry of one [`KnnEngine::flush`].
@@ -153,6 +182,7 @@ impl<'e> KnnEngine<'e> {
             drain: DrainState::new(),
             hw,
             flushes: 0,
+            flush_cap: usize::MAX,
         })
     }
 
@@ -179,6 +209,95 @@ impl<'e> KnnEngine<'e> {
     /// Micro-batches flushed so far.
     pub fn flushes(&self) -> usize {
         self.flushes
+    }
+
+    /// Bound each coalesced serve-loop micro-batch to at most `cap`
+    /// queries (floored at 1). A single client request larger than the
+    /// cap still flushes whole - requests are never split - but a deep
+    /// backlog of requests is chopped into capped flushes, bounding
+    /// how long any one client waits behind it. Default: unbounded.
+    pub fn set_flush_cap(&mut self, cap: usize) {
+        self.flush_cap = cap.max(1);
+    }
+
+    /// Currently live (indexed) corpus points; `corpus_len` minus the
+    /// tombstoned rows under churn.
+    pub fn live_len(&self) -> usize {
+        self.grid.indexed_points()
+    }
+
+    /// The resident index's mutation epoch: bumped once per inserted or
+    /// removed point, threaded through the queue generation stamp into
+    /// the GPU drain caches.
+    pub fn epoch(&self) -> u64 {
+        self.grid.epoch()
+    }
+
+    /// Insert a batch of points into the resident corpus, returning the
+    /// corpus id assigned to each row (append-only: ids of earlier
+    /// points never move). The points are permuted into the resident
+    /// dimension order, appended to the corpus, and patched into both
+    /// indexes; amortized maintenance (grid re-sort, kd-tree delta
+    /// merge) runs once per batch.
+    pub fn insert(&mut self, points: &Dataset) -> Result<Vec<u32>> {
+        anyhow::ensure!(
+            points.dims() == self.corpus.dims(),
+            "insert dims {} != corpus dims {}",
+            points.dims(),
+            self.corpus.dims()
+        );
+        let pts = match &self.perm {
+            Some(p) => points.permute_dims(p),
+            None => points.clone(),
+        };
+        let mut ids = Vec::with_capacity(pts.len());
+        for i in 0..pts.len() {
+            let id = self.corpus.push_row(pts.point(i));
+            self.grid.insert(&self.corpus, id);
+            self.tree.insert(&self.corpus, id);
+            ids.push(id);
+        }
+        self.grid.maybe_rebuild(&self.corpus);
+        self.tree.maybe_merge(&self.corpus);
+        Ok(ids)
+    }
+
+    /// Un-index corpus points by id, returning how many were live.
+    /// Rows stay allocated (ids are append-only); removed points are
+    /// invisible to every later query. Unknown or already-removed ids
+    /// are ignored.
+    pub fn remove(&mut self, ids: &[u32]) -> usize {
+        let mut n = 0usize;
+        for &id in ids {
+            let g = self.grid.remove(id);
+            let t = self.tree.remove(id);
+            debug_assert_eq!(g, t, "grid/tree live sets diverged at id {id}");
+            n += usize::from(g);
+        }
+        self.grid.maybe_rebuild(&self.corpus);
+        self.tree.maybe_merge(&self.corpus);
+        n
+    }
+
+    /// A rebuild-from-scratch twin: same engine handle, same corpus
+    /// snapshot, same live set and parameters, but with both indexes
+    /// assembled from scratch (frozen grid geometry) and a fresh GPU
+    /// drain state. The churn harness flushes identical queries through
+    /// both engines and asserts bit-equivalence at every boundary.
+    pub fn rebuilt(&self) -> KnnEngine<'e> {
+        KnnEngine {
+            engine: self.engine,
+            params: self.params.clone(),
+            corpus: self.corpus.clone(),
+            perm: self.perm.clone(),
+            eps: self.eps.clone(),
+            grid: self.grid.rebuilt(&self.corpus),
+            tree: self.tree.rebuilt(&self.corpus),
+            drain: DrainState::new(),
+            hw: self.hw,
+            flushes: self.flushes,
+            flush_cap: self.flush_cap,
+        }
     }
 
     /// Join one query micro-batch against the resident corpus: price it
@@ -255,12 +374,14 @@ impl<'e> KnnEngine<'e> {
             drain: if hw > 1 { params.gpu_drain } else { DrainMode::Sync },
             fault: params.fault.clone(),
             recovery: params.recovery,
-            // pinning the grid tier is part of the deterministic replay
-            // contract: brute routing depends on claim composition, and
-            // a brute claim would solve its < K-in-ε queries with f32
-            // device distances where the grid tier recirculates them to
-            // the f64 host path
-            backend: if deterministic {
+            // pinning a tier is part of the deterministic replay
+            // contract: Auto routes per claim, and claim composition
+            // depends on how the stream was chopped into flushes. Only
+            // Auto needs pinning - a forced Grid or Brute backend is
+            // already per-query deterministic (fixed candidate walk
+            // resp. fixed id-ascending corpus tiles) and is kept, which
+            // lets the churn harness replay both tiers exactly.
+            backend: if deterministic && params.backend == BackendMode::Auto {
                 BackendMode::Grid
             } else {
                 params.backend
@@ -346,10 +467,13 @@ impl<'e> KnnEngine<'e> {
 
     /// Run the serving loop on this thread (the engine holds the PJRT
     /// client, which is not `Send` - the GPU-master rank of the paper):
-    /// wait for pending requests, coalesce *all* of them into one
-    /// micro-batch, flush, reply to each client with its result rows
-    /// and request latency, and repeat until every [`Client`] handle
-    /// has been dropped and the pending queue is empty.
+    /// wait for pending requests, take a strict-FIFO prefix of them -
+    /// leading mutations applied immediately, then query requests
+    /// coalesced into one micro-batch bounded by the flush cap - flush,
+    /// reply to each client, and repeat until every [`Client`] handle
+    /// has been dropped and the pending queue is empty. Mutations never
+    /// reorder against query flushes: a request sees exactly the
+    /// corpus state produced by every request queued before it.
     pub fn serve(&mut self, ingress: &Ingress) -> Result<ServiceReport> {
         let t0 = Instant::now();
         let mut lat: Vec<f64> = Vec::new();
@@ -363,44 +487,102 @@ impl<'e> KnnEngine<'e> {
                         Err(poisoned) => poisoned.into_inner(),
                     };
                 }
-                st.pending.drain(..).collect()
+                // strict-FIFO prefix: any leading run of mutations,
+                // then query requests up to the flush cap (always at
+                // least one request - oversized requests flush alone)
+                let mut taken: Vec<Pending> = Vec::new();
+                let mut queries = 0usize;
+                while let Some(front) = st.pending.front() {
+                    match &front.op {
+                        PendingOp::Insert { .. } | PendingOp::Remove { .. } => {
+                            if queries > 0 {
+                                break; // mutation after queries: next cycle
+                            }
+                        }
+                        PendingOp::Query { n, .. } => {
+                            if queries > 0 && queries + n > self.flush_cap {
+                                break; // cap reached: next cycle
+                            }
+                        }
+                    }
+                    let p = st.pending.pop_front().expect("front just observed");
+                    if let PendingOp::Query { n, .. } = &p.op {
+                        queries += n;
+                    }
+                    taken.push(p);
+                }
+                taken
             };
             if batch.is_empty() {
                 break; // all clients disconnected, nothing queued
             }
-            // coalesce every pending request into one micro-batch
+            // apply mutations (all precede any query in the prefix),
+            // then coalesce the query requests into one micro-batch
             let dims = self.corpus.dims();
             let mut flat: Vec<f32> = Vec::new();
-            for p in &batch {
-                anyhow::ensure!(
-                    p.dims == dims && p.points.len() == p.n * dims,
-                    "request dims {} != corpus dims {dims}",
-                    p.dims
-                );
-                flat.extend_from_slice(&p.points);
+            let mut queued: Vec<(usize, Instant, mpsc::Sender<Reply>)> = Vec::new();
+            for p in batch {
+                let Pending { op, submitted, reply } = p;
+                match op {
+                    PendingOp::Insert { points, n, dims: pdims } => {
+                        anyhow::ensure!(
+                            pdims == dims && points.len() == n * dims,
+                            "insert dims {pdims} != corpus dims {dims}"
+                        );
+                        let ids = self.insert(&Dataset::new(points, dims))?;
+                        rep.inserts += ids.len();
+                        rep.requests += 1;
+                        lat.push(submitted.elapsed().as_secs_f64());
+                        // a client that gave up is not a service error
+                        let _ = reply.send(Reply::Inserted(ids));
+                    }
+                    PendingOp::Remove { ids } => {
+                        let n = self.remove(&ids);
+                        rep.removes += n;
+                        rep.requests += 1;
+                        lat.push(submitted.elapsed().as_secs_f64());
+                        let _ = reply.send(Reply::Removed(n));
+                    }
+                    PendingOp::Query { points, n, dims: pdims } => {
+                        anyhow::ensure!(
+                            pdims == dims && points.len() == n * dims,
+                            "request dims {pdims} != corpus dims {dims}"
+                        );
+                        flat.extend_from_slice(&points);
+                        queued.push((n, submitted, reply));
+                    }
+                }
+            }
+            if queued.is_empty() {
+                continue; // mutation-only cycle: nothing to flush
             }
             let queries = Dataset::new(flat, dims);
+            let flush_seq = self.flushes;
             let (result, frep) = self.flush(&queries)?;
             // slice the flush result back into per-request replies
             let mut start = 0usize;
-            for p in batch {
-                let mut results = Vec::with_capacity(p.n);
-                for q in start..start + p.n {
+            for (n, submitted, reply) in queued {
+                let mut results = Vec::with_capacity(n);
+                for q in start..start + n {
                     let ns = result.get(q);
                     results.push(QueryResult {
                         ids: ns.ids().to_vec(),
                         dist2: ns.dist2s().to_vec(),
                     });
                 }
-                start += p.n;
-                let latency_secs = p.submitted.elapsed().as_secs_f64();
+                start += n;
+                let latency_secs = submitted.elapsed().as_secs_f64();
                 lat.push(latency_secs);
                 rep.requests += 1;
-                // a client that gave up is not a service error
-                let _ = p.reply.send(BatchReply { results, latency_secs });
+                let _ = reply.send(Reply::Batch(BatchReply {
+                    results,
+                    latency_secs,
+                    flush_seq,
+                }));
             }
             rep.queries += frep.queries;
             rep.flushes += 1;
+            rep.max_flush_queries = rep.max_flush_queries.max(frep.queries);
             rep.q_gpu += frep.q_gpu;
             rep.q_cpu += frep.q_cpu;
             rep.q_fail += frep.q_fail;
@@ -430,13 +612,27 @@ impl<'e> KnnEngine<'e> {
     }
 }
 
-/// One client's queued query batch awaiting a flush.
+/// One client's queued request awaiting the serve loop.
 struct Pending {
-    points: Vec<f32>,
-    n: usize,
-    dims: usize,
+    op: PendingOp,
     submitted: Instant,
-    reply: mpsc::Sender<BatchReply>,
+    reply: mpsc::Sender<Reply>,
+}
+
+/// The request payload: a query batch to flush, or a corpus mutation
+/// the serve loop serializes against flushes in FIFO order.
+enum PendingOp {
+    Query { points: Vec<f32>, n: usize, dims: usize },
+    Insert { points: Vec<f32>, n: usize, dims: usize },
+    Remove { ids: Vec<u32> },
+}
+
+/// The serve loop's answer to one request (matched by the blocking
+/// client call that enqueued it).
+enum Reply {
+    Batch(BatchReply),
+    Inserted(Vec<u32>),
+    Removed(usize),
 }
 
 struct IngressState {
@@ -488,6 +684,13 @@ impl Ingress {
     pub fn open_clients(&self) -> usize {
         lock_unpoisoned(&self.state).open_clients
     }
+
+    /// Requests currently parked in the pending queue (tests use this
+    /// to sequence submissions deterministically against the serve
+    /// loop).
+    pub fn pending_len(&self) -> usize {
+        lock_unpoisoned(&self.state).pending.len()
+    }
 }
 
 /// One client session handle. Dropping it disconnects the client;
@@ -498,20 +701,13 @@ pub struct Client<'i> {
 }
 
 impl Client<'_> {
-    /// Submit one query batch and block until its results arrive from
-    /// the serving loop. Rows of `batch` map 1:1 onto
-    /// [`BatchReply::results`]; neighbor ids index the served corpus.
-    ///
-    /// Errors only if the service terminated without replying (serve
-    /// loop returned or its thread died).
-    pub fn query(&self, batch: &Dataset) -> Result<BatchReply> {
+    /// Enqueue one request and block until the serve loop answers.
+    fn submit(&self, op: PendingOp) -> Result<Reply> {
         let (tx, rx) = mpsc::channel();
         {
             let mut st = lock_unpoisoned(&self.ingress.state);
             st.pending.push_back(Pending {
-                points: batch.raw().to_vec(),
-                n: batch.len(),
-                dims: batch.dims(),
+                op,
                 submitted: Instant::now(),
                 reply: tx,
             });
@@ -519,6 +715,48 @@ impl Client<'_> {
         self.ingress.cv.notify_all();
         rx.recv()
             .map_err(|_| anyhow::anyhow!("service terminated before replying"))
+    }
+
+    /// Submit one query batch and block until its results arrive from
+    /// the serving loop. Rows of `batch` map 1:1 onto
+    /// [`BatchReply::results`]; neighbor ids index the served corpus.
+    ///
+    /// Errors only if the service terminated without replying (serve
+    /// loop returned or its thread died).
+    pub fn query(&self, batch: &Dataset) -> Result<BatchReply> {
+        match self.submit(PendingOp::Query {
+            points: batch.raw().to_vec(),
+            n: batch.len(),
+            dims: batch.dims(),
+        })? {
+            Reply::Batch(b) => Ok(b),
+            _ => Err(anyhow::anyhow!("service answered query with wrong reply kind")),
+        }
+    }
+
+    /// Submit a corpus insertion and block until it has been applied,
+    /// returning the corpus id assigned to each row. The serve loop
+    /// serializes mutations against query flushes in FIFO order: every
+    /// query enqueued after this call sees the inserted points.
+    pub fn insert(&self, batch: &Dataset) -> Result<Vec<u32>> {
+        match self.submit(PendingOp::Insert {
+            points: batch.raw().to_vec(),
+            n: batch.len(),
+            dims: batch.dims(),
+        })? {
+            Reply::Inserted(ids) => Ok(ids),
+            _ => Err(anyhow::anyhow!("service answered insert with wrong reply kind")),
+        }
+    }
+
+    /// Submit a corpus removal (by id) and block until it has been
+    /// applied, returning how many of the ids were live. Unknown or
+    /// already-removed ids are ignored.
+    pub fn remove(&self, ids: &[u32]) -> Result<usize> {
+        match self.submit(PendingOp::Remove { ids: ids.to_vec() })? {
+            Reply::Removed(n) => Ok(n),
+            _ => Err(anyhow::anyhow!("service answered remove with wrong reply kind")),
+        }
     }
 }
 
@@ -548,6 +786,10 @@ pub struct BatchReply {
     /// seconds from submission to reply (queueing + flush), as measured
     /// by the serving loop
     pub latency_secs: f64,
+    /// index of the engine flush that answered this request (the
+    /// flush-cap regression test asserts a late client's request lands
+    /// a bounded number of flushes behind the backlog)
+    pub flush_seq: usize,
 }
 
 /// Aggregate telemetry of one [`KnnEngine::serve`] run.
@@ -571,6 +813,13 @@ pub struct ServiceReport {
     pub latency_mean: f64,
     /// mean coalesced micro-batch size (queries per flush)
     pub mean_flush_queries: f64,
+    /// largest coalesced micro-batch (queries in one flush) - bounded
+    /// by the flush cap plus at most one oversized single request
+    pub max_flush_queries: usize,
+    /// corpus points inserted via client mutation requests
+    pub inserts: usize,
+    /// corpus points removed (live at removal time) via client requests
+    pub removes: usize,
     /// queries drained by the GPU master across all flushes
     pub q_gpu: usize,
     /// queries drained by the CPU ranks across all flushes

@@ -35,6 +35,23 @@
 //! beyond the grid extent. Build-time validation degrades `m` (dropping
 //! trailing, lowest-variance dims) when the widths product would overflow
 //! `u64`, instead of silently corrupting ids.
+//!
+//! **Churn:** the index is mutable behind an epoch scheme.
+//! [`GridIndex::insert`] / [`GridIndex::remove`] patch B/G/A, the
+//! point→rank map, the CSR adjacency table and the memoized populations
+//! *in canonical form*: after any patch the arrays are field-by-field
+//! identical to a from-scratch [`GridIndex::rebuilt`] over the live ids
+//! with the geometry (mins, widths, m, eps) frozen at build time — the
+//! invariant the churn harness (rust/tests/churn.rs) asserts at every
+//! flush boundary. A mutation in cell c touches only c's own CSR row:
+//! the clipped `{-1,0,1}^m` neighborhood is symmetric, so the cells
+//! whose adjacent population changes are exactly the cells listed in
+//! c's row. Cell birth/death splices B/G and rebuilds the CSR table in
+//! one O(E) remap pass. Every mutation bumps `epoch`, which consumers
+//! (queue generation stamps, the GPU brute tile cache, R-side rank
+//! caches) use to invalidate derived snapshots; a dirty-fraction
+//! threshold amortizes splice debt with a full re-sort
+//! ([`GridIndex::maybe_rebuild`]) that is observably a no-op.
 
 use std::cell::RefCell;
 
@@ -101,8 +118,15 @@ fn delinearise(mut id: u64, widths: &[u64], out: &mut [u64]) {
 }
 
 /// Sentinel rank for query points whose clamped cell holds no indexed
-/// point (possible only for bipartite R queries outside the S extent).
+/// point (possible only for bipartite R queries outside the S extent),
+/// and for corpus ids not currently indexed (removed, or never
+/// inserted) on the churn path.
 const NO_RANK: u32 = u32::MAX;
+
+/// Default dirty-fraction threshold for [`GridIndex::maybe_rebuild`]:
+/// re-canonicalize with a full re-sort once mutations since the last
+/// (re)build exceed this fraction of the indexed population.
+const DEFAULT_REBUILD_FRAC: f64 = 0.25;
 
 /// Precomputed R-side cell lookups for a bipartite join against an
 /// S-grid (ROADMAP carried item (n)): for every point of a query
@@ -119,12 +143,22 @@ pub struct QueryRankCache {
     cell_ids: Vec<u64>,
     /// rank of that cell in `B`, or [`NO_RANK`] when the cell is empty
     ranks: Vec<u32>,
+    /// grid epoch the cache was resolved against (staleness stamp)
+    epoch: u64,
 }
 
 impl QueryRankCache {
     /// Number of cached query points (= |R| at build time).
     pub fn len(&self) -> usize {
         self.cell_ids.len()
+    }
+
+    /// Grid epoch this cache was resolved against. Using the cache
+    /// against a grid whose [`GridIndex::epoch`] has moved on reads a
+    /// stale snapshot; consumers compare stamps and rebuild.
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// True when the cache covers zero query points.
@@ -193,6 +227,14 @@ pub struct GridIndex {
     adj_ranks: Vec<u32>,
     /// memoized adjacent-block population per cell rank (≤ |D| each)
     adj_pop: Vec<u32>,
+    /// mutation counter: bumped once per insert/remove, never reset -
+    /// the generation stamp consumers snapshot against
+    epoch: u64,
+    /// mutations since the last canonical (re)build - the splice debt
+    /// [`GridIndex::maybe_rebuild`] amortizes
+    dirty: usize,
+    /// dirty-fraction threshold for the amortized re-sort
+    rebuild_frac: f64,
 }
 
 impl GridIndex {
@@ -261,6 +303,24 @@ impl GridIndex {
             mins.truncate(m);
         }
 
+        let ids: Vec<u32> = (0..n as u32).collect();
+        Self::assemble(d, &ids, eps, m, mins, widths)
+    }
+
+    /// Assemble the full index layout (B/G/A, point→rank, CSR adjacency,
+    /// memoized populations) over a given id subset with a fixed
+    /// geometry. [`GridIndex::build`] calls this over all ids after
+    /// deriving the geometry; [`GridIndex::rebuilt`] over the live ids
+    /// with the geometry frozen - the canonical form every incremental
+    /// patch must land back on exactly.
+    fn assemble(
+        d: &Dataset,
+        ids: &[u32],
+        eps: f64,
+        m: usize,
+        mins: Vec<f64>,
+        widths: Vec<u64>,
+    ) -> GridIndex {
         // (cell id, point id) pairs, sorted by cell -> B/G/A arrays.
         let coord = |x: f32, j: usize| -> u64 {
             let c = ((x as f64 - mins[j]) / eps).floor();
@@ -270,21 +330,22 @@ impl GridIndex {
                 0 // negatives (sub-min rounding) and NaN clamp to cell 0
             }
         };
-        let mut pairs: Vec<(u64, u32)> = (0..n)
-            .map(|i| {
-                let p = d.point(i);
+        let mut pairs: Vec<(u64, u32)> = ids
+            .iter()
+            .map(|&i| {
+                let p = d.point(i as usize);
                 let mut id = 0u64;
                 for j in 0..m {
                     id = id * widths[j] + coord(p[j], j);
                 }
-                (id, i as u32)
+                (id, i)
             })
             .collect();
         pairs.sort_unstable();
 
         let mut cell_ids = Vec::new();
         let mut ranges: Vec<(u32, u32)> = Vec::new();
-        let mut point_ids = Vec::with_capacity(n);
+        let mut point_ids = Vec::with_capacity(ids.len());
         for (cell, pid) in pairs {
             if cell_ids.last() != Some(&cell) {
                 cell_ids.push(cell);
@@ -295,8 +356,9 @@ impl GridIndex {
             ranges.last_mut().unwrap().1 += 1;
         }
 
-        // point -> cell rank (filled off the already-sorted layout)
-        let mut point_rank = vec![0u32; n];
+        // point -> cell rank (filled off the already-sorted layout);
+        // ids outside the subset keep the sentinel
+        let mut point_rank = vec![NO_RANK; d.len()];
         for (rank, &(s, e)) in ranges.iter().enumerate() {
             for idx in s..e {
                 point_rank[point_ids[idx as usize] as usize] = rank as u32;
@@ -370,6 +432,9 @@ impl GridIndex {
             adj_off,
             adj_ranks,
             adj_pop,
+            epoch: 0,
+            dirty: 0,
+            rebuild_frac: DEFAULT_REBUILD_FRAC,
         }
     }
 
@@ -565,7 +630,11 @@ impl GridIndex {
                 None => NO_RANK,
             });
         }
-        QueryRankCache { cell_ids, ranks }
+        QueryRankCache {
+            cell_ids,
+            ranks,
+            epoch: self.epoch,
+        }
     }
 
     /// Cell id of query `q` (an id into `r_data`) under a [`QueryKey`].
@@ -730,6 +799,314 @@ impl GridIndex {
             let (s, e) = self.ranges[nr as usize];
             out.extend_from_slice(&self.point_ids[s as usize..e as usize]);
         }
+    }
+
+    // ---------------------------------------------------------------
+    // churn: epoch-stamped incremental maintenance. Every patch lands
+    // the arrays back on the exact canonical form `assemble` produces
+    // (the rebuild-equivalence invariant the churn harness locks down).
+    // ---------------------------------------------------------------
+
+    /// Mutation epoch: bumped once per [`GridIndex::insert`] /
+    /// [`GridIndex::remove`], never reset. Consumers (queue generation
+    /// stamps, the GPU brute tile cache, [`QueryRankCache`]) snapshot
+    /// this and invalidate when it moves.
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// True when `id` is currently indexed (inserted and not removed).
+    #[inline]
+    pub fn is_indexed(&self, id: u32) -> bool {
+        self.point_rank.get(id as usize).copied().unwrap_or(NO_RANK) != NO_RANK
+    }
+
+    /// Number of currently indexed points.
+    #[inline]
+    pub fn indexed_points(&self) -> usize {
+        self.point_ids.len()
+    }
+
+    /// Currently indexed ids, ascending - the live set a
+    /// [`GridIndex::rebuilt`] oracle is assembled over.
+    pub fn indexed_ids(&self) -> Vec<u32> {
+        (0..self.point_rank.len() as u32)
+            .filter(|&i| self.point_rank[i as usize] != NO_RANK)
+            .collect()
+    }
+
+    /// Index a (new) corpus point under the *frozen* geometry: the
+    /// grid origin, widths, m and eps never move, so points beyond the
+    /// original extent clamp into boundary cells - the same superset
+    /// semantics the bipartite R side already relies on, and exactly
+    /// what the frozen-geometry rebuild oracle produces.
+    ///
+    /// A point landing in an existing cell dirties only that cell's
+    /// B/G/A slots plus the memoized populations along its own CSR row
+    /// (the clipped `{-1,0,1}^m` neighborhood is symmetric, so those
+    /// are precisely the cells whose adjacent population changed).
+    /// Cell birth splices B/G and re-stitches the CSR table in one
+    /// O(E) remap pass.
+    pub fn insert(&mut self, d: &Dataset, id: u32) {
+        let cid = self.cell_id_of(d.point(id as usize));
+        if self.point_rank.len() <= id as usize {
+            self.point_rank.resize(id as usize + 1, NO_RANK);
+        }
+        debug_assert_eq!(
+            self.point_rank[id as usize],
+            NO_RANK,
+            "insert of already-indexed id {id}"
+        );
+        match self.cell_ids.binary_search(&cid) {
+            Ok(r) => {
+                // existing cell: splice A at the id-sorted slot, bump
+                // this and all later ranges, bump adj_pop along the
+                // cell's own CSR row
+                let (s, e) = self.ranges[r];
+                let pos = s as usize
+                    + self.point_ids[s as usize..e as usize].partition_point(|&x| x < id);
+                self.point_ids.insert(pos, id);
+                self.ranges[r].1 += 1;
+                for rr in self.ranges[r + 1..].iter_mut() {
+                    rr.0 += 1;
+                    rr.1 += 1;
+                }
+                for i in self.adj_off[r]..self.adj_off[r + 1] {
+                    self.adj_pop[self.adj_ranks[i] as usize] += 1;
+                }
+                self.point_rank[id as usize] = r as u32;
+            }
+            Err(nr) => self.insert_new_cell(nr, cid, id),
+        }
+        self.epoch += 1;
+        self.dirty += 1;
+    }
+
+    /// Cell birth: splice the new cell into B/G/A at rank `nr`, shift
+    /// the point→rank map, then re-stitch the CSR table - old ranks at
+    /// or above `nr` shift up by one, every neighbor row gains an
+    /// entry for the new cell at its sorted slot (and one point of
+    /// adjacent population), and the new cell's own row is computed by
+    /// the 3^m walk over the updated B.
+    fn insert_new_cell(&mut self, nr: usize, cid: u64, id: u32) {
+        self.cell_ids.insert(nr, cid);
+        let s = if nr == 0 { 0 } else { self.ranges[nr - 1].1 };
+        self.ranges.insert(nr, (s, s + 1));
+        for rr in self.ranges[nr + 1..].iter_mut() {
+            rr.0 += 1;
+            rr.1 += 1;
+        }
+        self.point_ids.insert(s as usize, id);
+        for pr in self.point_rank.iter_mut() {
+            if *pr != NO_RANK && *pr >= nr as u32 {
+                *pr += 1;
+            }
+        }
+        self.point_rank[id as usize] = nr as u32;
+
+        // the new cell's own CSR row, over the updated (spliced) B
+        let mut coords = vec![0u64; self.m];
+        delinearise(cid, &self.widths, &mut coords);
+        let mut offs = vec![0i64; self.m];
+        let mut row: Vec<u32> = Vec::new();
+        walk_block(&coords, &self.widths, &mut offs, |nid| {
+            if let Ok(x) = self.cell_ids.binary_search(&nid) {
+                row.push(x as u32);
+            }
+        });
+        debug_assert!(row.binary_search(&(nr as u32)).is_ok());
+
+        let member = |x: u32| row.binary_search(&x).is_ok();
+        let n_new = self.cell_ids.len();
+        let mut flat = Vec::with_capacity(self.adj_ranks.len() + 2 * row.len());
+        let mut off = Vec::with_capacity(n_new + 1);
+        off.push(0usize);
+        let mut pop = Vec::with_capacity(n_new);
+        for rank in 0..n_new {
+            if rank == nr {
+                flat.extend_from_slice(&row);
+                pop.push(
+                    row.iter()
+                        .map(|&x| {
+                            let (a, b) = self.ranges[x as usize];
+                            b - a
+                        })
+                        .sum(),
+                );
+            } else {
+                let old = if rank > nr { rank - 1 } else { rank };
+                let adjacent = member(rank as u32);
+                let mut placed = false;
+                for i in self.adj_off[old]..self.adj_off[old + 1] {
+                    let mut x = self.adj_ranks[i];
+                    if x >= nr as u32 {
+                        x += 1;
+                    }
+                    if adjacent && !placed && x > nr as u32 {
+                        flat.push(nr as u32);
+                        placed = true;
+                    }
+                    flat.push(x);
+                }
+                if adjacent && !placed {
+                    flat.push(nr as u32);
+                }
+                pop.push(self.adj_pop[old] + u32::from(adjacent));
+            }
+            off.push(flat.len());
+        }
+        self.adj_ranks = flat;
+        self.adj_off = off;
+        self.adj_pop = pop;
+    }
+
+    /// Un-index a corpus point. Returns false (and changes nothing)
+    /// when `id` is not currently indexed. Mirrors
+    /// [`GridIndex::insert`]: a survivor cell dirties only its own
+    /// B/G/A slots plus the populations along its CSR row; removing a
+    /// cell's last point is cell death, re-stitching the CSR table in
+    /// one O(E) remap pass.
+    pub fn remove(&mut self, id: u32) -> bool {
+        let pr = self.point_rank.get(id as usize).copied().unwrap_or(NO_RANK);
+        if pr == NO_RANK {
+            return false;
+        }
+        let r = pr as usize;
+        let (s, e) = self.ranges[r];
+        if e - s == 1 {
+            self.remove_last_in_cell(r, id);
+        } else {
+            let pos = s as usize
+                + self.point_ids[s as usize..e as usize]
+                    .binary_search(&id)
+                    .expect("point_rank out of sync with A");
+            self.point_ids.remove(pos);
+            self.ranges[r].1 -= 1;
+            for rr in self.ranges[r + 1..].iter_mut() {
+                rr.0 -= 1;
+                rr.1 -= 1;
+            }
+            for i in self.adj_off[r]..self.adj_off[r + 1] {
+                self.adj_pop[self.adj_ranks[i] as usize] -= 1;
+            }
+        }
+        self.point_rank[id as usize] = NO_RANK;
+        self.epoch += 1;
+        self.dirty += 1;
+        true
+    }
+
+    /// Cell death: drop the B/G/A slots of rank `r` (whose sole point
+    /// is `id`), remap ranks above it down by one, and re-stitch the
+    /// CSR table without it - every former neighbor loses the row
+    /// entry and the one point of adjacent population.
+    fn remove_last_in_cell(&mut self, r: usize, id: u32) {
+        let (s, _) = self.ranges[r];
+        debug_assert_eq!(self.point_ids[s as usize], id);
+        self.point_ids.remove(s as usize);
+        self.cell_ids.remove(r);
+        self.ranges.remove(r);
+        for rr in self.ranges[r..].iter_mut() {
+            rr.0 -= 1;
+            rr.1 -= 1;
+        }
+        for pr in self.point_rank.iter_mut() {
+            if *pr != NO_RANK && *pr > r as u32 {
+                *pr -= 1;
+            }
+        }
+        let n_new = self.cell_ids.len();
+        let mut flat = Vec::with_capacity(self.adj_ranks.len());
+        let mut off = Vec::with_capacity(n_new + 1);
+        off.push(0usize);
+        let mut pop = Vec::with_capacity(n_new);
+        for rank in 0..n_new {
+            let old = if rank >= r { rank + 1 } else { rank };
+            let mut was_adjacent = false;
+            for i in self.adj_off[old]..self.adj_off[old + 1] {
+                let x = self.adj_ranks[i];
+                if x == r as u32 {
+                    was_adjacent = true;
+                    continue;
+                }
+                flat.push(if x > r as u32 { x - 1 } else { x });
+            }
+            off.push(flat.len());
+            pop.push(self.adj_pop[old] - u32::from(was_adjacent));
+        }
+        self.adj_ranks = flat;
+        self.adj_off = off;
+        self.adj_pop = pop;
+    }
+
+    /// From-scratch rebuild over the currently indexed ids with the
+    /// geometry *frozen* - the canonical-form oracle every incremental
+    /// patch is asserted bit-equal to. Carries the epoch forward (the
+    /// live set is the same snapshot), clears the splice debt.
+    pub fn rebuilt(&self, d: &Dataset) -> GridIndex {
+        let mut g = Self::assemble(
+            d,
+            &self.indexed_ids(),
+            self.eps,
+            self.m,
+            self.mins.clone(),
+            self.widths.clone(),
+        );
+        g.epoch = self.epoch;
+        g.rebuild_frac = self.rebuild_frac;
+        g
+    }
+
+    /// Set the dirty-fraction threshold of [`GridIndex::maybe_rebuild`]
+    /// (clamped to be positive; default 0.25).
+    pub fn set_rebuild_frac(&mut self, frac: f64) {
+        self.rebuild_frac = frac.max(1e-9);
+    }
+
+    /// Mutations applied since the last canonical (re)build, as a
+    /// fraction of the indexed population.
+    pub fn dirty_fraction(&self) -> f64 {
+        self.dirty as f64 / self.point_ids.len().max(1) as f64
+    }
+
+    /// Amortized re-sort: once the dirty fraction trips the threshold,
+    /// replace the accumulated splice debt with one canonical
+    /// `assemble`. Because patches already keep the arrays canonical,
+    /// this is observably a no-op (same layout, same epoch) - the
+    /// churn harness asserts exactly that - but it restores compact
+    /// allocations and bounds worst-case splice cost amortized.
+    pub fn maybe_rebuild(&mut self, d: &Dataset) -> bool {
+        if self.dirty as f64 <= self.rebuild_frac * self.point_ids.len().max(1) as f64 {
+            return false;
+        }
+        *self = self.rebuilt(d);
+        true
+    }
+
+    /// Assert structural equality of the complete index layout - B, G,
+    /// A, the point→rank map (padded with the sentinel to the longer
+    /// extent), the CSR adjacency table, the memoized populations and
+    /// the frozen geometry - panicking with the diverging field named.
+    /// The rebuild-equivalence oracle of the churn harness. Epoch and
+    /// debt counters are bookkeeping, not layout, and are not compared.
+    pub fn assert_same_layout(&self, other: &GridIndex) {
+        assert_eq!(self.m, other.m, "m diverged");
+        assert_eq!(self.eps.to_bits(), other.eps.to_bits(), "eps diverged");
+        assert_eq!(self.mins, other.mins, "grid origin diverged");
+        assert_eq!(self.widths, other.widths, "grid widths diverged");
+        assert_eq!(self.cell_ids, other.cell_ids, "B (cell_ids) diverged");
+        assert_eq!(self.ranges, other.ranges, "G (ranges) diverged");
+        assert_eq!(self.point_ids, other.point_ids, "A (point_ids) diverged");
+        let n = self.point_rank.len().max(other.point_rank.len());
+        for i in 0..n {
+            let a = self.point_rank.get(i).copied().unwrap_or(NO_RANK);
+            let b = other.point_rank.get(i).copied().unwrap_or(NO_RANK);
+            assert_eq!(a, b, "point_rank[{i}] diverged");
+        }
+        assert_eq!(self.adj_off, other.adj_off, "CSR offsets diverged");
+        assert_eq!(self.adj_ranks, other.adj_ranks, "CSR rows diverged");
+        assert_eq!(self.adj_pop, other.adj_pop, "adj_pop diverged");
     }
 
     // ---------------------------------------------------------------
@@ -1080,6 +1457,102 @@ mod tests {
         let d2 = susy_like(200).generate(3);
         let g2 = GridIndex::build(&d2, 6, 2.0);
         assert_eq!(g2.m, 6);
+    }
+
+    #[test]
+    fn patched_grid_identical_to_rebuild_under_churn() {
+        // The tentpole invariant: after ANY interleaving of inserts
+        // (incl. cell births and far-out-of-extent clamped points) and
+        // removes (incl. cell deaths), every array of the patched grid
+        // is identical to a frozen-geometry rebuild over the live set.
+        prop::cases(12, 0xC0_54A7, |rng| {
+            let n0 = 40 + rng.below(120);
+            let dims = 2 + rng.below(4);
+            let mut d = random_dataset(rng, n0, dims, 3.0);
+            let m = 1 + rng.below(dims);
+            let mut g = GridIndex::build(&d, m, 0.5 + rng.f64() * 2.0);
+            let mut live: Vec<u32> = (0..n0 as u32).collect();
+            let mut mutations = 0u64;
+            for step in 0..60 {
+                if live.is_empty() || rng.below(5) < 3 {
+                    // occasionally far outside the frozen box, to
+                    // exercise boundary-cell clamping
+                    let scale = if rng.below(4) == 0 { 40.0 } else { 3.0 };
+                    let row: Vec<f32> =
+                        (0..dims).map(|_| rng.normal(0.0, scale) as f32).collect();
+                    let id = d.push_row(&row);
+                    g.insert(&d, id);
+                    live.push(id);
+                } else {
+                    let id = live.swap_remove(rng.below(live.len()));
+                    assert!(g.remove(id));
+                    assert!(!g.remove(id), "double remove must be a no-op");
+                }
+                mutations += 1;
+                assert_eq!(g.epoch(), mutations);
+                if step % 9 == 0 {
+                    g.assert_same_layout(&g.rebuilt(&d));
+                }
+            }
+            assert_eq!(g.indexed_points(), live.len());
+            let mut sorted = live.clone();
+            sorted.sort_unstable();
+            assert_eq!(g.indexed_ids(), sorted);
+            g.assert_same_layout(&g.rebuilt(&d));
+        });
+    }
+
+    #[test]
+    fn dirty_threshold_rebuild_is_canonical_noop() {
+        let d = susy_like(300).generate(9);
+        let mut g = GridIndex::build(&d, 4, 2.0);
+        g.set_rebuild_frac(0.05);
+        let mut fired = false;
+        for id in 0..40u32 {
+            assert!(g.remove(id));
+            let before = g.clone();
+            if g.maybe_rebuild(&d) {
+                fired = true;
+                before.assert_same_layout(&g);
+                assert_eq!(g.epoch(), before.epoch(), "re-sort must not move the epoch");
+                assert_eq!(g.dirty, 0, "re-sort must clear the splice debt");
+            }
+        }
+        assert!(fired, "threshold must trip well before 40 removals of 300");
+    }
+
+    #[test]
+    fn drain_and_refill_through_empty() {
+        // remove every point (through the last cell death), then
+        // re-insert: the patched grid must come back canonical.
+        let mut d = random_dataset(&mut Rng::new(0xE1_77), 30, 3, 2.0);
+        let mut g = GridIndex::build(&d, 3, 1.0);
+        for id in 0..30u32 {
+            assert!(g.remove(id));
+        }
+        assert_eq!(g.non_empty_cells(), 0);
+        assert_eq!(g.indexed_points(), 0);
+        g.assert_same_layout(&g.rebuilt(&d));
+        for id in 0..30u32 {
+            g.insert(&d, id);
+        }
+        let fresh = d.push_row(&[9.0, -9.0, 9.0]);
+        g.insert(&d, fresh);
+        g.assert_same_layout(&g.rebuilt(&d));
+        assert_eq!(g.indexed_points(), 31);
+    }
+
+    #[test]
+    fn rank_cache_epoch_stamps_staleness() {
+        let mut d = susy_like(200).generate(5);
+        let mut g = GridIndex::build(&d, 4, 2.0);
+        let r = susy_like(40).generate(6);
+        let cache = g.build_query_ranks(&r);
+        assert_eq!(cache.epoch(), g.epoch());
+        let id = d.push_row(&d.point(0).to_vec());
+        g.insert(&d, id);
+        assert_ne!(cache.epoch(), g.epoch(), "mutation must outdate the cache");
+        assert_eq!(g.build_query_ranks(&r).epoch(), g.epoch());
     }
 
     #[test]

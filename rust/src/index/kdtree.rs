@@ -12,8 +12,31 @@
 //! allocation-lean: one bounding-box scan at the root, with shrunk cell
 //! boxes passed down (and restored) in place of per-node rescans -
 //! sliding-midpoint over cell boxes, exactly as ANN does it.
+//!
+//! **Churn (DESIGN.md §12):** the tree is mutable through a buffered
+//! delta set in the Bigger Buffer k-d Trees style (arxiv 1512.02831):
+//! [`KdTree::insert`] appends to a side buffer that `knn_into`
+//! brute-scans after the tree descent, [`KdTree::remove`] tombstones a
+//! tree id (or evicts a not-yet-merged buffered insert), and
+//! [`KdTree::maybe_merge`] folds everything back into a fresh tree once
+//! the deferred set crosses the merge threshold. Queries are exact - and
+//! *bit-identical* to a from-scratch rebuild over the live set - at
+//! every point in between: the bounded heap keeps the canonical k
+//! smallest `(dist², id)` pairs regardless of candidate order, and both
+//! distance kernels share one accumulation order (see `core`).
 
 use crate::core::{sqdist, sqdist_short_circuit, BoundedHeap, Dataset, Neighbor};
+
+/// `leaf_rank` sentinel for ids the tree does not index (buffered
+/// inserts, ids past the build-time corpus).
+const NO_LEAF_RANK: u32 = u32::MAX;
+
+/// Default [`KdTree::maybe_merge`] threshold: deferred mutations
+/// (buffered inserts + tombstones) tolerated before the delta is folded
+/// into a rebuilt tree. Small enough that the O(buffer) per-query delta
+/// scan stays marginal next to a leaf visit, large enough to amortise
+/// the O(n log n) rebuild over many mutations.
+const DEFAULT_MERGE_LIMIT: usize = 128;
 
 const LEAF_SIZE: usize = 16;
 
@@ -75,13 +98,31 @@ pub struct KdTree {
     dims: usize,
     /// position of each point id in `ids` - the leaf-major spatial order
     /// used to block self-join queries for cache locality.
+    /// `NO_LEAF_RANK` marks ids the tree does not index.
     leaf_rank: Vec<u32>,
+    /// buffered delta set: inserted ids not yet merged into the tree,
+    /// brute-scanned by every query after the tree descent
+    buffer: Vec<u32>,
+    /// tombstones for tree ids removed since the last merge, indexed by
+    /// id (same extent as `leaf_rank`); `scan_leaf` skips them
+    dead: Vec<bool>,
+    /// live tombstone count (keeps `deferred` O(1))
+    dead_count: usize,
+    /// `maybe_merge` threshold on `deferred()`
+    merge_limit: usize,
 }
 
 impl KdTree {
     /// Build over the full dataset.
     pub fn build(d: &Dataset) -> KdTree {
-        let mut ids: Vec<u32> = (0..d.len() as u32).collect();
+        Self::build_from_ids(d, (0..d.len() as u32).collect())
+    }
+
+    /// Build over a subset of point ids (duplicate-free, each < `d.len()`,
+    /// any order). The churn substrate: merges and the rebuild-reference
+    /// engines index the *live* id set of a corpus whose dead rows stay in
+    /// place, so ids - and therefore result lanes - never shift.
+    pub fn build_from_ids(d: &Dataset, mut ids: Vec<u32>) -> KdTree {
         let mut nodes = Vec::new();
         let dims = d.dims();
         let root = if ids.is_empty() {
@@ -92,8 +133,8 @@ impl KdTree {
             // copies of this cell box via in-place mutation + restore
             let mut mins = vec![f32::INFINITY; dims];
             let mut maxs = vec![f32::NEG_INFINITY; dims];
-            for i in 0..d.len() {
-                let p = d.point(i);
+            for &i in &ids {
+                let p = d.point(i as usize);
                 for j in 0..dims {
                     if p[j] < mins[j] {
                         mins[j] = p[j];
@@ -105,11 +146,22 @@ impl KdTree {
             }
             Self::build_rec(d, &mut nodes, &mut ids, 0, &mut mins, &mut maxs)
         };
-        let mut leaf_rank = vec![0u32; d.len()];
+        let mut leaf_rank = vec![NO_LEAF_RANK; d.len()];
         for (pos, &id) in ids.iter().enumerate() {
             leaf_rank[id as usize] = pos as u32;
         }
-        KdTree { nodes, ids, root, dims, leaf_rank }
+        let dead = vec![false; d.len()];
+        KdTree {
+            nodes,
+            ids,
+            root,
+            dims,
+            leaf_rank,
+            buffer: Vec::new(),
+            dead,
+            dead_count: 0,
+            merge_limit: DEFAULT_MERGE_LIMIT,
+        }
     }
 
     /// Count of ids with coordinate satisfying `pred`, partitioned to the
@@ -259,45 +311,76 @@ impl KdTree {
         assert_eq!(query.len(), self.dims);
         scratch.heap.reset(k);
         scratch.stack.clear();
-        if self.ids.is_empty() {
-            return;
-        }
-        let mut node = self.root;
-        let mut min_d2 = 0.0f64;
-        loop {
-            // a deferred subtree may have been beaten by a bound that
-            // tightened after it was pushed
-            if min_d2 <= scratch.heap.bound() {
-                match &self.nodes[node as usize] {
-                    Node::Leaf { start, end } => {
-                        self.scan_leaf(
-                            d, *start, *end, query, exclude_id, &mut scratch.heap,
-                        );
-                    }
-                    Node::Split { dim, value, left, right } => {
-                        let diff = (query[*dim as usize] - value) as f64;
-                        let (near, far) = if diff < 0.0 {
-                            (*left, *right)
-                        } else {
-                            (*right, *left)
-                        };
-                        // crossing the split plane costs at least diff^2
-                        let cross = min_d2.max(diff * diff);
-                        if cross <= scratch.heap.bound() {
-                            scratch.stack.push((far, cross));
+        if !self.ids.is_empty() {
+            let mut node = self.root;
+            let mut min_d2 = 0.0f64;
+            loop {
+                // a deferred subtree may have been beaten by a bound that
+                // tightened after it was pushed
+                if min_d2 <= scratch.heap.bound() {
+                    match &self.nodes[node as usize] {
+                        Node::Leaf { start, end } => {
+                            self.scan_leaf(
+                                d, *start, *end, query, exclude_id,
+                                &mut scratch.heap,
+                            );
                         }
-                        node = near;
-                        continue; // descend the near side first
+                        Node::Split { dim, value, left, right } => {
+                            let diff = (query[*dim as usize] - value) as f64;
+                            let (near, far) = if diff < 0.0 {
+                                (*left, *right)
+                            } else {
+                                (*right, *left)
+                            };
+                            // crossing the split plane costs at least diff^2
+                            let cross = min_d2.max(diff * diff);
+                            if cross <= scratch.heap.bound() {
+                                scratch.stack.push((far, cross));
+                            }
+                            node = near;
+                            continue; // descend the near side first
+                        }
                     }
                 }
-            }
-            match scratch.stack.pop() {
-                Some((n, d2)) => {
-                    node = n;
-                    min_d2 = d2;
+                match scratch.stack.pop() {
+                    Some((n, d2)) => {
+                        node = n;
+                        min_d2 = d2;
+                    }
+                    None => break,
                 }
-                None => break,
             }
+        }
+        // Delta pass (Bigger Buffer k-d Trees): brute-scan the buffered
+        // inserts with the exact same offer logic the leaves use. The
+        // heap's canonical (dist², id) tie rule makes the outcome
+        // independent of whether a point is met here or inside a leaf -
+        // the delta tree and a rebuilt tree return identical bits.
+        for &i in &self.buffer {
+            if i != exclude_id {
+                Self::offer(d, i, query, &mut scratch.heap);
+            }
+        }
+    }
+
+    /// Offer candidate `i` to `heap`: SHORTC (paper Sec. IV-E) once the
+    /// heap is full, the full kernel while it is filling. The two kernels
+    /// share one accumulation order (see `core::sqdist`), and the `<=`
+    /// gate admits bound ties so the heap's id tie-break - not arrival
+    /// order - decides them.
+    #[inline]
+    fn offer(d: &Dataset, i: u32, q: &[f32], heap: &mut BoundedHeap) {
+        let bound = heap.bound();
+        if bound.is_finite() {
+            if let Some(dd) = sqdist_short_circuit(q, d.point(i as usize), bound)
+            {
+                if dd <= bound {
+                    heap.push(Neighbor { id: i, dist2: dd });
+                }
+            }
+        } else {
+            let dd = sqdist(q, d.point(i as usize));
+            heap.push(Neighbor { id: i, dist2: dd });
         }
     }
 
@@ -312,45 +395,139 @@ impl KdTree {
         heap: &mut BoundedHeap,
     ) {
         for &i in &self.ids[start as usize..end as usize] {
-            if i == exclude {
+            if i == exclude || self.dead[i as usize] {
                 continue;
             }
-            // SHORTC (paper Sec. IV-E) applied to the CPU side: abandon
-            // the accumulation once it exceeds the current k-th best -
-            // the dominant win in high dimensions.
-            let bound = heap.bound();
-            if bound.is_finite() {
-                if let Some(dd) =
-                    sqdist_short_circuit(q, d.point(i as usize), bound)
-                {
-                    if dd < bound {
-                        heap.push(Neighbor { id: i, dist2: dd });
-                    }
-                }
-            } else {
-                let dd = sqdist(q, d.point(i as usize));
-                heap.push(Neighbor { id: i, dist2: dd });
-            }
+            Self::offer(d, i, q, heap);
         }
+    }
+
+    // ---- churn: the buffered delta set (DESIGN.md §12) ----
+
+    /// Is `id` indexed by the tree proper (merged; possibly tombstoned)?
+    #[inline]
+    fn in_tree(&self, id: u32) -> bool {
+        self.leaf_rank
+            .get(id as usize)
+            .is_some_and(|&r| r != NO_LEAF_RANK)
+    }
+
+    /// Stage point `id` of `d` for queries: resurrects a tombstoned tree
+    /// id in place, otherwise appends to the delta buffer (scanned by
+    /// every query until [`Self::maybe_merge`] folds it in). `id` must
+    /// not currently be live.
+    pub fn insert(&mut self, d: &Dataset, id: u32) {
+        debug_assert!((id as usize) < d.len(), "insert of id past the corpus");
+        if self.in_tree(id) {
+            debug_assert!(self.dead[id as usize], "insert of a live tree id");
+            if self.dead[id as usize] {
+                self.dead[id as usize] = false;
+                self.dead_count -= 1;
+            }
+            return;
+        }
+        debug_assert!(
+            !self.buffer.contains(&id),
+            "insert of an already-buffered id"
+        );
+        self.buffer.push(id);
+    }
+
+    /// Unindex point `id`: evicts a not-yet-merged buffered insert
+    /// outright, or tombstones a tree id (skipped by `scan_leaf` until
+    /// the next merge drops it). Returns false when `id` was not live.
+    pub fn remove(&mut self, id: u32) -> bool {
+        if let Some(pos) = self.buffer.iter().position(|&b| b == id) {
+            self.buffer.swap_remove(pos);
+            return true;
+        }
+        if self.in_tree(id) && !self.dead[id as usize] {
+            self.dead[id as usize] = true;
+            self.dead_count += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Deferred mutations: buffered inserts + tombstones. The per-query
+    /// overhead the delta scheme carries until the next merge.
+    #[inline]
+    pub fn deferred(&self) -> usize {
+        self.buffer.len() + self.dead_count
+    }
+
+    /// Override the `maybe_merge` threshold (default 128 deferred
+    /// mutations). Queries stay exact for any value - the knob trades
+    /// per-query delta-scan cost against rebuild amortisation only.
+    pub fn set_merge_limit(&mut self, limit: usize) {
+        self.merge_limit = limit.max(1);
+    }
+
+    /// The live id set (tree minus tombstones, plus the buffer), sorted
+    /// ascending. What a from-scratch rebuild would index.
+    pub fn live_ids(&self) -> Vec<u32> {
+        let mut live: Vec<u32> = self
+            .ids
+            .iter()
+            .copied()
+            .filter(|&i| !self.dead[i as usize])
+            .chain(self.buffer.iter().copied())
+            .collect();
+        live.sort_unstable();
+        live
+    }
+
+    /// Fold the delta set into a fresh tree over the live ids. A no-op
+    /// for queries (bit-identical before and after); only the cost
+    /// profile changes.
+    pub fn merge(&mut self, d: &Dataset) {
+        let limit = self.merge_limit;
+        *self = Self::build_from_ids(d, self.live_ids());
+        self.merge_limit = limit;
+    }
+
+    /// Merge when the deferred set exceeds the threshold (the Bigger
+    /// Buffer amortisation rule). Returns true when a merge ran.
+    pub fn maybe_merge(&mut self, d: &Dataset) -> bool {
+        if self.deferred() > self.merge_limit {
+            self.merge(d);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// A from-scratch tree over this tree's live set (empty delta) - the
+    /// rebuild half of the churn equivalence harness.
+    pub fn rebuilt(&self, d: &Dataset) -> KdTree {
+        let mut t = Self::build_from_ids(d, self.live_ids());
+        t.merge_limit = self.merge_limit;
+        t
     }
 
     /// Position of point `id` in the tree's leaf-major id order. Sorting a
     /// self-join query list by this key visits queries leaf block by leaf
     /// block, so consecutive queries traverse near-identical node paths
-    /// and touch the same candidate cache lines.
+    /// and touch the same candidate cache lines. Ids the tree does not
+    /// index (buffered inserts, ids past the build-time corpus) sort
+    /// last with `u32::MAX`.
     #[inline]
     pub fn leaf_order_key(&self, id: u32) -> u32 {
-        self.leaf_rank[id as usize]
+        self.leaf_rank
+            .get(id as usize)
+            .copied()
+            .unwrap_or(NO_LEAF_RANK)
     }
 
-    /// Number of indexed points.
+    /// Number of live indexed points (tree minus tombstones, plus the
+    /// delta buffer).
     pub fn len(&self) -> usize {
-        self.ids.len()
+        self.ids.len() - self.dead_count + self.buffer.len()
     }
 
-    /// True when the tree indexes no points.
+    /// True when the tree indexes no live points.
     pub fn is_empty(&self) -> bool {
-        self.ids.is_empty()
+        self.len() == 0
     }
 }
 
@@ -559,6 +736,61 @@ mod tests {
         let d = Dataset::new(Vec::new(), 4);
         let t = KdTree::build(&d);
         assert!(t.knn(&d, &[0.0; 4], 3, u32::MAX).is_empty());
+    }
+
+    #[test]
+    fn delta_insert_remove_stays_exact() {
+        // random interleaving of inserts/removes/queries vs a brute-force
+        // oracle over the live set; includes the merge path
+        prop::cases(20, 0xD317, |rng| {
+            let dims = 1 + rng.below(6);
+            let n = 40 + rng.below(120);
+            let d = random_dataset(rng, n, dims);
+            let n0 = n / 2;
+            let mut t = KdTree::build_from_ids(&d, (0..n0 as u32).collect());
+            t.set_merge_limit(1 + rng.below(20));
+            let mut live: Vec<u32> = (0..n0 as u32).collect();
+            for _ in 0..30 {
+                match rng.below(3) {
+                    0 => {
+                        // insert a random not-live id
+                        let dead: Vec<u32> = (0..n as u32)
+                            .filter(|i| !live.contains(i))
+                            .collect();
+                        if let Some(&id) = dead.get(rng.below(dead.len().max(1)))
+                        {
+                            t.insert(&d, id);
+                            live.push(id);
+                            t.maybe_merge(&d);
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let pos = rng.below(live.len());
+                            let id = live.swap_remove(pos);
+                            assert!(t.remove(id));
+                            t.maybe_merge(&d);
+                        }
+                    }
+                    _ => {
+                        let k = 1 + rng.below(8);
+                        let q = rng.below(n);
+                        let got = t.knn(&d, d.point(q), k, u32::MAX);
+                        let mut want: Vec<Neighbor> = live
+                            .iter()
+                            .map(|&i| Neighbor {
+                                id: i,
+                                dist2: sqdist(d.point(q), d.point(i as usize)),
+                            })
+                            .collect();
+                        want.sort();
+                        want.truncate(k);
+                        assert_eq!(got, want, "delta tree vs live oracle");
+                    }
+                }
+                assert_eq!(t.len(), live.len());
+            }
+        });
     }
 
     #[test]

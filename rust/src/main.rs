@@ -71,6 +71,10 @@ options for serve (resident engine + streaming load generator):
   --rate <qps>    open-loop total arrival rate in queries/sec
   --ranks <p>     CPU ranks; 0 = deterministic replay mode (default 3)
   --qseed <s>     query-stream sampling seed
+  --churn <b>     corpus churn: each client inserts b points per request
+                  and removes its previous round's b ids (default 0)
+  --flush-cap <q> bound each coalesced micro-batch to q queries (default
+                  unbounded)
 options for experiments:
   positional: fig2 fig6 fig7 fig8 fig9 fig10 fig11 table3 table4 table5 table6 all
   --quick         use the small smoke-test workloads
@@ -194,8 +198,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let ids: Vec<usize> =
         (0..total_q).map(|_| rng.below(corpus.len())).collect();
     let pool = corpus.gather(&ids);
+    // churn stream: per request each client inserts `churn` rows
+    // (corpus-like, sampled with replacement) and removes the ids it
+    // inserted the round before - a steady-state live set
+    let churn = args.usize_or("churn", 0);
+    let churn_pool = if churn > 0 {
+        let cids: Vec<usize> = (0..clients * requests * churn)
+            .map(|_| rng.below(corpus.len()))
+            .collect();
+        Some(corpus.gather(&cids))
+    } else {
+        None
+    };
 
     let mut session = KnnEngine::build(&engine, &corpus, p)?;
+    let flush_cap = args.usize_or("flush-cap", 0);
+    if flush_cap > 0 {
+        session.set_flush_cap(flush_cap);
+    }
     println!(
         "SERVE |S|={} dims={} k={} ranks={} | {clients} clients x \
          {requests} requests x {batch} queries, {mode} loop",
@@ -210,12 +230,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map(|c| {
                 let client = ingress.client();
                 let pool = &pool;
+                let churn_pool = churn_pool.as_ref();
                 s.spawn(move || {
+                    let mut prev_ids: Vec<u32> = Vec::new();
                     for r in 0..requests {
                         if interval > 0.0 {
                             std::thread::sleep(
                                 std::time::Duration::from_secs_f64(interval),
                             );
+                        }
+                        if let Some(cp) = churn_pool {
+                            let cstart = (c * requests + r) * churn;
+                            let rows: Vec<usize> =
+                                (cstart..cstart + churn).collect();
+                            match client.insert(&cp.gather(&rows)) {
+                                Ok(ids) => {
+                                    if !prev_ids.is_empty()
+                                        && client.remove(&prev_ids).is_err()
+                                    {
+                                        break;
+                                    }
+                                    prev_ids = ids;
+                                }
+                                Err(_) => break, // service terminated early
+                            }
                         }
                         let start = (c * requests + r) * batch;
                         let rows: Vec<usize> =
@@ -252,6 +290,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.q_gpu, report.q_cpu, report.q_fail, report.gpu_faults,
         report.degraded_flushes
     );
+    if churn > 0 || flush_cap > 0 {
+        println!(
+            "churn: inserted={} removed={} live |S|={} epoch={}  \
+             max_flush_queries={}",
+            report.inserts,
+            report.removes,
+            session.live_len(),
+            session.epoch(),
+            report.max_flush_queries
+        );
+    }
     Ok(())
 }
 

@@ -162,6 +162,7 @@ pub fn build_queue_keyed(
         reserve,
         thresh,
     )
+    .with_generation(grid.epoch())
 }
 
 /// Bool-keyed wrapper over [`build_queue_keyed`] for call sites that

@@ -119,6 +119,10 @@ pub struct WorkQueue {
     reserve: usize,
     /// the n^thresh used (diagnostics)
     threshold: f64,
+    /// index epoch the queue was built against (0 when not stamped):
+    /// consumers holding cross-flush caches (the GPU brute tile cache)
+    /// compare stamps and invalidate on change
+    generation: u64,
 
     // ---- Q^Fail recirculation (single producer: the GPU master) ----
     recirc: Vec<AtomicU32>,
@@ -172,6 +176,7 @@ impl WorkQueue {
             dense_prefix: dense_prefix.min(n),
             reserve,
             threshold,
+            generation: 0,
             recirc: (0..n).map(|_| AtomicU32::new(0)).collect(),
             recirc_published: AtomicUsize::new(0),
             recirc_taken: AtomicUsize::new(0),
@@ -243,6 +248,20 @@ impl WorkQueue {
     /// The n^thresh the γ seeding used (diagnostics).
     pub fn threshold(&self) -> f64 {
         self.threshold
+    }
+
+    /// Stamp the queue with the index epoch it was built against
+    /// (builder form: `from_cells(..).with_generation(g)`). The churn
+    /// path stamps every queue with [`crate::index::GridIndex::epoch`]
+    /// so in-flight drains read a consistent snapshot.
+    pub fn with_generation(mut self, generation: u64) -> Self {
+        self.generation = generation;
+        self
+    }
+
+    /// Index epoch this queue was built against (0 when unstamped).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     /// Split a claimed position range at cell boundaries. Each returned

@@ -1,0 +1,470 @@
+//! Churn suite (DESIGN.md §12): incremental index maintenance locked
+//! down by rebuild equivalence.
+//!
+//! The load-bearing property: a resident engine whose indexes were
+//! *patched* through an arbitrary seeded interleaving of inserts,
+//! removes, and query flushes is **bit-identical** - same `KnnResult`
+//! id/dist² lanes, same solved/failed claim partition, same
+//! exactly-once accounting - to an engine *rebuilt from scratch* over
+//! the same live set, at every flush boundary, across all three
+//! `DrainMode`s and both backend tiers, with fault injection layered on
+//! top. Patching (CSR row splices on the grid, the buffered delta set
+//! on the kd-tree, epoch-invalidated brute tiles) is an amortisation
+//! strategy, never an approximation.
+//!
+//! Also here, host-side: the CSR patch *locality* contract - a single
+//! insert/remove dirties only the mutated cell's own 3^m neighbor row,
+//! every other row stays byte-identical - and the kd-tree delta-buffer
+//! boundary cases from the Bigger Buffer k-d Trees treatment
+//! (arXiv:1512.02831): deleting a not-yet-merged buffered insert,
+//! duplicate coordinates split across tree and buffer, and a merge
+//! landing mid-query-batch.
+
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::util::prop;
+use hybrid_knn_join::util::rng::Rng;
+
+/// CI's chaos matrix pins the drain depth via `HKNN_FAULT_DEPTH`
+/// (1 = sync, 2 = two-stage, 3 = three-stage); unset, the engine-backed
+/// harness sweeps all three itself.
+fn drain_modes() -> Vec<DrainMode> {
+    match std::env::var("HKNN_FAULT_DEPTH").ok().as_deref() {
+        Some("1") => vec![DrainMode::Sync],
+        Some("2") => vec![DrainMode::TwoStage],
+        Some("3") => vec![DrainMode::ThreeStage],
+        _ => vec![DrainMode::Sync, DrainMode::TwoStage, DrainMode::ThreeStage],
+    }
+}
+
+// ---------------------------------------------------------------------
+// CSR patch locality (host-side, no engine)
+// ---------------------------------------------------------------------
+
+/// Per-cell snapshot keyed by cell id (stable across rank shifts):
+/// member list, neighbor row as cell ids, memoized adjacent population.
+type CellSnap = (u64, Vec<u32>, Vec<u64>, usize);
+
+fn snapshot(g: &GridIndex) -> Vec<CellSnap> {
+    (0..g.non_empty_cells())
+        .map(|r| {
+            let row: Vec<u64> = g
+                .adjacent_ranks(r)
+                .iter()
+                .map(|&a| g.rank_cell_id(a as usize))
+                .collect();
+            (
+                g.rank_cell_id(r),
+                g.rank_points(r).to_vec(),
+                row,
+                g.adjacent_population_of_rank(r),
+            )
+        })
+        .collect()
+}
+
+/// Assert every cell outside `dirty` (a set of cell ids) is
+/// byte-identical between the two snapshots.
+fn assert_local(before: &[CellSnap], after: &[CellSnap], dirty: &[u64]) {
+    let find = |snaps: &[CellSnap], cid: u64| -> Option<CellSnap> {
+        snaps.iter().find(|s| s.0 == cid).cloned()
+    };
+    for s in before {
+        if dirty.contains(&s.0) {
+            continue;
+        }
+        let a = find(after, s.0)
+            .unwrap_or_else(|| panic!("cell {} vanished outside dirty set", s.0));
+        assert_eq!(s.1, a.1, "cell {}: member list changed", s.0);
+        assert_eq!(s.2, a.2, "cell {}: neighbor row changed", s.0);
+        assert_eq!(s.3, a.3, "cell {}: adjacent population changed", s.0);
+    }
+    for a in after {
+        assert!(
+            dirty.contains(&a.0) || find(before, a.0).is_some(),
+            "cell {} born outside dirty set",
+            a.0
+        );
+    }
+}
+
+#[test]
+fn csr_patch_dirties_only_the_mutated_neighborhood() {
+    // ISSUE 9 satellite: byte-equality of every CSR row outside the
+    // dirtied 3^m neighborhood after each single insert / remove -
+    // including cell-birth and cell-death mutations (compared keyed by
+    // cell id, so rank renumbering does not mask a violation).
+    prop::cases(10, 0xC10C, |rng| {
+        let mut d = susy_like(240 + rng.below(160)).generate(rng.next_u64());
+        let m = 2 + rng.below(3);
+        let mut g = GridIndex::build(&d, m, 0.8 + rng.f64() * 1.8);
+        let mut live: Vec<u32> = (0..d.len() as u32).collect();
+        for _ in 0..30 {
+            let before = snapshot(&g);
+            let insert = rng.f64() < 0.6 || live.is_empty();
+            let touched_cell = if insert {
+                let src = rng.below(d.len());
+                let mut p = d.point(src).to_vec();
+                // jitter: sometimes same cell, sometimes a fresh one
+                for x in p.iter_mut().take(m) {
+                    *x += (rng.f64() as f32 - 0.5) * 4.0;
+                }
+                let id = d.push_row(&p);
+                g.insert(&d, id);
+                live.push(id);
+                g.cell_id_of_id(id)
+            } else {
+                let slot = rng.below(live.len());
+                let id = live.swap_remove(slot);
+                let cid = g.cell_id_of_id(id);
+                assert!(g.remove(id), "live id {id} must be indexed");
+                cid
+            };
+            // the dirty set is the touched cell's neighbor row - taken
+            // from whichever side of the mutation the cell exists on
+            let row_of = |g: &GridIndex, snaps: &[CellSnap]| -> Vec<u64> {
+                match g.rank_of_cell_id(touched_cell) {
+                    Some(r) => g
+                        .adjacent_ranks(r)
+                        .iter()
+                        .map(|&a| g.rank_cell_id(a as usize))
+                        .collect(),
+                    None => snaps
+                        .iter()
+                        .find(|s| s.0 == touched_cell)
+                        .map(|s| s.2.clone())
+                        .unwrap_or_default(),
+                }
+            };
+            let mut dirty = row_of(&g, &before);
+            dirty.push(touched_cell);
+            assert_local(&before, &snapshot(&g), &dirty);
+        }
+        // belt and braces: the patched grid is still in canonical form
+        g.assert_same_layout(&g.rebuilt(&d));
+    });
+}
+
+#[test]
+fn csr_duplicate_insert_then_remove_roundtrips_byte_identically() {
+    // the no-birth / no-death pair: ranks are stable, so the roundtrip
+    // must restore every array byte-for-byte
+    let mut d = susy_like(300).generate(0xA7);
+    let mut g = GridIndex::build(&d, 4, 1.5);
+    let before = snapshot(&g);
+    let epoch0 = g.epoch();
+    let id = d.push_row(&d.point(7).to_vec()); // duplicate: same cell as 7
+    g.insert(&d, id);
+    assert_eq!(g.cell_id_of_id(id), g.cell_id_of_id(7));
+    let rc = g.cell_rank_of(id);
+    let dirty: Vec<u64> = g
+        .adjacent_ranks(rc)
+        .iter()
+        .map(|&a| g.rank_cell_id(a as usize))
+        .collect();
+    let mid = snapshot(&g);
+    assert_local(&before, &mid, &dirty);
+    // inside the dirty row, exactly the memoized populations move
+    for s in &before {
+        if !dirty.contains(&s.0) {
+            continue;
+        }
+        let a = mid.iter().find(|x| x.0 == s.0).unwrap();
+        assert_eq!(a.3, s.3 + 1, "cell {}: adj_pop bumps by one", s.0);
+        assert_eq!(a.2, s.2, "cell {}: neighbor row untouched", s.0);
+    }
+    assert!(g.remove(id));
+    assert_eq!(snapshot(&g), before, "roundtrip restores every row");
+    assert_eq!(g.epoch(), epoch0 + 2, "two mutations, two epochs");
+    g.assert_same_layout(&g.rebuilt(&d));
+}
+
+// ---------------------------------------------------------------------
+// kd-tree delta-buffer boundary cases (host-side, no engine)
+// ---------------------------------------------------------------------
+
+fn assert_knn_bit_equal(a: &[Neighbor], b: &[Neighbor], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: neighbor count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{tag}: id lane");
+        assert_eq!(
+            x.dist2.to_bits(),
+            y.dist2.to_bits(),
+            "{tag}: dist2 lane ({} vs {})",
+            x.dist2,
+            y.dist2
+        );
+    }
+}
+
+#[test]
+fn kdtree_delete_of_unmerged_buffered_insert_is_a_true_noop() {
+    let mut d = susy_like(250).generate(0xB1);
+    let extra = susy_like(6).generate(0xB2);
+    let mut t = KdTree::build(&d);
+    t.set_merge_limit(usize::MAX / 2); // keep the delta buffered
+    let pristine = KdTree::build_from_ids(&d, (0..250).collect());
+    let mut ids = Vec::new();
+    for i in 0..extra.len() {
+        let id = d.push_row(extra.point(i));
+        t.insert(&d, id);
+        ids.push(id);
+    }
+    assert_eq!(t.deferred(), extra.len());
+    for &id in &ids {
+        assert!(t.remove(id), "buffered insert {id} is live");
+    }
+    assert_eq!(t.len(), 250, "live count back to the original corpus");
+    for q in (0..250).step_by(23) {
+        let got = t.knn(&d, d.point(q), 5, u32::MAX);
+        let want = pristine.knn(&d, d.point(q), 5, u32::MAX);
+        assert_knn_bit_equal(&got, &want, &format!("q={q} vs pristine"));
+        let reb = t.rebuilt(&d).knn(&d, d.point(q), 5, u32::MAX);
+        assert_knn_bit_equal(&got, &reb, &format!("q={q} vs rebuilt"));
+    }
+}
+
+#[test]
+fn kdtree_duplicate_coordinates_across_tree_and_buffer_are_canonical() {
+    // the canonical k-set contract: ties on dist2 resolve by id, so a
+    // duplicate living in the buffer while its twin lives in the tree
+    // must produce the same k-set as a rebuilt tree holding both
+    let mut d = susy_like(220).generate(0xB3);
+    let mut t = KdTree::build(&d);
+    t.set_merge_limit(usize::MAX / 2);
+    for src in [5usize, 77, 140] {
+        let id = d.push_row(&d.point(src).to_vec());
+        t.insert(&d, id);
+    }
+    let oracle = t.rebuilt(&d);
+    for src in [5usize, 77, 140, 0, 33] {
+        for k in [1usize, 3, 8] {
+            let got = t.knn(&d, d.point(src), k, u32::MAX);
+            let want = oracle.knn(&d, d.point(src), k, u32::MAX);
+            assert_knn_bit_equal(&got, &want, &format!("src={src} k={k}"));
+            if src == 5 || src == 77 || src == 140 {
+                assert_eq!(
+                    got[0].dist2.to_bits(),
+                    0f64.to_bits(),
+                    "src={src}: a zero-distance twin exists"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn kdtree_merge_mid_query_batch_is_invisible() {
+    let mut d = susy_like(260).generate(0xB4);
+    let extra = susy_like(40).generate(0xB5);
+    let mut t = KdTree::build(&d);
+    t.set_merge_limit(usize::MAX / 2);
+    let mut rng = Rng::new(0xB6);
+    for i in 0..extra.len() {
+        let id = d.push_row(extra.point(i));
+        t.insert(&d, id);
+        if rng.f64() < 0.25 {
+            assert!(t.remove(id));
+        }
+    }
+    for slot in rng.sample_indices(260, 12) {
+        assert!(t.remove(slot as u32), "tree-resident removal");
+    }
+    let oracle = t.rebuilt(&d);
+    let queries: Vec<usize> = (0..60).map(|i| (i * 7) % d.len()).collect();
+    for (i, &q) in queries.iter().enumerate() {
+        if i == queries.len() / 2 {
+            t.merge(&d); // fold the delta mid-batch
+            assert_eq!(t.deferred(), 0);
+        }
+        let got = t.knn(&d, d.point(q), 6, u32::MAX);
+        let want = oracle.knn(&d, d.point(q), 6, u32::MAX);
+        assert_knn_bit_equal(&got, &want, &format!("i={i} q={q}"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine-backed rebuild-equivalence harness (the headline property)
+// ---------------------------------------------------------------------
+
+/// Drive one seeded insert/remove/query interleaving through a resident
+/// [`KnnEngine`] and, at every flush boundary, compare bit-exactly
+/// against a from-scratch rebuild over the same live set.
+fn churn_harness(
+    engine: &Engine,
+    mode: DrainMode,
+    backend: BackendMode,
+    seed: u64,
+    fault: bool,
+) -> usize {
+    let corpus = susy_like(420).generate(seed);
+    let extra = susy_like(160).generate(seed ^ 0x5EED);
+    let queries = susy_like(48).generate(seed ^ 0x9);
+    let mut p = HybridParams::new(4);
+    p.cpu_ranks = 0; // deterministic replay mode
+    p.gpu_drain = mode;
+    p.backend = backend;
+    p.streams = 2;
+    p.buffer_pairs = 20_000;
+    if fault {
+        p.fault =
+            FaultPlan::one(FaultSpec::transient(FaultKind::FilterPanic, 0, 0));
+        p.recovery.backoff_base_secs = 0.0;
+    }
+    let mut eng = KnnEngine::build(engine, &corpus, p).unwrap();
+    let mut rng = Rng::new(seed ^ 0xC0DE);
+    let mut live = corpus.len();
+    let mut live_ids: Vec<u32> = (0..corpus.len() as u32).collect();
+    let mut next_extra = 0usize;
+    let mut faults = 0usize;
+    let tag = format!("{mode:?}/{backend:?}/fault={fault}");
+    for step in 0..6 {
+        // mutate: a small insert batch and a small remove batch
+        let n_ins = (1 + rng.below(6)).min(extra.len() - next_extra);
+        if n_ins > 0 {
+            let idx: Vec<usize> =
+                (next_extra..next_extra + n_ins).collect();
+            next_extra += n_ins;
+            let ids = eng.insert(&extra.gather(&idx)).unwrap();
+            assert_eq!(ids.len(), n_ins, "{tag}: insert acks every row");
+            live += n_ins;
+            live_ids.extend(ids);
+        }
+        let n_rem = rng.below(5).min(live_ids.len().saturating_sub(8));
+        if n_rem > 0 {
+            let mut victims = Vec::with_capacity(n_rem);
+            for _ in 0..n_rem {
+                victims.push(live_ids.swap_remove(rng.below(live_ids.len())));
+            }
+            assert_eq!(
+                eng.remove(&victims),
+                n_rem,
+                "{tag}: every victim was live"
+            );
+            live -= n_rem;
+        }
+        assert_eq!(eng.live_len(), live, "{tag}: live-set accounting");
+
+        // flush boundary: patched engine vs rebuilt-from-scratch oracle
+        let (got, grep) = eng.flush(&queries).unwrap();
+        let mut oracle = eng.rebuilt();
+        assert_eq!(oracle.epoch(), eng.epoch(), "{tag}: epoch carried");
+        assert_eq!(oracle.live_len(), live, "{tag}: oracle live set");
+        let (want, wrep) = oracle.flush(&queries).unwrap();
+        for q in 0..queries.len() {
+            let (g, w) = (got.get(q), want.get(q));
+            assert_eq!(
+                g.ids(),
+                w.ids(),
+                "{tag} step={step} q={q}: id lane diverged from rebuild"
+            );
+            let gb: Vec<u64> =
+                g.dist2s().iter().map(|x| x.to_bits()).collect();
+            let wb: Vec<u64> =
+                w.dist2s().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(gb, wb, "{tag} step={step} q={q}: dist2 bits");
+        }
+        // same solved/failed partition, same exactly-once accounting
+        assert_eq!(grep.queries, queries.len(), "{tag}: queries served");
+        assert_eq!(
+            grep.q_gpu + grep.q_cpu,
+            queries.len(),
+            "{tag}: head/tail claims partition the flush"
+        );
+        assert_eq!(grep.q_gpu, wrep.q_gpu, "{tag}: head claim count");
+        assert_eq!(grep.q_cpu, wrep.q_cpu, "{tag}: tail claim count");
+        assert_eq!(grep.q_fail, wrep.q_fail, "{tag}: Q^Fail recirculation");
+        assert_eq!(
+            grep.solved_on_gpu, wrep.solved_on_gpu,
+            "{tag}: GPU-solved partition"
+        );
+        faults += grep.gpu_faults;
+    }
+    faults
+}
+
+#[test]
+fn churned_engine_bit_identical_to_rebuild_across_modes_and_tiers() {
+    let engine = Engine::load_default().unwrap();
+    for (i, mode) in drain_modes().into_iter().enumerate() {
+        for (j, backend) in
+            [BackendMode::Grid, BackendMode::Brute].into_iter().enumerate()
+        {
+            churn_harness(
+                &engine,
+                mode,
+                backend,
+                0xD00D ^ ((i as u64) << 8) ^ ((j as u64) << 4),
+                false,
+            );
+        }
+    }
+}
+
+#[test]
+fn churned_engine_bit_identical_to_rebuild_under_fault_injection() {
+    // the injected filter panic (claim 0, round 0, every drain) must be
+    // recovered claim-scoped on BOTH engines, leaving the equivalence
+    // intact - and it must actually fire
+    let engine = Engine::load_default().unwrap();
+    for (i, mode) in drain_modes().into_iter().enumerate() {
+        let faults = churn_harness(
+            &engine,
+            mode,
+            BackendMode::Grid,
+            0xFA17 ^ ((i as u64) << 8),
+            true,
+        );
+        assert!(faults >= 1, "{mode:?}: injected fault never observed");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Service-level churn: Client::{insert,remove} through the serve loop
+// ---------------------------------------------------------------------
+
+#[test]
+fn service_mutations_are_fifo_visible_to_later_queries() {
+    // strict FIFO from one client: an insert acked before a query is
+    // visible to it (zero-distance twin), a remove acked before a query
+    // makes the ids unreachable - no epoch leaks across the boundary
+    let engine = Engine::load_default().unwrap();
+    let corpus = susy_like(300).generate(0xD1);
+    let extra = susy_like(2).generate(0xD2);
+    let mut p = HybridParams::new(3);
+    p.cpu_ranks = 0;
+    let mut session = KnnEngine::build(&engine, &corpus, p).unwrap();
+    let ingress = Ingress::new();
+    std::thread::scope(|s| {
+        let client = ingress.client();
+        let extra = &extra;
+        let h = s.spawn(move || {
+            let ids = client.insert(extra).unwrap();
+            assert_eq!(ids.len(), 2);
+            assert_eq!(ids[0], 300, "corpus ids are append-only");
+            let r = client.query(&extra.gather(&[0])).unwrap();
+            assert_eq!(r.results.len(), 1);
+            assert_eq!(
+                r.results[0].ids[0], ids[0],
+                "the just-inserted twin is the nearest neighbor"
+            );
+            assert_eq!(r.results[0].dist2[0].to_bits(), 0f64.to_bits());
+            assert_eq!(client.remove(&ids).unwrap(), 2);
+            let r2 = client.query(&extra.gather(&[0])).unwrap();
+            for &id in &ids {
+                assert!(
+                    !r2.results[0].ids.contains(&id),
+                    "removed id {id} resurfaced as a neighbor"
+                );
+            }
+            assert!(r2.results[0].dist2[0] > 0.0);
+        });
+        let rep = session.serve(&ingress).unwrap();
+        h.join().expect("client thread panicked");
+        assert_eq!(rep.inserts, 2);
+        assert_eq!(rep.removes, 2);
+        assert_eq!(rep.queries, 2);
+        assert_eq!(rep.requests, 4);
+    });
+    assert_eq!(session.live_len(), 300, "back to the original live set");
+    assert_eq!(session.epoch(), 4, "2 inserts + 2 removes = 4 epochs");
+}

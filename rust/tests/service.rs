@@ -237,3 +237,87 @@ fn empty_and_tiny_requests_are_served() {
         assert!(rep.flushes >= 1);
     });
 }
+
+/// Pre-queue `n_early` single-query requests, then one late request, and
+/// serve with the given flush cap (0 = leave the default uncapped).
+/// Returns (late reply, early replies' flush_seqs, report). The backlog
+/// is fully enqueued - sequenced via [`Ingress::pending_len`] - before
+/// the serve loop starts, so flush composition is deterministic.
+fn serve_backlog_then_late(
+    session: &mut KnnEngine<'_>,
+    queries: &Dataset,
+    n_early: usize,
+    cap: usize,
+) -> (BatchReply, Vec<usize>, ServiceReport) {
+    if cap > 0 {
+        session.set_flush_cap(cap);
+    }
+    let ingress = Ingress::new();
+    std::thread::scope(|s| {
+        let early: Vec<_> = (0..n_early)
+            .map(|i| {
+                let client = ingress.client();
+                s.spawn(move || {
+                    client.query(&queries.gather(&[i])).unwrap().flush_seq
+                })
+            })
+            .collect();
+        while ingress.pending_len() < n_early {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let late_client = ingress.client();
+        let late = s.spawn(move || {
+            late_client.query(&queries.gather(&[n_early])).unwrap()
+        });
+        while ingress.pending_len() < n_early + 1 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let rep = session.serve(&ingress).unwrap();
+        let late_reply = late.join().expect("late client panicked");
+        let seqs =
+            early.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>();
+        (late_reply, seqs, rep)
+    })
+}
+
+#[test]
+fn flush_cap_bounds_late_client_latency() {
+    // ISSUE 9 satellite: a late client queued behind a backlog must land
+    // within two flushes once the flush cap slices the backlog - and the
+    // capped replies stay bit-identical to the uncapped coalesced flush.
+    let engine = Engine::load_default().unwrap();
+    let corpus = susy_like(500).generate(0x91);
+    let queries = susy_like(4).generate(0x92);
+    let mut p = HybridParams::new(3);
+    p.cpu_ranks = 0; // deterministic replay mode
+    let mut ref_session = KnnEngine::build(&engine, &corpus, p.clone()).unwrap();
+    let (ref_result, _) = ref_session.flush(&queries).unwrap();
+
+    // uncapped control: the whole backlog coalesces into one flush and
+    // the late client rides it (flush_seq 0)
+    let mut session = KnnEngine::build(&engine, &corpus, p.clone()).unwrap();
+    let (late, seqs, rep) = serve_backlog_then_late(&mut session, &queries, 3, 0);
+    assert_eq!(rep.flushes, 1, "uncapped: one coalesced flush");
+    assert_eq!(rep.max_flush_queries, 4);
+    assert_eq!(late.flush_seq, 0);
+    assert!(seqs.iter().all(|&s| s == 0));
+
+    // cap 2 over the same 3+1 backlog: deterministic [2, 2] slicing; the
+    // late request lands in flush 1 - within two flushes of serve start
+    let mut session = KnnEngine::build(&engine, &corpus, p).unwrap();
+    let (late, seqs, rep) = serve_backlog_then_late(&mut session, &queries, 3, 2);
+    assert_eq!(rep.flushes, 2, "capped: backlog sliced into two flushes");
+    assert_eq!(rep.max_flush_queries, 2, "no flush exceeds the cap");
+    assert_eq!(rep.queries, 4);
+    assert_eq!(rep.requests, 4);
+    assert_eq!(
+        late.flush_seq, 1,
+        "late client lands within two flushes despite the backlog"
+    );
+    assert!(seqs.iter().all(|&s| s <= 1));
+    // capped result is still the pure function of (corpus, eps, k)
+    let want = ref_result.get(3);
+    assert_eq!(late.results.len(), 1);
+    assert_eq!(late.results[0].ids.as_slice(), want.ids(), "id lane");
+    assert_eq!(late.results[0].dist2.as_slice(), want.dist2s(), "dist2 lane");
+}
