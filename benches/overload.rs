@@ -1,0 +1,258 @@
+//! Overload bench: goodput under admission-controlled overload vs the
+//! unbounded closed-loop saturation throughput (DESIGN.md §13).
+//!
+//! One resident [`KnnEngine`] serves every scenario (warm arenas, warm
+//! executable cache). The schedule:
+//!
+//! * `saturation` - 4 closed-loop clients through a *permissive*
+//!   ingress: the service's measured capacity, the denominator every
+//!   overload case is judged against;
+//! * `overload_newest` - 8 closed-loop clients (offered load roughly
+//!   2x the saturating client count) through a pending bound of
+//!   4 x BATCH rows, shedding newest-first;
+//! * `overload_deadline` - the same offered load with a generous
+//!   default deadline and [`ShedPolicy::ByDeadline`] victim selection.
+//!
+//! Tracked columns are same-run ratios (machine-portable):
+//! `goodput_at_saturation` = overload-case served throughput /
+//! saturation throughput - the ISSUE 10 acceptance bar says shedding
+//! overhead may cost at most 15% of saturation goodput; and
+//! `shed_precision` = typed rejections / rejected requests - every
+//! request the service does not answer must carry a typed
+//! [`Rejected`] in its error chain (the bench also asserts this
+//! exactly, in-run, before any JSON is written). The admission ledger
+//! (admitted == served + shed) is asserted per case. Emits
+//! `BENCH_overload.json`, regression-gated against
+//! `benches/baselines/BENCH_overload.json` in CI.
+//!
+//!   cargo bench --bench overload
+//!   HKNN_RANKS=8 cargo bench --bench overload
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::util::json::Json;
+
+const BATCH: usize = 64;
+const SAT_CLIENTS: usize = 4;
+const SAT_REQUESTS: usize = 6;
+const OVER_CLIENTS: usize = 8;
+const OVER_REQUESTS: usize = 8;
+
+/// Closed-loop streaming of `requests` BATCH-row query slices per
+/// client through `policy`. Rejected requests are counted (total and
+/// typed) and not retried - the client spins straight on to its next
+/// request, which is what keeps the offered load above the bound.
+/// Returns (report, offered rows, rejected requests, typed rejections).
+fn run_closed_loop(
+    session: &mut KnnEngine,
+    pool: &Dataset,
+    clients: usize,
+    requests: usize,
+    policy: AdmissionPolicy,
+) -> (ServiceReport, usize, usize, usize) {
+    let ingress = Ingress::with_policy(policy);
+    let errs = AtomicUsize::new(0);
+    let typed = AtomicUsize::new(0);
+    let rep = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let client = ingress.client();
+                let (errs, typed) = (&errs, &typed);
+                s.spawn(move || {
+                    for r in 0..requests {
+                        let start = ((c * requests + r) * BATCH)
+                            % (pool.len() - BATCH);
+                        let rows: Vec<usize> =
+                            (start..start + BATCH).collect();
+                        match client.query(&pool.gather(&rows)) {
+                            Ok(_) => {}
+                            Err(e) => {
+                                errs.fetch_add(1, Ordering::Relaxed);
+                                if e.downcast_ref::<Rejected>().is_some() {
+                                    typed.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let rep = session.serve(&ingress).expect("serve loop");
+        for h in handles {
+            h.join().expect("client thread panicked");
+        }
+        rep
+    });
+    (
+        rep,
+        clients * requests * BATCH,
+        errs.load(Ordering::Relaxed),
+        typed.load(Ordering::Relaxed),
+    )
+}
+
+fn main() {
+    let ranks: usize = std::env::var("HKNN_RANKS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let engine = Engine::load_default().expect("run `make artifacts` first");
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    let corpus = susy_like(2500).generate(0xFB);
+    let pool = susy_like(2048).generate(0x5EEE);
+    let k = 6;
+
+    let mut p = HybridParams::new(k);
+    p.cpu_ranks = ranks;
+    let mut session =
+        KnnEngine::build(&engine, &corpus, p).expect("resident engine");
+    let warm = pool.gather(&(0..64).collect::<Vec<_>>());
+    let _ = session.flush(&warm).expect("warmup flush");
+
+    // the denominator: unbounded closed-loop saturation
+    let (sat, sat_offered, sat_errs, _) = run_closed_loop(
+        &mut session,
+        &pool,
+        SAT_CLIENTS,
+        SAT_REQUESTS,
+        AdmissionPolicy::default(),
+    );
+    assert_eq!(sat_errs, 0, "the permissive policy never rejects");
+    assert_eq!(sat.queries, sat_offered, "saturation serves everything");
+    let sat_qps = sat.throughput_qps.max(1e-12);
+    println!(
+        "saturation: {} queries in {:.4}s = {:.1} q/s \
+         ({SAT_CLIENTS} clients, ranks={ranks}, hw={hw})",
+        sat.queries, sat.wall_secs, sat_qps
+    );
+
+    let mut rows = vec![Json::obj(vec![
+        ("case", Json::Str("saturation".into())),
+        ("clients", Json::Num(SAT_CLIENTS as f64)),
+        ("queries", Json::Num(sat.queries as f64)),
+        ("throughput_qps", Json::Num(sat.throughput_qps)),
+        ("p99_ms", Json::Num(sat.latency_p99 * 1e3)),
+    ])];
+    println!(
+        "{:>17} {:>8} {:>8} {:>9} {:>9} {:>9} {:>9} {:>8} {:>9}",
+        "case", "offered", "served", "shed", "qps", "p50 ms", "p99 ms",
+        "goodput", "precision"
+    );
+
+    let bound = 4 * BATCH;
+    let cases: [(&str, AdmissionPolicy); 2] = [
+        (
+            "overload_newest",
+            AdmissionPolicy {
+                max_pending_queries: bound,
+                shed_policy: ShedPolicy::NewestFirst,
+                ..AdmissionPolicy::default()
+            },
+        ),
+        (
+            "overload_deadline",
+            AdmissionPolicy {
+                max_pending_queries: bound,
+                default_deadline: Some(Duration::from_secs(5)),
+                shed_policy: ShedPolicy::ByDeadline,
+                ..AdmissionPolicy::default()
+            },
+        ),
+    ];
+    for (name, policy) in cases {
+        let (rep, offered, errs, typed) = run_closed_loop(
+            &mut session,
+            &pool,
+            OVER_CLIENTS,
+            OVER_REQUESTS,
+            policy,
+        );
+        // exactly-once, client side: every request was answered or
+        // rejected, and every rejection carried the typed error
+        assert_eq!(
+            offered,
+            rep.queries + errs * BATCH,
+            "{name}: offered rows = served + rejected"
+        );
+        assert_eq!(errs, typed, "{name}: an untyped rejection escaped");
+        // the admission ledger, service side (no degradation in this
+        // bench, so queue-side overload sheds cannot occur)
+        assert_eq!(
+            rep.admitted,
+            rep.queries + rep.shed_deadline,
+            "{name}: admitted rows are served or shed, exactly once"
+        );
+        assert_eq!(rep.rejected_requests, errs, "{name}: rejection count");
+        let goodput = rep.throughput_qps / sat_qps;
+        let precision = if errs == 0 {
+            1.0
+        } else {
+            typed as f64 / errs as f64
+        };
+        let shed_rows = offered - rep.queries;
+        println!(
+            "{:>17} {:>8} {:>8} {:>9} {:>9.1} {:>9.2} {:>9.2} {:>7.2}x {:>9.2}",
+            name,
+            offered,
+            rep.queries,
+            shed_rows,
+            rep.throughput_qps,
+            rep.latency_p50 * 1e3,
+            rep.latency_p99 * 1e3,
+            goodput,
+            precision
+        );
+        rows.push(Json::obj(vec![
+            ("case", Json::Str(name.into())),
+            ("clients", Json::Num(OVER_CLIENTS as f64)),
+            ("offered", Json::Num(offered as f64)),
+            ("queries", Json::Num(rep.queries as f64)),
+            ("shed_rows", Json::Num(shed_rows as f64)),
+            ("shed_overload", Json::Num(rep.shed_overload as f64)),
+            ("shed_deadline", Json::Num(rep.shed_deadline as f64)),
+            ("rejected_requests", Json::Num(rep.rejected_requests as f64)),
+            ("flushes", Json::Num(rep.flushes as f64)),
+            ("wall_secs", Json::Num(rep.wall_secs)),
+            ("throughput_qps", Json::Num(rep.throughput_qps)),
+            ("p50_ms", Json::Num(rep.latency_p50 * 1e3)),
+            ("p99_ms", Json::Num(rep.latency_p99 * 1e3)),
+            ("goodput_at_saturation", Json::Num(goodput)),
+            ("shed_precision", Json::Num(precision)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("overload".into())),
+        (
+            "baseline",
+            Json::Str(
+                "unbounded closed-loop saturation throughput (4 clients) \
+                 on the same warm resident engine"
+                    .into(),
+            ),
+        ),
+        (
+            "contender",
+            Json::Str(
+                "8 closed-loop clients (offered >= 2x the saturating \
+                 client count) through a bounded ingress (4 x BATCH \
+                 pending rows), shedding newest-first resp. by-deadline; \
+                 rejected requests are not retried"
+                    .into(),
+            ),
+        ),
+        ("ranks", Json::Num(ranks as f64)),
+        ("hw_threads", Json::Num(hw as f64)),
+        ("batch_per_request", Json::Num(BATCH as f64)),
+        ("max_pending_queries", Json::Num(bound as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_overload.json", doc.to_string() + "\n")
+        .expect("write BENCH_overload.json");
+    println!("wrote BENCH_overload.json");
+}

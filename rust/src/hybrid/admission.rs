@@ -1,0 +1,398 @@
+//! Admission control for the online service (DESIGN.md §13).
+//!
+//! PR 8's [`Ingress`](super::service::Ingress) had exactly one
+//! backpressure mechanism: implicit pile-up. Every submitted request
+//! was eventually served, and an offered load above the engine's
+//! capacity grew the pending queue (and every client's latency)
+//! without bound. This module adds the explicit admission layer the
+//! ROADMAP names as direction 1's follow-up:
+//!
+//! * [`AdmissionPolicy`] - a bounded pending queue (global and
+//!   per-client query caps), an optional default deadline, and a
+//!   [`ShedPolicy`] choosing which queued requests die first when the
+//!   serve loop must shed.
+//! * [`ClientQuota`] / [`TokenBucket`] - per-client token-bucket rate
+//!   limiting, so one aggressive client exhausts its own bucket
+//!   instead of the shared queue.
+//! * [`Rejected`] - the typed error every non-answered request
+//!   receives, exactly once. Clients downcast it from the `anyhow`
+//!   error chain ([`Client::query`](super::service::Client::query)
+//!   keeps its signature) and read the `retry_after` hints for
+//!   bounded backoff.
+//! * [`CapacityController`] - an EWMA throughput estimate over flush
+//!   telemetry that *tightens* the effective global bound while the
+//!   engine is degraded (GPU demoted by the §9 recovery ladder, so
+//!   the service is running on CPU-only throughput) and loosens it
+//!   again on recovery.
+//!
+//! Everything here is host-side bookkeeping under the ingress mutex;
+//! the shed *points* - where in the serve cycle a queued request may
+//! be dropped - live in `service.rs` and are deliberately outside any
+//! flush, so exactly-once accounting and replay-mode bit-identity are
+//! untouched (DESIGN.md §13 gives the argument).
+
+use std::fmt;
+use std::time::{Duration, Instant};
+
+/// Which queued query requests the serve loop sheds first when the
+/// pending set exceeds the (possibly tightened) admission bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Shed the most recently enqueued query requests first (LIFO):
+    /// the oldest waiters have accumulated the most queueing delay and
+    /// keep their place, the newest absorb the overload.
+    NewestFirst,
+    /// Shed the requests with the *nearest* deadlines first - they are
+    /// the least likely to be answered in time, so dropping them
+    /// converts certain deadline misses into immediate typed
+    /// rejections. Requests without a deadline are shed last (newest
+    /// first among themselves).
+    ByDeadline,
+}
+
+/// Per-client token-bucket quota: a sustained rate plus a burst
+/// allowance, charged one token per query row at admission.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClientQuota {
+    /// sustained refill rate, in queries per second
+    pub rate_qps: f64,
+    /// bucket capacity: how many queries a client may burst above the
+    /// sustained rate (also the initial fill)
+    pub burst: f64,
+}
+
+/// Admission policy for an [`Ingress`](super::service::Ingress).
+///
+/// The default is fully permissive - unbounded queue, no quota, no
+/// deadline - which reproduces PR 8's implicit-pile-up behavior
+/// exactly; every bound is opt-in.
+#[derive(Debug, Clone)]
+pub struct AdmissionPolicy {
+    /// global bound on queued (admitted, not yet flushed) query rows;
+    /// a submission that would exceed it is rejected with
+    /// [`Rejected::Overloaded`]
+    pub max_pending_queries: usize,
+    /// per-client bound on queued query rows, limiting how much of the
+    /// global queue one client can occupy
+    pub max_pending_per_client: usize,
+    /// deadline stamped on every query request that does not carry its
+    /// own ([`Client::query_with_deadline`](super::service::Client::query_with_deadline));
+    /// expired requests are shed before pricing
+    pub default_deadline: Option<Duration>,
+    /// which queued requests die first when the serve loop sheds
+    pub shed_policy: ShedPolicy,
+    /// per-client token-bucket quota (applies to query rows only;
+    /// mutations are never rate-limited - they are corpus state, not
+    /// load)
+    pub quota: Option<ClientQuota>,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy {
+            max_pending_queries: usize::MAX,
+            max_pending_per_client: usize::MAX,
+            default_deadline: None,
+            shed_policy: ShedPolicy::NewestFirst,
+            quota: None,
+        }
+    }
+}
+
+/// The typed rejection a non-answered request receives - exactly once,
+/// either synchronously at admission (`Overloaded` at the bound,
+/// `QuotaExceeded` from the token bucket, `Terminated` after the serve
+/// loop exited) or asynchronously when the serve loop sheds a queued
+/// request (`Overloaded` under a tightened bound, `DeadlineExpired`).
+///
+/// Carried through the `anyhow` chain so `Client::query` keeps its
+/// `Result<BatchReply>` signature; recover it with
+/// `err.downcast_ref::<Rejected>()`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Rejected {
+    /// The global or per-client pending bound is full. The hint is the
+    /// estimated time for the engine to drain the current backlog -
+    /// the natural base interval for client-side backoff.
+    Overloaded {
+        /// suggested wait before retrying (backlog / service rate)
+        retry_after_hint: Duration,
+    },
+    /// The client's token bucket is empty.
+    QuotaExceeded {
+        /// time until the bucket refills enough for this request
+        retry_after: Duration,
+    },
+    /// The request's deadline passed while it was queued; it was shed
+    /// before pricing, unserved.
+    DeadlineExpired {
+        /// how far past the deadline the shed happened
+        missed_by: Duration,
+    },
+    /// The serve loop has terminated (normally or by error); no flush
+    /// will ever answer this ingress again.
+    Terminated,
+}
+
+impl fmt::Display for Rejected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Rejected::Overloaded { retry_after_hint } => write!(
+                f,
+                "rejected: pending queue full (retry after ~{:.0} ms)",
+                retry_after_hint.as_secs_f64() * 1e3
+            ),
+            Rejected::QuotaExceeded { retry_after } => write!(
+                f,
+                "rejected: client quota exhausted (retry after ~{:.0} ms)",
+                retry_after.as_secs_f64() * 1e3
+            ),
+            Rejected::DeadlineExpired { missed_by } => write!(
+                f,
+                "shed: deadline expired {:.0} ms before pricing",
+                missed_by.as_secs_f64() * 1e3
+            ),
+            Rejected::Terminated => {
+                write!(f, "rejected: service has terminated")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Rejected {}
+
+/// A standard token bucket: capacity `burst`, refilled continuously at
+/// `rate_qps`, charged one token per query row.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+    rate_qps: f64,
+    burst: f64,
+}
+
+impl TokenBucket {
+    /// A full bucket for `quota`, refilling from `now`.
+    pub fn new(quota: &ClientQuota, now: Instant) -> TokenBucket {
+        TokenBucket {
+            tokens: quota.burst.max(0.0),
+            last: now,
+            rate_qps: quota.rate_qps.max(0.0),
+            burst: quota.burst.max(0.0),
+        }
+    }
+
+    /// Take `n` tokens at `now`, or report how long until the bucket
+    /// will have refilled enough.
+    pub fn try_take(&mut self, n: f64, now: Instant) -> Result<(), Duration> {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.tokens = (self.tokens + dt * self.rate_qps).min(self.burst);
+        self.last = now;
+        if self.tokens + 1e-9 >= n {
+            self.tokens -= n;
+            return Ok(());
+        }
+        let deficit = n - self.tokens;
+        let secs = if self.rate_qps > 0.0 {
+            deficit / self.rate_qps
+        } else {
+            3600.0 // rate 0: effectively never; cap the hint at an hour
+        };
+        Err(Duration::from_secs_f64(secs.clamp(1e-3, 3600.0)))
+    }
+
+    /// Tokens currently available (after a zero-cost refill to `now`).
+    pub fn available(&mut self, now: Instant) -> f64 {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.tokens = (self.tokens + dt * self.rate_qps).min(self.burst);
+        self.last = now;
+        self.tokens
+    }
+}
+
+/// Cumulative admission telemetry of an ingress, folded into the
+/// [`ServiceReport`](super::service::ServiceReport) when the serve
+/// loop exits. All counters are in query rows except the two request
+/// counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdmissionStats {
+    /// query rows admitted into the pending queue
+    pub admitted: usize,
+    /// query requests admitted
+    pub admitted_requests: usize,
+    /// query rows rejected or shed because a pending bound was full
+    pub shed_overload: usize,
+    /// query rows rejected by a per-client token bucket
+    pub shed_quota: usize,
+    /// query rows shed because their deadline expired while queued
+    pub shed_deadline: usize,
+    /// query requests rejected or shed (one typed [`Rejected`] each)
+    pub rejected_requests: usize,
+}
+
+/// Overload-triggered degradation (ISSUE 10 tentpole (iv)): an EWMA
+/// service-rate estimate over flush telemetry that tightens the
+/// effective global pending bound while the engine is degraded.
+///
+/// When the GPU master demotes itself (§9's recovery ladder) flushes
+/// finish CPU-only and the flush telemetry reports `degraded = true`;
+/// the controller then caps the pending queue at roughly what the
+/// *live CPU-only throughput* can drain within one admission horizon
+/// (the policy's default deadline, else one second) - admitting work
+/// the degraded engine cannot serve in time would only convert
+/// rejections into deadline misses. The first non-degraded flush
+/// restores the configured bound.
+#[derive(Debug, Clone)]
+pub struct CapacityController {
+    configured_max: usize,
+    horizon: Duration,
+    rate_qps: f64,
+    effective_max: usize,
+}
+
+impl CapacityController {
+    /// EWMA weight of the newest flush observation.
+    const ALPHA: f64 = 0.3;
+
+    /// A controller for a configured bound and admission horizon.
+    pub fn new(configured_max: usize, horizon: Duration) -> CapacityController {
+        CapacityController {
+            configured_max,
+            horizon,
+            rate_qps: 0.0,
+            effective_max: configured_max,
+        }
+    }
+
+    /// Fold one flush observation (queries, wall seconds, degraded
+    /// flag) into the rate estimate and recompute the effective bound.
+    pub fn note_flush(&mut self, queries: usize, secs: f64, degraded: bool) {
+        if queries > 0 && secs > 0.0 {
+            let inst = queries as f64 / secs;
+            self.rate_qps = if self.rate_qps > 0.0 {
+                (1.0 - Self::ALPHA) * self.rate_qps + Self::ALPHA * inst
+            } else {
+                inst
+            };
+        }
+        self.effective_max = if degraded && self.rate_qps > 0.0 {
+            let h = self.horizon.as_secs_f64().max(1e-3);
+            (((self.rate_qps * h).floor() as usize).max(1))
+                .min(self.configured_max)
+        } else {
+            self.configured_max
+        };
+    }
+
+    /// The effective global pending bound: the configured maximum,
+    /// tightened while the engine is degraded.
+    pub fn effective_max(&self) -> usize {
+        self.effective_max
+    }
+
+    /// The policy's configured (untightened) bound.
+    pub fn configured_max(&self) -> usize {
+        self.configured_max
+    }
+
+    /// The EWMA service-rate estimate, queries per second (0 before
+    /// the first flush).
+    pub fn rate_qps(&self) -> f64 {
+        self.rate_qps
+    }
+
+    /// Suggested client backoff when rejecting at a full queue: the
+    /// time to drain the current backlog at the estimated service
+    /// rate, clamped to [1 ms, 10 s] (50 ms before any flush has
+    /// calibrated the rate).
+    pub fn retry_after_hint(&self, pending_queries: usize) -> Duration {
+        let secs = if self.rate_qps > 0.0 {
+            pending_queries.max(1) as f64 / self.rate_qps
+        } else {
+            0.05
+        };
+        Duration::from_secs_f64(secs.clamp(1e-3, 10.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_bucket_burst_then_refill() {
+        let q = ClientQuota { rate_qps: 100.0, burst: 4.0 };
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(&q, t0);
+        // the burst admits 4 tokens at once, then the bucket is empty
+        assert!(b.try_take(4.0, t0).is_ok());
+        let wait = b.try_take(1.0, t0).unwrap_err();
+        // one token at 100/s refills in ~10 ms
+        assert!(wait.as_secs_f64() <= 0.011, "wait {wait:?}");
+        // after 20 ms of refill two tokens are available again
+        let t1 = t0 + Duration::from_millis(20);
+        assert!(b.try_take(2.0, t1).is_ok());
+        assert!(b.try_take(1.0, t1).is_err());
+        // refill never exceeds the burst capacity
+        let t2 = t1 + Duration::from_secs(60);
+        assert!((b.available(t2) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_rate_bucket_is_burst_only() {
+        let q = ClientQuota { rate_qps: 0.0, burst: 2.0 };
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(&q, t0);
+        assert!(b.try_take(2.0, t0).is_ok());
+        let wait = b.try_take(1.0, t0 + Duration::from_secs(10)).unwrap_err();
+        assert!(wait >= Duration::from_secs(3600));
+    }
+
+    #[test]
+    fn capacity_controller_tightens_when_degraded_and_recovers() {
+        let mut c = CapacityController::new(1000, Duration::from_millis(500));
+        assert_eq!(c.effective_max(), 1000);
+        // healthy flushes: bound stays configured, rate calibrates
+        c.note_flush(200, 0.1, false); // 2000 qps
+        assert_eq!(c.effective_max(), 1000);
+        assert!(c.rate_qps() > 0.0);
+        // degraded flush at CPU-only speed: bound tightens to roughly
+        // rate * horizon, floored at 1 and capped at the configured max
+        c.note_flush(10, 1.0, true); // inst 10 qps drags the EWMA down
+        assert!(c.effective_max() < 1000, "max {}", c.effective_max());
+        assert!(c.effective_max() >= 1);
+        let tightened = c.effective_max();
+        // a second degraded flush tightens further as the EWMA settles
+        c.note_flush(10, 1.0, true);
+        assert!(c.effective_max() <= tightened);
+        // recovery: the first non-degraded flush restores the bound
+        c.note_flush(200, 0.1, false);
+        assert_eq!(c.effective_max(), 1000);
+    }
+
+    #[test]
+    fn retry_hint_tracks_backlog_drain_time() {
+        let mut c = CapacityController::new(64, Duration::from_secs(1));
+        // uncalibrated: the default hint
+        assert_eq!(c.retry_after_hint(100), Duration::from_millis(50));
+        c.note_flush(100, 1.0, false); // 100 qps
+        let hint = c.retry_after_hint(50).as_secs_f64();
+        assert!((hint - 0.5).abs() < 0.05, "hint {hint}");
+        // clamped below at 1 ms, above at 10 s
+        assert!(c.retry_after_hint(0) >= Duration::from_millis(1));
+        assert!(c.retry_after_hint(1_000_000) <= Duration::from_secs(10));
+    }
+
+    #[test]
+    fn rejected_is_a_typed_std_error() {
+        let e: anyhow::Error = anyhow::Error::new(Rejected::Overloaded {
+            retry_after_hint: Duration::from_millis(7),
+        });
+        match e.downcast_ref::<Rejected>() {
+            Some(Rejected::Overloaded { retry_after_hint }) => {
+                assert_eq!(*retry_after_hint, Duration::from_millis(7));
+            }
+            other => panic!("wrong downcast: {other:?}"),
+        }
+        assert!(e.to_string().contains("pending queue full"));
+    }
+}

@@ -35,6 +35,7 @@
 //! index construction (Sec. VI-B); `HybridReport::response_time` follows
 //! the same convention, with the raw phase times kept in `timers`.
 
+pub mod admission;
 pub mod service;
 
 use anyhow::Result;

@@ -19,7 +19,14 @@
 //!   the buffered-batching design of Bigger Buffer k-d Trees (arxiv
 //!   1512.02831) applied to the hybrid queue - so per-flush costs
 //!   (rank cache, queue pricing, claim setup) amortize over every
-//!   in-flight client.
+//!   in-flight client. Under an [`AdmissionPolicy`] the queue is
+//!   *bounded*: submissions past the global or per-client bound (or a
+//!   per-client token-bucket quota) receive a typed
+//!   [`Rejected`](crate::hybrid::admission::Rejected) error instead
+//!   of piling up, queued requests whose deadline expires are shed
+//!   before pricing, and a degraded (CPU-only) engine proactively
+//!   tightens the bound from its live throughput estimate
+//!   (DESIGN.md §13). The default policy is fully permissive.
 //! * [`KnnEngine::flush`] prices one micro-batch with the same
 //!   machinery as the batch path (`GridIndex::build_query_ranks` +
 //!   `sched::build_queue_keyed`, densest cells first) and drains it
@@ -72,12 +79,16 @@
 //! are exact but carry the usual f32-device vs f64-host rounding
 //! difference per query.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{mpsc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::admission::{
+    AdmissionPolicy, AdmissionStats, CapacityController, Rejected,
+    ShedPolicy, TokenBucket,
+};
 use crate::core::{Dataset, KnnResult};
 use crate::cpu;
 use crate::data::variance::reorder_by_variance;
@@ -478,10 +489,24 @@ impl<'e> KnnEngine<'e> {
         let t0 = Instant::now();
         let mut lat: Vec<f64> = Vec::new();
         let mut rep = ServiceReport::default();
+        lock_unpoisoned(&ingress.state).terminated = false;
+        // On every serve exit - normal return, error, or panic - mark
+        // the ingress terminated and fail whatever is still queued with
+        // one typed rejection each, so no client (present or future)
+        // can ever park forever on an ingress nobody serves.
+        let _term = TerminationGuard(ingress);
         loop {
             let batch: Vec<Pending> = {
                 let mut st = lock_unpoisoned(&ingress.state);
-                while st.pending.is_empty() && st.open_clients > 0 {
+                loop {
+                    // shed points (DESIGN.md §13): only here, between
+                    // cycles under the ingress lock - never once a
+                    // request has been taken into a flush
+                    Ingress::shed_expired_locked(&mut st, Instant::now());
+                    Ingress::shed_over_capacity_locked(&mut st);
+                    if !st.pending.is_empty() || st.open_clients == 0 {
+                        break;
+                    }
                     st = match ingress.cv.wait(st) {
                         Ok(g) => g,
                         Err(poisoned) => poisoned.into_inner(),
@@ -506,6 +531,7 @@ impl<'e> KnnEngine<'e> {
                         }
                     }
                     let p = st.pending.pop_front().expect("front just observed");
+                    st.note_taken(&p);
                     if let PendingOp::Query { n, .. } = &p.op {
                         queries += n;
                     }
@@ -522,7 +548,7 @@ impl<'e> KnnEngine<'e> {
             let mut flat: Vec<f32> = Vec::new();
             let mut queued: Vec<(usize, Instant, mpsc::Sender<Reply>)> = Vec::new();
             for p in batch {
-                let Pending { op, submitted, reply } = p;
+                let Pending { op, submitted, reply, .. } = p;
                 match op {
                     PendingOp::Insert { points, n, dims: pdims } => {
                         anyhow::ensure!(
@@ -559,6 +585,15 @@ impl<'e> KnnEngine<'e> {
             let queries = Dataset::new(flat, dims);
             let flush_seq = self.flushes;
             let (result, frep) = self.flush(&queries)?;
+            // feed the capacity controller: a degraded (CPU-only)
+            // flush tightens the effective admission bound to what the
+            // live throughput estimate can drain within the horizon; a
+            // healthy flush restores the configured bound
+            lock_unpoisoned(&ingress.state).cap.note_flush(
+                frep.queries,
+                frep.secs,
+                frep.degraded,
+            );
             // slice the flush result back into per-request replies
             let mut start = 0usize;
             for (n, submitted, reply) in queued {
@@ -608,7 +643,39 @@ impl<'e> KnnEngine<'e> {
         } else {
             0.0
         };
+        // fold the ingress's cumulative admission telemetry in (at a
+        // normal exit every client has disconnected, so the counters
+        // are final)
+        let stats = lock_unpoisoned(&ingress.state).stats;
+        rep.admitted = stats.admitted;
+        rep.shed_overload = stats.shed_overload;
+        rep.shed_quota = stats.shed_quota;
+        rep.shed_deadline = stats.shed_deadline;
+        rep.rejected_requests = stats.rejected_requests;
         Ok(rep)
+    }
+}
+
+/// Serve-exit drop guard: marks the ingress terminated and fails every
+/// still-queued request with one typed [`Rejected::Terminated`], on
+/// normal return, error, and panic alike (the small-fix satellite of
+/// ISSUE 10: a client handed out after the loop died must get a typed
+/// error on first use, never a condvar deadlock).
+struct TerminationGuard<'a>(&'a Ingress);
+
+impl Drop for TerminationGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = lock_unpoisoned(&self.0.state);
+        st.terminated = true;
+        while let Some(p) = st.pending.pop_front() {
+            st.note_taken(&p);
+            if p.queries() > 0 {
+                st.stats.rejected_requests += 1;
+            }
+            let _ = p.reply.send(Reply::Rejected(Rejected::Terminated));
+        }
+        drop(st);
+        self.0.cv.notify_all();
     }
 }
 
@@ -616,7 +683,23 @@ impl<'e> KnnEngine<'e> {
 struct Pending {
     op: PendingOp,
     submitted: Instant,
+    /// absolute shed deadline (queries only; mutations are corpus
+    /// state and are never shed)
+    deadline: Option<Instant>,
+    /// owning client's session id (per-client admission bookkeeping)
+    client: u64,
     reply: mpsc::Sender<Reply>,
+}
+
+impl Pending {
+    /// Query rows this request contributes to the pending bound
+    /// (0 for mutations).
+    fn queries(&self) -> usize {
+        match &self.op {
+            PendingOp::Query { n, .. } => *n,
+            _ => 0,
+        }
+    }
 }
 
 /// The request payload: a query batch to flush, or a corpus mutation
@@ -633,11 +716,44 @@ enum Reply {
     Batch(BatchReply),
     Inserted(Vec<u32>),
     Removed(usize),
+    /// typed rejection: the request was shed unserved (exactly one of
+    /// these per non-answered request - the exactly-once contract)
+    Rejected(Rejected),
 }
 
 struct IngressState {
     pending: VecDeque<Pending>,
     open_clients: usize,
+    /// set by the serve loop's termination guard; submissions after it
+    /// fail fast with [`Rejected::Terminated`]
+    terminated: bool,
+    policy: AdmissionPolicy,
+    /// effective-bound controller (configured max, tightened while the
+    /// engine is degraded)
+    cap: CapacityController,
+    /// queued (admitted, unflushed) query rows across all clients
+    pending_queries: usize,
+    /// queued query rows per client session
+    per_client_pending: HashMap<u64, usize>,
+    /// per-client token buckets (lazily created on first submission)
+    buckets: HashMap<u64, TokenBucket>,
+    next_client_id: u64,
+    stats: AdmissionStats,
+}
+
+impl IngressState {
+    /// Bookkeeping when a request leaves the pending queue for any
+    /// reason (taken into a flush, shed, or failed at termination).
+    fn note_taken(&mut self, p: &Pending) {
+        let n = p.queries();
+        if n == 0 {
+            return;
+        }
+        self.pending_queries = self.pending_queries.saturating_sub(n);
+        if let Some(c) = self.per_client_pending.get_mut(&p.client) {
+            *c = c.saturating_sub(n);
+        }
+    }
 }
 
 /// The admission layer between concurrent clients and the serving
@@ -660,12 +776,34 @@ impl Default for Ingress {
 }
 
 impl Ingress {
-    /// An empty ingress with no registered clients.
+    /// An empty ingress with no registered clients and the fully
+    /// permissive default policy (unbounded queue, no quota, no
+    /// deadline) - PR 8's implicit-pile-up behavior, exactly.
     pub fn new() -> Self {
+        Ingress::with_policy(AdmissionPolicy::default())
+    }
+
+    /// An empty ingress enforcing `policy` at admission and in the
+    /// serve loop's shed points.
+    pub fn with_policy(policy: AdmissionPolicy) -> Self {
+        // the tightening horizon: how much queued work the degraded
+        // engine should be able to drain "in time" - the deadline if
+        // the policy has one, else a one-second default
+        let horizon =
+            policy.default_deadline.unwrap_or(Duration::from_secs(1));
+        let cap = CapacityController::new(policy.max_pending_queries, horizon);
         Ingress {
             state: Mutex::new(IngressState {
                 pending: VecDeque::new(),
                 open_clients: 0,
+                terminated: false,
+                policy,
+                cap,
+                pending_queries: 0,
+                per_client_pending: HashMap::new(),
+                buckets: HashMap::new(),
+                next_client_id: 0,
+                stats: AdmissionStats::default(),
             }),
             cv: Condvar::new(),
         }
@@ -676,8 +814,12 @@ impl Ingress {
     /// *before* starting [`KnnEngine::serve`], or the loop may observe
     /// zero clients and exit immediately.
     pub fn client(&self) -> Client<'_> {
-        lock_unpoisoned(&self.state).open_clients += 1;
-        Client { ingress: self }
+        let mut st = lock_unpoisoned(&self.state);
+        st.open_clients += 1;
+        let id = st.next_client_id;
+        st.next_client_id += 1;
+        drop(st);
+        Client { ingress: self, id }
     }
 
     /// Registered clients that have not yet disconnected.
@@ -691,24 +833,190 @@ impl Ingress {
     pub fn pending_len(&self) -> usize {
         lock_unpoisoned(&self.state).pending.len()
     }
+
+    /// Query rows currently parked in the pending queue (the quantity
+    /// the admission bounds are enforced over).
+    pub fn pending_queries(&self) -> usize {
+        lock_unpoisoned(&self.state).pending_queries
+    }
+
+    /// The effective global pending bound right now: the policy's
+    /// `max_pending_queries`, tightened while the engine is degraded
+    /// (see [`CapacityController`]).
+    pub fn effective_max_pending(&self) -> usize {
+        lock_unpoisoned(&self.state).cap.effective_max()
+    }
+
+    /// Cumulative admission telemetry (also folded into the
+    /// [`ServiceReport`] when the serve loop exits).
+    pub fn admission_stats(&self) -> AdmissionStats {
+        lock_unpoisoned(&self.state).stats
+    }
+
+    /// Shed queued query requests whose deadline has passed: each gets
+    /// exactly one [`Rejected::DeadlineExpired`]. Runs under the
+    /// ingress lock at the serve loop's cycle boundary - *before*
+    /// pricing, never mid-flush, so a request is either flushed whole
+    /// or shed whole.
+    fn shed_expired_locked(st: &mut IngressState, now: Instant) {
+        let mut i = 0;
+        while i < st.pending.len() {
+            let expired = match (&st.pending[i].op, st.pending[i].deadline) {
+                (PendingOp::Query { .. }, Some(dl)) => dl <= now,
+                _ => false,
+            };
+            if !expired {
+                i += 1;
+                continue;
+            }
+            let p = st.pending.remove(i).expect("index in bounds");
+            st.note_taken(&p);
+            st.stats.shed_deadline += p.queries();
+            st.stats.rejected_requests += 1;
+            let missed_by = now
+                .saturating_duration_since(p.deadline.expect("expired implies dated"));
+            let _ = p
+                .reply
+                .send(Reply::Rejected(Rejected::DeadlineExpired { missed_by }));
+        }
+    }
+
+    /// Shed queued query requests until the pending rows fit the
+    /// effective bound again (only ever needed after degradation
+    /// tightened the bound below what admission already accepted).
+    /// Victim order follows the policy: newest first, or nearest
+    /// deadline first. Each victim gets one [`Rejected::Overloaded`].
+    fn shed_over_capacity_locked(st: &mut IngressState) {
+        while st.pending_queries > st.cap.effective_max() {
+            let victim = match st.policy.shed_policy {
+                ShedPolicy::NewestFirst => {
+                    st.pending.iter().rposition(|p| p.queries() > 0)
+                }
+                ShedPolicy::ByDeadline => {
+                    let mut best_idx: Option<usize> = None;
+                    let mut best_dl: Option<Instant> = None;
+                    for (idx, p) in st.pending.iter().enumerate() {
+                        if p.queries() == 0 {
+                            continue;
+                        }
+                        let better = match (best_idx, best_dl, p.deadline) {
+                            (None, _, _) => true,
+                            // nearer deadline dies first
+                            (Some(_), Some(bd), Some(d)) => d < bd,
+                            // any deadline beats none
+                            (Some(_), None, Some(_)) => true,
+                            // among undated requests, newest dies first
+                            (Some(_), None, None) => true,
+                            (Some(_), Some(_), None) => false,
+                        };
+                        if better {
+                            best_idx = Some(idx);
+                            best_dl = p.deadline;
+                        }
+                    }
+                    best_idx
+                }
+            };
+            let Some(idx) = victim else { break };
+            let p = st.pending.remove(idx).expect("index in bounds");
+            st.note_taken(&p);
+            st.stats.shed_overload += p.queries();
+            st.stats.rejected_requests += 1;
+            let hint = st.cap.retry_after_hint(st.pending_queries);
+            let _ = p.reply.send(Reply::Rejected(Rejected::Overloaded {
+                retry_after_hint: hint,
+            }));
+        }
+    }
 }
 
 /// One client session handle. Dropping it disconnects the client;
 /// when the last client disconnects the serving loop drains what is
 /// pending and returns.
+///
+/// Under a bounding [`AdmissionPolicy`] the blocking calls can fail
+/// fast with a typed [`Rejected`] in the error chain
+/// (`err.downcast_ref::<Rejected>()`) instead of queueing; see the
+/// variant docs for which rejections are synchronous and which arrive
+/// from the serve loop's shed points.
 pub struct Client<'i> {
     ingress: &'i Ingress,
+    /// ingress-assigned session id (per-client admission bookkeeping)
+    id: u64,
 }
 
 impl Client<'_> {
     /// Enqueue one request and block until the serve loop answers.
-    fn submit(&self, op: PendingOp) -> Result<Reply> {
+    /// Admission control runs here, synchronously under the ingress
+    /// lock: a rejected request never occupies a queue slot.
+    fn submit(
+        &self,
+        op: PendingOp,
+        deadline: Option<Duration>,
+    ) -> Result<Reply> {
         let (tx, rx) = mpsc::channel();
         {
             let mut st = lock_unpoisoned(&self.ingress.state);
+            if st.terminated {
+                return Err(anyhow::Error::new(Rejected::Terminated));
+            }
+            let now = Instant::now();
+            let n = match &op {
+                PendingOp::Query { n, .. } => *n,
+                _ => 0,
+            };
+            // mutations (n == 0) are never bounded, quota'd, or shed:
+            // they are corpus state transitions, not query load, and
+            // dropping one would silently fork the corpus history
+            if n > 0 {
+                let mine = st
+                    .per_client_pending
+                    .get(&self.id)
+                    .copied()
+                    .unwrap_or(0);
+                if st.pending_queries.saturating_add(n)
+                    > st.cap.effective_max()
+                    || mine.saturating_add(n)
+                        > st.policy.max_pending_per_client
+                {
+                    let hint = st.cap.retry_after_hint(st.pending_queries);
+                    st.stats.shed_overload += n;
+                    st.stats.rejected_requests += 1;
+                    return Err(anyhow::Error::new(Rejected::Overloaded {
+                        retry_after_hint: hint,
+                    }));
+                }
+                if let Some(quota) = st.policy.quota {
+                    let bucket = st
+                        .buckets
+                        .entry(self.id)
+                        .or_insert_with(|| TokenBucket::new(&quota, now));
+                    if let Err(retry_after) = bucket.try_take(n as f64, now)
+                    {
+                        st.stats.shed_quota += n;
+                        st.stats.rejected_requests += 1;
+                        return Err(anyhow::Error::new(
+                            Rejected::QuotaExceeded { retry_after },
+                        ));
+                    }
+                }
+                st.pending_queries += n;
+                *st.per_client_pending.entry(self.id).or_insert(0) += n;
+                st.stats.admitted += n;
+                st.stats.admitted_requests += 1;
+            }
+            let deadline = if n > 0 {
+                deadline
+                    .or(st.policy.default_deadline)
+                    .and_then(|d| now.checked_add(d))
+            } else {
+                None
+            };
             st.pending.push_back(Pending {
                 op,
-                submitted: Instant::now(),
+                submitted: now,
+                deadline,
+                client: self.id,
                 reply: tx,
             });
         }
@@ -721,15 +1029,42 @@ impl Client<'_> {
     /// the serving loop. Rows of `batch` map 1:1 onto
     /// [`BatchReply::results`]; neighbor ids index the served corpus.
     ///
-    /// Errors only if the service terminated without replying (serve
-    /// loop returned or its thread died).
+    /// Errors if the service terminated without replying, or - under a
+    /// bounding [`AdmissionPolicy`] - with a typed [`Rejected`] in the
+    /// error chain when the request was rejected at admission or shed
+    /// from the queue.
     pub fn query(&self, batch: &Dataset) -> Result<BatchReply> {
-        match self.submit(PendingOp::Query {
-            points: batch.raw().to_vec(),
-            n: batch.len(),
-            dims: batch.dims(),
-        })? {
+        self.query_inner(batch, None)
+    }
+
+    /// [`Client::query`] with an explicit per-request deadline
+    /// (overriding the policy's `default_deadline`): if the request is
+    /// still queued when the deadline passes, the serve loop sheds it
+    /// before pricing and this call returns
+    /// [`Rejected::DeadlineExpired`].
+    pub fn query_with_deadline(
+        &self,
+        batch: &Dataset,
+        deadline: Duration,
+    ) -> Result<BatchReply> {
+        self.query_inner(batch, Some(deadline))
+    }
+
+    fn query_inner(
+        &self,
+        batch: &Dataset,
+        deadline: Option<Duration>,
+    ) -> Result<BatchReply> {
+        match self.submit(
+            PendingOp::Query {
+                points: batch.raw().to_vec(),
+                n: batch.len(),
+                dims: batch.dims(),
+            },
+            deadline,
+        )? {
             Reply::Batch(b) => Ok(b),
+            Reply::Rejected(r) => Err(anyhow::Error::new(r)),
             _ => Err(anyhow::anyhow!("service answered query with wrong reply kind")),
         }
     }
@@ -738,23 +1073,31 @@ impl Client<'_> {
     /// returning the corpus id assigned to each row. The serve loop
     /// serializes mutations against query flushes in FIFO order: every
     /// query enqueued after this call sees the inserted points.
+    /// Mutations are exempt from bounds, quotas, and shedding - only
+    /// [`Rejected::Terminated`] can reject one.
     pub fn insert(&self, batch: &Dataset) -> Result<Vec<u32>> {
-        match self.submit(PendingOp::Insert {
-            points: batch.raw().to_vec(),
-            n: batch.len(),
-            dims: batch.dims(),
-        })? {
+        match self.submit(
+            PendingOp::Insert {
+                points: batch.raw().to_vec(),
+                n: batch.len(),
+                dims: batch.dims(),
+            },
+            None,
+        )? {
             Reply::Inserted(ids) => Ok(ids),
+            Reply::Rejected(r) => Err(anyhow::Error::new(r)),
             _ => Err(anyhow::anyhow!("service answered insert with wrong reply kind")),
         }
     }
 
     /// Submit a corpus removal (by id) and block until it has been
     /// applied, returning how many of the ids were live. Unknown or
-    /// already-removed ids are ignored.
+    /// already-removed ids are ignored. Exempt from bounds, quotas,
+    /// and shedding like [`Client::insert`].
     pub fn remove(&self, ids: &[u32]) -> Result<usize> {
-        match self.submit(PendingOp::Remove { ids: ids.to_vec() })? {
+        match self.submit(PendingOp::Remove { ids: ids.to_vec() }, None)? {
             Reply::Removed(n) => Ok(n),
+            Reply::Rejected(r) => Err(anyhow::Error::new(r)),
             _ => Err(anyhow::anyhow!("service answered remove with wrong reply kind")),
         }
     }
@@ -762,7 +1105,11 @@ impl Client<'_> {
 
 impl Drop for Client<'_> {
     fn drop(&mut self) {
-        lock_unpoisoned(&self.ingress.state).open_clients -= 1;
+        let mut st = lock_unpoisoned(&self.ingress.state);
+        st.open_clients -= 1;
+        st.per_client_pending.remove(&self.id);
+        st.buckets.remove(&self.id);
+        drop(st);
         self.ingress.cv.notify_all();
     }
 }
@@ -830,6 +1177,20 @@ pub struct ServiceReport {
     pub gpu_faults: usize,
     /// flushes that finished with a demoted (CPU-only) GPU master
     pub degraded_flushes: usize,
+    /// query rows admitted into the pending queue (cumulative over the
+    /// ingress). Every admitted row is either flushed (counted in
+    /// `queries`) or later shed from the queue with a typed rejection
+    /// (counted in a `shed_*` column) - exactly one of the two.
+    pub admitted: usize,
+    /// query rows rejected or shed at a full pending bound
+    pub shed_overload: usize,
+    /// query rows rejected by per-client token buckets
+    pub shed_quota: usize,
+    /// query rows shed because their deadline expired while queued
+    pub shed_deadline: usize,
+    /// query requests that received a typed rejection (exactly one
+    /// each)
+    pub rejected_requests: usize,
 }
 
 /// Nearest-rank percentile of an ascending-sorted sample: `q` in

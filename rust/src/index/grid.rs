@@ -25,6 +25,15 @@
 //! Space: B/G/A stay O(|D|) as the paper requires. The CSR table adds
 //! O(Σ_c |adjacent(c)|) ≤ O(|B|·3^m) - see DESIGN.md §8 for why this is
 //! bounded by one pricing pass's work and small in the join regime.
+//! Because that worst case is exponential in m, the build takes a
+//! **byte budget** ([`GridIndex::build_with_budget`]): when
+//! |B|·3^m·4 bytes would exceed it, the CSR *rows* are not
+//! materialised and every adjacency walk recomputes its block on
+//! demand (the same walk the empty-cell fallback already uses). The
+//! memoized per-cell populations (`adj_pop`) are kept in both modes,
+//! so scheduler pricing stays O(1). The mode is a pure function of
+//! (|B|, m, budget), so incremental patches and the rebuild oracle
+//! always agree on it.
 //!
 //! Coordinate-keyed lookups (arbitrary points - the bipartite R side)
 //! clamp cell coordinates into the grid box per dimension. Clamping is
@@ -54,6 +63,7 @@
 //! ([`GridIndex::maybe_rebuild`]) that is observably a no-op.
 
 use std::cell::RefCell;
+use std::collections::HashSet;
 
 use crate::core::Dataset;
 use crate::util::pool;
@@ -127,6 +137,19 @@ const NO_RANK: u32 = u32::MAX;
 /// re-canonicalize with a full re-sort once mutations since the last
 /// (re)build exceed this fraction of the indexed population.
 const DEFAULT_REBUILD_FRAC: f64 = 0.25;
+
+/// Default drift threshold for [`GridIndex::maybe_rebuild`]: re-derive
+/// the grid geometry (origin + widths) once this fraction of the live
+/// points clamp into boundary cells because they fell outside the
+/// build-time extent. Clamping keeps the walk a correct superset, but
+/// a drifted corpus piles into ever-fatter boundary cells - the
+/// refresh restores the paper's ε-cell resolution.
+const DEFAULT_DRIFT_FRAC: f64 = 0.2;
+
+/// Default CSR byte budget for [`GridIndex::build`]: the worst-case
+/// row storage |B|·3^m·4 bytes must stay under this or the build keeps
+/// populations only and walks adjacency on demand.
+const DEFAULT_ADJ_BUDGET_BYTES: usize = 1 << 30;
 
 /// Precomputed R-side cell lookups for a bipartite join against an
 /// S-grid (ROADMAP carried item (n)): for every point of a query
@@ -235,6 +258,20 @@ pub struct GridIndex {
     dirty: usize,
     /// dirty-fraction threshold for the amortized re-sort
     rebuild_frac: f64,
+    /// live ids whose unclamped coordinates fall outside the frozen
+    /// grid box in some indexed dim (they clamp into boundary cells).
+    /// A pure function of (live set, geometry): assemble derives it,
+    /// insert/remove patch it, so patched and rebuilt always agree.
+    out_ids: HashSet<u32>,
+    /// out-of-extent fraction that triggers a geometry refresh in
+    /// [`GridIndex::maybe_rebuild`]
+    drift_frac: f64,
+    /// CSR byte budget the build was given (worst-case row bytes)
+    adj_budget: usize,
+    /// true when the budget ruled out materialised CSR rows: adjacency
+    /// walks recompute their 3^m block on demand, `adj_off`/`adj_ranks`
+    /// stay empty, `adj_pop` is still maintained
+    adj_on_demand: bool,
 }
 
 impl GridIndex {
@@ -244,14 +281,38 @@ impl GridIndex {
     /// linearisation; `eps` must be positive and finite. The CSR
     /// adjacency table is computed here, in parallel over cells.
     pub fn build(d: &Dataset, m: usize, eps: f64) -> GridIndex {
+        Self::build_with_budget(d, m, eps, DEFAULT_ADJ_BUDGET_BYTES)
+    }
+
+    /// [`GridIndex::build`] with an explicit CSR byte budget: when the
+    /// worst-case row storage |B|·3^m·4 bytes would exceed `budget`
+    /// (pathological ε/m regimes - tiny cells over many dims), the
+    /// rows are not materialised and adjacency walks recompute their
+    /// clipped `{-1,0,1}^m` block on demand. Candidate *lists* are
+    /// identical in both modes; the memoized per-cell populations are
+    /// kept either way, so scheduler pricing stays O(1).
+    pub fn build_with_budget(d: &Dataset, m: usize, eps: f64, budget: usize) -> GridIndex {
         assert!(eps.is_finite() && eps > 0.0, "bad eps {eps}");
         let requested_m = m.clamp(1, d.dims());
-        let n = d.len();
+        let ids: Vec<u32> = (0..d.len() as u32).collect();
+        let (m, mins, widths) = Self::derive_geometry(d, &ids, requested_m, eps);
+        Self::assemble(d, &ids, eps, m, mins, widths, budget)
+    }
 
+    /// Derive the grid geometry (origin, per-dim cell counts, possibly
+    /// degraded m) over an id subset: the build-time scan, factored out
+    /// so a drift refresh ([`GridIndex::maybe_rebuild`]) can re-derive
+    /// it over the *live* set under churn.
+    fn derive_geometry(
+        d: &Dataset,
+        ids: &[u32],
+        requested_m: usize,
+        eps: f64,
+    ) -> (usize, Vec<f64>, Vec<u64>) {
         let mut mins = vec![f64::INFINITY; requested_m];
         let mut maxs = vec![f64::NEG_INFINITY; requested_m];
-        for i in 0..n {
-            let p = d.point(i);
+        for &i in ids {
+            let p = d.point(i as usize);
             for j in 0..requested_m {
                 let x = p[j] as f64;
                 if x < mins[j] {
@@ -262,7 +323,7 @@ impl GridIndex {
                 }
             }
         }
-        if n == 0 {
+        if ids.is_empty() {
             mins.iter_mut().for_each(|x| *x = 0.0);
             maxs.iter_mut().for_each(|x| *x = 0.0);
         }
@@ -302,9 +363,18 @@ impl GridIndex {
             widths.truncate(m);
             mins.truncate(m);
         }
+        (m, mins, widths)
+    }
 
-        let ids: Vec<u32> = (0..n as u32).collect();
-        Self::assemble(d, &ids, eps, m, mins, widths)
+    /// True when |B|·3^m CSR entries (4 bytes each, the worst case over
+    /// `n_cells` non-empty cells) fit the byte budget. A pure function
+    /// of the cell count, so an incremental patch and the rebuild
+    /// oracle can never disagree on the adjacency mode.
+    fn csr_fits(n_cells: usize, m: usize, budget: usize) -> bool {
+        (n_cells as u64)
+            .saturating_mul(3u64.saturating_pow(m as u32))
+            .saturating_mul(std::mem::size_of::<u32>() as u64)
+            <= budget as u64
     }
 
     /// Assemble the full index layout (B/G/A, point→rank, CSR adjacency,
@@ -320,6 +390,7 @@ impl GridIndex {
         m: usize,
         mins: Vec<f64>,
         widths: Vec<u64>,
+        budget: usize,
     ) -> GridIndex {
         // (cell id, point id) pairs, sorted by cell -> B/G/A arrays.
         let coord = |x: f32, j: usize| -> u64 {
@@ -369,8 +440,10 @@ impl GridIndex {
         // worker takes a contiguous slab of cell ranks (deterministic
         // stitching) and walks the 3^m block with one binary search per
         // adjacent candidate - the last time anyone searches B for a
-        // neighborhood.
+        // neighborhood. When the byte budget rules out materialised
+        // rows, the same walk fills the memoized populations only.
         let n_cells = cell_ids.len();
+        let with_rows = Self::csr_fits(n_cells, m, budget);
         let workers = std::thread::available_parallelism()
             .map(|t| t.get())
             .unwrap_or(1)
@@ -392,7 +465,9 @@ impl GridIndex {
                     let mut pop = 0u32;
                     walk_block(&coords, widths, &mut offs, |id| {
                         if let Ok(nr) = cell_ids.binary_search(&id) {
-                            flat.push(nr as u32);
+                            if with_rows {
+                                flat.push(nr as u32);
+                            }
                             let (s, e) = ranges[nr];
                             pop += e - s;
                         }
@@ -404,21 +479,43 @@ impl GridIndex {
             })
         };
         let total_entries: usize = parts.iter().map(|p| p.1.len()).sum();
-        let mut adj_off = Vec::with_capacity(n_cells + 1);
-        adj_off.push(0usize);
+        let mut adj_off = Vec::new();
         let mut adj_ranks = Vec::with_capacity(total_entries);
         let mut adj_pop = Vec::with_capacity(n_cells);
+        if with_rows {
+            adj_off.reserve(n_cells + 1);
+            adj_off.push(0usize);
+        }
         let mut running = 0usize;
         for (counts, flat, pops) in parts {
-            for c in counts {
-                running += c as usize;
-                adj_off.push(running);
+            if with_rows {
+                for c in counts {
+                    running += c as usize;
+                    adj_off.push(running);
+                }
             }
             adj_ranks.extend_from_slice(&flat);
             adj_pop.extend_from_slice(&pops);
         }
-        debug_assert_eq!(adj_off.len(), n_cells + 1);
-        debug_assert_eq!(*adj_off.last().unwrap(), adj_ranks.len());
+        if with_rows {
+            debug_assert_eq!(adj_off.len(), n_cells + 1);
+            debug_assert_eq!(*adj_off.last().unwrap(), adj_ranks.len());
+        }
+
+        // out-of-extent inventory: which live points clamp (in some
+        // indexed dim) because they fall outside the frozen grid box -
+        // the drift signal maybe_rebuild watches
+        let out_ids: HashSet<u32> = ids
+            .iter()
+            .copied()
+            .filter(|&i| {
+                let p = d.point(i as usize);
+                (0..m).any(|j| {
+                    let c = ((p[j] as f64 - mins[j]) / eps).floor();
+                    c < 0.0 || c >= widths[j] as f64
+                })
+            })
+            .collect();
 
         GridIndex {
             eps,
@@ -435,6 +532,10 @@ impl GridIndex {
             epoch: 0,
             dirty: 0,
             rebuild_frac: DEFAULT_REBUILD_FRAC,
+            out_ids,
+            drift_frac: DEFAULT_DRIFT_FRAC,
+            adj_budget: budget,
+            adj_on_demand: !with_rows,
         }
     }
 
@@ -768,9 +869,17 @@ impl GridIndex {
     }
 
     /// CSR row of a cell: the ranks of its non-empty 3^m neighbors
-    /// (itself included), ascending by cell id.
+    /// (itself included), ascending by cell id. Panics when the build
+    /// budget ruled out materialised rows
+    /// ([`GridIndex::adj_is_on_demand`]) - use
+    /// [`GridIndex::visit_adjacent_of_rank`], which works in both
+    /// modes, when the consumer only needs to walk the block.
     #[inline]
     pub fn adjacent_ranks(&self, rank: usize) -> &[u32] {
+        assert!(
+            !self.adj_on_demand,
+            "adjacent_ranks: CSR rows not materialised (byte budget exceeded)"
+        );
         &self.adj_ranks[self.adj_off[rank]..self.adj_off[rank + 1]]
     }
 
@@ -780,9 +889,41 @@ impl GridIndex {
         self.adj_pop[rank] as usize
     }
 
-    /// Walk a cell's adjacent block through its CSR row, invoking `visit`
-    /// with each non-empty neighbor's point ids, ascending by cell id.
+    /// Enumerate the ranks of a cell's non-empty 3^m neighbors (itself
+    /// included), ascending by cell id, by recomputing the clipped
+    /// block walk - the on-demand replacement for a materialised CSR
+    /// row. Thread-local scratch keeps it allocation-free per call.
+    fn walk_rank_on_demand(&self, rank: usize, mut f: impl FnMut(usize)) {
+        WALK_SCRATCH.with(|s| {
+            let mut local = (Vec::new(), Vec::new());
+            let mut guard = s.try_borrow_mut().ok();
+            let (coords, offs) = match guard.as_deref_mut() {
+                Some(t) => (&mut t.0, &mut t.1),
+                None => (&mut local.0, &mut local.1),
+            };
+            coords.resize(self.m, 0);
+            delinearise(self.cell_ids[rank], &self.widths, coords);
+            offs.resize(self.m, 0);
+            walk_block(coords, &self.widths, offs, |id| {
+                if let Ok(nr) = self.cell_ids.binary_search(&id) {
+                    f(nr);
+                }
+            });
+        });
+    }
+
+    /// Walk a cell's adjacent block, invoking `visit` with each
+    /// non-empty neighbor's point ids, ascending by cell id: flat CSR
+    /// row iteration (zero searches) when rows are materialised, the
+    /// recompute walk otherwise - identical output either way.
     pub fn visit_adjacent_of_rank(&self, rank: usize, mut visit: impl FnMut(&[u32])) {
+        if self.adj_on_demand {
+            self.walk_rank_on_demand(rank, |nr| {
+                let (s, e) = self.ranges[nr];
+                visit(&self.point_ids[s as usize..e as usize]);
+            });
+            return;
+        }
         for &nr in self.adjacent_ranks(rank) {
             let (s, e) = self.ranges[nr as usize];
             visit(&self.point_ids[s as usize..e as usize]);
@@ -795,10 +936,7 @@ impl GridIndex {
     pub fn candidates_into_rank(&self, rank: usize, out: &mut Vec<u32>) {
         out.clear();
         out.reserve(self.adj_pop[rank] as usize);
-        for &nr in self.adjacent_ranks(rank) {
-            let (s, e) = self.ranges[nr as usize];
-            out.extend_from_slice(&self.point_ids[s as usize..e as usize]);
-        }
+        self.visit_adjacent_of_rank(rank, |ids| out.extend_from_slice(ids));
     }
 
     // ---------------------------------------------------------------
@@ -872,15 +1010,37 @@ impl GridIndex {
                     rr.0 += 1;
                     rr.1 += 1;
                 }
-                for i in self.adj_off[r]..self.adj_off[r + 1] {
-                    self.adj_pop[self.adj_ranks[i] as usize] += 1;
+                if self.adj_on_demand {
+                    let mut touched = Vec::new();
+                    self.walk_rank_on_demand(r, |nr| touched.push(nr));
+                    for nr in touched {
+                        self.adj_pop[nr] += 1;
+                    }
+                } else {
+                    for i in self.adj_off[r]..self.adj_off[r + 1] {
+                        self.adj_pop[self.adj_ranks[i] as usize] += 1;
+                    }
                 }
                 self.point_rank[id as usize] = r as u32;
             }
             Err(nr) => self.insert_new_cell(nr, cid, id),
         }
+        if self.out_of_extent(d.point(id as usize)) {
+            self.out_ids.insert(id);
+        }
         self.epoch += 1;
         self.dirty += 1;
+    }
+
+    /// True when `p`'s unclamped coordinate falls outside the frozen
+    /// grid box in some indexed dim (the point clamps into a boundary
+    /// cell). Must mirror the filter `assemble` derives `out_ids` with,
+    /// bit for bit, so patched and rebuilt inventories agree.
+    fn out_of_extent(&self, p: &[f32]) -> bool {
+        (0..self.m).any(|j| {
+            let c = ((p[j] as f64 - self.mins[j]) / self.eps).floor();
+            c < 0.0 || c >= self.widths[j] as f64
+        })
     }
 
     /// Cell birth: splice the new cell into B/G/A at rank `nr`, shift
@@ -916,6 +1076,33 @@ impl GridIndex {
             }
         });
         debug_assert!(row.binary_search(&(nr as u32)).is_ok());
+
+        // Cell birth can push |B|·3^m past the byte budget: the mode is
+        // re-derived from the new cell count (the same predicate the
+        // rebuild oracle applies). Births never flip on-demand back to
+        // CSR - the count only grew - so the two on-demand cases share
+        // one pop-only patch: the old populations were canonical, the
+        // new cell's own pop is the row sum, every *other* walked
+        // neighbor gains the one new point.
+        if !Self::csr_fits(self.cell_ids.len(), self.m, self.adj_budget) {
+            let own_pop: u32 = row
+                .iter()
+                .map(|&x| {
+                    let (a, b) = self.ranges[x as usize];
+                    b - a
+                })
+                .sum();
+            self.adj_pop.insert(nr, own_pop);
+            for &x in &row {
+                if x != nr as u32 {
+                    self.adj_pop[x as usize] += 1;
+                }
+            }
+            self.adj_ranks = Vec::new();
+            self.adj_off = Vec::new();
+            self.adj_on_demand = true;
+            return;
+        }
 
         let member = |x: u32| row.binary_search(&x).is_ok();
         let n_new = self.cell_ids.len();
@@ -987,11 +1174,20 @@ impl GridIndex {
                 rr.0 -= 1;
                 rr.1 -= 1;
             }
-            for i in self.adj_off[r]..self.adj_off[r + 1] {
-                self.adj_pop[self.adj_ranks[i] as usize] -= 1;
+            if self.adj_on_demand {
+                let mut touched = Vec::new();
+                self.walk_rank_on_demand(r, |nr| touched.push(nr));
+                for nr in touched {
+                    self.adj_pop[nr] -= 1;
+                }
+            } else {
+                for i in self.adj_off[r]..self.adj_off[r + 1] {
+                    self.adj_pop[self.adj_ranks[i] as usize] -= 1;
+                }
             }
         }
         self.point_rank[id as usize] = NO_RANK;
+        self.out_ids.remove(&id);
         self.epoch += 1;
         self.dirty += 1;
         true
@@ -1004,6 +1200,39 @@ impl GridIndex {
     fn remove_last_in_cell(&mut self, r: usize, id: u32) {
         let (s, _) = self.ranges[r];
         debug_assert_eq!(self.point_ids[s as usize], id);
+        if self.adj_on_demand {
+            // walk the dying cell's block over the *current* B before
+            // splicing it out: those neighbors each lose one point of
+            // adjacent population (the dying cell's sole occupant)
+            let mut row = Vec::new();
+            self.walk_rank_on_demand(r, |nr| row.push(nr));
+            self.point_ids.remove(s as usize);
+            self.cell_ids.remove(r);
+            self.ranges.remove(r);
+            for rr in self.ranges[r..].iter_mut() {
+                rr.0 -= 1;
+                rr.1 -= 1;
+            }
+            for pr in self.point_rank.iter_mut() {
+                if *pr != NO_RANK && *pr > r as u32 {
+                    *pr -= 1;
+                }
+            }
+            for &nr in &row {
+                if nr != r {
+                    let shifted = if nr > r { nr - 1 } else { nr };
+                    self.adj_pop[shifted] -= 1;
+                }
+            }
+            self.adj_pop.remove(r);
+            // death may bring |B|·3^m back under the byte budget: flip
+            // home to materialised rows at the same boundary the
+            // rebuild oracle would
+            if Self::csr_fits(self.cell_ids.len(), self.m, self.adj_budget) {
+                self.recompute_rows();
+            }
+            return;
+        }
         self.point_ids.remove(s as usize);
         self.cell_ids.remove(r);
         self.ranges.remove(r);
@@ -1040,6 +1269,38 @@ impl GridIndex {
         self.adj_pop = pop;
     }
 
+    /// Recompute the materialised CSR rows (offsets, rows, populations)
+    /// from B/G in place and leave on-demand mode - the one-off cost of
+    /// a cell death that brings the worst-case table back under the
+    /// byte budget. Sequential: flips are rare (they happen exactly at
+    /// the budget boundary), and the boundary cell count is budget/3^m.
+    fn recompute_rows(&mut self) {
+        let n_cells = self.cell_ids.len();
+        let mut adj_off = Vec::with_capacity(n_cells + 1);
+        adj_off.push(0usize);
+        let mut adj_ranks = Vec::new();
+        let mut adj_pop = Vec::with_capacity(n_cells);
+        let mut coords = vec![0u64; self.m];
+        let mut offs = vec![0i64; self.m];
+        for rank in 0..n_cells {
+            delinearise(self.cell_ids[rank], &self.widths, &mut coords);
+            let mut pop = 0u32;
+            walk_block(&coords, &self.widths, &mut offs, |id| {
+                if let Ok(nr) = self.cell_ids.binary_search(&id) {
+                    adj_ranks.push(nr as u32);
+                    let (a, b) = self.ranges[nr];
+                    pop += b - a;
+                }
+            });
+            adj_off.push(adj_ranks.len());
+            adj_pop.push(pop);
+        }
+        self.adj_off = adj_off;
+        self.adj_ranks = adj_ranks;
+        self.adj_pop = adj_pop;
+        self.adj_on_demand = false;
+    }
+
     /// From-scratch rebuild over the currently indexed ids with the
     /// geometry *frozen* - the canonical-form oracle every incremental
     /// patch is asserted bit-equal to. Carries the epoch forward (the
@@ -1052,10 +1313,28 @@ impl GridIndex {
             self.m,
             self.mins.clone(),
             self.widths.clone(),
+            self.adj_budget,
         );
         g.epoch = self.epoch;
         g.rebuild_frac = self.rebuild_frac;
+        g.drift_frac = self.drift_frac;
         g
+    }
+
+    /// Re-derive the grid geometry (origin + widths, possibly degrading
+    /// m further) over the live set and reassemble - the drift escape
+    /// hatch of [`GridIndex::maybe_rebuild`]. Unlike the canonical
+    /// re-sort, the geometry *moves*, so cell ids are not comparable
+    /// across the refresh and the epoch bumps once to invalidate every
+    /// derived snapshot (rank caches, tile caches, queue stamps).
+    fn refresh_geometry(&mut self, d: &Dataset) {
+        let ids = self.indexed_ids();
+        let (m, mins, widths) = Self::derive_geometry(d, &ids, self.m, self.eps);
+        let mut g = Self::assemble(d, &ids, self.eps, m, mins, widths, self.adj_budget);
+        g.epoch = self.epoch + 1;
+        g.rebuild_frac = self.rebuild_frac;
+        g.drift_frac = self.drift_frac;
+        *self = g;
     }
 
     /// Set the dirty-fraction threshold of [`GridIndex::maybe_rebuild`]
@@ -1064,20 +1343,48 @@ impl GridIndex {
         self.rebuild_frac = frac.max(1e-9);
     }
 
+    /// Set the out-of-extent fraction that triggers a geometry refresh
+    /// in [`GridIndex::maybe_rebuild`] (clamped positive; default 0.2).
+    pub fn set_drift_frac(&mut self, frac: f64) {
+        self.drift_frac = frac.max(1e-9);
+    }
+
+    /// Fraction of live points currently clamping into boundary cells
+    /// because they fall outside the frozen build-time extent.
+    pub fn out_of_extent_fraction(&self) -> f64 {
+        self.out_ids.len() as f64 / self.point_ids.len().max(1) as f64
+    }
+
     /// Mutations applied since the last canonical (re)build, as a
     /// fraction of the indexed population.
     pub fn dirty_fraction(&self) -> f64 {
         self.dirty as f64 / self.point_ids.len().max(1) as f64
     }
 
-    /// Amortized re-sort: once the dirty fraction trips the threshold,
-    /// replace the accumulated splice debt with one canonical
-    /// `assemble`. Because patches already keep the arrays canonical,
-    /// this is observably a no-op (same layout, same epoch) - the
-    /// churn harness asserts exactly that - but it restores compact
-    /// allocations and bounds worst-case splice cost amortized.
+    /// Amortized maintenance, checked at flush boundaries. Two
+    /// escalating triggers:
+    ///
+    /// 1. **Drift refresh**: when more than `drift_frac` of the live
+    ///    points fall outside the frozen build-time extent, the
+    ///    geometry itself (origin + widths, possibly a further-degraded
+    ///    m) is re-derived over the live set - boundary-cell pileup
+    ///    would otherwise degrade the walk toward a scan. This moves
+    ///    the epoch (cell ids change meaning), invalidating every
+    ///    derived snapshot exactly like a mutation does.
+    /// 2. **Canonical re-sort**: once the dirty fraction trips
+    ///    `rebuild_frac`, the accumulated splice debt is replaced with
+    ///    one canonical `assemble`. Because patches already keep the
+    ///    arrays canonical, this is observably a no-op (same layout,
+    ///    same epoch) - the churn harness asserts exactly that - but
+    ///    it restores compact allocations and bounds worst-case splice
+    ///    cost amortized.
     pub fn maybe_rebuild(&mut self, d: &Dataset) -> bool {
-        if self.dirty as f64 <= self.rebuild_frac * self.point_ids.len().max(1) as f64 {
+        let live = self.point_ids.len().max(1) as f64;
+        if self.out_ids.len() as f64 > self.drift_frac * live {
+            self.refresh_geometry(d);
+            return true;
+        }
+        if self.dirty as f64 <= self.rebuild_frac * live {
             return false;
         }
         *self = self.rebuilt(d);
@@ -1107,6 +1414,20 @@ impl GridIndex {
         assert_eq!(self.adj_off, other.adj_off, "CSR offsets diverged");
         assert_eq!(self.adj_ranks, other.adj_ranks, "CSR rows diverged");
         assert_eq!(self.adj_pop, other.adj_pop, "adj_pop diverged");
+        assert_eq!(
+            self.adj_on_demand, other.adj_on_demand,
+            "adjacency mode diverged"
+        );
+        let sorted = |s: &HashSet<u32>| {
+            let mut v: Vec<u32> = s.iter().copied().collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(
+            sorted(&self.out_ids),
+            sorted(&other.out_ids),
+            "out-of-extent inventory diverged"
+        );
     }
 
     // ---------------------------------------------------------------
@@ -1116,6 +1437,17 @@ impl GridIndex {
     /// Number of non-empty cells.
     pub fn non_empty_cells(&self) -> usize {
         self.cell_ids.len()
+    }
+
+    /// Number of materialised CSR row entries (0 in on-demand mode).
+    pub fn adj_table_entries(&self) -> usize {
+        self.adj_ranks.len()
+    }
+
+    /// True when the build byte budget ruled out materialised CSR rows
+    /// and adjacency walks recompute their block on demand.
+    pub fn adj_is_on_demand(&self) -> bool {
+        self.adj_on_demand
     }
 
     /// Population of every non-empty cell alongside its id
@@ -1583,5 +1915,192 @@ mod tests {
         let g0 = GridIndex::build(&d0, 2, 1.0);
         assert_eq!(g0.non_empty_cells(), 0);
         assert!(g0.candidates_of(&[0.5, 0.5]).is_empty());
+    }
+
+    #[test]
+    fn out_of_extent_accounting_tracks_churn() {
+        // the drift inventory is a pure function of (live set, frozen
+        // geometry): inserts mark out-of-extent points, removes unmark,
+        // in-extent churn never touches it - and the patched inventory
+        // matches the rebuild oracle's at every step
+        let mut d = susy_like(50).generate(0xD81);
+        let mut g = GridIndex::build(&d, 4, 2.0);
+        assert_eq!(g.out_of_extent_fraction(), 0.0);
+        let twin = d.push_row(&d.point(3).to_vec());
+        g.insert(&d, twin);
+        assert_eq!(g.out_of_extent_fraction(), 0.0, "in-extent insert");
+        let far = d.push_row(&vec![1.0e6f32; d.dims()]);
+        g.insert(&d, far);
+        assert!(g.out_ids.contains(&far));
+        assert_eq!(g.out_of_extent_fraction(), 1.0 / 52.0);
+        g.assert_same_layout(&g.rebuilt(&d));
+        assert!(g.remove(far));
+        assert_eq!(g.out_of_extent_fraction(), 0.0, "remove unmarks");
+        g.assert_same_layout(&g.rebuilt(&d));
+    }
+
+    #[test]
+    fn drift_refresh_rederives_geometry() {
+        // satellite (a): a corpus walking out of the build extent piles
+        // into boundary cells; once >drift_frac of live points are
+        // outside, maybe_rebuild re-derives the origin/widths over the
+        // live set, bumps the epoch exactly once and clears the drift
+        let mut rng = Rng::new(0xD81F7);
+        let mut d = random_dataset(&mut rng, 100, 3, 2.0);
+        let mut g = GridIndex::build(&d, 3, 1.0);
+        assert_eq!(g.out_of_extent_fraction(), 0.0);
+        let mut steps = 0u32;
+        while g.out_of_extent_fraction() <= 0.2 {
+            steps += 1;
+            assert!(steps <= 100, "drift fraction must accumulate");
+            let x = 20.0 + steps as f32;
+            let id = d.push_row(&[x, x, x]);
+            g.insert(&d, id);
+            assert!(g.remove(steps - 1), "retire one in-extent original");
+        }
+        let epoch_before = g.epoch();
+        let widths_before = g.widths.clone();
+        assert!(g.maybe_rebuild(&d), "drift must trip the refresh");
+        assert_eq!(
+            g.epoch(),
+            epoch_before + 1,
+            "geometry move = one epoch bump"
+        );
+        assert!(
+            g.widths[0] > widths_before[0],
+            "widths re-derived to cover the drifted extent \
+             (before {}, after {})",
+            widths_before[0],
+            g.widths[0]
+        );
+        assert_eq!(
+            g.out_of_extent_fraction(),
+            0.0,
+            "the refreshed extent covers the live set"
+        );
+        // the refreshed grid is canonical over its new geometry, and
+        // the walk is still a complete eps-ball superset
+        g.assert_same_layout(&g.rebuilt(&d));
+        let live = g.indexed_ids();
+        for &q in live.iter().step_by(7) {
+            let cands: std::collections::HashSet<u32> =
+                g.candidates_of(d.point(q as usize)).into_iter().collect();
+            for &i in &live {
+                let dm = sqdist_prefix(d.point(q as usize), d.point(i as usize), g.m);
+                if dm <= g.eps * g.eps {
+                    assert!(
+                        cands.contains(&i),
+                        "post-refresh walk missed neighbor {i} of {q}"
+                    );
+                }
+            }
+        }
+        // a second check right away is a no-op: no drift, no debt
+        assert!(!g.maybe_rebuild(&d));
+    }
+
+    #[test]
+    fn on_demand_budget_walks_match_csr() {
+        // carried item (o): a zero byte budget forces on-demand
+        // adjacency; candidate lists, visit order and memoized
+        // populations must be identical to the materialised-CSR build
+        prop::cases(8, 0xB5D6E7, |rng| {
+            let n = 80 + rng.below(150);
+            let dims = 2 + rng.below(4);
+            let d = random_dataset(rng, n, dims, 3.0);
+            let m = 1 + rng.below(dims);
+            let eps = 0.5 + rng.f64() * 2.0;
+            let full = GridIndex::build(&d, m, eps);
+            let lean = GridIndex::build_with_budget(&d, m, eps, 0);
+            assert!(!full.adj_is_on_demand());
+            assert!(lean.adj_is_on_demand());
+            assert_eq!(lean.adj_table_entries(), 0, "no rows materialised");
+            let mut buf = Vec::new();
+            for i in 0..d.len() as u32 {
+                assert_eq!(
+                    lean.candidates_of(d.point(i as usize)),
+                    full.candidates_of(d.point(i as usize)),
+                    "coordinate-keyed candidates, point {i}"
+                );
+                lean.candidates_into_id(i, &mut buf);
+                let mut visited = Vec::new();
+                lean.visit_adjacent_of_id(i, |ids| visited.extend_from_slice(ids));
+                assert_eq!(buf, visited, "walk order, point {i}");
+                assert_eq!(
+                    lean.adjacent_population_of_id(i),
+                    full.adjacent_population_of_id(i),
+                    "memoized population, point {i}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn on_demand_churn_flips_modes_at_the_budget_boundary() {
+        // births past the budget boundary must flip CSR -> on-demand
+        // and deaths back under it must flip home, both landing on the
+        // exact canonical form of the rebuild oracle
+        prop::cases(6, 0xB5DF11, |rng| {
+            let n0 = 30 + rng.below(60);
+            let dims = 2 + rng.below(3);
+            let mut d = random_dataset(rng, n0, dims, 3.0);
+            let m = 1 + rng.below(dims);
+            let eps = 0.5 + rng.f64() * 1.5;
+            let probe = GridIndex::build(&d, m, eps);
+            // budget that fits exactly the build-time cell count: the
+            // first net birth crosses it
+            let budget = (probe.non_empty_cells() as u64
+                * 3u64.pow(m as u32)
+                * std::mem::size_of::<u32>() as u64) as usize;
+            let mut g = GridIndex::build_with_budget(&d, m, eps, budget);
+            assert!(!g.adj_is_on_demand());
+            let mut inserted = Vec::new();
+            // scattered inserts until one is a cell birth that crosses
+            // the budget (bounded: births are near-certain at this
+            // spread, but placement is random)
+            while !g.adj_is_on_demand() {
+                assert!(
+                    inserted.len() < 200,
+                    "scattered inserts over {} cells never crossed the budget",
+                    probe.non_empty_cells()
+                );
+                let row: Vec<f32> =
+                    (0..dims).map(|_| rng.normal(0.0, 30.0) as f32).collect();
+                let id = d.push_row(&row);
+                g.insert(&d, id);
+                inserted.push(id);
+            }
+            g.assert_same_layout(&g.rebuilt(&d));
+            // steady-state on-demand churn: more births and same-cell
+            // twins, all landing canonical
+            for k in 0..6 {
+                let row: Vec<f32> = if k % 2 == 0 {
+                    (0..dims).map(|_| rng.normal(0.0, 30.0) as f32).collect()
+                } else {
+                    d.point(inserted[0] as usize).to_vec()
+                };
+                let id = d.push_row(&row);
+                g.insert(&d, id);
+                inserted.push(id);
+                assert!(g.adj_is_on_demand());
+            }
+            g.assert_same_layout(&g.rebuilt(&d));
+            for id in inserted.into_iter().rev() {
+                assert!(g.remove(id));
+            }
+            assert!(
+                !g.adj_is_on_demand(),
+                "back under the boundary must flip home to CSR"
+            );
+            g.assert_same_layout(&g.rebuilt(&d));
+            // and the lean walks stayed semantically intact throughout
+            for i in (0..n0).step_by(9) {
+                assert_eq!(
+                    g.candidates_of(d.point(i)),
+                    reference_candidates(&g, d.point(i)),
+                    "post-churn walk, point {i}"
+                );
+            }
+        });
     }
 }

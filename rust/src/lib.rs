@@ -64,6 +64,10 @@ pub mod prelude {
         brute_join_linear, brute_join_tiled, gpu_join, join::gpu_join_rs,
         DrainMode, GpuJoinParams, ThreadAssign,
     };
+    pub use crate::hybrid::admission::{
+        AdmissionPolicy, AdmissionStats, CapacityController, ClientQuota,
+        Rejected, ShedPolicy, TokenBucket,
+    };
     pub use crate::hybrid::service::{
         percentile, BatchReply, Client, FlushReport, Ingress, KnnEngine,
         QueryResult, ServiceReport,

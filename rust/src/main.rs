@@ -75,6 +75,18 @@ options for serve (resident engine + streaming load generator):
                   and removes its previous round's b ids (default 0)
   --flush-cap <q> bound each coalesced micro-batch to q queries (default
                   unbounded)
+  --max-pending <q>        bound the pending queue to q queries; beyond it
+                  submissions get a typed Overloaded rejection (default
+                  unbounded)
+  --max-pending-client <q> per-client pending bound (default unbounded)
+  --quota <qps>   per-client token-bucket rate in queries/sec (default off)
+  --quota-burst <q>        token-bucket burst capacity (default 2x --batch)
+  --deadline-ms <ms>       per-request deadline; requests still queued past
+                  it are shed before pricing (default none)
+  --shed <newest|deadline> which queued requests die first when the serve
+                  loop sheds (default newest)
+  --retry <r>     client-side bounded-backoff retries per rejected request
+                  (default 3)
 options for experiments:
   positional: fig2 fig6 fig7 fig8 fig9 fig10 fig11 table3 table4 table5 table6 all
   --quick         use the small smoke-test workloads
@@ -216,6 +228,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if flush_cap > 0 {
         session.set_flush_cap(flush_cap);
     }
+    // admission policy: every knob defaults to the permissive PR 8
+    // behavior (unbounded queue, no quota, no deadline)
+    let mut policy = AdmissionPolicy::default();
+    let max_pending = args.usize_or("max-pending", 0);
+    if max_pending > 0 {
+        policy.max_pending_queries = max_pending;
+    }
+    let max_pending_client = args.usize_or("max-pending-client", 0);
+    if max_pending_client > 0 {
+        policy.max_pending_per_client = max_pending_client;
+    }
+    let deadline_ms = args.f64_or("deadline-ms", 0.0);
+    if deadline_ms > 0.0 {
+        policy.default_deadline =
+            Some(std::time::Duration::from_secs_f64(deadline_ms / 1e3));
+    }
+    policy.shed_policy = match args.str_or("shed", "newest").as_str() {
+        "newest" => ShedPolicy::NewestFirst,
+        "deadline" => ShedPolicy::ByDeadline,
+        other => bail!("unknown shed policy {other:?} (newest|deadline)"),
+    };
+    let quota_qps = args.f64_or("quota", 0.0);
+    if quota_qps > 0.0 {
+        let burst = args.f64_or("quota-burst", (2 * batch) as f64);
+        policy.quota = Some(ClientQuota { rate_qps: quota_qps, burst });
+    }
+    let retry_max = args.usize_or("retry", 3);
     println!(
         "SERVE |S|={} dims={} k={} ranks={} | {clients} clients x \
          {requests} requests x {batch} queries, {mode} loop",
@@ -224,16 +263,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         session.params().k,
         session.params().cpu_ranks,
     );
-    let ingress = Ingress::new();
+    let ingress = Ingress::with_policy(policy);
+    // load-generator outcome counters (client side): retries actually
+    // taken, requests abandoned after the retry budget, and requests
+    // that died to a queued-deadline expiry
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let retries = AtomicUsize::new(0);
+    let gave_up = AtomicUsize::new(0);
+    let deadline_missed = AtomicUsize::new(0);
     let report = std::thread::scope(|s| {
         let handles: Vec<_> = (0..clients)
             .map(|c| {
                 let client = ingress.client();
                 let pool = &pool;
                 let churn_pool = churn_pool.as_ref();
+                let retries = &retries;
+                let gave_up = &gave_up;
+                let deadline_missed = &deadline_missed;
                 s.spawn(move || {
                     let mut prev_ids: Vec<u32> = Vec::new();
-                    for r in 0..requests {
+                    'requests: for r in 0..requests {
                         if interval > 0.0 {
                             std::thread::sleep(
                                 std::time::Duration::from_secs_f64(interval),
@@ -258,8 +307,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         let start = (c * requests + r) * batch;
                         let rows: Vec<usize> =
                             (start..start + batch).collect();
-                        if client.query(&pool.gather(&rows)).is_err() {
-                            break; // service terminated early
+                        let q = pool.gather(&rows);
+                        // bounded-backoff retry: a rejected request is
+                        // retried up to --retry times, sleeping the
+                        // service's retry hint scaled by attempt
+                        let mut attempt = 0usize;
+                        loop {
+                            let e = match client.query(&q) {
+                                Ok(_) => continue 'requests,
+                                Err(e) => e,
+                            };
+                            let backoff = match e.downcast_ref::<Rejected>()
+                            {
+                                Some(Rejected::Overloaded {
+                                    retry_after_hint,
+                                }) => *retry_after_hint,
+                                Some(Rejected::QuotaExceeded {
+                                    retry_after,
+                                }) => *retry_after,
+                                Some(Rejected::DeadlineExpired {
+                                    ..
+                                }) => {
+                                    deadline_missed
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    continue 'requests;
+                                }
+                                // terminated service (or a non-typed
+                                // error): stop this client
+                                _ => break 'requests,
+                            };
+                            if attempt >= retry_max {
+                                gave_up.fetch_add(1, Ordering::Relaxed);
+                                continue 'requests;
+                            }
+                            attempt += 1;
+                            retries.fetch_add(1, Ordering::Relaxed);
+                            let pause = backoff
+                                .mul_f64(attempt as f64)
+                                .min(std::time::Duration::from_millis(250));
+                            std::thread::sleep(pause);
                         }
                     }
                 })
@@ -289,6 +375,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "split: q_gpu={} q_cpu={} q_fail={}  gpu_faults={} degraded_flushes={}",
         report.q_gpu, report.q_cpu, report.q_fail, report.gpu_faults,
         report.degraded_flushes
+    );
+    println!(
+        "admission: admitted={} shed_overload={} shed_quota={} \
+         shed_deadline={} rejected_requests={}",
+        report.admitted, report.shed_overload, report.shed_quota,
+        report.shed_deadline, report.rejected_requests
+    );
+    println!(
+        "clients: retries={} gave_up={} deadline_missed={}  \
+         effective_max_pending={}",
+        retries.load(Ordering::Relaxed),
+        gave_up.load(Ordering::Relaxed),
+        deadline_missed.load(Ordering::Relaxed),
+        ingress.effective_max_pending()
     );
     if churn > 0 || flush_cap > 0 {
         println!(

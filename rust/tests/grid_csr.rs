@@ -184,6 +184,96 @@ fn csr_matches_reference_on_random_clusters() {
 }
 
 #[test]
+fn on_demand_budget_matches_reference_at_adversarial_eps_m() {
+    // Carried item (o): at pathological eps/m the worst-case CSR table
+    // is O(|B|·3^m) - here 3^8 = 6561 potential row entries per cell
+    // over a corpus where almost every point is its own cell. A byte
+    // budget that cannot hold the rows must fall back to on-demand
+    // adjacency walks with *identical* semantics: same candidate
+    // lists, same walk order, same memoized populations as both the
+    // unbudgeted build and the independent reference.
+    let mut rng = Rng::new(0x0DB1);
+    let dims = 8;
+    // scale kept small enough that the widths product still fits u64
+    // (no m degradation - the reference indexes the same 8 dims)
+    let d = random_gauss(&mut rng, 500, dims, 15.0);
+    let m = 8;
+    let eps = 0.75; // tiny cells: ~500 singleton cells over 8 dims
+    let full = GridIndex::build(&d, m, eps);
+    assert_eq!(full.m, 8, "extents must not degrade m here");
+    assert!(
+        !full.adj_is_on_demand(),
+        "default budget holds this corpus (worst case ~13 MB)"
+    );
+    // 1 MB cannot hold 500 cells x 6561 entries x 4 bytes worst case
+    let lean = GridIndex::build_with_budget(&d, m, eps, 1 << 20);
+    assert!(lean.adj_is_on_demand(), "budget must rule out CSR rows");
+    assert_eq!(lean.adj_table_entries(), 0, "no rows materialised");
+    assert!(full.adj_table_entries() > 0);
+
+    let r = RefGrid::build(&d, m, eps);
+    check_native(&d, &lean, &r);
+    let mut buf_full = Vec::new();
+    let mut buf_lean = Vec::new();
+    for i in 0..d.len() as u32 {
+        full.candidates_into_id(i, &mut buf_full);
+        lean.candidates_into_id(i, &mut buf_lean);
+        assert_eq!(buf_full, buf_lean, "budgeted walk diverged, point {i}");
+        assert_eq!(
+            full.adjacent_population_of_id(i),
+            lean.adjacent_population_of_id(i),
+            "memoized population diverged, point {i}"
+        );
+    }
+}
+
+#[test]
+fn on_demand_mode_survives_churn_canonically() {
+    // mutations in on-demand mode patch the memoized populations by
+    // recomputing the touched block - the rebuild-equivalence oracle
+    // must hold exactly as it does for materialised rows
+    let mut rng = Rng::new(0x0DB2);
+    let mut d = random_gauss(&mut rng, 200, 5, 10.0);
+    let m = 5;
+    let eps = 0.6;
+    let mut g = GridIndex::build_with_budget(&d, m, eps, 0);
+    assert!(g.adj_is_on_demand());
+    let r_ref = RefGrid::build(&d, m, eps);
+    check_native(&d, &g, &r_ref);
+    let mut live: Vec<u32> = (0..200).collect();
+    for step in 0..40 {
+        if live.is_empty() || step % 3 != 0 {
+            let row: Vec<f32> = (0..5).map(|_| rng.normal(0.0, 10.0) as f32).collect();
+            let id = d.push_row(&row);
+            g.insert(&d, id);
+            live.push(id);
+        } else {
+            let id = live.swap_remove(rng.below(live.len()));
+            assert!(g.remove(id));
+        }
+        if step % 8 == 0 {
+            g.assert_same_layout(&g.rebuilt(&d));
+        }
+    }
+    g.assert_same_layout(&g.rebuilt(&d));
+    // walks remain complete after churn: every live in-eps neighbor
+    // (in the indexed projection, under the frozen clamped geometry)
+    // is still found
+    for &q in live.iter().step_by(11) {
+        let cands: std::collections::HashSet<u32> =
+            g.candidates_of(d.point(q as usize)).into_iter().collect();
+        for &i in &live {
+            if sqdist_prefix(d.point(q as usize), d.point(i as usize), m) <= eps * eps {
+                assert!(
+                    cands.contains(&i),
+                    "post-churn walk missed live neighbor {i} of {q}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn csr_matches_reference_on_bipartite_queries() {
     // R queries against an S grid: coordinate-keyed walks over points the
     // grid does not index, including points far outside the S extent

@@ -1,0 +1,587 @@
+//! Overload-robustness suite (DESIGN.md §13): admission control,
+//! deadlines, load shedding, and per-client quotas for the online
+//! service.
+//!
+//! The load-bearing property ("shedding exactness"): under a bounding
+//! [`AdmissionPolicy`] every submitted query request gets **exactly
+//! one** outcome - a full answer, or one typed [`Rejected`] - and the
+//! answers a shedding service produces are *bit-identical* to the
+//! deterministic replay of the same queries through an unloaded
+//! engine, across all three `DrainMode`s with fault injection layered
+//! on top. Shedding changes *which* requests are answered, never *what
+//! any answer contains*: shed points sit outside every flush, so the
+//! exactly-once claim accounting and replay-mode purity of the serve
+//! loop are untouched.
+//!
+//! Also here: the typed synchronous rejections (global bound,
+//! per-client bound, token-bucket quota), deadline sheds with the
+//! explicit-deadline override, overload-triggered degradation
+//! tightening the effective bound from live CPU-only throughput, and
+//! the ISSUE 10 small fix - a client handed out after the serve loop
+//! terminated fails fast with [`Rejected::Terminated`] instead of
+//! parking forever on a condvar nobody will ever signal.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use hybrid_knn_join::prelude::*;
+use hybrid_knn_join::util::rng::Rng;
+
+/// CI's chaos matrix pins the drain depth via `HKNN_FAULT_DEPTH`
+/// (1 = sync, 2 = two-stage, 3 = three-stage); unset, the harness
+/// sweeps all three itself.
+fn drain_modes() -> Vec<DrainMode> {
+    match std::env::var("HKNN_FAULT_DEPTH").ok().as_deref() {
+        Some("1") => vec![DrainMode::Sync],
+        Some("2") => vec![DrainMode::TwoStage],
+        Some("3") => vec![DrainMode::ThreeStage],
+        _ => vec![DrainMode::Sync, DrainMode::TwoStage, DrainMode::ThreeStage],
+    }
+}
+
+fn small_session<'e>(
+    engine: &'e Engine,
+    corpus: &Dataset,
+) -> KnnEngine<'e> {
+    let mut p = HybridParams::new(3);
+    p.cpu_ranks = 0; // deterministic replay mode
+    KnnEngine::build(engine, corpus, p).unwrap()
+}
+
+#[test]
+fn full_pending_bound_rejects_synchronously_with_typed_overloaded() {
+    let engine = Engine::load_default().unwrap();
+    let corpus = susy_like(400).generate(0xA1);
+    let queries = susy_like(8).generate(0xA2);
+    let mut session = small_session(&engine, &corpus);
+    let policy = AdmissionPolicy {
+        max_pending_queries: 2,
+        ..AdmissionPolicy::default()
+    };
+    let ingress = Ingress::with_policy(policy);
+    std::thread::scope(|s| {
+        // fill the queue to its bound before the serve loop starts
+        let c1 = ingress.client();
+        let q01 = queries.gather(&[0, 1]);
+        let blocked = s.spawn(move || c1.query(&q01).unwrap());
+        while ingress.pending_queries() < 2 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // one more row overflows the bound: rejected synchronously,
+        // under the ingress lock, without ever occupying a queue slot
+        let probe = ingress.client();
+        let err = probe.query(&queries.gather(&[2])).unwrap_err();
+        match err.downcast_ref::<Rejected>() {
+            Some(Rejected::Overloaded { retry_after_hint }) => {
+                assert!(*retry_after_hint >= Duration::from_millis(1));
+            }
+            other => panic!("wrong rejection: {other:?}"),
+        }
+        assert!(err.to_string().contains("pending queue full"));
+        drop(probe);
+        // mutations are exempt: corpus state transitions are admitted
+        // even at a full query bound
+        let c3 = ingress.client();
+        let ins_batch = queries.gather(&[3]);
+        let inserter = s.spawn(move || c3.insert(&ins_batch).unwrap());
+        while ingress.pending_len() < 2 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let rep = session.serve(&ingress).unwrap();
+        let reply = blocked.join().expect("blocked client panicked");
+        assert_eq!(reply.results.len(), 2, "admitted request fully served");
+        let ids = inserter.join().expect("insert client panicked");
+        assert_eq!(ids.len(), 1, "mutation admitted at a full bound");
+        assert_eq!(rep.admitted, 2);
+        assert_eq!(rep.queries, 2);
+        assert_eq!(rep.shed_overload, 1);
+        assert_eq!(rep.rejected_requests, 1);
+        assert_eq!(rep.inserts, 1);
+    });
+}
+
+#[test]
+fn per_client_bound_isolates_the_greedy_client() {
+    let engine = Engine::load_default().unwrap();
+    let corpus = susy_like(400).generate(0xB1);
+    let queries = susy_like(8).generate(0xB2);
+    let mut session = small_session(&engine, &corpus);
+    let policy = AdmissionPolicy {
+        max_pending_per_client: 2,
+        ..AdmissionPolicy::default()
+    };
+    let ingress = Ingress::with_policy(policy);
+    let ready = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let ca = ingress.client();
+        let cb = ingress.client();
+        let (ingress_r, queries_r, ready_r) = (&ingress, &queries, &ready);
+        let driver = s.spawn(move || {
+            std::thread::scope(|s2| {
+                let qa = queries_r.gather(&[0, 1]);
+                let ha = s2.spawn(|| ca.query(&qa).unwrap());
+                while ingress_r.pending_queries() < 2 {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                // the same client is over its per-client bound...
+                let err = ca.query(&queries_r.gather(&[2])).unwrap_err();
+                match err.downcast_ref::<Rejected>() {
+                    Some(Rejected::Overloaded { .. }) => {}
+                    other => panic!("wrong rejection: {other:?}"),
+                }
+                // ...but the global queue still has room for everyone
+                // else: a second client is admitted untouched
+                let qb = queries_r.gather(&[3]);
+                let hb = s2.spawn(|| cb.query(&qb).unwrap());
+                while ingress_r.pending_queries() < 3 {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                ready_r.store(true, Ordering::Release);
+                (ha.join().unwrap(), hb.join().unwrap())
+            })
+        });
+        while !ready.load(Ordering::Acquire) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let rep = session.serve(&ingress).unwrap();
+        let (ra, rb) = driver.join().expect("driver panicked");
+        assert_eq!(ra.results.len(), 2);
+        assert_eq!(rb.results.len(), 1);
+        assert_eq!(rep.admitted, 3);
+        assert_eq!(rep.queries, 3);
+        assert_eq!(rep.shed_overload, 1);
+        assert_eq!(rep.rejected_requests, 1);
+    });
+}
+
+#[test]
+fn token_bucket_quota_rejects_the_aggressive_client_only() {
+    let engine = Engine::load_default().unwrap();
+    let corpus = susy_like(400).generate(0xC1);
+    let queries = susy_like(8).generate(0xC2);
+    let mut session = small_session(&engine, &corpus);
+    let policy = AdmissionPolicy {
+        quota: Some(ClientQuota { rate_qps: 0.0, burst: 2.0 }),
+        ..AdmissionPolicy::default()
+    };
+    let ingress = Ingress::with_policy(policy);
+    std::thread::scope(|s| {
+        let greedy = ingress.client();
+        let modest = ingress.client();
+        let queries_r = &queries;
+        let driver = s.spawn(move || {
+            // the burst admits two rows (served one at a time while the
+            // loop runs - the bucket is charged at admission, so the
+            // draining below does not refill anything at rate 0)
+            let r1 = greedy.query(&queries_r.gather(&[0])).unwrap();
+            let r2 = greedy.query(&queries_r.gather(&[1])).unwrap();
+            let err = greedy.query(&queries_r.gather(&[2])).unwrap_err();
+            let wait = match err.downcast_ref::<Rejected>() {
+                Some(Rejected::QuotaExceeded { retry_after }) => *retry_after,
+                other => panic!("wrong rejection: {other:?}"),
+            };
+            assert!(wait >= Duration::from_secs(3600), "zero rate: {wait:?}");
+            assert!(err.to_string().contains("client quota exhausted"));
+            // mutations are never rate-limited
+            let ids = greedy.insert(&queries_r.gather(&[4])).unwrap();
+            assert_eq!(ids.len(), 1);
+            // an independent client draws from its own bucket
+            let r3 = modest.query(&queries_r.gather(&[3])).unwrap();
+            (r1, r2, r3)
+        });
+        let rep = session.serve(&ingress).unwrap();
+        let (r1, r2, r3) = driver.join().expect("driver panicked");
+        assert_eq!(
+            r1.results.len() + r2.results.len() + r3.results.len(),
+            3
+        );
+        assert_eq!(rep.admitted, 3);
+        assert_eq!(rep.queries, 3);
+        assert_eq!(rep.shed_quota, 1);
+        assert_eq!(rep.rejected_requests, 1);
+        assert_eq!(rep.shed_overload + rep.shed_deadline, 0);
+        assert_eq!(rep.inserts, 1);
+    });
+}
+
+#[test]
+fn expired_deadline_sheds_before_pricing_with_typed_error() {
+    let engine = Engine::load_default().unwrap();
+    let corpus = susy_like(400).generate(0xD1);
+    let queries = susy_like(8).generate(0xD2);
+    let mut session = small_session(&engine, &corpus);
+    // a generous default deadline; the doomed request overrides it with
+    // its own 2 ms one (the explicit deadline wins over the policy's)
+    let policy = AdmissionPolicy {
+        default_deadline: Some(Duration::from_secs(10)),
+        ..AdmissionPolicy::default()
+    };
+    let ingress = Ingress::with_policy(policy);
+    std::thread::scope(|s| {
+        let c1 = ingress.client();
+        let q_dead = queries.gather(&[0, 1]);
+        let doomed = s.spawn(move || {
+            c1.query_with_deadline(&q_dead, Duration::from_millis(2))
+                .unwrap_err()
+        });
+        while ingress.pending_queries() < 2 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let c2 = ingress.client();
+        let q_live = queries.gather(&[2]);
+        let served = s.spawn(move || c2.query(&q_live).unwrap());
+        while ingress.pending_queries() < 3 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // let the 2 ms deadline lapse before the serve loop ever runs:
+        // its first cycle must shed the stale request *before* pricing
+        std::thread::sleep(Duration::from_millis(20));
+        let rep = session.serve(&ingress).unwrap();
+        let err = doomed.join().expect("doomed client panicked");
+        match err.downcast_ref::<Rejected>() {
+            Some(Rejected::DeadlineExpired { missed_by }) => {
+                assert!(*missed_by > Duration::ZERO);
+            }
+            other => panic!("wrong rejection: {other:?}"),
+        }
+        assert!(err.to_string().contains("deadline expired"));
+        let reply = served.join().expect("served client panicked");
+        assert_eq!(reply.results.len(), 1, "in-deadline request answered");
+        assert_eq!(rep.admitted, 3);
+        assert_eq!(rep.queries, 1, "only the live row was priced");
+        assert_eq!(rep.shed_deadline, 2);
+        assert_eq!(rep.rejected_requests, 1);
+        assert_eq!(rep.requests, 1);
+    });
+}
+
+/// One deterministic overload schedule against one drain mode:
+///
+/// 1. five doomed requests (2 ms deadlines) fill the queue to its
+///    bound before the serve loop starts;
+/// 2. with the queue exactly full, one probe row overflows it and is
+///    rejected synchronously;
+/// 3. the deadlines lapse, the serve loop's first cycle sheds the
+///    whole doomed backlog, and three closed-loop clients (gated on
+///    that shed, sized so their in-flight rows can never re-fill the
+///    bound) stream the remaining 36 queries through the loaded
+///    service.
+///
+/// Asserts the full shedding-exactness contract: disjoint exactly-once
+/// outcomes client-side, matching admission ledger service-side
+/// (admitted == served + shed), and answered results bit-identical to
+/// the unloaded deterministic replay - with a transient GPU fault
+/// injected under everything.
+fn overload_schedule(
+    engine: &Engine,
+    mode: DrainMode,
+    shed: ShedPolicy,
+    seed: u64,
+) {
+    const BOUND: usize = 10;
+    let corpus = susy_like(400).generate(seed);
+    let queries = susy_like(47).generate(seed ^ 0x7E57);
+    let mut p = HybridParams::new(4);
+    p.cpu_ranks = 0; // deterministic replay mode
+    p.gpu_drain = mode;
+    p.streams = 2;
+    p.fault =
+        FaultPlan::one(FaultSpec::transient(FaultKind::FilterPanic, 0, 0));
+    p.recovery.backoff_base_secs = 0.0;
+    let tag = format!("{mode:?}/{shed:?}");
+
+    // the unloaded reference: one deterministic batch replay over the
+    // closed-loop clients' whole query union
+    let loop_ids: Vec<usize> = (0..36).collect();
+    let mut ref_session =
+        KnnEngine::build(engine, &corpus, p.clone()).unwrap();
+    let (ref_result, _) =
+        ref_session.flush(&queries.gather(&loop_ids)).unwrap();
+
+    let mut session = KnnEngine::build(engine, &corpus, p).unwrap();
+    let policy = AdmissionPolicy {
+        max_pending_queries: BOUND,
+        shed_policy: shed,
+        ..AdmissionPolicy::default()
+    };
+    let ingress = Ingress::with_policy(policy);
+
+    // per-client chunk plans over disjoint strided slices of 0..36
+    let mut rng = Rng::new(seed ^ 0xC4A0);
+    let mut plans: Vec<Vec<Vec<usize>>> = Vec::new();
+    for c in 0..3 {
+        let ids: Vec<usize> = (c..36).step_by(3).collect();
+        let mut chunks = Vec::new();
+        let mut i = 0usize;
+        while i < ids.len() {
+            let take = (1 + rng.below(3)).min(ids.len() - i);
+            chunks.push(ids[i..i + take].to_vec());
+            i += take;
+        }
+        plans.push(chunks);
+    }
+
+    std::thread::scope(|s| {
+        // phase 1: fill the queue to the bound with doomed requests
+        let prefill: Vec<_> = (0..5)
+            .map(|i| {
+                let client = ingress.client();
+                let batch = queries.gather(&[36 + 2 * i, 37 + 2 * i]);
+                s.spawn(move || {
+                    client
+                        .query_with_deadline(&batch, Duration::from_millis(2))
+                        .unwrap_err()
+                })
+            })
+            .collect();
+        while ingress.pending_queries() < BOUND {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // phase 2: the queue is exactly full - one more row overflows
+        {
+            let probe = ingress.client();
+            let err = probe.query(&queries.gather(&[46])).unwrap_err();
+            match err.downcast_ref::<Rejected>() {
+                Some(Rejected::Overloaded { retry_after_hint }) => {
+                    assert!(*retry_after_hint >= Duration::from_millis(1));
+                }
+                other => panic!("{tag}: wrong rejection {other:?}"),
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20)); // deadlines lapse
+        // phase 3: closed-loop clients, gated until the doomed backlog
+        // has been shed. 3 clients x <=3 rows in flight <= BOUND, so
+        // no loop submission can ever see a full queue: the schedule
+        // is deterministic end to end.
+        let loopers: Vec<_> = plans
+            .iter()
+            .map(|chunks| {
+                let client = ingress.client();
+                let ingress_r = &ingress;
+                let queries_r = &queries;
+                s.spawn(move || {
+                    while ingress_r.admission_stats().shed_deadline < BOUND {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    let mut out = Vec::new();
+                    for chunk in chunks {
+                        let reply =
+                            client.query(&queries_r.gather(chunk)).unwrap();
+                        out.push((chunk.clone(), reply));
+                    }
+                    out
+                })
+            })
+            .collect();
+        let rep = session.serve(&ingress).unwrap();
+        // every doomed request got exactly one typed DeadlineExpired
+        for h in prefill {
+            let err = h.join().expect("prefill client panicked");
+            match err.downcast_ref::<Rejected>() {
+                Some(Rejected::DeadlineExpired { missed_by }) => {
+                    assert!(*missed_by > Duration::ZERO, "{tag}");
+                }
+                other => panic!("{tag}: wrong shed {other:?}"),
+            }
+        }
+        // answered side: exactly-once coverage, bit-identical payloads
+        let mut seen = vec![false; 36];
+        let mut answered_rows = 0usize;
+        let mut answered_requests = 0usize;
+        for h in loopers {
+            for (ids, reply) in h.join().expect("loop client panicked") {
+                answered_requests += 1;
+                assert_eq!(ids.len(), reply.results.len(), "{tag}: shape");
+                for (j, &g) in ids.iter().enumerate() {
+                    assert!(!seen[g], "{tag}: q={g} answered twice");
+                    seen[g] = true;
+                    answered_rows += 1;
+                    let want = ref_result.get(g);
+                    let got = &reply.results[j];
+                    assert_eq!(
+                        got.ids.as_slice(),
+                        want.ids(),
+                        "{tag} q={g}: id lane diverged under load"
+                    );
+                    assert_eq!(
+                        got.dist2.as_slice(),
+                        want.dist2s(),
+                        "{tag} q={g}: dist2 lane diverged under load"
+                    );
+                }
+            }
+        }
+        assert!(
+            seen.iter().all(|&b| b),
+            "{tag}: shedding starved a live query"
+        );
+        assert_eq!(answered_rows, 36, "{tag}");
+        // the admission ledger: every admitted row is served or shed,
+        // never both, never neither
+        assert_eq!(rep.queries, answered_rows, "{tag}: served rows");
+        assert_eq!(
+            rep.admitted,
+            BOUND + answered_rows,
+            "{tag}: admitted == served + shed"
+        );
+        assert_eq!(rep.shed_deadline, BOUND, "{tag}: the doomed backlog");
+        assert_eq!(rep.shed_overload, 1, "{tag}: the overflow probe");
+        assert_eq!(rep.shed_quota, 0, "{tag}");
+        assert_eq!(
+            rep.rejected_requests,
+            5 + 1,
+            "{tag}: one typed rejection per non-answered request"
+        );
+        assert_eq!(rep.requests, answered_requests, "{tag}");
+        assert_eq!(rep.q_gpu, answered_rows, "{tag}: GPU-first replay");
+        assert!(
+            rep.gpu_faults >= 1,
+            "{tag}: the injected fault was observed"
+        );
+    });
+}
+
+#[test]
+fn shedding_is_exact_across_drain_modes_under_fault_injection() {
+    let engine = Engine::load_default().unwrap();
+    for (i, mode) in drain_modes().into_iter().enumerate() {
+        // alternate the victim-selection policy across the sweep so
+        // both ShedPolicy arms run under real load
+        let shed = if i % 2 == 0 {
+            ShedPolicy::NewestFirst
+        } else {
+            ShedPolicy::ByDeadline
+        };
+        overload_schedule(&engine, mode, shed, 0x0AD5 ^ ((i as u64) << 8));
+    }
+}
+
+#[test]
+fn degraded_engine_tightens_the_admission_bound_and_stays_exact() {
+    let engine = Engine::load_default().unwrap();
+    let corpus = susy_like(500).generate(0xDE5);
+    let queries = susy_like(16).generate(0xDE6);
+    let mut p = HybridParams::new(3);
+    p.cpu_ranks = 0;
+    // a persistent GPU fault plus an immediate demotion threshold:
+    // every flush finishes CPU-only and reports degraded = true
+    p.fault = FaultPlan::one(FaultSpec::persistent(FaultKind::FilterPanic, 0));
+    p.recovery.demote_after = 1;
+    p.recovery.backoff_base_secs = 0.0;
+    // the reference engine degrades identically (same FaultPlan): the
+    // CPU-only answers are still a pure function of (corpus, eps, k)
+    let mut ref_session =
+        KnnEngine::build(&engine, &corpus, p.clone()).unwrap();
+    let all: Vec<usize> = (0..16).collect();
+    let (ref_result, ref_rep) =
+        ref_session.flush(&queries.gather(&all)).unwrap();
+    assert!(ref_rep.degraded, "persistent fault must demote the master");
+
+    let mut session = KnnEngine::build(&engine, &corpus, p).unwrap();
+    const CONFIGURED: usize = 1_000_000;
+    let policy = AdmissionPolicy {
+        max_pending_queries: CONFIGURED,
+        ..AdmissionPolicy::default()
+    };
+    let ingress = Ingress::with_policy(policy);
+    assert_eq!(ingress.effective_max_pending(), CONFIGURED);
+    std::thread::scope(|s| {
+        let client = ingress.client();
+        let (ingress_r, queries_r) = (&ingress, &queries);
+        let driver = s.spawn(move || {
+            let ids1: Vec<usize> = (0..8).collect();
+            let r1 = client.query(&queries_r.gather(&ids1)).unwrap();
+            // the serve loop feeds the capacity controller before it
+            // replies, so by the time r1 is in hand the degraded
+            // flush has already tightened the effective bound
+            let tightened = ingress_r.effective_max_pending();
+            let ids2: Vec<usize> = (8..16).collect();
+            let r2 = client.query(&queries_r.gather(&ids2)).unwrap();
+            (r1, tightened, r2)
+        });
+        let rep = session.serve(&ingress).unwrap();
+        let (r1, tightened, r2) = driver.join().expect("driver panicked");
+        assert!(
+            tightened < CONFIGURED,
+            "degradation must tighten the bound: {tightened}"
+        );
+        assert!(tightened >= 1, "the bound never tightens to zero");
+        assert_eq!(
+            rep.degraded_flushes, rep.flushes,
+            "every flush ran CPU-only"
+        );
+        assert!(rep.flushes >= 2);
+        // graceful degradation serves everything, exactly
+        for (base, reply) in [(0usize, &r1), (8usize, &r2)] {
+            assert_eq!(reply.results.len(), 8);
+            for (j, got) in reply.results.iter().enumerate() {
+                let want = ref_result.get(base + j);
+                assert_eq!(got.ids.as_slice(), want.ids(), "q={}", base + j);
+                assert_eq!(
+                    got.dist2.as_slice(),
+                    want.dist2s(),
+                    "q={}",
+                    base + j
+                );
+            }
+        }
+        assert_eq!(rep.queries, 16);
+        assert_eq!(rep.admitted, 16);
+        assert_eq!(rep.rejected_requests, 0);
+    });
+}
+
+#[test]
+fn late_client_after_termination_gets_typed_errors_not_deadlock() {
+    let engine = Engine::load_default().unwrap();
+    let corpus = susy_like(300).generate(0x7E1);
+    let mut session = small_session(&engine, &corpus);
+    let queries = susy_like(3).generate(0x7E2);
+    let ingress = Ingress::new();
+    // no clients registered: the serve loop exits immediately...
+    let rep = session.serve(&ingress).unwrap();
+    assert_eq!(rep.queries, 0);
+    assert_eq!(rep.requests, 0);
+    // ...and a client handed out afterwards must fail fast on every
+    // call - query, insert, remove - never park on a condvar the dead
+    // loop will never signal again (the ISSUE 10 small fix)
+    let late = ingress.client();
+    for err in [
+        late.query(&queries).unwrap_err(),
+        late.insert(&queries.gather(&[0])).unwrap_err(),
+        late.remove(&[0]).unwrap_err(),
+    ] {
+        match err.downcast_ref::<Rejected>() {
+            Some(Rejected::Terminated) => {}
+            other => panic!("wrong rejection: {other:?}"),
+        }
+        assert!(err.to_string().contains("service has terminated"));
+    }
+    drop(late);
+    // a fresh serve on the same ingress re-arms it
+    let queries_r = &queries;
+    std::thread::scope(|s| {
+        let client = ingress.client();
+        let h = s.spawn(move || {
+            // a submission racing the restart may still see Terminated;
+            // bounded retries must land once the loop is live again
+            for _ in 0..2000 {
+                match client.query(queries_r) {
+                    Ok(r) => return r,
+                    Err(e) => {
+                        assert!(matches!(
+                            e.downcast_ref::<Rejected>(),
+                            Some(Rejected::Terminated)
+                        ));
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            }
+            panic!("restarted serve never answered");
+        });
+        let rep2 = session.serve(&ingress).unwrap();
+        let reply = h.join().expect("late client panicked");
+        assert_eq!(reply.results.len(), queries.len());
+        assert_eq!(rep2.queries, queries.len());
+    });
+}

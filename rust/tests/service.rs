@@ -115,6 +115,15 @@ fn streaming_bit_identical_to_batch_union_across_drain_modes() {
         assert!(report.flushes >= 1);
         assert!(report.latency_p99 >= report.latency_p50);
         assert!(report.throughput_qps > 0.0);
+        // the default (fully permissive) policy never rejects or
+        // sheds: the admission ledger says every row was served
+        assert_eq!(report.admitted, queries.len(), "{mode:?}: admitted");
+        assert_eq!(
+            report.shed_overload + report.shed_quota + report.shed_deadline,
+            0,
+            "{mode:?}: nothing shed under the default policy"
+        );
+        assert_eq!(report.rejected_requests, 0, "{mode:?}");
 
         let mut seen = vec![false; queries.len()];
         for (ids, reply) in &replies {
